@@ -1,0 +1,47 @@
+//! Ablation: the L1 kernel combiner's contribution. Same system
+//! (Marvel-IGFS), combiner on vs off — isolates how much of Marvel's
+//! win comes from shipping aggregates instead of raw records.
+
+use marvel::coordinator::{ClusterSpec, Marvel};
+use marvel::mapreduce::{CombinerMode, SystemConfig};
+use marvel::util::bytes;
+use marvel::util::table::{fmt_pct, fmt_secs, Table};
+use marvel::workloads::WordCount;
+
+const GB: u64 = 1_000_000_000;
+
+fn main() {
+    let mut m = Marvel::new(ClusterSpec::default(), 42).expect("marvel");
+    let wc = WordCount::new(10_000, 1.07, &m.rt);
+    let with = SystemConfig::marvel_igfs();
+    let mut without = SystemConfig::marvel_igfs();
+    without.combiner = CombinerMode::None;
+    without.name = "marvel-igfs/no-combine".into();
+
+    let mut t = Table::new(
+        "Ablation — kernel combiner (WordCount, Marvel-IGFS)",
+        &["input (GB)", "combine: time", "intermediate",
+          "no-combine: time", "intermediate", "speedup"],
+    );
+    for gb in [1.0f64, 5.0, 10.0, 20.0] {
+        let bytes_in = (gb * GB as f64) as u64;
+        let a = m.run(&with, &wc, bytes_in);
+        let b = m.run(&without, &wc, bytes_in);
+        assert!(a.ok() && b.ok());
+        t.row(&[
+            format!("{gb}"),
+            fmt_secs(a.job_time.as_secs_f64()),
+            bytes::human(a.intermediate_bytes),
+            fmt_secs(b.job_time.as_secs_f64()),
+            bytes::human(b.intermediate_bytes),
+            fmt_pct(1.0 - a.job_time.as_secs_f64()
+                    / b.job_time.as_secs_f64()),
+        ]);
+        assert!(a.intermediate_bytes * 10 < b.intermediate_bytes,
+                "combiner must shrink intermediate >10x at {gb} GB");
+        assert!(a.job_time <= b.job_time,
+                "combiner must not slow the job at {gb} GB");
+    }
+    t.print();
+    println!("ablation_combiner OK");
+}

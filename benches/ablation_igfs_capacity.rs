@@ -1,0 +1,57 @@
+//! Ablation: IGFS DRAM capacity — the paper's §4.3 future-work design
+//! ("Ignite on top of PMEM: persist intermediate data while serving it
+//! from DRAM"). Shrinking the DRAM budget forces LRU demotion to the
+//! PMEM backing tier; gets then pay PMEM latency instead of DRAM.
+
+use marvel::coordinator::{ClusterSpec, Marvel};
+use marvel::mapreduce::SystemConfig;
+use marvel::util::bytes::{self, GIB, MIB};
+use marvel::util::table::{fmt_secs, Table};
+use marvel::workloads::WordCount;
+
+const GB: u64 = 1_000_000_000;
+
+fn main() {
+    let mut m = Marvel::new(ClusterSpec::default(), 42).expect("marvel");
+    let wc = WordCount::new(10_000, 1.07, &m.rt);
+    let input = 2 * GB;
+
+    let mut t = Table::new(
+        "Ablation — IGFS DRAM capacity (WordCount 2 GB, raw shuffle)",
+        &["igfs capacity", "job time", "dram hits", "pmem-tier hits",
+          "evictions"],
+    );
+    let mut times = Vec::new();
+    // Raw shuffle so intermediate (~11 GB) overwhelms small caches.
+    for cap in [64 * GIB, 8 * GIB, 2 * GIB, 512 * MIB] {
+        let mut cfg = SystemConfig::marvel_igfs_paper();
+        cfg.igfs_capacity = cap;
+        cfg.name = format!("igfs@{}", bytes::human(cap));
+        // Fresh deployment per run happens inside Marvel::run; cache
+        // stats come from the run's own cluster — re-derive via a
+        // scoped run so stats are attributable.
+        let mut cluster = m.spec.deploy(&cfg);
+        let input_path = marvel::mapreduce::stage_input(
+            &mut cluster, &cfg, &wc, input, m.seed).expect("stage");
+        let r = marvel::mapreduce::run_job(
+            &mut cluster, &cfg, &wc, &input_path, &mut m.rt, m.seed);
+        assert!(r.ok(), "{}: {:?}", cfg.name, r.failed);
+        let stats = cluster.stores.igfs.stats();
+        times.push(r.job_time.as_secs_f64());
+        t.row(&[
+            bytes::human(cap),
+            fmt_secs(r.job_time.as_secs_f64()),
+            stats.hits_dram.to_string(),
+            stats.hits_backing.to_string(),
+            stats.evictions.to_string(),
+        ]);
+        if cap == 512 * MIB {
+            assert!(stats.hits_backing > 0,
+                    "tiny cache must demote to the PMEM tier");
+        }
+    }
+    t.print();
+    assert!(times.first().unwrap() <= times.last().unwrap(),
+            "shrinking DRAM must not speed the job: {times:?}");
+    println!("ablation_igfs_capacity OK");
+}

@@ -1,0 +1,55 @@
+//! Regenerates **Figure 1** (motivation): WordCount job completion time
+//! with the Corral library over different storage layers — S3 only,
+//! SSD(+S3), PMEM(+S3), PMEM only — at inputs up to 7 GB.
+//! Expected shape: PMEM < SSD < S3; "+S3" variants pay the WAN on
+//! input/output but keep local intermediate.
+
+use marvel::config::system_by_name;
+use marvel::coordinator::{ClusterSpec, Marvel};
+use marvel::util::table::{fmt_secs, Table};
+use marvel::workloads::WordCount;
+
+const GB: u64 = 1_000_000_000;
+
+fn main() {
+    let mut m = Marvel::new(ClusterSpec::default(), 42).expect("marvel");
+    let wc = WordCount::new(10_000, 1.07, &m.rt);
+    let systems = ["lambda-s3", "onprem-ssd+s3", "onprem-ssd",
+                   "onprem-pmem+s3", "onprem-pmem"];
+    let sizes = [1u64, 3, 5, 7];
+
+    let mut headers = vec!["input (GB)".to_string()];
+    headers.extend(systems.iter().map(|s| s.to_string()));
+    let refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        "Figure 1 — WordCount time (s) by storage layer (Corral pipeline)",
+        &refs,
+    );
+    let mut at7 = Vec::new();
+    for size in sizes {
+        let mut row = vec![size.to_string()];
+        for name in systems {
+            let cfg = system_by_name(name).unwrap();
+            let r = m.run(&cfg, &wc, size * GB);
+            let cell = match r.failed {
+                Some(_) => "FAIL".to_string(),
+                None => fmt_secs(r.job_time.as_secs_f64()),
+            };
+            if size == 7 {
+                at7.push(r.job_time.as_secs_f64());
+            }
+            row.push(cell);
+        }
+        t.row(&row);
+    }
+    t.print();
+
+    // Paper's ordering at 7 GB: PMEM best, SSD close behind, S3 worst.
+    let (s3, ssd_s3, ssd, pmem_s3, pmem) =
+        (at7[0], at7[1], at7[2], at7[3], at7[4]);
+    assert!(pmem < ssd, "pmem {pmem} !< ssd {ssd}");
+    assert!(ssd < s3, "ssd {ssd} !< s3 {s3}");
+    assert!(pmem_s3 < ssd_s3, "pmem+s3 {pmem_s3} !< ssd+s3 {ssd_s3}");
+    assert!(pmem < pmem_s3, "pure pmem must beat pmem+s3");
+    println!("fig1 OK: PMEM < SSD < S3 ordering holds at 7 GB");
+}

@@ -1,0 +1,67 @@
+//! Regenerates **Figure 4**: WordCount execution time vs input size for
+//! Lambda+S3 (Corral), Marvel-HDFS (PMEM) and Marvel-IGFS.
+//! Expected shape: Lambda fails past its 15 GB quota; Marvel-IGFS ≤
+//! Marvel-HDFS ≪ Lambda; the headline reduction at the largest common
+//! point ≈ 86.6 %.
+
+use marvel::coordinator::{reduction, ClusterSpec, Marvel};
+use marvel::mapreduce::SystemConfig;
+use marvel::util::table::{fmt_pct, fmt_secs, Table};
+use marvel::workloads::WordCount;
+
+const GB: u64 = 1_000_000_000;
+
+fn main() {
+    let mut m = Marvel::new(ClusterSpec::default(), 42).expect("marvel");
+    let wc = WordCount::new(10_000, 1.07, &m.rt);
+    let sizes_gb = [0.5f64, 1.0, 2.0, 5.0, 7.0, 10.0, 15.0, 20.0, 50.0];
+    let configs = [
+        SystemConfig::corral_lambda(),
+        SystemConfig::marvel_hdfs_paper(),
+        SystemConfig::marvel_igfs_paper(),
+    ];
+
+    let mut t = Table::new(
+        "Figure 4 — WordCount execution time (s)",
+        &["input (GB)", "lambda-s3", "marvel-hdfs", "marvel-igfs",
+          "reduction vs lambda"],
+    );
+    let mut best_reduction: f64 = 0.0;
+    for gb in sizes_gb {
+        let results = m.compare(&configs, &wc, (gb * GB as f64) as u64);
+        let lam = &results[0];
+        let igfs = &results[2];
+        let red = if lam.ok() {
+            let r = reduction(lam, igfs);
+            best_reduction = best_reduction.max(r);
+            fmt_pct(r)
+        } else {
+            "—".into()
+        };
+        t.row(&[
+            format!("{gb}"),
+            if lam.ok() { fmt_secs(lam.job_time.as_secs_f64()) }
+            else { "FAIL (quota)".into() },
+            fmt_secs(results[1].job_time.as_secs_f64()),
+            fmt_secs(igfs.job_time.as_secs_f64()),
+            red,
+        ]);
+        // Shape invariants per size.
+        assert!(results[1].ok() && igfs.ok(),
+                "Marvel must complete at {gb} GB");
+        if lam.ok() {
+            assert!(lam.job_time > igfs.job_time,
+                    "IGFS must beat Lambda at {gb} GB");
+        } else {
+            assert!(gb > 15.0, "Lambda failed below the quota at {gb} GB");
+        }
+        assert!(results[1].job_time >= igfs.job_time,
+                "IGFS must not lose to HDFS at {gb} GB");
+    }
+    t.print();
+    println!("max reduction vs lambda: {} (paper: up to 86.6 %)",
+             fmt_pct(best_reduction));
+    assert!(best_reduction > 0.70 && best_reduction <= 0.95,
+            "headline reduction out of regime: {best_reduction}");
+    println!("fig4 OK: ordering, quota failure, and reduction regime hold");
+}

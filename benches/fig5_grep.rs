@@ -1,0 +1,60 @@
+//! Regenerates **Figure 5**: Grep execution time vs input size across
+//! the three systems. Same shape expectations as Figure 4; Grep's
+//! intermediate volume is far smaller, so the gap narrows at the small
+//! end (cold-start/startup dominated) and is I/O-driven at the big end.
+
+use marvel::coordinator::{reduction, ClusterSpec, Marvel};
+use marvel::mapreduce::SystemConfig;
+use marvel::util::table::{fmt_pct, fmt_secs, Table};
+use marvel::workloads::{Corpus, Grep};
+
+const GB: u64 = 1_000_000_000;
+
+fn main() {
+    let mut m = Marvel::new(ClusterSpec::default(), 42).expect("marvel");
+    let prefix = Corpus::new(10_000, 1.07).prefix_of_rank(5, 2);
+    let grep = Grep::new(10_000, 1.07, &prefix, &m.rt);
+    println!("pattern prefix: {:?} (match prob {:.3})",
+             String::from_utf8_lossy(&prefix), grep.match_prob());
+
+    let sizes_gb = [0.5f64, 1.0, 2.0, 5.0, 10.0, 15.0, 20.0, 50.0];
+    let configs = [
+        SystemConfig::corral_lambda(),
+        SystemConfig::marvel_hdfs_paper(),
+        SystemConfig::marvel_igfs_paper(),
+    ];
+    let mut t = Table::new(
+        "Figure 5 — Grep execution time (s)",
+        &["input (GB)", "lambda-s3", "marvel-hdfs", "marvel-igfs",
+          "reduction vs lambda"],
+    );
+    let mut best: f64 = 0.0;
+    for gb in sizes_gb {
+        let results = m.compare(&configs, &grep, (gb * GB as f64) as u64);
+        let lam = &results[0];
+        let igfs = &results[2];
+        t.row(&[
+            format!("{gb}"),
+            if lam.ok() { fmt_secs(lam.job_time.as_secs_f64()) }
+            else { "FAIL (quota)".into() },
+            fmt_secs(results[1].job_time.as_secs_f64()),
+            fmt_secs(igfs.job_time.as_secs_f64()),
+            if lam.ok() {
+                let r = reduction(lam, igfs);
+                best = best.max(r);
+                fmt_pct(r)
+            } else {
+                "—".into()
+            },
+        ]);
+        assert!(results[1].ok() && igfs.ok());
+        if lam.ok() {
+            assert!(lam.job_time > igfs.job_time,
+                    "IGFS must beat Lambda at {gb} GB");
+        }
+    }
+    t.print();
+    println!("max reduction vs lambda: {}", fmt_pct(best));
+    assert!(best > 0.5, "grep reduction should stay substantial: {best}");
+    println!("fig5 OK");
+}

@@ -1,0 +1,52 @@
+//! Regenerates **Figure 6**: I/O throughput of the intermediate store
+//! (HDFS-on-PMEM vs IGFS) while running WordCount, as a function of
+//! input size. Paper shape: IGFS throughput grows with input size and
+//! peaks ≈12 Gbps at 10 GB; HDFS stays below IGFS throughout.
+
+use marvel::coordinator::{ClusterSpec, Marvel};
+use marvel::mapreduce::SystemConfig;
+use marvel::metrics::tags;
+use marvel::util::table::Table;
+use marvel::workloads::WordCount;
+
+const GB: u64 = 1_000_000_000;
+
+fn main() {
+    let mut m = Marvel::new(ClusterSpec::default(), 42).expect("marvel");
+    let wc = WordCount::new(10_000, 1.07, &m.rt);
+    // Paper-faithful presets: raw shuffle volume (Table 1 expansion).
+    let hdfs = SystemConfig::marvel_hdfs_paper();
+    let igfs = SystemConfig::marvel_igfs_paper();
+
+    let shuffle_tags =
+        [tags::INTERMEDIATE_WRITE, tags::INTERMEDIATE_READ];
+    let sizes_gb = [0.5f64, 1.0, 2.0, 5.0, 8.0, 10.0];
+    let mut t = Table::new(
+        "Figure 6 — shuffle I/O throughput (Gbps), WordCount",
+        &["input (GB)", "HDFS (PMEM)", "IGFS", "IGFS busy-span Gbps"],
+    );
+    let mut igfs_series = Vec::new();
+    for gb in sizes_gb {
+        let bytes = (gb * GB as f64) as u64;
+        let rh = m.run(&hdfs, &wc, bytes);
+        let ri = m.run(&igfs, &wc, bytes);
+        assert!(rh.ok() && ri.ok());
+        let h_gbps = rh.io.gbps_over_makespan(&shuffle_tags);
+        let i_gbps = ri.io.gbps_over_makespan(&shuffle_tags);
+        let i_busy = ri.io.gbps_for(tags::INTERMEDIATE_WRITE);
+        igfs_series.push(i_gbps);
+        t.row(&[
+            format!("{gb}"),
+            format!("{h_gbps:.2}"),
+            format!("{i_gbps:.2}"),
+            format!("{i_busy:.2}"),
+        ]);
+        assert!(i_gbps >= h_gbps,
+                "IGFS throughput must dominate HDFS at {gb} GB");
+    }
+    t.print();
+    // Shape: throughput grows with input (startup amortized out).
+    assert!(igfs_series.last().unwrap() > igfs_series.first().unwrap(),
+            "IGFS throughput should rise with input size");
+    println!("fig6 OK: IGFS > HDFS and rising-with-size shape holds");
+}

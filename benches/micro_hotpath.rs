@@ -1,0 +1,100 @@
+//! Microbenchmarks of the hot paths (§Perf): PJRT combine batch
+//! latency/throughput vs the pure-Rust oracle, DES event throughput,
+//! and the tokenize+hash data plane rate that calibrates
+//! `Workload::map_rate`.
+
+use marvel::mapreduce::Workload;
+use marvel::runtime::{default_artifacts_dir, RtEngine};
+use marvel::sim::{Engine, SimNs, Stage};
+use marvel::util::bench::{fmt_ns, Bench};
+use marvel::util::rng::Rng;
+use marvel::workloads::{Corpus, WordCount};
+
+fn main() {
+    let bench = Bench::new(3, 15);
+
+    // -- PJRT combine batch vs oracle
+    let dir = default_artifacts_dir();
+    let mut pjrt = RtEngine::load(dir.as_deref()).expect("rt");
+    let mut oracle = RtEngine::load(None).expect("oracle rt");
+    let n = pjrt.batch_size();
+    let mut rng = Rng::new(1);
+    let hashes: Vec<i32> =
+        (0..n).map(|_| (rng.next_u32() & 0x7fffffff) as i32).collect();
+    let mask = vec![1f32; n];
+
+    let r_p = bench.run("pjrt wordcount_combine (8192 tokens)", || {
+        pjrt.wordcount_batch(&hashes, &mask).unwrap()
+    });
+    let r_o = bench.run("oracle wordcount_combine (8192 tokens)", || {
+        oracle.wordcount_batch(&hashes, &mask).unwrap()
+    });
+    println!("{}", r_p.summary());
+    println!("{}", r_o.summary());
+    println!(
+        "  pjrt tokens/s: {:.1} M   oracle tokens/s: {:.1} M   mode: {}",
+        r_p.throughput(n as f64) / 1e6,
+        r_o.throughput(n as f64) / 1e6,
+        if pjrt.is_pjrt() { "PJRT" } else { "oracle-fallback" },
+    );
+
+    // -- tokenize+hash data plane (calibrates map_rate)
+    let corpus = Corpus::new(10_000, 1.07);
+    let mut rng = Rng::new(2);
+    let text = corpus.generate(8_000_000, &mut rng);
+    let r_t = bench.run("tokenize+hash 8 MB", || {
+        text.split(|b| *b == b' ')
+            .filter(|w| !w.is_empty())
+            .map(marvel::util::hash::token_hash)
+            .fold(0i64, |a, h| a + h as i64)
+    });
+    println!("{}", r_t.summary());
+    println!("  data plane rate: {:.1} MB/s",
+             r_t.throughput(8_000_000.0) / 1e6);
+
+    // -- full map_split through the runtime (the real map hot path)
+    let wc = WordCount::new(10_000, 1.07, &pjrt);
+    let cfg = marvel::mapreduce::SystemConfig::marvel_igfs();
+    let payload = marvel::storage::Payload::real(text.clone());
+    let r_m = bench.run("map_split 8 MB (kernel combine)", || {
+        wc.map_split(&payload, 32, &cfg, &mut pjrt, &mut Rng::new(3))
+    });
+    println!("{}", r_m.summary());
+    println!("  map_split rate: {:.1} MB/s (feeds map_rate calibration)",
+             r_m.throughput(8_000_000.0) / 1e6);
+
+    // -- DES engine: events/second
+    let r_e = bench.run("DES: 10k procs × 3 stages through 8 pools", || {
+        let mut e = Engine::new();
+        let pools: Vec<_> = (0..8).map(|_| e.add_pool(4)).collect();
+        let bar = e.add_barrier(10_000);
+        for i in 0..10_000u32 {
+            let p = pools[(i % 8) as usize];
+            e.spawn("t", vec![
+                Stage::Acquire(p),
+                Stage::Delay(SimNs::from_micros(10)),
+                Stage::Release(p),
+                Stage::Arrive(bar),
+            ]);
+        }
+        e.run().unwrap()
+    });
+    println!("{}", r_e.summary());
+    println!("  ≈{} per proc", fmt_ns(r_e.mean_ns / 10_000.0));
+
+    // -- flow simulator: fan-in contention
+    let r_f = bench.run("DES: 2000 concurrent flows on one link", || {
+        let mut e = Engine::new();
+        let link = e.add_resource("l", 1e9);
+        for i in 0..2000u32 {
+            e.spawn("f", vec![Stage::Flow {
+                bytes: 1e6,
+                path: vec![link],
+                tag: i,
+            }]);
+        }
+        e.run().unwrap()
+    });
+    println!("{}", r_f.summary());
+    println!("micro_hotpath done");
+}

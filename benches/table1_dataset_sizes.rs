@@ -1,0 +1,73 @@
+//! Regenerates **Table 1**: dataset sizes at different MapReduce phases
+//! (input / intermediate / output) for Scan, Aggregation, Join and
+//! WordCount at the paper's own input sizes. The paper measured these
+//! on the stateless (pre-combine, JSON-framed) pipeline — we use the
+//! same configuration.
+
+use marvel::coordinator::{ClusterSpec, Marvel};
+use marvel::mapreduce::{SystemConfig, Workload};
+use marvel::net::DeviceRole;
+use marvel::util::table::Table;
+use marvel::workloads::{AggregationQuery, JoinQuery, ScanQuery, WordCount};
+
+const GB: u64 = 1_000_000_000;
+
+fn gb(x: f64) -> u64 {
+    (x * GB as f64) as u64
+}
+
+fn main() {
+    let mut m = Marvel::new(ClusterSpec::default(), 42).expect("marvel");
+    // Table 1 methodology: stateless pipeline, JSON records, no combine.
+    let cfg = SystemConfig::onprem(DeviceRole::Pmem, false);
+
+    let wc = WordCount::new(10_000, 1.07, &m.rt);
+    let agg = AggregationQuery::new(&m.rt);
+    let scan = ScanQuery::new();
+    let join = JoinQuery::new();
+    // (workload, label, paper rows: (input, intermediate, output) GB)
+    let spec: Vec<(&dyn Workload, &str, Vec<(f64, f64, f64)>)> = vec![
+        (&scan, "Scan Query",
+         vec![(0.54, 0.76, 0.1), (1.2, 1.3, 0.16), (5.7, 6.7, 0.81)]),
+        (&agg, "Aggregation Query",
+         vec![(10.5, 17.4, 0.01), (26.3, 32.0, 0.03), (58.0, 74.0, 0.03)]),
+        (&join, "Join Query",
+         vec![(12.5, 49.6, 9.7), (27.5, 103.0, 22.6), (63.7, 242.0, 51.0)]),
+        (&wc, "Word Count",
+         vec![(1.0, 5.5, 0.01), (5.0, 28.0, 0.03), (10.0, 56.0, 0.1),
+              (50.0, 291.0, 0.4)]),
+    ];
+
+    let mut t = Table::new(
+        "Table 1 — Dataset sizes at different MapReduce phases (GB)",
+        &["workload", "input", "intermediate", "paper", "output", "paper"],
+    );
+    for (wl, label, rows) in &spec {
+        for (in_gb, p_int, p_out) in rows {
+            let r = m.run(&cfg, *wl, gb(*in_gb));
+            assert!(r.ok(), "{label} {in_gb} GB: {:?}", r.failed);
+            t.row(&[
+                label.to_string(),
+                format!("{in_gb}"),
+                format!("{:.2}", r.intermediate_bytes as f64 / GB as f64),
+                format!("{p_int}"),
+                format!("{:.3}", r.output_bytes as f64 / GB as f64),
+                format!("{p_out}"),
+            ]);
+            // Shape assertions: intermediate-to-input ratio in the same
+            // regime as the paper's (who-expands-how-much).
+            let ratio = r.intermediate_bytes as f64 / r.input_bytes as f64;
+            let paper_ratio = p_int / in_gb;
+            match *label {
+                "Word Count" => assert!(ratio > 3.0 && ratio < 8.0,
+                                        "wc ratio {ratio}"),
+                "Join Query" => assert!(ratio > 2.0 && ratio < 6.0,
+                                        "join ratio {ratio}"),
+                _ => assert!(ratio > 0.5 && ratio < 2.5,
+                             "{label} ratio {ratio} (paper {paper_ratio})"),
+            }
+        }
+    }
+    t.print();
+    println!("table1 OK: expansion regimes match the paper's");
+}

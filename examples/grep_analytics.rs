@@ -1,0 +1,58 @@
+//! Grep analytics scenario: log-scanning with patterns of different
+//! selectivity — the workload class the paper's §4.2.1 Figure 5
+//! evaluates. Shows how intermediate volume (and thus the benefit of
+//! in-memory shuffle) tracks pattern selectivity.
+
+use marvel::coordinator::{ClusterSpec, Marvel};
+use marvel::mapreduce::SystemConfig;
+use marvel::util::bytes::{self, MIB};
+use marvel::util::table::Table;
+use marvel::workloads::{Corpus, Grep};
+
+fn main() -> Result<(), String> {
+    let mut m = Marvel::new(ClusterSpec::default(), 7)?;
+    let corpus = Corpus::new(10_000, 1.07);
+    let input = 16 * MIB;
+
+    let mut t = Table::new(
+        "Grep: pattern selectivity vs shuffle volume (marvel-igfs)",
+        &["pattern rank", "match rate", "intermediate", "matches", "job time"],
+    );
+    for rank in [0usize, 5, 50, 500] {
+        let prefix = corpus.prefix_of_rank(rank, 2);
+        let grep = Grep::new(10_000, 1.07, &prefix, &m.rt);
+        let r = m.run(&SystemConfig::marvel_igfs(), &grep, input);
+        assert!(r.ok(), "{:?}", r.failed);
+        t.row(&[
+            format!("{} ({:?})", rank, String::from_utf8_lossy(&prefix)),
+            format!("{:.3}", grep.match_prob()),
+            bytes::human(r.intermediate_bytes),
+            r.reduce.bytes_in.to_string(),
+            format!("{}", r.job_time),
+        ]);
+    }
+    t.print();
+
+    // Cross-system comparison at one pattern (Figure 5's shape).
+    let prefix = corpus.prefix_of_rank(5, 2);
+    let grep = Grep::new(10_000, 1.07, &prefix, &m.rt);
+    let mut t = Table::new(
+        "Grep across systems",
+        &["system", "job time", "intermediate"],
+    );
+    for cfg in [
+        SystemConfig::corral_lambda(),
+        SystemConfig::marvel_hdfs(),
+        SystemConfig::marvel_igfs(),
+    ] {
+        let r = m.run(&cfg, &grep, input);
+        assert!(r.ok(), "{}: {:?}", cfg.name, r.failed);
+        t.row(&[
+            r.config.clone(),
+            format!("{}", r.job_time),
+            bytes::human(r.intermediate_bytes),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

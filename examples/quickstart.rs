@@ -1,0 +1,38 @@
+//! Quickstart: run one WordCount job on the Marvel-IGFS stack.
+//!
+//! ```bash
+//! make artifacts          # once: AOT-compile the combine kernels
+//! cargo run --release --example quickstart
+//! ```
+
+use marvel::coordinator::{ClusterSpec, Marvel};
+use marvel::mapreduce::SystemConfig;
+use marvel::util::bytes::MIB;
+use marvel::workloads::WordCount;
+
+fn main() -> Result<(), String> {
+    // 1. A client against the paper's testbed shape (1 node, 32 slots,
+    //    700 GB PMEM). Loads artifacts/ if `make artifacts` has run.
+    let mut marvel = Marvel::new(ClusterSpec::default(), 42)?;
+    println!(
+        "runtime: {}",
+        if marvel.rt.is_pjrt() { "PJRT (AOT artifacts)" } else { "oracle" }
+    );
+
+    // 2. A workload: WordCount over a 10k-word zipfian corpus.
+    let wc = WordCount::new(10_000, 1.07, &marvel.rt);
+
+    // 3. Run 8 MiB of real text through the full stack: HDFS-on-PMEM
+    //    input, OpenWhisk actions, PJRT combine, IGFS shuffle.
+    let result = marvel.run(&SystemConfig::marvel_igfs(), &wc, 8 * MIB);
+
+    marvel::cli::print_job_result(&result);
+    assert!(result.ok(), "job failed: {:?}", result.failed);
+    println!(
+        "counted {} tokens into {} bytes of output in {} (simulated)",
+        result.map.tasks,
+        result.output_bytes,
+        result.job_time
+    );
+    Ok(())
+}

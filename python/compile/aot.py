@@ -1,0 +1,116 @@
+"""AOT lowering: jax -> StableHLO -> XlaComputation -> HLO *text*.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published `xla` 0.1.6 crate links) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. Lowered with return_tuple=True; the Rust side unwraps with
+`to_tuple1()`/`to_tuple()`.
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entries():
+    """(name, fn, arg specs, metadata) for every artifact we ship."""
+    i32, f32 = jnp.int32, jnp.float32
+    n, ns = model.TOKENS_PER_BATCH, model.SMALL_BATCH
+    w, b, r, s = (model.WORD_WIDTH, model.BUCKETS, model.PARTS,
+                  model.SEGMENTS)
+    return [
+        ("wordcount_combine", model.wordcount_combine,
+         [_spec((n,), i32), _spec((n,), f32)],
+         {"n": n, "parts": r, "buckets": b,
+          "outputs": [[r, b]]}),
+        ("wordcount_combine_small", model.wordcount_combine,
+         [_spec((ns,), i32), _spec((ns,), f32)],
+         {"n": ns, "parts": r, "buckets": b,
+          "outputs": [[r, b]]}),
+        ("grep_combine", model.grep_combine,
+         [_spec((n, w), i32), _spec((n,), i32), _spec((n,), f32),
+          _spec((w,), i32)],
+         {"n": n, "w": w, "parts": r, "buckets": b,
+          "outputs": [[r, b], [1]]}),
+        ("agg_combine", model.agg_combine,
+         [_spec((ns,), i32), _spec((ns,), f32), _spec((ns,), f32)],
+         {"n": ns, "segments": s, "outputs": [[s], [s]]}),
+        # CPU-specialized lowering of the same math (scatter-add instead
+        # of the TPU-tiled Pallas grid) — see model.py.
+        ("wordcount_combine_cpu", model.wordcount_combine_cpu,
+         [_spec((n,), i32), _spec((n,), f32)],
+         {"n": n, "parts": r, "buckets": b, "outputs": [[r, b]]}),
+        ("grep_combine_cpu", model.grep_combine_cpu,
+         [_spec((n, w), i32), _spec((n,), i32), _spec((n,), f32),
+          _spec((w,), i32)],
+         {"n": n, "w": w, "parts": r, "buckets": b,
+          "outputs": [[r, b], [1]]}),
+        ("agg_combine_cpu", model.agg_combine_cpu,
+         [_spec((ns,), i32), _spec((ns,), f32), _spec((ns,), f32)],
+         {"n": ns, "segments": s, "outputs": [[s], [s]]}),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {
+        "format": "hlo-text/return-tuple",
+        "constants": {
+            "tokens_per_batch": model.TOKENS_PER_BATCH,
+            "small_batch": model.SMALL_BATCH,
+            "word_width": model.WORD_WIDTH,
+            "buckets": model.BUCKETS,
+            "parts": model.PARTS,
+            "segments": model.SEGMENTS,
+            "part_shift": 10,
+        },
+        "artifacts": {},
+    }
+    for name, fn, specs, meta in entries():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        meta = dict(meta)
+        meta["file"] = fname
+        meta["sha256"] = hashlib.sha256(text.encode()).hexdigest()
+        meta["params"] = [
+            {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+        ]
+        manifest["artifacts"][name] = meta
+        print(f"wrote {fname}: {len(text)} chars")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest.json with {len(manifest['artifacts'])} entries")
+
+
+if __name__ == "__main__":
+    main()

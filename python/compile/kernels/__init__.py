@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels for Marvel's map-side combine hot-spot.
+
+Each kernel has a pure-jnp oracle in `ref.py`; pytest sweeps shapes and
+asserts allclose. Kernels are lowered with ``interpret=True`` — the CPU
+PJRT plugin cannot execute Mosaic custom-calls, so interpret mode is the
+correctness (and AOT) path; real-TPU performance is estimated analytically
+in DESIGN.md §Perf.
+"""
+
+from .histogram import histogram
+from .grep_match import grep_match
+from .segsum import segsum
+
+__all__ = ["histogram", "grep_match", "segsum"]

@@ -1,0 +1,58 @@
+"""Fixed-width token pattern-match Pallas kernel (the Grep mapper core).
+
+Tokens are padded/truncated to W int32 "bytes" (0 = padding). The pattern
+is a (W,) int32 vector where ``-1`` is a single-position wildcard and
+``-2`` means "match anything from here on" (prefix match). The kernel
+emits a 0/1 f32 mask per token; the combiner multiplies it into the
+histogram weights so only matching words are counted/shuffled.
+
+Vectorization: the (TN, W) tile is compared element-wise against the
+broadcast pattern and reduced along W — pure VPU work, tiled over the
+token axis by BlockSpec.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 512
+
+WILD_ONE = -1   # match any single byte
+WILD_REST = -2  # match the remainder of the token
+
+
+def _grep_kernel(toks_ref, pat_ref, o_ref):
+    toks = toks_ref[...]  # (TN, W) int32
+    pat = pat_ref[...]  # (1, W) int32
+    rest = jnp.cumsum((pat == WILD_REST).astype(jnp.int32), axis=1) > 0
+    ok = (toks == pat) | (pat == WILD_ONE) | rest
+    o_ref[...] = jnp.all(ok, axis=1).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def grep_match(tokens, pattern, *, tile_n: int = TILE_N):
+    """Match every padded token against the wildcard pattern.
+
+    Args:
+      tokens: (N, W) int32 padded token bytes (0-padded).
+      pattern: (W,) int32 pattern with WILD_ONE / WILD_REST sentinels.
+    Returns:
+      (N,) float32 in {0.0, 1.0}.
+    """
+    n, w = tokens.shape
+    tile_n = min(tile_n, n)
+    if n % tile_n != 0:
+        raise ValueError(f"n={n} not divisible by tile_n={tile_n}")
+    return pl.pallas_call(
+        _grep_kernel,
+        grid=(n // tile_n,),
+        in_specs=[
+            pl.BlockSpec((tile_n, w), lambda i: (i, 0)),
+            pl.BlockSpec((1, w), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(tokens, pattern.reshape(1, w))

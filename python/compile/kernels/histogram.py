@@ -1,0 +1,75 @@
+"""Masked bucket-count (histogram) Pallas kernel.
+
+The MapReduce map-side combiner reduces ``N`` hashed tokens into ``B``
+bucket counts before anything is shipped over the (simulated) network —
+the I/O-reduction insight of the paper applied to the compute layer.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): a scatter-add histogram
+is hostile to the MXU, so the kernel is restructured as a tiled one-hot
+contraction: for each (token-tile × bucket-tile) grid cell we materialize
+a (TN, TB) one-hot compare in VMEM and contract it against the weight
+vector — a (1×TN)·(TN×TB) matmul shape. BlockSpec expresses the HBM↔VMEM
+schedule over both axes; the bucket axis is the output block, the token
+axis is the accumulation (fastest-varying) grid axis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. TN * TB * 4 B = 512 KiB of one-hot per grid cell —
+# comfortably double-bufferable in a 16 MiB VMEM budget.
+TILE_N = 512
+TILE_B = 256
+
+
+def _hist_kernel(ids_ref, w_ref, o_ref, *, tile_b: int):
+    """One (bucket-tile i, token-tile j) grid cell."""
+    j = pl.program_id(1)  # token axis — accumulation axis (fastest)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ids = ids_ref[...]  # (TN,) int32
+    w = w_ref[...]  # (TN,) f32
+    base = pl.program_id(0) * tile_b
+    buckets = base + jax.lax.broadcasted_iota(jnp.int32, (tile_b,), 0)
+    # (TN, TB) one-hot; contraction against w is MXU-shaped.
+    onehot = (ids[:, None] == buckets[None, :]).astype(jnp.float32)
+    o_ref[...] += w @ onehot
+
+
+@functools.partial(jax.jit, static_argnames=("bins", "tile_n", "tile_b"))
+def histogram(ids, weights, *, bins: int, tile_n: int = TILE_N,
+              tile_b: int = TILE_B):
+    """Masked histogram: sum of ``weights`` per bucket id.
+
+    Args:
+      ids: (N,) int32 bucket ids; entries outside [0, bins) contribute 0.
+      weights: (N,) float32 per-token weight (use the validity mask, or
+        mask * value for weighted counts).
+      bins: number of buckets B.
+    Returns:
+      (bins,) float32 counts.
+    """
+    n = ids.shape[0]
+    tile_n = min(tile_n, n)
+    tile_b = min(tile_b, bins)
+    if n % tile_n != 0 or bins % tile_b != 0:
+        raise ValueError(f"n={n} bins={bins} not divisible by tiles "
+                         f"({tile_n},{tile_b})")
+    grid = (bins // tile_b, n // tile_n)
+    return pl.pallas_call(
+        functools.partial(_hist_kernel, tile_b=tile_b),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n,), lambda i, j: (j,)),
+            pl.BlockSpec((tile_n,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tile_b,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((bins,), jnp.float32),
+        interpret=True,
+    )(ids, weights)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Kept deliberately naive (segment_sum / direct compare) so a bug in the
+tiled kernels cannot be mirrored here.
+"""
+
+import jax.numpy as jnp
+import jax.ops
+
+from .grep_match import WILD_ONE, WILD_REST
+
+
+def histogram_ref(ids, weights, *, bins: int):
+    """Sum of weights per bucket, out-of-range ids dropped."""
+    valid = (ids >= 0) & (ids < bins)
+    w = jnp.where(valid, weights, 0.0)
+    ids = jnp.clip(ids, 0, bins - 1)
+    return jax.ops.segment_sum(w, ids, num_segments=bins)
+
+
+def grep_match_ref(tokens, pattern):
+    """0/1 match mask for padded tokens vs wildcard pattern."""
+    pat = pattern.reshape(1, -1)
+    rest = jnp.cumsum((pat == WILD_REST).astype(jnp.int32), axis=1) > 0
+    ok = (tokens == pat) | (pat == WILD_ONE) | rest
+    return jnp.all(ok, axis=1).astype(jnp.float32)
+
+
+def segsum_ref(seg_ids, values, mask, *, segments: int):
+    """(sums, counts) per segment, out-of-range ids dropped."""
+    valid = (seg_ids >= 0) & (seg_ids < segments)
+    m = jnp.where(valid, mask, 0.0)
+    ids = jnp.clip(seg_ids, 0, segments - 1)
+    sums = jax.ops.segment_sum(values * m, ids, num_segments=segments)
+    cnts = jax.ops.segment_sum(m, ids, num_segments=segments)
+    return sums, cnts
+
+
+def wordcount_combine_ref(hashes, mask, *, parts: int, buckets: int):
+    """(R, B) partitioned counts; see model.wordcount_combine."""
+    bucket = hashes & (buckets - 1)
+    part = (hashes >> 10) & (parts - 1)
+    flat = part * buckets + bucket
+    return histogram_ref(flat, mask, bins=parts * buckets).reshape(
+        parts, buckets)
+
+
+def grep_combine_ref(tokens, hashes, mask, pattern, *, parts: int,
+                     buckets: int):
+    """(R, B) partitioned counts of pattern-matching tokens."""
+    m = grep_match_ref(tokens, pattern) * mask
+    return wordcount_combine_ref(hashes, m, parts=parts, buckets=buckets)

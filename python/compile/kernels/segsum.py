@@ -1,0 +1,70 @@
+"""Segmented-sum Pallas kernel (aggregation-query combiner).
+
+Sums ``values`` into ``segments`` buckets — the SQL ``GROUP BY`` combine
+step of the paper's Aggregation Query workload. Identical tiling strategy
+to the histogram kernel (one-hot contraction over segment tiles), but the
+contraction weight is ``mask * value`` and we emit the count alongside the
+sum so downstream AVG-type reducers need no second pass.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 512
+TILE_S = 256
+
+
+def _segsum_kernel(seg_ref, val_ref, mask_ref, sum_ref, cnt_ref, *,
+                   tile_s: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    seg = seg_ref[...]  # (TN,) int32
+    val = val_ref[...]  # (TN,) f32
+    mask = mask_ref[...]  # (TN,) f32
+    base = pl.program_id(0) * tile_s
+    segs = base + jax.lax.broadcasted_iota(jnp.int32, (tile_s,), 0)
+    onehot = (seg[:, None] == segs[None, :]).astype(jnp.float32)
+    sum_ref[...] += (val * mask) @ onehot
+    cnt_ref[...] += mask @ onehot
+
+
+@functools.partial(jax.jit, static_argnames=("segments", "tile_n", "tile_s"))
+def segsum(seg_ids, values, mask, *, segments: int, tile_n: int = TILE_N,
+           tile_s: int = TILE_S):
+    """Masked segmented sum + count.
+
+    Args:
+      seg_ids: (N,) int32 segment ids; out-of-range contributes nothing.
+      values: (N,) float32.
+      mask: (N,) float32 validity mask.
+      segments: number of segments S.
+    Returns:
+      (sums, counts): each (segments,) float32.
+    """
+    n = seg_ids.shape[0]
+    tile_n = min(tile_n, n)
+    tile_s = min(tile_s, segments)
+    if n % tile_n != 0 or segments % tile_s != 0:
+        raise ValueError(f"n={n} segments={segments} not divisible by tiles")
+    grid = (segments // tile_s, n // tile_n)
+    tok = pl.BlockSpec((tile_n,), lambda i, j: (j,))
+    out = pl.BlockSpec((tile_s,), lambda i, j: (i,))
+    return pl.pallas_call(
+        functools.partial(_segsum_kernel, tile_s=tile_s),
+        grid=grid,
+        in_specs=[tok, tok, tok],
+        out_specs=[out, out],
+        out_shape=[
+            jax.ShapeDtypeStruct((segments,), jnp.float32),
+            jax.ShapeDtypeStruct((segments,), jnp.float32),
+        ],
+        interpret=True,
+    )(seg_ids, values, mask)

@@ -1,0 +1,102 @@
+"""Layer-2: Marvel's combine compute graphs (jax, calling L1 kernels).
+
+These are the functions AOT-lowered to HLO text and executed by the Rust
+coordinator's `runtime` module inside every map task. Shapes are fixed at
+lowering time; the manifest (aot.py) records them so the Rust side can
+build matching literals.
+
+Partition/bucket scheme (must match rust/src/mapreduce/partition.rs):
+  hashes are non-negative int32 (Rust masks the sign bit);
+  bucket = h & (B - 1)          -- low bits
+  part   = (h >> 10) & (R - 1)  -- bits above the bucket bits (B = 1024)
+A combine output (R, B) ships at most R*B aggregates per batch instead of
+N raw tokens — the kernel-level analog of the paper's "keep intermediate
+data near compute" I/O reduction.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import grep_match, histogram, segsum
+
+# Canonical lowering constants — mirrored in artifacts/manifest.json and
+# rust/src/runtime/manifest.rs. B must stay 1024 while the partition shift
+# below is 10.
+TOKENS_PER_BATCH = 8192   # N
+SMALL_BATCH = 1024        # N for the low-latency artifact variant
+WORD_WIDTH = 16           # W
+BUCKETS = 1024            # B (per partition)
+PARTS = 32                # R (max reducers)
+SEGMENTS = 1024           # S (aggregation query groups)
+_PART_SHIFT = 10          # log2(BUCKETS)
+
+
+def _flat_ids(hashes, parts: int, buckets: int):
+    bucket = hashes & (buckets - 1)
+    part = (hashes >> _PART_SHIFT) & (parts - 1)
+    return part * buckets + bucket
+
+
+def wordcount_combine(hashes, mask):
+    """(N,) int32 hashes + (N,) f32 mask -> (R, B) f32 partitioned counts."""
+    flat = _flat_ids(hashes, PARTS, BUCKETS)
+    counts = histogram(flat, mask, bins=PARTS * BUCKETS)
+    return (counts.reshape(PARTS, BUCKETS),)
+
+
+def grep_combine(tokens, hashes, mask, pattern):
+    """Match tokens vs pattern, then partitioned counts of the matches.
+
+    tokens: (N, W) int32; hashes: (N,) int32; mask: (N,) f32;
+    pattern: (W,) int32 with wildcard sentinels. Returns ((R, B) counts,
+    (1,) total-match count).
+    """
+    m = grep_match(tokens, pattern) * mask
+    flat = _flat_ids(hashes, PARTS, BUCKETS)
+    counts = histogram(flat, m, bins=PARTS * BUCKETS)
+    return counts.reshape(PARTS, BUCKETS), jnp.sum(m).reshape(1)
+
+
+def agg_combine(seg_ids, values, mask):
+    """GROUP-BY combine: (S,) sums and (S,) counts per group."""
+    sums, cnts = segsum(seg_ids, values, mask, segments=SEGMENTS)
+    return sums, cnts
+
+
+# --- CPU-specialized variants -----------------------------------------
+#
+# The Pallas kernels above are tiled for the TPU MXU; under
+# ``interpret=True`` on CPU-PJRT the grid machinery costs ~40 ms per
+# batch (measured; EXPERIMENTS.md §Perf). These variants lower the SAME
+# math through XLA scatter-add (segment_sum), which the CPU backend
+# executes in microseconds. aot.py ships both; the Rust runtime picks
+# the ``*_cpu`` artifact on CPU-PJRT and the Pallas one is kept as the
+# TPU-shaped reference (validated against ref.py either way).
+
+def _segment_sum(weights, ids, bins):
+    return jax.ops.segment_sum(weights, ids, num_segments=bins)
+
+
+def wordcount_combine_cpu(hashes, mask):
+    flat = _flat_ids(hashes, PARTS, BUCKETS)
+    counts = _segment_sum(mask, flat, PARTS * BUCKETS)
+    return (counts.reshape(PARTS, BUCKETS),)
+
+
+def grep_combine_cpu(tokens, hashes, mask, pattern):
+    pat = pattern.reshape(1, -1)
+    rest = jnp.cumsum((pat == -2).astype(jnp.int32), axis=1) > 0
+    ok = (tokens == pat) | (pat == -1) | rest
+    m = jnp.all(ok, axis=1).astype(jnp.float32) * mask
+    flat = _flat_ids(hashes, PARTS, BUCKETS)
+    counts = _segment_sum(m, flat, PARTS * BUCKETS)
+    return counts.reshape(PARTS, BUCKETS), jnp.sum(m).reshape(1)
+
+
+def agg_combine_cpu(seg_ids, values, mask):
+    valid = (seg_ids >= 0) & (seg_ids < SEGMENTS)
+    m = jnp.where(valid, mask, 0.0)
+    ids = jnp.clip(seg_ids, 0, SEGMENTS - 1)
+    sums = _segment_sum(values * m, ids, SEGMENTS)
+    cnts = _segment_sum(m, ids, SEGMENTS)
+    return sums, cnts

@@ -1,0 +1,140 @@
+"""Kernel-vs-oracle correctness: hypothesis sweeps shapes/values.
+
+This is the CORE correctness signal for Layer 1 — everything the Rust
+runtime executes flows through these kernels.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import grep_match, histogram, segsum
+from compile.kernels.grep_match import WILD_ONE, WILD_REST
+from compile.kernels import ref
+
+SHAPES = st.sampled_from([(64, 32), (128, 64), (512, 256), (1024, 128)])
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+class TestHistogram:
+    @settings(max_examples=20, deadline=None)
+    @given(shape=SHAPES, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, shape, seed):
+        n, bins = shape
+        r = _rng(seed)
+        ids = r.integers(0, bins, n).astype(np.int32)
+        w = r.random(n).astype(np.float32)
+        got = histogram(jnp.asarray(ids), jnp.asarray(w), bins=bins)
+        want = ref.histogram_ref(jnp.asarray(ids), jnp.asarray(w), bins=bins)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_mass_conservation(self):
+        r = _rng(7)
+        ids = r.integers(0, 256, 2048).astype(np.int32)
+        w = np.ones(2048, np.float32)
+        got = histogram(jnp.asarray(ids), jnp.asarray(w), bins=256)
+        assert float(got.sum()) == pytest.approx(2048.0)
+
+    def test_masked_tokens_do_not_count(self):
+        ids = np.zeros(512, np.int32)
+        w = np.zeros(512, np.float32)
+        w[:100] = 1.0
+        got = histogram(jnp.asarray(ids), jnp.asarray(w), bins=64)
+        assert float(got[0]) == pytest.approx(100.0)
+        assert float(got[1:].sum()) == 0.0
+
+    def test_out_of_range_dropped(self):
+        ids = np.full(512, 9999, np.int32)
+        w = np.ones(512, np.float32)
+        got = histogram(jnp.asarray(ids), jnp.asarray(w), bins=64)
+        assert float(got.sum()) == 0.0
+
+    def test_non_divisible_tile_raises(self):
+        with pytest.raises(ValueError):
+            histogram(jnp.zeros(100, jnp.int32), jnp.zeros(100), bins=64,
+                      tile_n=64)
+
+    @pytest.mark.parametrize("tile_n,tile_b", [(64, 32), (128, 128),
+                                               (256, 64)])
+    def test_tile_invariance(self, tile_n, tile_b):
+        r = _rng(3)
+        ids = r.integers(0, 128, 512).astype(np.int32)
+        w = r.random(512).astype(np.float32)
+        a = histogram(jnp.asarray(ids), jnp.asarray(w), bins=128,
+                      tile_n=tile_n, tile_b=tile_b)
+        b = ref.histogram_ref(jnp.asarray(ids), jnp.asarray(w), bins=128)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+class TestGrepMatch:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           n=st.sampled_from([64, 256, 512]),
+           w=st.sampled_from([8, 16]))
+    def test_matches_ref(self, seed, n, w):
+        r = _rng(seed)
+        toks = r.integers(0, 4, (n, w)).astype(np.int32)  # small alphabet
+        pat = r.integers(-2, 4, w).astype(np.int32)
+        got = grep_match(jnp.asarray(toks), jnp.asarray(pat))
+        want = ref.grep_match_ref(jnp.asarray(toks), jnp.asarray(pat))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_exact_match(self):
+        toks = np.zeros((64, 8), np.int32)
+        toks[0] = [104, 101, 108, 108, 111, 0, 0, 0]  # "hello"
+        pat = np.array([104, 101, 108, 108, 111, 0, 0, 0], np.int32)
+        got = np.asarray(grep_match(jnp.asarray(toks), jnp.asarray(pat)))
+        assert got[0] == 1.0
+        assert got[1:].sum() == 0.0  # all-zero tokens match? pattern != 0s
+
+    def test_wildcard_one(self):
+        toks = np.array([[1, 2, 3, 4]] * 64, np.int32)
+        pat = np.array([1, WILD_ONE, 3, 4], np.int32)
+        got = np.asarray(grep_match(jnp.asarray(toks), jnp.asarray(pat)))
+        assert got.sum() == 64.0
+
+    def test_wildcard_rest_prefix(self):
+        toks = np.zeros((64, 8), np.int32)
+        toks[:, 0] = 7
+        toks[0, 1] = 9
+        pat = np.array([7, WILD_REST, 0, 0, 0, 0, 0, 0], np.int32)
+        got = np.asarray(grep_match(jnp.asarray(toks), jnp.asarray(pat)))
+        assert got.sum() == 64.0  # prefix 7 matches regardless of tail
+
+    def test_no_match(self):
+        toks = np.ones((64, 8), np.int32)
+        pat = np.full(8, 2, np.int32)
+        got = np.asarray(grep_match(jnp.asarray(toks), jnp.asarray(pat)))
+        assert got.sum() == 0.0
+
+
+class TestSegsum:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           shape=st.sampled_from([(64, 32), (512, 256), (1024, 64)]))
+    def test_matches_ref(self, seed, shape):
+        n, s = shape
+        r = _rng(seed)
+        ids = r.integers(0, s, n).astype(np.int32)
+        vals = r.normal(size=n).astype(np.float32)
+        mask = (r.random(n) > 0.3).astype(np.float32)
+        got_s, got_c = segsum(jnp.asarray(ids), jnp.asarray(vals),
+                              jnp.asarray(mask), segments=s)
+        want_s, want_c = ref.segsum_ref(jnp.asarray(ids), jnp.asarray(vals),
+                                        jnp.asarray(mask), segments=s)
+        np.testing.assert_allclose(got_s, want_s, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(got_c, want_c, rtol=1e-5, atol=1e-5)
+
+    def test_counts_equal_mask_sum(self):
+        r = _rng(11)
+        ids = r.integers(0, 64, 512).astype(np.int32)
+        vals = r.random(512).astype(np.float32)
+        mask = np.ones(512, np.float32)
+        _, cnt = segsum(jnp.asarray(ids), jnp.asarray(vals),
+                        jnp.asarray(mask), segments=64)
+        assert float(cnt.sum()) == pytest.approx(512.0)

@@ -1,0 +1,76 @@
+"""Model-level (L2) checks: partition scheme, shapes, oracle agreement."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+class TestWordcountCombine:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, seed):
+        r = _rng(seed)
+        n = model.TOKENS_PER_BATCH
+        h = r.integers(0, 2**31 - 1, n).astype(np.int32)
+        mask = (r.random(n) > 0.1).astype(np.float32)
+        (got,) = model.wordcount_combine(jnp.asarray(h), jnp.asarray(mask))
+        want = ref.wordcount_combine_ref(
+            jnp.asarray(h), jnp.asarray(mask),
+            parts=model.PARTS, buckets=model.BUCKETS)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+        assert got.shape == (model.PARTS, model.BUCKETS)
+
+    def test_total_mass(self):
+        n = model.TOKENS_PER_BATCH
+        h = np.arange(n, dtype=np.int32)
+        mask = np.ones(n, np.float32)
+        (got,) = model.wordcount_combine(jnp.asarray(h), jnp.asarray(mask))
+        assert float(got.sum()) == pytest.approx(float(n))
+
+    def test_same_hash_same_cell(self):
+        n = model.TOKENS_PER_BATCH
+        h = np.full(n, 123456789, np.int32)
+        mask = np.ones(n, np.float32)
+        (got,) = model.wordcount_combine(jnp.asarray(h), jnp.asarray(mask))
+        got = np.asarray(got)
+        assert (got > 0).sum() == 1
+        assert float(got.max()) == pytest.approx(float(n))
+
+
+class TestGrepCombine:
+    def test_counts_only_matches(self):
+        n, w = model.TOKENS_PER_BATCH, model.WORD_WIDTH
+        r = _rng(5)
+        toks = np.zeros((n, w), np.int32)
+        toks[: n // 2, 0] = 42  # half start with byte 42
+        h = r.integers(0, 2**31 - 1, n).astype(np.int32)
+        mask = np.ones(n, np.float32)
+        pat = np.full(w, -2, np.int32)
+        pat[0] = 42
+        counts, total = model.grep_combine(
+            jnp.asarray(toks), jnp.asarray(h), jnp.asarray(mask),
+            jnp.asarray(pat))
+        assert float(total[0]) == pytest.approx(n / 2)
+        assert float(counts.sum()) == pytest.approx(n / 2)
+
+
+class TestAggCombine:
+    def test_group_by_average(self):
+        n = model.SMALL_BATCH
+        r = _rng(9)
+        ids = r.integers(0, model.SEGMENTS, n).astype(np.int32)
+        vals = r.random(n).astype(np.float32)
+        mask = np.ones(n, np.float32)
+        sums, cnts = model.agg_combine(
+            jnp.asarray(ids), jnp.asarray(vals), jnp.asarray(mask))
+        assert float(cnts.sum()) == pytest.approx(float(n))
+        np.testing.assert_allclose(float(sums.sum()), vals.sum(), rtol=1e-4)

@@ -1,0 +1,312 @@
+//! Command-line interface for the `marvel` binary (no clap offline —
+//! a small strict arg parser + subcommands).
+//!
+//! ```text
+//! marvel run   [--config FILE] [--system NAME] [--workload NAME]
+//!              [--input SIZE] [--seed N] [--nodes N]
+//! marvel fio   [--streams N] [--ops N]            # Table 2
+//! marvel sweep [--workload NAME] [--sizes a,b,c] [--systems x,y]
+//! marvel info                                     # artifacts + cluster
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::config::{system_by_name, ExperimentConfig};
+use crate::coordinator::{ClusterSpec, Marvel};
+use crate::mapreduce::{JobResult, SystemConfig, Workload};
+use crate::metrics::tags;
+use crate::storage::fio;
+use crate::util::bytes::{self, parse_size};
+use crate::util::table::{fmt_secs, Table};
+use crate::workloads::{AggregationQuery, Grep, JoinQuery, ScanQuery,
+                       WordCount};
+
+/// Parsed `--key value` flags + positional args.
+pub struct Args {
+    pub cmd: String,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        let cmd = argv.first().cloned().unwrap_or_else(|| "help".into());
+        let mut flags = BTreeMap::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| format!("expected --flag, got {a:?}"))?;
+            let val = argv
+                .get(i + 1)
+                .ok_or_else(|| format!("--{key} needs a value"))?;
+            flags.insert(key.to_string(), val.clone());
+            i += 2;
+        }
+        Ok(Args { cmd, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+}
+
+/// Build a workload by name.
+pub fn workload_by_name(
+    name: &str,
+    vocab: usize,
+    zipf_s: f64,
+    rt: &crate::runtime::RtEngine,
+) -> Result<Box<dyn Workload>, String> {
+    Ok(match name {
+        "wordcount" | "wc" => Box::new(WordCount::new(vocab, zipf_s, rt)),
+        "grep" => {
+            let prefix = crate::workloads::Corpus::new(vocab, zipf_s)
+                .prefix_of_rank(5, 2);
+            Box::new(Grep::new(vocab, zipf_s, &prefix, rt))
+        }
+        "scan_query" | "scan" => Box::new(ScanQuery::new()),
+        "aggregation_query" | "agg" => Box::new(AggregationQuery::new(rt)),
+        "join_query" | "join" => Box::new(JoinQuery::new()),
+        other => return Err(format!("unknown workload {other:?}")),
+    })
+}
+
+pub fn print_job_result(r: &JobResult) {
+    let mut t = Table::new(
+        &format!("{} on {}", r.job, r.config),
+        &["metric", "value"],
+    );
+    match &r.failed {
+        Some(msg) => {
+            t.row_strs(&["status", &format!("FAILED: {msg}")]);
+        }
+        None => {
+            t.row_strs(&["status", "ok"]);
+        }
+    }
+    t.row_strs(&["input", &bytes::human(r.input_bytes)]);
+    t.row_strs(&["intermediate", &bytes::human(r.intermediate_bytes)]);
+    t.row_strs(&["output", &bytes::human(r.output_bytes)]);
+    t.row_strs(&["job time", &format!("{}", r.job_time)]);
+    t.row_strs(&["map phase", &format!("{} tasks, {}", r.map.tasks,
+                                       r.map.duration)]);
+    t.row_strs(&["reduce phase", &format!("{} tasks, {}", r.reduce.tasks,
+                                          r.reduce.duration)]);
+    t.row_strs(&["cold starts", &r.cold_starts.to_string()]);
+    t.row_strs(&["locality", &format!("{:.0} %", r.locality_ratio * 100.0)]);
+    t.row_strs(&["shuffle I/O", &format!(
+        "{:.2} Gbps",
+        r.io.gbps_over_makespan(&[tags::INTERMEDIATE_WRITE,
+                                  tags::INTERMEDIATE_READ])
+    )]);
+    t.row_strs(&["combine batches", &r.rt_batches.to_string()]);
+    t.print();
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::load(path)?,
+        None => ExperimentConfig::parse("")?,
+    };
+    if let Some(s) = args.get("system") {
+        cfg.system = system_by_name(s)?;
+    }
+    if let Some(w) = args.get("workload") {
+        cfg.workload = w.to_string();
+    }
+    if let Some(i) = args.get("input") {
+        cfg.input_bytes = parse_size(i)?;
+    }
+    if let Some(s) = args.get("seed") {
+        cfg.seed = s.parse().map_err(|_| "bad --seed")?;
+    }
+    if let Some(n) = args.get("nodes") {
+        cfg.cluster.nodes = n.parse().map_err(|_| "bad --nodes")?;
+    }
+    let mut m = Marvel::new(cfg.cluster.clone(), cfg.seed)?;
+    println!(
+        "runtime: {} ({} artifacts)",
+        if m.rt.is_pjrt() { "PJRT" } else { "oracle (run `make artifacts`)" },
+        m.rt.manifest.artifacts.len()
+    );
+    let wl = workload_by_name(&cfg.workload, cfg.vocab, cfg.zipf_s, &m.rt)?;
+    let r = m.run(&cfg.system, wl.as_ref(), cfg.input_bytes);
+    print_job_result(&r);
+    Ok(())
+}
+
+fn cmd_fio(args: &Args) -> Result<(), String> {
+    let streams: u32 = args
+        .get("streams")
+        .unwrap_or("8")
+        .parse()
+        .map_err(|_| "bad --streams")?;
+    let ops: u64 = args
+        .get("ops")
+        .unwrap_or("100000")
+        .parse()
+        .map_err(|_| "bad --ops")?;
+    let rows = fio::table2(streams, ops);
+    let mut t = Table::new(
+        "Table 2 — IOPS, Bandwidth, Latency for PMEM vs. SSD (4 KiB)",
+        &["benchmark", "media", "IOPS (K)", "Bandwidth (GiB/s)", "Latency"],
+    );
+    for r in rows {
+        t.row(&[
+            format!("{:?} {:?}", r.access, r.dir),
+            r.media.to_string(),
+            format!("{:.1}", r.kiops),
+            format!("{:.2}", r.bandwidth_gib_s),
+            format!("{}", r.latency),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<(), String> {
+    let sizes: Vec<u64> = args
+        .get("sizes")
+        .unwrap_or("256MiB,512MiB,1GiB")
+        .split(',')
+        .map(parse_size)
+        .collect::<Result<_, _>>()?;
+    let systems: Vec<SystemConfig> = args
+        .get("systems")
+        .unwrap_or("lambda-s3,marvel-hdfs,marvel-igfs")
+        .split(',')
+        .map(system_by_name)
+        .collect::<Result<_, _>>()?;
+    let wl_name = args.get("workload").unwrap_or("wordcount");
+    let seed = args
+        .get("seed")
+        .unwrap_or("42")
+        .parse()
+        .map_err(|_| "bad --seed")?;
+    let mut m = Marvel::new(ClusterSpec::default(), seed)?;
+    let wl = workload_by_name(wl_name, 10_000, 1.07, &m.rt)?;
+    let mut headers = vec!["input".to_string()];
+    headers.extend(systems.iter().map(|s| s.name.clone()));
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        &format!("{wl_name} execution time (s) by system"),
+        &hdr_refs,
+    );
+    for size in sizes {
+        let mut row = vec![bytes::human(size)];
+        for sys in &systems {
+            let r = m.run(sys, wl.as_ref(), size);
+            row.push(match r.failed {
+                Some(_) => "FAIL".into(),
+                None => fmt_secs(r.job_time.as_secs_f64()),
+            });
+        }
+        t.row(&row);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_info() -> Result<(), String> {
+    let m = Marvel::new(ClusterSpec::default(), 0)?;
+    println!("marvel — stateful serverless MapReduce (CS.DC'23 repro)");
+    println!("runtime mode : {}",
+             if m.rt.is_pjrt() { "PJRT (AOT artifacts loaded)" }
+             else { "oracle fallback (run `make artifacts`)" });
+    println!("artifacts    : {}", m.rt.manifest.artifacts.len());
+    for (name, meta) in &m.rt.manifest.artifacts {
+        println!("  {name}: n={} file={}", meta.n, meta.file.display());
+    }
+    println!("batch size   : {}", m.rt.manifest.tokens_per_batch);
+    println!("partitions R : {}", m.rt.manifest.parts);
+    println!("buckets B    : {}", m.rt.manifest.buckets);
+    Ok(())
+}
+
+const HELP: &str = "\
+marvel — PMEM-backed stateful serverless MapReduce (paper reproduction)
+
+USAGE: marvel <run|fio|sweep|info|help> [--flag value]...
+  run    one job:   --system marvel-igfs --workload wordcount --input 1GiB
+  fio    Table 2 microbenchmark: --streams 8 --ops 100000
+  sweep  Figure 4/5 style sweep: --sizes 1GiB,5GiB --systems a,b,c
+  info   show runtime/artifact status
+";
+
+/// CLI entrypoint; returns process exit code.
+pub fn main_with_args(argv: &[String]) -> i32 {
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{HELP}");
+            return 2;
+        }
+    };
+    let res = match args.cmd.as_str() {
+        "run" => cmd_run(&args),
+        "fio" => cmd_fio(&args),
+        "sweep" => cmd_sweep(&args),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}\n{HELP}")),
+    };
+    match res {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags() {
+        let a = Args::parse(&sv(&["run", "--input", "1GiB", "--seed", "7"]))
+            .unwrap();
+        assert_eq!(a.cmd, "run");
+        assert_eq!(a.get("input"), Some("1GiB"));
+        assert_eq!(a.get("seed"), Some("7"));
+        assert_eq!(a.get("nope"), None);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Args::parse(&sv(&["run", "positional"])).is_err());
+        assert!(Args::parse(&sv(&["run", "--key"])).is_err());
+    }
+
+    #[test]
+    fn workloads_resolve() {
+        let rt = crate::runtime::RtEngine::load(None).unwrap();
+        for n in ["wordcount", "grep", "scan", "agg", "join"] {
+            assert!(workload_by_name(n, 100, 1.07, &rt).is_ok(), "{n}");
+        }
+        assert!(workload_by_name("nope", 100, 1.07, &rt).is_err());
+    }
+
+    #[test]
+    fn help_and_unknown_exit_codes() {
+        assert_eq!(main_with_args(&sv(&["help"])), 0);
+        assert_eq!(main_with_args(&sv(&["bogus"])), 1);
+    }
+
+    #[test]
+    fn fio_command_runs() {
+        assert_eq!(
+            main_with_args(&sv(&["fio", "--streams", "2", "--ops", "500"])),
+            0
+        );
+    }
+}

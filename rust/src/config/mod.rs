@@ -1,0 +1,143 @@
+//! Typed experiment configuration, parsed from mini-TOML files.
+//!
+//! Example (`examples/configs/marvel.toml`):
+//! ```toml
+//! [cluster]
+//! nodes = 1
+//! slots_per_node = 32
+//! nic_gbps = 10.0
+//! [experiment]
+//! system = "marvel-igfs"   # lambda-s3 | marvel-hdfs | marvel-igfs |
+//!                          # onprem-pmem | onprem-ssd | ...
+//! workload = "wordcount"
+//! input = "1GiB"
+//! seed = 42
+//! ```
+
+use crate::coordinator::ClusterSpec;
+use crate::mapreduce::SystemConfig;
+use crate::net::DeviceRole;
+use crate::util::bytes::GIB;
+use crate::util::toml_mini::Doc;
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub cluster: ClusterSpec,
+    pub system: SystemConfig,
+    pub workload: String,
+    pub input_bytes: u64,
+    pub seed: u64,
+    pub vocab: usize,
+    pub zipf_s: f64,
+}
+
+/// Resolve a system-config preset by name.
+pub fn system_by_name(name: &str) -> Result<SystemConfig, String> {
+    Ok(match name {
+        "lambda-s3" | "lambda" | "corral" => SystemConfig::corral_lambda(),
+        "marvel-hdfs" => SystemConfig::marvel_hdfs(),
+        "marvel-igfs" | "marvel" => SystemConfig::marvel_igfs(),
+        "onprem-pmem" => SystemConfig::onprem(DeviceRole::Pmem, false),
+        "onprem-pmem+s3" => SystemConfig::onprem(DeviceRole::Pmem, true),
+        "onprem-ssd" => SystemConfig::onprem(DeviceRole::Ssd, false),
+        "onprem-ssd+s3" => SystemConfig::onprem(DeviceRole::Ssd, true),
+        "onprem-hdd" => SystemConfig::onprem(DeviceRole::Hdd, false),
+        other => return Err(format!("unknown system config {other:?}")),
+    })
+}
+
+impl ExperimentConfig {
+    pub fn parse(text: &str) -> Result<ExperimentConfig, String> {
+        let doc = Doc::parse(text)?;
+        let mut cluster = ClusterSpec::default();
+        cluster.nodes = doc.i64_or("cluster", "nodes", 1).max(1) as usize;
+        cluster.slots_per_node =
+            doc.i64_or("cluster", "slots_per_node", 32).max(1) as usize;
+        cluster.nic_gbps = doc.f64_or("cluster", "nic_gbps", 10.0);
+        cluster.wan_gbps = doc.f64_or("cluster", "wan_gbps", 5.0);
+        cluster.pmem_capacity =
+            doc.size_or("cluster", "pmem_capacity", 700 * GIB);
+        cluster.ssd_capacity =
+            doc.size_or("cluster", "ssd_capacity", 960 * GIB);
+        cluster.dram_capacity =
+            doc.size_or("cluster", "dram_capacity", 360 * GIB);
+
+        let sys_name = doc.str_or("experiment", "system", "marvel-igfs");
+        let mut system = system_by_name(sys_name)?;
+        if let Some(v) = doc.get("experiment", "replication") {
+            system.replication = v.as_i64().unwrap_or(1).max(1) as usize;
+        }
+        if let Some(v) = doc.get("experiment", "igfs_capacity") {
+            if let Some(s) = v.as_str() {
+                system.igfs_capacity =
+                    crate::util::bytes::parse_size(s)?;
+            } else if let Some(i) = v.as_i64() {
+                system.igfs_capacity = i.max(0) as u64;
+            }
+        }
+        Ok(ExperimentConfig {
+            cluster,
+            system,
+            workload: doc
+                .str_or("experiment", "workload", "wordcount")
+                .to_string(),
+            input_bytes: doc.size_or("experiment", "input", GIB),
+            seed: doc.i64_or("experiment", "seed", 42) as u64,
+            vocab: doc.i64_or("experiment", "vocab", 10_000).max(2) as usize,
+            zipf_s: doc.f64_or("experiment", "zipf_s", 1.07),
+        })
+    }
+
+    pub fn load(path: &str) -> Result<ExperimentConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {path}: {e}"))?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_config() {
+        let cfg = ExperimentConfig::parse(
+            r#"
+[cluster]
+nodes = 4
+slots_per_node = 16
+[experiment]
+system = "marvel-hdfs"
+workload = "grep"
+input = "2GiB"
+seed = 7
+replication = 3
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.nodes, 4);
+        assert_eq!(cfg.system.name, "marvel-hdfs");
+        assert_eq!(cfg.system.replication, 3);
+        assert_eq!(cfg.workload, "grep");
+        assert_eq!(cfg.input_bytes, 2 * GIB);
+        assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let cfg = ExperimentConfig::parse("").unwrap();
+        assert_eq!(cfg.cluster.nodes, 1);
+        assert_eq!(cfg.system.name, "marvel-igfs");
+        assert_eq!(cfg.input_bytes, GIB);
+    }
+
+    #[test]
+    fn every_preset_resolves() {
+        for name in ["lambda-s3", "marvel-hdfs", "marvel-igfs",
+                     "onprem-pmem", "onprem-pmem+s3", "onprem-ssd",
+                     "onprem-ssd+s3", "onprem-hdd"] {
+            assert!(system_by_name(name).is_ok(), "{name}");
+        }
+        assert!(system_by_name("bogus").is_err());
+    }
+}

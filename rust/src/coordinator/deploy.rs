@@ -1,0 +1,120 @@
+//! Deployment: build a fully-wired cluster (engine, topology, stores,
+//! FaaS platform, YARN) from a [`ClusterSpec`] — the paper's "automated
+//! end-to-end deployment" contribution (§3.2 Ease of deployment).
+
+use crate::faas::{ContainerConfig, Controller, Lambda, LambdaConfig};
+use crate::hdfs::Hdfs;
+use crate::igfs::Igfs;
+use crate::mapreduce::{Cluster, Stores, SystemConfig};
+use crate::net::TopologyBuilder;
+use crate::objstore::{ObjStoreConfig, ObjectStore};
+use crate::sim::Engine;
+use crate::util::bytes::GIB;
+use crate::yarn::{NodeCapacity, ResourceManager};
+
+/// Physical shape of the deployment (defaults = the paper's testbed:
+/// one server, 32 CPUs, 360 GB DRAM, 700 GB PMEM AppDirect).
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub nodes: usize,
+    pub slots_per_node: usize,
+    pub nic_gbps: f64,
+    pub pmem_capacity: u64,
+    pub ssd_capacity: u64,
+    pub dram_capacity: u64,
+    pub wan_gbps: f64,
+    pub lambda: LambdaConfig,
+    pub containers: ContainerConfig,
+    pub objstore: ObjStoreConfig,
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        ClusterSpec {
+            nodes: 1,
+            slots_per_node: 32,
+            nic_gbps: 10.0,
+            pmem_capacity: 700 * GIB,
+            ssd_capacity: 960 * GIB,
+            dram_capacity: 360 * GIB,
+            wan_gbps: 12.5,
+            lambda: LambdaConfig::default(),
+            containers: ContainerConfig::default(),
+            objstore: ObjStoreConfig::default(),
+        }
+    }
+}
+
+impl ClusterSpec {
+    pub fn with_nodes(nodes: usize) -> ClusterSpec {
+        ClusterSpec { nodes, ..Default::default() }
+    }
+
+    /// Deploy a cluster for one job run under `cfg`.
+    pub fn deploy(&self, cfg: &SystemConfig) -> Cluster {
+        let mut engine = Engine::new();
+        let topo = TopologyBuilder {
+            nodes: self.nodes,
+            slots_per_node: self.slots_per_node,
+            nic_gbps: self.nic_gbps,
+            pmem_capacity: self.pmem_capacity,
+            ssd_capacity: self.ssd_capacity,
+            dram_capacity: self.dram_capacity,
+            wan_gbps: self.wan_gbps,
+            wan_rtt: self.objstore.request_rtt,
+            with_hdd: true,
+        }
+        .build(&mut engine);
+        let stores = Stores {
+            hdfs: Hdfs::new(&topo, cfg.hdfs_role, cfg.replication),
+            igfs: Igfs::new(&topo, cfg.igfs_capacity.max(1)),
+            s3: ObjectStore::new(&mut engine, &self.objstore),
+        };
+        let controller = Controller::new(
+            &mut engine,
+            &vec![self.slots_per_node; self.nodes],
+            self.containers.clone(),
+        );
+        let lambda = Lambda::new(&mut engine, self.lambda.clone());
+        let rm = ResourceManager::new(
+            (0..self.nodes)
+                .map(|i| NodeCapacity {
+                    node: crate::net::NodeId(i),
+                    vcores: self.slots_per_node as u32,
+                    memory_mb: 64 * 1024,
+                })
+                .collect(),
+        );
+        Cluster { engine, topo, stores, controller, lambda, rm }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deploys_default_testbed() {
+        let c = ClusterSpec::default().deploy(&SystemConfig::marvel_igfs());
+        assert_eq!(c.topo.n_nodes(), 1);
+        assert_eq!(c.rm.total_vcores(), 32);
+        assert_eq!(c.controller.n_invokers(), 1);
+    }
+
+    #[test]
+    fn multi_node_deploys() {
+        let c = ClusterSpec::with_nodes(4)
+            .deploy(&SystemConfig::marvel_hdfs());
+        assert_eq!(c.topo.n_nodes(), 4);
+        assert_eq!(c.stores.hdfs.datanodes.len(), 4);
+        assert_eq!(c.stores.igfs.caches.len(), 4);
+    }
+
+    #[test]
+    fn hdfs_role_follows_config() {
+        use crate::net::DeviceRole;
+        let c = ClusterSpec::default()
+            .deploy(&SystemConfig::onprem(DeviceRole::Ssd, false));
+        assert_eq!(c.stores.hdfs.role, DeviceRole::Ssd);
+    }
+}

@@ -1,0 +1,128 @@
+//! Marvel client — the user-facing entry point (Figure 3, step 1):
+//! deploy, stage input, run, collect results. One call per
+//! (system-config, workload, input-size) cell of the evaluation grid.
+
+use crate::mapreduce::{run_job, stage_input, JobResult, SystemConfig};
+use crate::mapreduce::Workload;
+use crate::runtime::{default_artifacts_dir, RtEngine};
+
+use super::deploy::ClusterSpec;
+
+pub struct Marvel {
+    pub spec: ClusterSpec,
+    pub rt: RtEngine,
+    pub seed: u64,
+}
+
+impl Marvel {
+    /// Create a client, loading AOT artifacts when present (PJRT mode)
+    /// or falling back to the Rust oracle.
+    pub fn new(spec: ClusterSpec, seed: u64) -> Result<Marvel, String> {
+        let dir = default_artifacts_dir();
+        let rt = RtEngine::load(dir.as_deref())?;
+        Ok(Marvel { spec, rt, seed })
+    }
+
+    /// Run a workload with `bytes` of input under a system config on a
+    /// fresh deployment. Returns the full job report.
+    pub fn run(
+        &mut self,
+        cfg: &SystemConfig,
+        wl: &dyn Workload,
+        bytes: u64,
+    ) -> JobResult {
+        let mut cluster = self.spec.deploy(cfg);
+        let input =
+            match stage_input(&mut cluster, cfg, wl, bytes, self.seed) {
+                Ok(p) => p,
+                Err(e) => {
+                    return JobResult::failed(wl.name(), &cfg.name, bytes, e)
+                }
+            };
+        run_job(&mut cluster, cfg, wl, &input, &mut self.rt, self.seed)
+    }
+
+    /// Convenience: run the same workload/size across several configs
+    /// (one Figure 4/5 x-axis point).
+    pub fn compare(
+        &mut self,
+        configs: &[SystemConfig],
+        wl: &dyn Workload,
+        bytes: u64,
+    ) -> Vec<JobResult> {
+        configs.iter().map(|c| self.run(c, wl, bytes)).collect()
+    }
+}
+
+/// Relative reduction of `b` vs `a` job time: (a - b) / a.
+pub fn reduction(a: &JobResult, b: &JobResult) -> f64 {
+    let (ta, tb) = (a.job_time.as_secs_f64(), b.job_time.as_secs_f64());
+    if ta <= 0.0 {
+        return 0.0;
+    }
+    (ta - tb) / ta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::MIB;
+    use crate::workloads::WordCount;
+
+    #[test]
+    fn small_real_wordcount_all_configs() {
+        let mut m = Marvel::new(ClusterSpec::default(), 42).unwrap();
+        let wc = WordCount::new(2000, 1.07, &m.rt);
+        let configs = [
+            SystemConfig::corral_lambda(),
+            SystemConfig::marvel_hdfs(),
+            SystemConfig::marvel_igfs(),
+        ];
+        let results = m.compare(&configs, &wc, 4 * MIB);
+        for r in &results {
+            assert!(r.ok(), "{}: {:?}", r.config, r.failed);
+            assert_eq!(r.input_bytes, 4 * MIB);
+            assert!(r.job_time.as_secs_f64() > 0.0);
+            assert!(r.intermediate_bytes > 0);
+            assert!(r.output_bytes > 0);
+        }
+        // The paper's ordering: Lambda+S3 slowest, IGFS fastest.
+        assert!(results[0].job_time > results[1].job_time,
+                "lambda {} vs hdfs {}", results[0].job_time,
+                results[1].job_time);
+        assert!(results[1].job_time >= results[2].job_time,
+                "hdfs {} vs igfs {}", results[1].job_time,
+                results[2].job_time);
+    }
+
+    #[test]
+    fn lambda_fails_past_transfer_limit() {
+        let mut m = Marvel::new(ClusterSpec::default(), 42).unwrap();
+        let wc = WordCount::new(2000, 1.07, &m.rt);
+        let r = m.run(&SystemConfig::corral_lambda(), &wc,
+                      16_000_000_000);
+        assert!(!r.ok(), "16 GB should exceed the 15 GB quota");
+        let r = m.run(&SystemConfig::marvel_igfs(), &wc, 16_000_000_000);
+        assert!(r.ok(), "Marvel must survive 16 GB: {:?}", r.failed);
+    }
+
+    #[test]
+    fn determinism_same_seed_same_times() {
+        let run = || {
+            let mut m = Marvel::new(ClusterSpec::default(), 7).unwrap();
+            let wc = WordCount::new(1000, 1.07, &m.rt);
+            m.run(&SystemConfig::marvel_igfs(), &wc, 2 * MIB).job_time
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn reduction_math() {
+        let mut a = JobResult::failed("x", "a", 0, "".into());
+        a.failed = None;
+        a.job_time = crate::sim::SimNs::from_secs_f64(10.0);
+        let mut b = a.clone();
+        b.job_time = crate::sim::SimNs::from_secs_f64(2.0);
+        assert!((reduction(&a, &b) - 0.8).abs() < 1e-9);
+    }
+}

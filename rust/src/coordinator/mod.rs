@@ -1,0 +1,10 @@
+//! Marvel coordinator: deployment automation, the client API tying the
+//! Figure 3 workflow together, and checkpoint-based recovery (§4.3).
+
+pub mod deploy;
+pub mod marvel;
+pub mod recovery;
+
+pub use deploy::ClusterSpec;
+pub use marvel::{reduction, Marvel};
+pub use recovery::{run_with_failures, RecoveryConfig, TaskRecovery};

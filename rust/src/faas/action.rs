@@ -1,0 +1,69 @@
+//! Action definitions and invocation records.
+
+use crate::net::NodeId;
+use crate::sim::SimNs;
+
+/// What kind of function an invocation runs (drives runtime image
+/// selection and the Hadoop-runtime container reuse policy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ActionKind {
+    Map,
+    Reduce,
+    Driver,
+}
+
+/// A registered action (OpenWhisk `wsk action create` analog).
+#[derive(Clone, Debug)]
+pub struct ActionSpec {
+    pub name: String,
+    /// Runtime image — Marvel ships a Hadoop-enabled Docker runtime so
+    /// actions can talk to HDFS/IGFS (paper §3.4.2).
+    pub runtime: String,
+    pub memory_mb: u64,
+    pub kind: ActionKind,
+}
+
+impl ActionSpec {
+    pub fn map(job: &str, memory_mb: u64) -> ActionSpec {
+        ActionSpec {
+            name: format!("{job}/map"),
+            runtime: "marvel-hadoop:latest".into(),
+            memory_mb,
+            kind: ActionKind::Map,
+        }
+    }
+
+    pub fn reduce(job: &str, memory_mb: u64) -> ActionSpec {
+        ActionSpec {
+            name: format!("{job}/reduce"),
+            runtime: "marvel-hadoop:latest".into(),
+            memory_mb,
+            kind: ActionKind::Reduce,
+        }
+    }
+}
+
+/// One scheduled invocation (plan-time record; the DES charges its
+/// startup latency and slot occupancy).
+#[derive(Clone, Debug)]
+pub struct Invocation {
+    pub action: String,
+    pub node: NodeId,
+    pub cold: bool,
+    pub startup: SimNs,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_carry_runtime() {
+        let m = ActionSpec::map("wc", 2048);
+        assert_eq!(m.kind, ActionKind::Map);
+        assert!(m.runtime.contains("hadoop"));
+        let r = ActionSpec::reduce("wc", 2048);
+        assert_eq!(r.kind, ActionKind::Reduce);
+        assert_ne!(m.name, r.name);
+    }
+}

@@ -1,0 +1,135 @@
+//! Warm/cold container pool per invoker node.
+//!
+//! OpenWhisk keeps paused containers per (action runtime) and resumes
+//! them in ~ms; a cold start pulls + boots the Docker runtime (hundreds
+//! of ms). Marvel's Hadoop runtime image is heavyweight, so cold starts
+//! matter at small input sizes (visible as the flat left end of the
+//! Figure 4/5 curves).
+
+use std::collections::HashMap;
+
+use crate::sim::SimNs;
+
+#[derive(Clone, Debug)]
+pub struct ContainerConfig {
+    /// Docker pull + boot + runtime init.
+    pub cold_start: SimNs,
+    /// Unpause + handshake.
+    pub warm_start: SimNs,
+    /// How many idle containers per runtime are kept warm.
+    pub keep_warm: usize,
+}
+
+impl Default for ContainerConfig {
+    fn default() -> Self {
+        ContainerConfig {
+            cold_start: SimNs::from_millis(500),
+            warm_start: SimNs::from_millis(5),
+            keep_warm: 32,
+        }
+    }
+}
+
+/// Tracks warm-container counts per runtime image on one node.
+#[derive(Debug)]
+pub struct ContainerPool {
+    cfg: ContainerConfig,
+    warm: HashMap<String, usize>,
+    pub cold_starts: u64,
+    pub warm_starts: u64,
+}
+
+impl ContainerPool {
+    pub fn new(cfg: ContainerConfig) -> ContainerPool {
+        ContainerPool {
+            cfg,
+            warm: HashMap::new(),
+            cold_starts: 0,
+            warm_starts: 0,
+        }
+    }
+
+    /// Acquire a container for `runtime`; returns the startup latency
+    /// and whether it was a cold start.
+    pub fn acquire(&mut self, runtime: &str) -> (SimNs, bool) {
+        let warm = self.warm.entry(runtime.to_string()).or_insert(0);
+        if *warm > 0 {
+            *warm -= 1;
+            self.warm_starts += 1;
+            (self.cfg.warm_start, false)
+        } else {
+            self.cold_starts += 1;
+            (self.cfg.cold_start, true)
+        }
+    }
+
+    /// Release a container back; it stays warm up to `keep_warm`.
+    pub fn release(&mut self, runtime: &str) {
+        let warm = self.warm.entry(runtime.to_string()).or_insert(0);
+        if *warm < self.cfg.keep_warm {
+            *warm += 1;
+        }
+    }
+
+    /// Pre-warm `n` containers (deployment-time provisioning).
+    pub fn prewarm(&mut self, runtime: &str, n: usize) {
+        let warm = self.warm.entry(runtime.to_string()).or_insert(0);
+        *warm = (*warm + n).min(self.cfg.keep_warm);
+    }
+
+    pub fn warm_count(&self, runtime: &str) -> usize {
+        self.warm.get(runtime).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_acquire_is_cold() {
+        let mut p = ContainerPool::new(ContainerConfig::default());
+        let (lat, cold) = p.acquire("img");
+        assert!(cold);
+        assert_eq!(lat, SimNs::from_millis(500));
+        assert_eq!(p.cold_starts, 1);
+    }
+
+    #[test]
+    fn release_then_acquire_is_warm() {
+        let mut p = ContainerPool::new(ContainerConfig::default());
+        p.acquire("img");
+        p.release("img");
+        let (lat, cold) = p.acquire("img");
+        assert!(!cold);
+        assert_eq!(lat, SimNs::from_millis(5));
+    }
+
+    #[test]
+    fn keep_warm_caps_pool() {
+        let cfg = ContainerConfig { keep_warm: 2, ..Default::default() };
+        let mut p = ContainerPool::new(cfg);
+        for _ in 0..5 {
+            p.release("img");
+        }
+        assert_eq!(p.warm_count("img"), 2);
+    }
+
+    #[test]
+    fn runtimes_are_isolated() {
+        let mut p = ContainerPool::new(ContainerConfig::default());
+        p.prewarm("a", 1);
+        let (_, cold_b) = p.acquire("b");
+        assert!(cold_b);
+        let (_, cold_a) = p.acquire("a");
+        assert!(!cold_a);
+    }
+
+    #[test]
+    fn prewarm_respects_cap() {
+        let cfg = ContainerConfig { keep_warm: 3, ..Default::default() };
+        let mut p = ContainerPool::new(cfg);
+        p.prewarm("img", 100);
+        assert_eq!(p.warm_count("img"), 3);
+    }
+}

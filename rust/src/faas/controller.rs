@@ -1,0 +1,152 @@
+//! OpenWhisk controller / load balancer: routes action invocations to
+//! invokers. Marvel's modification (paper §3.4.2): the controller is
+//! topology-aware — it honors locality hints from the NameNode so map
+//! actions land where their split's blocks live, and it deploys every
+//! container on the shared overlay network.
+
+use crate::net::NodeId;
+use crate::sim::{Engine, SimNs};
+
+use super::action::{ActionSpec, Invocation};
+use super::container::ContainerConfig;
+use super::invoker::Invoker;
+
+pub struct Controller {
+    pub invokers: Vec<Invoker>,
+    /// Controller-side per-invocation overhead (auth, routing, queueing).
+    pub dispatch_overhead: SimNs,
+    rr: usize,
+}
+
+impl Controller {
+    pub fn new(
+        engine: &mut Engine,
+        slots_per_node: &[usize],
+        cfg: ContainerConfig,
+    ) -> Controller {
+        let invokers = slots_per_node
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Invoker::new(engine, NodeId(i), *s, cfg.clone()))
+            .collect();
+        Controller {
+            invokers,
+            dispatch_overhead: SimNs::from_millis(2),
+            rr: 0,
+        }
+    }
+
+    pub fn n_invokers(&self) -> usize {
+        self.invokers.len()
+    }
+
+    /// Choose an invoker: first preference that has an invoker, else
+    /// round-robin (OpenWhisk's hash-based balancing degenerates to RR
+    /// under uniform load).
+    pub fn place(&mut self, locality: &[NodeId]) -> NodeId {
+        for pref in locality {
+            if pref.0 < self.invokers.len() {
+                return *pref;
+            }
+        }
+        let n = NodeId(self.rr % self.invokers.len());
+        self.rr += 1;
+        n
+    }
+
+    /// Plan an invocation on a chosen node: returns the invocation
+    /// record; the caller builds stages with
+    /// [Acquire(slots), Delay(dispatch+startup), <body>, Release].
+    pub fn invoke(&mut self, spec: &ActionSpec, node: NodeId) -> Invocation {
+        let inv = &mut self.invokers[node.0];
+        let (startup, cold) = inv.startup(&spec.runtime);
+        Invocation {
+            action: spec.name.clone(),
+            node,
+            cold,
+            startup: self.dispatch_overhead + startup,
+        }
+    }
+
+    /// Return the container after the action body completes.
+    pub fn complete(&mut self, spec: &ActionSpec, node: NodeId) {
+        self.invokers[node.0].finish(&spec.runtime);
+    }
+
+    /// Pre-warm the Hadoop runtime across all invokers (deployment step
+    /// of the Marvel stack).
+    pub fn prewarm(&mut self, runtime: &str, per_node: usize) {
+        for inv in &mut self.invokers {
+            inv.containers.prewarm(runtime, per_node);
+        }
+    }
+
+    pub fn cold_starts(&self) -> u64 {
+        self.invokers.iter().map(|i| i.containers.cold_starts).sum()
+    }
+
+    pub fn slots_of(&self, node: NodeId) -> crate::sim::PoolId {
+        self.invokers[node.0].slots
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(nodes: usize) -> (Engine, Controller) {
+        let mut e = Engine::new();
+        let c = Controller::new(
+            &mut e,
+            &vec![4; nodes],
+            ContainerConfig::default(),
+        );
+        (e, c)
+    }
+
+    #[test]
+    fn locality_preferred() {
+        let (_, mut c) = setup(4);
+        assert_eq!(c.place(&[NodeId(2)]), NodeId(2));
+        assert_eq!(c.place(&[NodeId(9), NodeId(1)]), NodeId(1));
+    }
+
+    #[test]
+    fn round_robin_without_hints() {
+        let (_, mut c) = setup(3);
+        let seq: Vec<usize> = (0..6).map(|_| c.place(&[]).0).collect();
+        assert_eq!(seq, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn prewarm_avoids_cold_starts() {
+        let (_, mut c) = setup(2);
+        c.prewarm("marvel-hadoop:latest", 8);
+        let spec = ActionSpec::map("wc", 1024);
+        let inv = c.invoke(&spec, NodeId(0));
+        assert!(!inv.cold);
+        assert_eq!(c.cold_starts(), 0);
+    }
+
+    #[test]
+    fn cold_start_recorded_then_warm_after_complete() {
+        let (_, mut c) = setup(1);
+        let spec = ActionSpec::map("wc", 1024);
+        let first = c.invoke(&spec, NodeId(0));
+        assert!(first.cold);
+        c.complete(&spec, NodeId(0));
+        let second = c.invoke(&spec, NodeId(0));
+        assert!(!second.cold);
+        assert_eq!(c.cold_starts(), 1);
+    }
+
+    #[test]
+    fn dispatch_overhead_included() {
+        let (_, mut c) = setup(1);
+        c.prewarm("marvel-hadoop:latest", 1);
+        let spec = ActionSpec::map("wc", 1024);
+        let inv = c.invoke(&spec, NodeId(0));
+        // 2 ms dispatch + 5 ms warm start.
+        assert_eq!(inv.startup, SimNs::from_millis(7));
+    }
+}

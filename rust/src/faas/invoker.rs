@@ -1,0 +1,72 @@
+//! Per-node invoker: owns the node's container pool and its DES slot
+//! pool (concurrent action capacity = node vCPU slots).
+
+use crate::net::NodeId;
+use crate::sim::{Engine, PoolId, SimNs};
+
+use super::container::{ContainerConfig, ContainerPool};
+
+pub struct Invoker {
+    pub node: NodeId,
+    pub slots: PoolId,
+    pub containers: ContainerPool,
+}
+
+impl Invoker {
+    pub fn new(
+        engine: &mut Engine,
+        node: NodeId,
+        slots: usize,
+        cfg: ContainerConfig,
+    ) -> Invoker {
+        Invoker {
+            node,
+            slots: engine.add_pool(slots),
+            containers: ContainerPool::new(cfg),
+        }
+    }
+
+    /// Plan an invocation start: container acquisition latency (cold or
+    /// warm). Slot occupancy is expressed by Acquire/Release stages the
+    /// caller wraps around the action body.
+    pub fn startup(&mut self, runtime: &str) -> (SimNs, bool) {
+        self.containers.acquire(runtime)
+    }
+
+    pub fn finish(&mut self, runtime: &str) {
+        self.containers.release(runtime);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{ProcState, Stage};
+
+    #[test]
+    fn slot_pool_limits_concurrency() {
+        let mut e = Engine::new();
+        let mut inv = Invoker::new(
+            &mut e,
+            NodeId(0),
+            2,
+            ContainerConfig::default(),
+        );
+        inv.containers.prewarm("img", 10);
+        // 4 actions of (5 ms warm start + 10 ms body) on 2 slots
+        // → two waves of 15 ms = 30 ms.
+        for i in 0..4 {
+            let (lat, _) = inv.startup("img");
+            e.spawn(&format!("a{i}"), vec![
+                Stage::Acquire(inv.slots),
+                Stage::Delay(lat),
+                Stage::Delay(SimNs::from_millis(10)),
+                Stage::Release(inv.slots),
+            ]);
+        }
+        let end = e.run().unwrap();
+        assert_eq!(end, SimNs::from_millis(30));
+        assert_eq!(e.failures().len(), 0);
+        assert!(matches!(e.state(crate::sim::ProcId(0)), ProcState::Finished));
+    }
+}

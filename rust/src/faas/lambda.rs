@@ -1,0 +1,148 @@
+//! AWS Lambda platform model — the baseline substrate under Corral.
+//!
+//! Quotas modeled from AWS's published limits (paper refs [5, 7]):
+//! account-level concurrent executions, per-invocation startup, maximum
+//! function memory (the paper configured 10 GB), and the ephemeral
+//! payload ceiling that, combined with S3 throttling, makes Corral jobs
+//! *fail outright* at ≈15 GB input (paper §4.2.1 observation 1).
+
+use crate::sim::{Engine, PoolId, SimNs};
+
+#[derive(Clone, Debug)]
+pub struct LambdaConfig {
+    /// Account-level concurrent execution quota (AWS default 1000).
+    pub max_concurrency: usize,
+    /// Max memory per function instance; the paper used the 10 GB cap.
+    pub memory_mb: u64,
+    /// Cold init for a packaged MapReduce runtime.
+    pub cold_start: SimNs,
+    pub warm_start: SimNs,
+    /// Aggregate input bytes past which the job hits the transfer/
+    /// concurrency wall and fails (Corral observed 15 GB).
+    pub transfer_limit: u64,
+    /// Function wall-clock timeout (15 min AWS max).
+    pub timeout: SimNs,
+}
+
+impl Default for LambdaConfig {
+    fn default() -> Self {
+        LambdaConfig {
+            max_concurrency: 1000,
+            memory_mb: 10_240,
+            cold_start: SimNs::from_millis(800),
+            warm_start: SimNs::from_millis(10),
+            transfer_limit: 15_000_000_000,
+            timeout: SimNs::from_secs_f64(900.0),
+        }
+    }
+}
+
+pub struct Lambda {
+    pub cfg: LambdaConfig,
+    /// One shared concurrency pool for the whole account.
+    pub concurrency: PoolId,
+    warm: usize,
+    pub cold_starts: u64,
+}
+
+impl Lambda {
+    pub fn new(engine: &mut Engine, cfg: LambdaConfig) -> Lambda {
+        let concurrency = engine.add_pool(cfg.max_concurrency);
+        Lambda { cfg, concurrency, warm: 0, cold_starts: 0 }
+    }
+
+    /// Admission check a Corral job must pass before launching.
+    pub fn admit_job(&self, total_input_bytes: u64, tasks: usize)
+        -> Result<(), String>
+    {
+        if total_input_bytes > self.cfg.transfer_limit {
+            return Err(format!(
+                "S3/Lambda transfer limit exceeded: input {} B > {} B \
+                 (concurrency quota + S3 rate limiting abort the job)",
+                total_input_bytes, self.cfg.transfer_limit
+            ));
+        }
+        // Far over-quota task fan-out also gets rejected upfront
+        // (throttle-retry storms exhaust Corral's retry budget).
+        if tasks > self.cfg.max_concurrency * 20 {
+            return Err(format!(
+                "invocation storm: {tasks} tasks vs quota {}",
+                self.cfg.max_concurrency
+            ));
+        }
+        Ok(())
+    }
+
+    /// Startup latency of the next invocation (Lambda reuses execution
+    /// environments aggressively once warmed).
+    pub fn startup(&mut self) -> (SimNs, bool) {
+        if self.warm > 0 {
+            self.warm -= 1;
+            (self.cfg.warm_start, false)
+        } else {
+            self.cold_starts += 1;
+            (self.cfg.cold_start, true)
+        }
+    }
+
+    pub fn finish(&mut self) {
+        if self.warm < self.cfg.max_concurrency {
+            self.warm += 1;
+        }
+    }
+
+    /// Memory-based split sizing: Corral sizes splits so a task's input
+    /// fits the function memory with working-space headroom.
+    pub fn max_split_bytes(&self) -> u64 {
+        (self.cfg.memory_mb * 1024 * 1024) / 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_past_transfer_limit_fails() {
+        let mut e = Engine::new();
+        let l = Lambda::new(&mut e, LambdaConfig::default());
+        assert!(l.admit_job(20_000_000_000, 100).is_err());
+        assert!(l.admit_job(10_000_000_000, 100).is_ok());
+    }
+
+    #[test]
+    fn boundary_at_15gb() {
+        let mut e = Engine::new();
+        let l = Lambda::new(&mut e, LambdaConfig::default());
+        assert!(l.admit_job(15_000_000_000, 10).is_ok());
+        assert!(l.admit_job(15_000_000_001, 10).is_err());
+    }
+
+    #[test]
+    fn warm_reuse() {
+        let mut e = Engine::new();
+        let mut l = Lambda::new(&mut e, LambdaConfig::default());
+        let (_, cold) = l.startup();
+        assert!(cold);
+        l.finish();
+        let (lat, cold) = l.startup();
+        assert!(!cold);
+        assert_eq!(lat, SimNs::from_millis(10));
+        assert_eq!(l.cold_starts, 1);
+    }
+
+    #[test]
+    fn invocation_storm_rejected() {
+        let mut e = Engine::new();
+        let l = Lambda::new(&mut e, LambdaConfig::default());
+        assert!(l.admit_job(1_000, 1000 * 20 + 1).is_err());
+    }
+
+    #[test]
+    fn split_sizing_from_memory() {
+        let mut e = Engine::new();
+        let l = Lambda::new(&mut e, LambdaConfig::default());
+        // 10 GiB memory / 4 = 2.56 GiB splits.
+        assert_eq!(l.max_split_bytes(), 10_240 * 1024 * 1024 / 4);
+    }
+}

@@ -1,0 +1,15 @@
+//! FaaS substrate: the OpenWhisk analog Marvel runs on (controller,
+//! per-node invokers, warm/cold container pools) and the AWS Lambda
+//! model under the Corral baseline.
+
+pub mod action;
+pub mod container;
+pub mod controller;
+pub mod invoker;
+pub mod lambda;
+
+pub use action::{ActionKind, ActionSpec, Invocation};
+pub use container::{ContainerConfig, ContainerPool};
+pub use controller::Controller;
+pub use invoker::Invoker;
+pub use lambda::{Lambda, LambdaConfig};

@@ -1,0 +1,72 @@
+//! HDFS block primitives.
+
+use crate::util::bytes::MIB;
+
+/// Default HDFS block size (Hadoop 3.x default).
+pub const DEFAULT_BLOCK_SIZE: u64 = 128 * MIB;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockId(pub u64);
+
+/// Metadata for one block of a file.
+#[derive(Clone, Debug)]
+pub struct BlockMeta {
+    pub id: BlockId,
+    /// Offset of this block within its file.
+    pub offset: u64,
+    pub len: u64,
+}
+
+/// Split a file length into block-sized extents.
+pub fn split_into_blocks(len: u64, block_size: u64) -> Vec<(u64, u64)> {
+    assert!(block_size > 0);
+    if len == 0 {
+        return vec![(0, 0)];
+    }
+    let mut out = Vec::with_capacity((len / block_size + 1) as usize);
+    let mut off = 0;
+    while off < len {
+        let l = block_size.min(len - off);
+        out.push((off, l));
+        off += l;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_multiple() {
+        assert_eq!(split_into_blocks(256, 128),
+                   vec![(0, 128), (128, 128)]);
+    }
+
+    #[test]
+    fn remainder_block() {
+        assert_eq!(split_into_blocks(300, 128),
+                   vec![(0, 128), (128, 128), (256, 44)]);
+    }
+
+    #[test]
+    fn small_file_single_block() {
+        assert_eq!(split_into_blocks(5, 128), vec![(0, 5)]);
+    }
+
+    #[test]
+    fn empty_file_one_empty_block() {
+        assert_eq!(split_into_blocks(0, 128), vec![(0, 0)]);
+    }
+
+    #[test]
+    fn lengths_sum_to_file() {
+        for len in [1u64, 127, 128, 129, 1000, 12345] {
+            let total: u64 = split_into_blocks(len, 128)
+                .iter()
+                .map(|(_, l)| l)
+                .sum();
+            assert_eq!(total, len);
+        }
+    }
+}

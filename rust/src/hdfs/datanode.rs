@@ -1,0 +1,66 @@
+//! DataNode: block storage on one node's device (PMEM in Marvel's
+//! deployment, SSD/HDD in the ablations). Holds the data plane; the
+//! time plane is charged by `client` through the device channels.
+
+use std::collections::HashMap;
+
+use crate::net::{DevId, NodeId};
+use crate::storage::Payload;
+
+use super::block::BlockId;
+
+#[derive(Clone, Debug)]
+pub struct DataNode {
+    pub node: NodeId,
+    pub dev: DevId,
+    blocks: HashMap<BlockId, Payload>,
+}
+
+impl DataNode {
+    pub fn new(node: NodeId, dev: DevId) -> DataNode {
+        DataNode { node, dev, blocks: HashMap::new() }
+    }
+
+    pub fn store(&mut self, id: BlockId, data: Payload) {
+        self.blocks.insert(id, data);
+    }
+
+    pub fn fetch(&self, id: BlockId) -> Option<&Payload> {
+        self.blocks.get(&id)
+    }
+
+    pub fn drop_block(&mut self, id: BlockId) -> Option<Payload> {
+        self.blocks.remove(&id)
+    }
+
+    pub fn has(&self, id: BlockId) -> bool {
+        self.blocks.contains_key(&id)
+    }
+
+    pub fn block_count(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.blocks.values().map(|p| p.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_fetch_drop() {
+        let mut dn = DataNode::new(NodeId(0), DevId(0));
+        dn.store(BlockId(1), Payload::real(vec![1, 2, 3]));
+        dn.store(BlockId(2), Payload::synthetic(100));
+        assert!(dn.has(BlockId(1)));
+        assert_eq!(dn.fetch(BlockId(1)).unwrap().len(), 3);
+        assert_eq!(dn.used_bytes(), 103);
+        assert_eq!(dn.block_count(), 2);
+        assert!(dn.drop_block(BlockId(1)).is_some());
+        assert!(!dn.has(BlockId(1)));
+        assert!(dn.fetch(BlockId(1)).is_none());
+    }
+}

@@ -1,0 +1,14 @@
+//! HDFS analog: NameNode (namespace + block map + placement), DataNodes
+//! (blocks on the node's PMEM/SSD device), and a locality-aware client.
+//! Data/compute co-location — the core of the paper's I/O argument —
+//! emerges from placement + local reads here.
+
+pub mod block;
+pub mod client;
+pub mod datanode;
+pub mod namenode;
+
+pub use block::{BlockId, BlockMeta, DEFAULT_BLOCK_SIZE};
+pub use client::Hdfs;
+pub use datanode::DataNode;
+pub use namenode::NameNode;

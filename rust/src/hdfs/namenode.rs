@@ -1,0 +1,209 @@
+//! NameNode: the HDFS namespace, block map, and replica placement.
+//!
+//! Placement mirrors Hadoop's default policy: first replica on the
+//! writer's node (data/compute co-location — the property Marvel's
+//! Figure 4 improvement rests on), subsequent replicas round-robin over
+//! the remaining nodes, skipping nodes whose target device is full.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::net::NodeId;
+
+use super::block::{BlockId, BlockMeta};
+
+#[derive(Clone, Debug)]
+pub struct INode {
+    pub path: String,
+    pub len: u64,
+    pub blocks: Vec<BlockMeta>,
+}
+
+#[derive(Clone, Debug)]
+pub struct NameNode {
+    namespace: BTreeMap<String, INode>,
+    /// block → replica holders (order = pipeline order, [0] is primary).
+    block_map: HashMap<BlockId, Vec<NodeId>>,
+    next_block: u64,
+    rr_cursor: usize,
+    pub replication: usize,
+}
+
+impl NameNode {
+    pub fn new(replication: usize) -> NameNode {
+        NameNode {
+            namespace: BTreeMap::new(),
+            block_map: HashMap::new(),
+            next_block: 0,
+            rr_cursor: 0,
+            replication: replication.max(1),
+        }
+    }
+
+    pub fn exists(&self, path: &str) -> bool {
+        self.namespace.contains_key(path)
+    }
+
+    pub fn stat(&self, path: &str) -> Option<&INode> {
+        self.namespace.get(path)
+    }
+
+    pub fn list(&self, prefix: &str) -> Vec<&INode> {
+        self.namespace
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(_, v)| v)
+            .collect()
+    }
+
+    pub fn delete(&mut self, path: &str) -> Option<INode> {
+        let inode = self.namespace.remove(path)?;
+        for b in &inode.blocks {
+            self.block_map.remove(&b.id);
+        }
+        Some(inode)
+    }
+
+    /// Replica holders of a block, pipeline order.
+    pub fn locations(&self, block: BlockId) -> &[NodeId] {
+        self.block_map
+            .get(&block)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Allocate a block for `path` being written from `writer`, choosing
+    /// replicas among `eligible` nodes (those hosting live DataNodes
+    /// with free space).
+    pub fn allocate_block(
+        &mut self,
+        writer: NodeId,
+        eligible: &[NodeId],
+        offset: u64,
+        len: u64,
+    ) -> Result<(BlockMeta, Vec<NodeId>), String> {
+        if eligible.is_empty() {
+            return Err("no eligible datanodes".into());
+        }
+        let id = BlockId(self.next_block);
+        self.next_block += 1;
+        let mut replicas = Vec::with_capacity(self.replication);
+        // First replica local if the writer hosts a datanode.
+        if eligible.contains(&writer) {
+            replicas.push(writer);
+        }
+        // Fill remaining round-robin, skipping already-chosen nodes.
+        let mut scanned = 0;
+        while replicas.len() < self.replication.min(eligible.len())
+            && scanned < eligible.len()
+        {
+            let cand = eligible[self.rr_cursor % eligible.len()];
+            self.rr_cursor = (self.rr_cursor + 1) % eligible.len().max(1);
+            scanned += 1;
+            if !replicas.contains(&cand) {
+                replicas.push(cand);
+                scanned = 0;
+            }
+        }
+        let meta = BlockMeta { id, offset, len };
+        self.block_map.insert(id, replicas.clone());
+        Ok((meta, replicas))
+    }
+
+    /// Commit a fully-written file into the namespace.
+    pub fn commit_file(&mut self, path: &str, blocks: Vec<BlockMeta>) {
+        let len = blocks.iter().map(|b| b.len).sum();
+        self.namespace.insert(
+            path.to_string(),
+            INode { path: path.to_string(), len, blocks },
+        );
+    }
+
+    /// Total bytes across the namespace.
+    pub fn total_bytes(&self) -> u64 {
+        self.namespace.values().map(|i| i.len).sum()
+    }
+
+    pub fn file_count(&self) -> usize {
+        self.namespace.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nodes(n: usize) -> Vec<NodeId> {
+        (0..n).map(NodeId).collect()
+    }
+
+    #[test]
+    fn first_replica_is_local() {
+        let mut nn = NameNode::new(3);
+        let (_, reps) = nn
+            .allocate_block(NodeId(2), &nodes(4), 0, 100)
+            .unwrap();
+        assert_eq!(reps[0], NodeId(2));
+        assert_eq!(reps.len(), 3);
+    }
+
+    #[test]
+    fn replicas_distinct() {
+        let mut nn = NameNode::new(3);
+        for i in 0..20 {
+            let (_, reps) = nn
+                .allocate_block(NodeId(i % 4), &nodes(4), 0, 1)
+                .unwrap();
+            let mut d = reps.clone();
+            d.sort();
+            d.dedup();
+            assert_eq!(d.len(), reps.len(), "dup replicas {reps:?}");
+        }
+    }
+
+    #[test]
+    fn replication_capped_by_cluster_size() {
+        let mut nn = NameNode::new(3);
+        let (_, reps) = nn.allocate_block(NodeId(0), &nodes(2), 0, 1).unwrap();
+        assert_eq!(reps.len(), 2);
+    }
+
+    #[test]
+    fn commit_and_stat() {
+        let mut nn = NameNode::new(1);
+        let (m1, _) = nn.allocate_block(NodeId(0), &nodes(1), 0, 128).unwrap();
+        let (m2, _) = nn.allocate_block(NodeId(0), &nodes(1), 128, 72).unwrap();
+        nn.commit_file("/data/in.txt", vec![m1, m2]);
+        let inode = nn.stat("/data/in.txt").unwrap();
+        assert_eq!(inode.len, 200);
+        assert_eq!(inode.blocks.len(), 2);
+        assert_eq!(nn.total_bytes(), 200);
+    }
+
+    #[test]
+    fn list_by_prefix() {
+        let mut nn = NameNode::new(1);
+        for p in ["/a/1", "/a/2", "/b/1"] {
+            let (m, _) = nn.allocate_block(NodeId(0), &nodes(1), 0, 1).unwrap();
+            nn.commit_file(p, vec![m]);
+        }
+        assert_eq!(nn.list("/a/").len(), 2);
+        assert_eq!(nn.list("/").len(), 3);
+    }
+
+    #[test]
+    fn delete_clears_block_map() {
+        let mut nn = NameNode::new(1);
+        let (m, _) = nn.allocate_block(NodeId(0), &nodes(1), 0, 9).unwrap();
+        let id = m.id;
+        nn.commit_file("/x", vec![m]);
+        nn.delete("/x");
+        assert!(nn.locations(id).is_empty());
+        assert!(!nn.exists("/x"));
+    }
+
+    #[test]
+    fn no_eligible_nodes_errors() {
+        let mut nn = NameNode::new(3);
+        assert!(nn.allocate_block(NodeId(0), &[], 0, 1).is_err());
+    }
+}

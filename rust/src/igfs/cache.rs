@@ -1,0 +1,211 @@
+//! Per-node in-memory cache with capacity enforcement and LRU eviction.
+//!
+//! Evicted entries are demoted to a *backing tier* rather than dropped:
+//! this is the paper's §4.3 future-work design ("Ignite as a distributed
+//! database on top of PMEM — intermediate data persisted while available
+//! in DRAM") — a get may therefore hit DRAM (fast) or the backing tier
+//! (PMEM-speed), and the ablation bench sweeps the DRAM capacity.
+
+use std::collections::HashMap;
+
+use crate::storage::Payload;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    Dram,
+    Backing,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct CacheStats {
+    pub hits_dram: u64,
+    pub hits_backing: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub bytes_evicted: u64,
+}
+
+#[derive(Debug)]
+pub struct CacheNode {
+    capacity: u64,
+    used: u64,
+    entries: HashMap<String, (Payload, u64)>, // value, lru stamp
+    backing: HashMap<String, Payload>,
+    clock: u64,
+    pub stats: CacheStats,
+}
+
+impl CacheNode {
+    pub fn new(capacity: u64) -> CacheNode {
+        CacheNode {
+            capacity,
+            used: 0,
+            entries: HashMap::new(),
+            backing: HashMap::new(),
+            clock: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Insert a value; evicts LRU entries to the backing tier until the
+    /// new value fits. Values larger than the whole cache go straight to
+    /// backing.
+    pub fn put(&mut self, key: &str, value: Payload) {
+        let len = value.len();
+        if let Some((old, _)) = self.entries.remove(key) {
+            self.used -= old.len();
+        }
+        self.backing.remove(key);
+        if len > self.capacity {
+            self.stats.evictions += 1;
+            self.stats.bytes_evicted += len;
+            self.backing.insert(key.to_string(), value);
+            return;
+        }
+        while self.used + len > self.capacity {
+            self.evict_one();
+        }
+        let stamp = self.tick();
+        self.used += len;
+        self.entries.insert(key.to_string(), (value, stamp));
+    }
+
+    fn evict_one(&mut self) {
+        let victim = self
+            .entries
+            .iter()
+            .min_by_key(|(k, (_, stamp))| (*stamp, (*k).clone()))
+            .map(|(k, _)| k.clone());
+        if let Some(k) = victim {
+            let (v, _) = self.entries.remove(&k).unwrap();
+            self.used -= v.len();
+            self.stats.evictions += 1;
+            self.stats.bytes_evicted += v.len();
+            self.backing.insert(k, v);
+        } else {
+            panic!("evict_one on empty cache (value larger than capacity?)");
+        }
+    }
+
+    /// Fetch; returns which tier served it (time plane differs).
+    pub fn get(&mut self, key: &str) -> Option<(Payload, Tier)> {
+        if let Some((v, stamp)) = self.entries.get_mut(key) {
+            *stamp = self.clock + 1;
+            self.clock += 1;
+            self.stats.hits_dram += 1;
+            return Some((v.clone(), Tier::Dram));
+        }
+        if let Some(v) = self.backing.get(key) {
+            self.stats.hits_backing += 1;
+            return Some((v.clone(), Tier::Backing));
+        }
+        self.stats.misses += 1;
+        None
+    }
+
+    pub fn remove(&mut self, key: &str) -> bool {
+        let mut found = false;
+        if let Some((v, _)) = self.entries.remove(key) {
+            self.used -= v.len();
+            found = true;
+        }
+        found |= self.backing.remove(key).is_some();
+        found
+    }
+
+    pub fn keys(&self) -> Vec<String> {
+        let mut ks: Vec<String> = self
+            .entries
+            .keys()
+            .chain(self.backing.keys())
+            .cloned()
+            .collect();
+        ks.sort();
+        ks.dedup();
+        ks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_dram() {
+        let mut c = CacheNode::new(100);
+        c.put("a", Payload::real(vec![1; 10]));
+        let (v, tier) = c.get("a").unwrap();
+        assert_eq!(v.len(), 10);
+        assert_eq!(tier, Tier::Dram);
+        assert_eq!(c.used(), 10);
+    }
+
+    #[test]
+    fn lru_eviction_to_backing() {
+        let mut c = CacheNode::new(100);
+        c.put("a", Payload::synthetic(60));
+        c.put("b", Payload::synthetic(30));
+        c.get("a"); // a is now more recent than b
+        c.put("c", Payload::synthetic(40)); // evicts b (LRU)
+        assert_eq!(c.get("b").unwrap().1, Tier::Backing);
+        assert_eq!(c.get("a").unwrap().1, Tier::Dram);
+        assert_eq!(c.get("c").unwrap().1, Tier::Dram);
+        assert_eq!(c.stats.evictions, 1);
+    }
+
+    #[test]
+    fn oversized_value_goes_to_backing() {
+        let mut c = CacheNode::new(10);
+        c.put("huge", Payload::synthetic(1000));
+        assert_eq!(c.get("huge").unwrap().1, Tier::Backing);
+        assert_eq!(c.used(), 0);
+    }
+
+    #[test]
+    fn capacity_never_exceeded() {
+        let mut c = CacheNode::new(100);
+        for i in 0..50 {
+            c.put(&format!("k{i}"), Payload::synthetic(17));
+            assert!(c.used() <= 100, "used {} > cap", c.used());
+        }
+    }
+
+    #[test]
+    fn overwrite_replaces() {
+        let mut c = CacheNode::new(100);
+        c.put("a", Payload::synthetic(50));
+        c.put("a", Payload::synthetic(20));
+        assert_eq!(c.used(), 20);
+        assert_eq!(c.get("a").unwrap().0.len(), 20);
+    }
+
+    #[test]
+    fn miss_counted() {
+        let mut c = CacheNode::new(10);
+        assert!(c.get("nope").is_none());
+        assert_eq!(c.stats.misses, 1);
+    }
+
+    #[test]
+    fn remove_both_tiers() {
+        let mut c = CacheNode::new(10);
+        c.put("a", Payload::synthetic(5));
+        c.put("big", Payload::synthetic(100));
+        assert!(c.remove("a"));
+        assert!(c.remove("big"));
+        assert!(!c.remove("a"));
+        assert_eq!(c.used(), 0);
+    }
+}

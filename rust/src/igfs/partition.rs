@@ -1,0 +1,115 @@
+//! Rendezvous (highest-random-weight) hashing: maps cache keys to owner
+//! nodes with minimal disruption when membership changes — the role
+//! Ignite's partition map plays in the paper's deployment.
+
+use crate::net::NodeId;
+use crate::util::hash::{fnv1a64, mix64};
+
+#[derive(Clone, Debug)]
+pub struct PartitionMap {
+    members: Vec<NodeId>,
+}
+
+impl PartitionMap {
+    pub fn new(members: Vec<NodeId>) -> PartitionMap {
+        assert!(!members.is_empty(), "partition map needs members");
+        PartitionMap { members }
+    }
+
+    pub fn members(&self) -> &[NodeId] {
+        &self.members
+    }
+
+    /// Owner of a key: the member maximizing mix64(hash(key) ^ node).
+    pub fn owner(&self, key: &str) -> NodeId {
+        let kh = fnv1a64(key.as_bytes());
+        *self
+            .members
+            .iter()
+            .max_by_key(|n| (mix64(kh ^ (n.0 as u64 + 1)), n.0))
+            .unwrap()
+    }
+
+    /// Owner plus `replicas - 1` backups (distinct members, HRW order).
+    pub fn owners(&self, key: &str, replicas: usize) -> Vec<NodeId> {
+        let kh = fnv1a64(key.as_bytes());
+        let mut scored: Vec<(u64, NodeId)> = self
+            .members
+            .iter()
+            .map(|n| (mix64(kh ^ (n.0 as u64 + 1)), *n))
+            .collect();
+        scored.sort_by(|a, b| b.cmp(a));
+        scored
+            .into_iter()
+            .take(replicas.max(1).min(self.members.len()))
+            .map(|(_, n)| n)
+            .collect()
+    }
+
+    pub fn remove(&mut self, node: NodeId) {
+        self.members.retain(|n| *n != node);
+    }
+
+    pub fn add(&mut self, node: NodeId) {
+        if !self.members.contains(&node) {
+            self.members.push(node);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map(n: usize) -> PartitionMap {
+        PartitionMap::new((0..n).map(NodeId).collect())
+    }
+
+    #[test]
+    fn owner_is_deterministic() {
+        let m = map(5);
+        for k in ["a", "b", "part/0/7", "x/y/z"] {
+            assert_eq!(m.owner(k), m.owner(k));
+        }
+    }
+
+    #[test]
+    fn keys_spread_over_members() {
+        let m = map(4);
+        let mut counts = [0usize; 4];
+        for i in 0..4000 {
+            counts[m.owner(&format!("key-{i}")).0] += 1;
+        }
+        for &c in &counts {
+            assert!((700..1300).contains(&c), "skewed: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn membership_change_moves_few_keys() {
+        let before = map(5);
+        let mut after = before.clone();
+        after.remove(NodeId(4));
+        let mut moved = 0;
+        for i in 0..1000 {
+            let k = format!("key-{i}");
+            if before.owner(&k) != after.owner(&k) {
+                moved += 1;
+            }
+        }
+        // Only keys owned by the removed node (≈1/5) should move.
+        assert!(moved < 300, "moved {moved}");
+    }
+
+    #[test]
+    fn owners_distinct_and_capped() {
+        let m = map(3);
+        let o = m.owners("k", 5);
+        assert_eq!(o.len(), 3);
+        let mut d = o.clone();
+        d.sort();
+        d.dedup();
+        assert_eq!(d.len(), 3);
+        assert_eq!(o[0], m.owner("k"));
+    }
+}

@@ -1,0 +1,144 @@
+//! Function state store — what makes Marvel's functions *stateful*.
+//!
+//! Each running function owns a state record (progress counters, offsets
+//! of consumed splits, partial aggregates) keyed by (job, task). On
+//! failure the re-executed function resumes from the last checkpoint
+//! instead of recomputing — exercised by `coordinator::recovery` and the
+//! fault-tolerance example.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskState {
+    pub job: String,
+    pub task: u32,
+    /// Monotonic progress marker (e.g. bytes of the split consumed).
+    pub progress: u64,
+    /// Serialized partial aggregate (opaque to the store).
+    pub partial: Vec<u8>,
+    /// Attempt that wrote this state.
+    pub attempt: u32,
+    pub epoch: u64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct StateStore {
+    entries: HashMap<(String, u32), TaskState>,
+    epoch: u64,
+    pub checkpoints: u64,
+    pub restores: u64,
+}
+
+impl StateStore {
+    pub fn new() -> StateStore {
+        StateStore::default()
+    }
+
+    /// Persist a checkpoint. Rejects stale attempts (an old zombie
+    /// container must not clobber the retry's progress).
+    pub fn checkpoint(
+        &mut self,
+        job: &str,
+        task: u32,
+        attempt: u32,
+        progress: u64,
+        partial: Vec<u8>,
+    ) -> Result<(), String> {
+        let key = (job.to_string(), task);
+        if let Some(prev) = self.entries.get(&key) {
+            if attempt < prev.attempt {
+                return Err(format!(
+                    "stale attempt {attempt} < {}",
+                    prev.attempt
+                ));
+            }
+            if attempt == prev.attempt && progress < prev.progress {
+                return Err(format!(
+                    "progress went backwards: {progress} < {}",
+                    prev.progress
+                ));
+            }
+        }
+        self.epoch += 1;
+        self.checkpoints += 1;
+        self.entries.insert(
+            key,
+            TaskState {
+                job: job.to_string(),
+                task,
+                progress,
+                partial,
+                attempt,
+                epoch: self.epoch,
+            },
+        );
+        Ok(())
+    }
+
+    /// Restore the latest checkpoint for a task, if any.
+    pub fn restore(&mut self, job: &str, task: u32) -> Option<TaskState> {
+        let v = self.entries.get(&(job.to_string(), task)).cloned();
+        if v.is_some() {
+            self.restores += 1;
+        }
+        v
+    }
+
+    /// Drop all state for a completed job.
+    pub fn clear_job(&mut self, job: &str) -> usize {
+        let before = self.entries.len();
+        self.entries.retain(|(j, _), _| j != job);
+        before - self.entries.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_restore_roundtrip() {
+        let mut s = StateStore::new();
+        s.checkpoint("job1", 3, 0, 1024, vec![7, 7]).unwrap();
+        let st = s.restore("job1", 3).unwrap();
+        assert_eq!(st.progress, 1024);
+        assert_eq!(st.partial, vec![7, 7]);
+        assert!(s.restore("job1", 4).is_none());
+    }
+
+    #[test]
+    fn stale_attempt_rejected() {
+        let mut s = StateStore::new();
+        s.checkpoint("j", 0, 2, 10, vec![]).unwrap();
+        assert!(s.checkpoint("j", 0, 1, 99, vec![]).is_err());
+        // Newer attempt may restart from 0.
+        s.checkpoint("j", 0, 3, 0, vec![]).unwrap();
+        assert_eq!(s.restore("j", 0).unwrap().attempt, 3);
+    }
+
+    #[test]
+    fn progress_monotonic_within_attempt() {
+        let mut s = StateStore::new();
+        s.checkpoint("j", 0, 1, 100, vec![]).unwrap();
+        assert!(s.checkpoint("j", 0, 1, 50, vec![]).is_err());
+        s.checkpoint("j", 0, 1, 150, vec![]).unwrap();
+    }
+
+    #[test]
+    fn clear_job_scoped() {
+        let mut s = StateStore::new();
+        s.checkpoint("a", 0, 0, 1, vec![]).unwrap();
+        s.checkpoint("a", 1, 0, 1, vec![]).unwrap();
+        s.checkpoint("b", 0, 0, 1, vec![]).unwrap();
+        assert_eq!(s.clear_job("a"), 2);
+        assert_eq!(s.len(), 1);
+        assert!(s.restore("b", 0).is_some());
+    }
+}

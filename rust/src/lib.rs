@@ -1,0 +1,27 @@
+//! Marvel: persistent-memory-backed stateful serverless computing for
+//! big-data applications — a full reproduction of Li et al. (CS.DC'23)
+//! as a three-layer Rust + JAX + Pallas system. See DESIGN.md.
+//!
+//! Layer map:
+//! * L1/L2 (build time): `python/compile/` — Pallas combine kernels +
+//!   jax models, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * Runtime bridge: [`runtime`] loads the artifacts via PJRT.
+//! * L3 (this crate): everything else — the serverless platform, the
+//!   storage substrates, the MapReduce engine, and the coordinator.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod faas;
+pub mod hdfs;
+pub mod igfs;
+pub mod mapreduce;
+pub mod metrics;
+pub mod net;
+pub mod objstore;
+pub mod runtime;
+pub mod sim;
+pub mod storage;
+pub mod util;
+pub mod workloads;
+pub mod yarn;

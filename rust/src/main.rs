@@ -1,0 +1,7 @@
+//! `marvel` binary — the Layer-3 leader entrypoint. All heavy lifting
+//! lives in the library; this is argv plumbing.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(marvel::cli::main_with_args(&argv));
+}

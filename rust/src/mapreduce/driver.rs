@@ -1,0 +1,400 @@
+//! Job driver: plans a MapReduce job against a deployed cluster, runs
+//! the *data plane* eagerly (real bytes through the real combine path),
+//! compiles every task into a DES proc, and runs the *time plane* to a
+//! deterministic completion time. Implements the paper's Figure 3
+//! workflow steps 1–10.
+
+use crate::faas::{ActionSpec, Controller, Lambda};
+use crate::metrics::{tags, IoSummary};
+use crate::net::{NodeId, Topology};
+use crate::runtime::RtEngine;
+use crate::sim::{Engine, SimNs, Stage};
+use crate::yarn::{ContainerRequest, ResourceManager};
+
+use super::shuffle::{interm_key, output_key, Stores};
+use super::types::{
+    JobResult, PhaseStats, Platform, StoreKind, SystemConfig,
+};
+use super::workload::{task_rng, Workload};
+
+/// A deployed cluster a job runs against. One job per instance keeps
+/// virtual time and flow logs cleanly attributable.
+pub struct Cluster {
+    pub engine: Engine,
+    pub topo: Topology,
+    pub stores: Stores,
+    pub controller: Controller,
+    pub lambda: Lambda,
+    pub rm: ResourceManager,
+}
+
+/// Stage the job input into the configured input store (deployment-time;
+/// not billed to job execution, matching the paper's methodology).
+pub fn stage_input(
+    cluster: &mut Cluster,
+    cfg: &SystemConfig,
+    wl: &dyn Workload,
+    bytes: u64,
+    seed: u64,
+) -> Result<String, String> {
+    let materialize = bytes <= cfg.materialize_cap;
+    let mut rng = task_rng(seed, wl.name(), u64::MAX);
+    let data = wl.generate_input(bytes, materialize, &mut rng);
+    assert_eq!(data.len(), bytes, "workload generated wrong input size");
+    let path = format!("{}/input", wl.name());
+    match cfg.input_store {
+        StoreKind::S3 => {
+            cluster.stores.s3.put(&path, data);
+        }
+        StoreKind::Hdfs | StoreKind::Igfs => {
+            // Ingest from node 0; staging stages are dropped (untimed).
+            cluster
+                .stores
+                .hdfs
+                .put(&cluster.topo, NodeId(0), &path, data, tags::INPUT_READ)?;
+        }
+    }
+    Ok(path)
+}
+
+struct SplitPlan {
+    offset: u64,
+    len: u64,
+    locality: Vec<NodeId>,
+}
+
+fn plan_splits(
+    cluster: &mut Cluster,
+    cfg: &SystemConfig,
+    input: &str,
+) -> Result<(u64, Vec<SplitPlan>), String> {
+    match cfg.input_store {
+        StoreKind::Hdfs | StoreKind::Igfs => {
+            let locs = cluster.stores.hdfs.block_locations(input);
+            if locs.is_empty() {
+                return Err(format!("input {input} not in HDFS"));
+            }
+            let total = locs.iter().map(|(b, _)| b.len).sum();
+            Ok((
+                total,
+                locs.into_iter()
+                    .map(|(b, nodes)| SplitPlan {
+                        offset: b.offset,
+                        len: b.len,
+                        locality: nodes,
+                    })
+                    .collect(),
+            ))
+        }
+        StoreKind::S3 => {
+            let total = cluster
+                .stores
+                .s3
+                .get(input)
+                .ok_or_else(|| format!("input {input} not in S3"))?
+                .len();
+            let mut splits = Vec::new();
+            let mut off = 0;
+            while off < total {
+                let len = cfg.split_bytes.min(total - off);
+                splits.push(SplitPlan { offset: off, len, locality: vec![] });
+                off += len;
+            }
+            if splits.is_empty() {
+                splits.push(SplitPlan { offset: 0, len: 0, locality: vec![] });
+            }
+            Ok((total, splits))
+        }
+    }
+}
+
+/// Run one job end-to-end. `seed` drives all data-plane randomness.
+pub fn run_job(
+    cluster: &mut Cluster,
+    cfg: &SystemConfig,
+    wl: &dyn Workload,
+    input: &str,
+    rt: &mut RtEngine,
+    seed: u64,
+) -> JobResult {
+    match run_job_inner(cluster, cfg, wl, input, rt, seed) {
+        Ok(r) => r,
+        Err(e) => {
+            let input_bytes = match cfg.input_store {
+                StoreKind::S3 => cluster
+                    .stores
+                    .s3
+                    .get(input)
+                    .map(|p| p.len())
+                    .unwrap_or(0),
+                _ => cluster
+                    .stores
+                    .hdfs
+                    .namenode
+                    .stat(input)
+                    .map(|i| i.len)
+                    .unwrap_or(0),
+            };
+            JobResult::failed(wl.name(), &cfg.name, input_bytes, e)
+        }
+    }
+}
+
+fn run_job_inner(
+    cluster: &mut Cluster,
+    cfg: &SystemConfig,
+    wl: &dyn Workload,
+    input: &str,
+    rt: &mut RtEngine,
+    seed: u64,
+) -> Result<JobResult, String> {
+    let job = wl.name().to_string();
+    let t_start = cluster.engine.now();
+    let rt_batches0 = rt.stats.batches;
+    let rt_ns0 = rt.stats.pjrt_ns + rt.stats.oracle_ns;
+
+    // (1–3) Client → controller → YARN: size the job.
+    let (input_bytes, splits) = plan_splits(cluster, cfg, input)?;
+    let n_splits = splits.len();
+    let (n_maps, n_reduces) =
+        cluster.rm.size_job(n_splits, rt.manifest.parts);
+
+    // Lambda admission: the Corral baseline dies past the transfer
+    // quota (paper §4.2.1 observation 1).
+    if cfg.platform == Platform::Lambda {
+        cluster.lambda.admit_job(input_bytes, n_maps + n_reduces)?;
+    }
+
+    // (4) Placement for map tasks (locality from the NameNode).
+    let map_reqs: Vec<ContainerRequest> = splits
+        .iter()
+        .map(|s| ContainerRequest {
+            vcores: 1,
+            memory_mb: 2048,
+            locality: s.locality.clone(),
+        })
+        .collect();
+    let map_allocs = cluster.rm.allocate(&map_reqs);
+    if cfg.prewarm && cfg.platform == Platform::OpenWhisk {
+        cluster.controller.prewarm("marvel-hadoop:latest", 64);
+    }
+
+    let maps_done = cluster.engine.add_barrier(n_maps);
+    let job_done = cluster.engine.add_barrier(n_reduces);
+    let map_spec = ActionSpec::map(&job, 2048);
+    let reduce_spec = ActionSpec::reduce(&job, 2048);
+
+    // (5–7) Map phase: data plane now, time plane as procs.
+    let mut intermediate_bytes = 0u64;
+    let mut map_in_local = 0u64;
+    let mut map_in_remote = 0u64;
+    for (i, split) in splits.iter().enumerate() {
+        let node = map_allocs[i].node;
+        // -- data plane: fetch split
+        let (data, in_stages) = match cfg.input_store {
+            StoreKind::Hdfs | StoreKind::Igfs => {
+                let (d, st, local) = cluster.stores.hdfs.read_range(
+                    &cluster.topo,
+                    node,
+                    input,
+                    split.offset,
+                    split.len,
+                    tags::INPUT_READ,
+                )?;
+                if local {
+                    map_in_local += split.len;
+                } else {
+                    map_in_remote += split.len;
+                }
+                (d, st)
+            }
+            StoreKind::S3 => {
+                let whole = cluster
+                    .stores
+                    .s3
+                    .get(input)
+                    .ok_or("input vanished")?;
+                let d = whole.slice(split.offset, split.len);
+                let st = cluster.stores.s3.get_stages(
+                    &mut cluster.engine,
+                    &cluster.topo,
+                    node,
+                    split.len,
+                    tags::INPUT_READ,
+                );
+                map_in_remote += split.len;
+                (d, st)
+            }
+        };
+        // -- data plane: map + combine (the PJRT hot path)
+        let mut rng = task_rng(seed, &job, i as u64);
+        let mo = wl.map_split(&data, n_reduces, cfg, rt, &mut rng);
+
+        // -- time plane
+        let (slot, startup) = match cfg.platform {
+            Platform::OpenWhisk => {
+                let inv = cluster.controller.invoke(&map_spec, node);
+                (cluster.controller.slots_of(node), inv.startup)
+            }
+            Platform::Lambda => {
+                let (lat, _) = cluster.lambda.startup();
+                (cluster.lambda.concurrency, lat)
+            }
+        };
+        let mut stages = vec![Stage::Acquire(slot), Stage::Delay(startup)];
+        stages.extend(in_stages);
+        stages.push(Stage::Delay(SimNs::from_secs_f64(
+            split.len as f64 / wl.map_rate(),
+        )));
+        for (j, part) in mo.partitions.into_iter().enumerate() {
+            if part.is_empty() {
+                continue;
+            }
+            intermediate_bytes += part.len();
+            let key = interm_key(&job, i, j);
+            let st = cluster.stores.write_intermediate(
+                &mut cluster.engine,
+                &cluster.topo,
+                cfg.intermediate_store,
+                node,
+                &key,
+                part,
+            )?;
+            stages.extend(st);
+        }
+        stages.push(Stage::Release(slot));
+        stages.push(Stage::Arrive(maps_done));
+        cluster.engine.spawn(&format!("{job}/map{i}"), stages);
+        if cfg.platform == Platform::OpenWhisk {
+            cluster.controller.complete(&map_spec, node);
+        } else {
+            cluster.lambda.finish();
+        }
+    }
+
+    // (8–10) Reduce phase.
+    let reduce_reqs: Vec<ContainerRequest> = (0..n_reduces)
+        .map(|_| ContainerRequest {
+            vcores: 1,
+            memory_mb: 2048,
+            locality: vec![],
+        })
+        .collect();
+    let reduce_allocs = cluster.rm.allocate(&reduce_reqs);
+    let mut output_bytes = 0u64;
+    let mut reduce_in_bytes = 0u64;
+    for j in 0..n_reduces {
+        let node = reduce_allocs[j].node;
+        let mut stages = vec![Stage::Await(maps_done)];
+        let (slot, startup) = match cfg.platform {
+            Platform::OpenWhisk => {
+                let inv = cluster.controller.invoke(&reduce_spec, node);
+                (cluster.controller.slots_of(node), inv.startup)
+            }
+            Platform::Lambda => {
+                let (lat, _) = cluster.lambda.startup();
+                (cluster.lambda.concurrency, lat)
+            }
+        };
+        stages.push(Stage::Acquire(slot));
+        stages.push(Stage::Delay(startup));
+        // -- data plane: gather this partition from every mapper
+        let mut inputs = Vec::new();
+        for i in 0..n_maps {
+            let key = interm_key(&job, i, j);
+            match cluster.stores.read_intermediate(
+                &mut cluster.engine,
+                &cluster.topo,
+                cfg.intermediate_store,
+                node,
+                &key,
+            ) {
+                Ok((d, st)) => {
+                    reduce_in_bytes += d.len();
+                    inputs.push(d);
+                    stages.extend(st);
+                }
+                Err(_) => {} // mapper emitted nothing for this partition
+            }
+        }
+        let ro = wl.reduce_partition(j, n_reduces, &inputs, cfg, rt);
+        let in_bytes: u64 = inputs.iter().map(|p| p.len()).sum();
+        stages.push(Stage::Delay(SimNs::from_secs_f64(
+            in_bytes as f64 / wl.reduce_rate(),
+        )));
+        if !ro.output.is_empty() {
+            output_bytes += ro.output.len();
+            let st = cluster.stores.write_output(
+                &mut cluster.engine,
+                &cluster.topo,
+                cfg.output_store,
+                node,
+                &output_key(&job, j),
+                ro.output,
+            )?;
+            stages.extend(st);
+        }
+        stages.push(Stage::Release(slot));
+        stages.push(Stage::Arrive(job_done));
+        cluster.engine.spawn(&format!("{job}/red{j}"), stages);
+        if cfg.platform == Platform::OpenWhisk {
+            cluster.controller.complete(&reduce_spec, node);
+        } else {
+            cluster.lambda.finish();
+        }
+    }
+
+    // Run the time plane.
+    let end = cluster.engine.run()?;
+    if let Some((_, msg)) = cluster.engine.failures().first() {
+        return Err(format!("task failed: {msg}"));
+    }
+    let maps_end = cluster
+        .engine
+        .barrier_opened_at(maps_done)
+        .unwrap_or(end);
+    let job_time = end - t_start;
+    let io = IoSummary::from_flow_log(&cluster.engine.flow_log, job_time);
+
+    let placed = map_in_local + map_in_remote;
+    Ok(JobResult {
+        job,
+        config: cfg.name.clone(),
+        input_bytes,
+        intermediate_bytes,
+        output_bytes,
+        map: PhaseStats {
+            tasks: n_maps,
+            bytes_in: input_bytes,
+            bytes_out: intermediate_bytes,
+            duration: maps_end - t_start,
+        },
+        reduce: PhaseStats {
+            tasks: n_reduces,
+            bytes_in: reduce_in_bytes,
+            bytes_out: output_bytes,
+            duration: end.saturating_sub(maps_end),
+        },
+        job_time,
+        failed: None,
+        cold_starts: cluster.controller.cold_starts()
+            + cluster.lambda.cold_starts,
+        locality_ratio: if placed > 0 {
+            map_in_local as f64 / placed as f64
+        } else {
+            0.0
+        },
+        io,
+        rt_batches: rt.stats.batches - rt_batches0,
+        rt_compute_ns: rt.stats.pjrt_ns + rt.stats.oracle_ns - rt_ns0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    // Exercised end-to-end via coordinator tests + rust/tests/.
+    #[test]
+    fn interm_key_stable() {
+        assert_eq!(super::interm_key("j", 2, 3), "j/shuffle/m00002/p003");
+    }
+}

@@ -1,0 +1,16 @@
+//! MapReduce engine: job/system configuration, workload abstraction,
+//! shuffle backends (S3 / HDFS / IGFS), and the driver that plans tasks,
+//! runs the real data plane, and simulates the time plane.
+
+pub mod driver;
+pub mod shuffle;
+pub mod types;
+pub mod workload;
+
+pub use driver::{run_job, stage_input, Cluster};
+pub use shuffle::{interm_key, output_key, Stores};
+pub use types::{
+    CombinerMode, JobResult, PhaseStats, Platform, SerFormat, StoreKind,
+    SystemConfig,
+};
+pub use workload::{task_rng, MapOutput, ReduceOutput, Workload};

@@ -1,0 +1,92 @@
+//! The Workload abstraction: how a job's data plane behaves.
+//!
+//! `map_split` / `reduce_partition` operate on [`Payload`]s — real bytes
+//! below the materialization cap, exact synthetic accounting above it.
+//! Every workload must keep the two modes byte-consistent (cross-checked
+//! by `tests/data_plane.rs`).
+
+use crate::runtime::RtEngine;
+use crate::storage::Payload;
+use crate::util::rng::Rng;
+
+use super::types::SystemConfig;
+
+/// Output of one map task.
+#[derive(Debug)]
+pub struct MapOutput {
+    /// Intermediate payload per reducer partition.
+    pub partitions: Vec<Payload>,
+    /// Records emitted (pre-combine tokens or combined aggregates).
+    pub records: u64,
+}
+
+impl MapOutput {
+    pub fn total_bytes(&self) -> u64 {
+        self.partitions.iter().map(|p| p.len()).sum()
+    }
+}
+
+/// Output of one reduce task.
+#[derive(Debug)]
+pub struct ReduceOutput {
+    pub output: Payload,
+    pub records: u64,
+}
+
+pub trait Workload {
+    fn name(&self) -> &str;
+
+    /// Generate (or account for) the job's input and stage it as a
+    /// payload of exactly `bytes`.
+    fn generate_input(&self, bytes: u64, materialize: bool, rng: &mut Rng)
+        -> Payload;
+
+    /// Map one split into per-partition intermediate payloads.
+    fn map_split(
+        &self,
+        split: &Payload,
+        parts: usize,
+        cfg: &SystemConfig,
+        rt: &mut RtEngine,
+        rng: &mut Rng,
+    ) -> MapOutput;
+
+    /// Reduce one partition from all mappers' payloads for it.
+    /// `parts` is the total reducer count of the job.
+    fn reduce_partition(
+        &self,
+        part: usize,
+        parts: usize,
+        inputs: &[Payload],
+        cfg: &SystemConfig,
+        rt: &mut RtEngine,
+    ) -> ReduceOutput;
+
+    /// Modeled map compute throughput (bytes of input per second per
+    /// container) — calibrated constants recorded in EXPERIMENTS.md.
+    fn map_rate(&self) -> f64;
+
+    /// Modeled reduce compute throughput (bytes of intermediate/s).
+    fn reduce_rate(&self) -> f64;
+}
+
+/// Deterministic per-task RNG derivation.
+pub fn task_rng(seed: u64, job: &str, task: u64) -> Rng {
+    let jh = crate::util::hash::fnv1a64(job.as_bytes());
+    Rng::new(seed ^ jh.rotate_left(17) ^ task.wrapping_mul(0x9E3779B97F4A7C15))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_rngs_independent() {
+        let mut a = task_rng(1, "job", 0);
+        let mut b = task_rng(1, "job", 1);
+        let mut a2 = task_rng(1, "job", 0);
+        assert_ne!(a.next_u64(), b.next_u64());
+        let mut a = task_rng(1, "job", 0);
+        assert_eq!(a.next_u64(), a2.next_u64());
+    }
+}

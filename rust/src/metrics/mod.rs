@@ -1,0 +1,154 @@
+//! Metrics: flow tags, counters, and report assembly for the bench
+//! harness (tables/figures) and EXPERIMENTS.md.
+
+pub mod tags {
+    //! Flow tags — label every simulated transfer so throughput can be
+    //! attributed per phase (Figure 6 needs I/O throughput by backend).
+    pub const INPUT_READ: u32 = 1;
+    pub const INTERMEDIATE_WRITE: u32 = 2;
+    pub const INTERMEDIATE_READ: u32 = 3;
+    pub const OUTPUT_WRITE: u32 = 4;
+    pub const S3_REQUEST: u32 = 5;
+    pub const STATE_OP: u32 = 6;
+    pub const REPLICATION: u32 = 7;
+    pub const FIO: u32 = 8;
+
+    pub fn name(tag: u32) -> &'static str {
+        match tag {
+            INPUT_READ => "input_read",
+            INTERMEDIATE_WRITE => "intermediate_write",
+            INTERMEDIATE_READ => "intermediate_read",
+            OUTPUT_WRITE => "output_write",
+            S3_REQUEST => "s3_request",
+            STATE_OP => "state_op",
+            REPLICATION => "replication",
+            FIO => "fio",
+            _ => "other",
+        }
+    }
+}
+
+use std::collections::BTreeMap;
+
+use crate::sim::{FlowLog, SimNs};
+
+/// Aggregated I/O accounting from an engine run.
+#[derive(Clone, Debug, Default)]
+pub struct IoSummary {
+    /// tag → (bytes, busy-span seconds).
+    pub per_tag: BTreeMap<u32, (f64, f64)>,
+    pub total_bytes: f64,
+    pub makespan: SimNs,
+}
+
+impl IoSummary {
+    pub fn from_flow_log(log: &[FlowLog], makespan: SimNs) -> IoSummary {
+        let mut per_tag: BTreeMap<u32, (f64, f64)> = BTreeMap::new();
+        let mut total = 0.0;
+        // Busy span per tag = union of [start, end) intervals.
+        let mut intervals: BTreeMap<u32, Vec<(u64, u64)>> = BTreeMap::new();
+        for f in log {
+            total += f.bytes;
+            per_tag.entry(f.tag).or_default().0 += f.bytes;
+            intervals
+                .entry(f.tag)
+                .or_default()
+                .push((f.start.as_nanos(), f.end.as_nanos()));
+        }
+        for (tag, mut iv) in intervals {
+            iv.sort_unstable();
+            let mut busy = 0u64;
+            let mut cur: Option<(u64, u64)> = None;
+            for (s, e) in iv {
+                match cur {
+                    None => cur = Some((s, e)),
+                    Some((cs, ce)) => {
+                        if s <= ce {
+                            cur = Some((cs, ce.max(e)));
+                        } else {
+                            busy += ce - cs;
+                            cur = Some((s, e));
+                        }
+                    }
+                }
+            }
+            if let Some((cs, ce)) = cur {
+                busy += ce - cs;
+            }
+            per_tag.get_mut(&tag).unwrap().1 = busy as f64 / 1e9;
+        }
+        IoSummary { per_tag, total_bytes: total, makespan }
+    }
+
+    pub fn bytes_for(&self, tag: u32) -> f64 {
+        self.per_tag.get(&tag).map(|v| v.0).unwrap_or(0.0)
+    }
+
+    /// Mean throughput of a tag over its busy span, in Gbit/s
+    /// (the unit of the paper's Figure 6).
+    pub fn gbps_for(&self, tag: u32) -> f64 {
+        match self.per_tag.get(&tag) {
+            Some(&(bytes, busy)) if busy > 0.0 => bytes * 8.0 / busy / 1e9,
+            _ => 0.0,
+        }
+    }
+
+    /// Aggregate throughput of several tags over the union busy span.
+    pub fn gbps_over_makespan(&self, tag_list: &[u32]) -> f64 {
+        let bytes: f64 = tag_list.iter().map(|t| self.bytes_for(*t)).sum();
+        let secs = self.makespan.as_secs_f64();
+        if secs > 0.0 {
+            bytes * 8.0 / secs / 1e9
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fl(tag: u32, bytes: f64, s: u64, e: u64) -> FlowLog {
+        FlowLog {
+            tag,
+            bytes,
+            start: SimNs::from_nanos(s),
+            end: SimNs::from_nanos(e),
+        }
+    }
+
+    #[test]
+    fn per_tag_bytes() {
+        let log = vec![fl(1, 100.0, 0, 10), fl(1, 50.0, 10, 20),
+                       fl(2, 30.0, 0, 5)];
+        let s = IoSummary::from_flow_log(&log, SimNs::from_nanos(20));
+        assert_eq!(s.bytes_for(1), 150.0);
+        assert_eq!(s.bytes_for(2), 30.0);
+        assert_eq!(s.total_bytes, 180.0);
+    }
+
+    #[test]
+    fn busy_span_merges_overlaps() {
+        // Two overlapping flows: [0,10) and [5,15) → busy 15 ns.
+        let log = vec![fl(1, 1e9, 0, 10), fl(1, 1e9, 5, 15)];
+        let s = IoSummary::from_flow_log(&log, SimNs::from_nanos(15));
+        let (_, busy) = s.per_tag[&1];
+        assert!((busy - 15e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn gbps_math() {
+        // 1.25e9 bytes over 1 s busy = 10 Gbps.
+        let log = vec![fl(1, 1.25e9, 0, 1_000_000_000)];
+        let s = IoSummary::from_flow_log(&log, SimNs::from_secs_f64(1.0));
+        assert!((s.gbps_for(1) - 10.0).abs() < 1e-9);
+        assert!((s.gbps_over_makespan(&[1]) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tag_names() {
+        assert_eq!(tags::name(tags::INPUT_READ), "input_read");
+        assert_eq!(tags::name(999), "other");
+    }
+}

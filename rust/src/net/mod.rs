@@ -1,0 +1,10 @@
+//! Cluster topology and network model: per-node full-duplex NICs on a
+//! Docker-overlay-style LAN, plus a shared WAN path to the remote object
+//! store. Transfers are flows whose path threads the source device read
+//! channel, the NICs, and the destination device write channel — so the
+//! bottleneck (the paper's "network quickly becomes the bottleneck")
+//! emerges from capacities instead of being scripted.
+
+pub mod topology;
+
+pub use topology::{DevId, DeviceRole, NodeId, Topology, TopologyBuilder};

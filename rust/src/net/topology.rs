@@ -1,0 +1,238 @@
+//! Node / NIC / device wiring for the simulated cluster.
+
+use std::collections::BTreeMap;
+
+use crate::sim::{Engine, ResourceId, SimNs};
+use crate::storage::{Device, MediaSpec};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DevId(pub usize);
+
+/// Which storage role a device plays on its node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DeviceRole {
+    Pmem,
+    Ssd,
+    Hdd,
+    Dram,
+}
+
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub name: String,
+    pub nic_in: ResourceId,
+    pub nic_out: ResourceId,
+    pub devices: BTreeMap<DeviceRole, DevId>,
+    /// Container slots this node can host (invoker capacity).
+    pub slots: usize,
+}
+
+pub struct Topology {
+    pub nodes: Vec<Node>,
+    pub devices: Vec<Device>,
+    /// Shared WAN pipe to the remote object store (both directions).
+    pub wan_up: ResourceId,
+    pub wan_down: ResourceId,
+    pub wan_rtt: SimNs,
+    /// Intra-node memory bus (loopback transfers, IGFS local hits).
+    pub membus: Vec<ResourceId>,
+}
+
+impl Topology {
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0]
+    }
+
+    pub fn device(&self, id: DevId) -> &Device {
+        &self.devices[id.0]
+    }
+
+    pub fn device_mut(&mut self, id: DevId) -> &mut Device {
+        &mut self.devices[id.0]
+    }
+
+    pub fn device_of(&self, node: NodeId, role: DeviceRole) -> Option<DevId> {
+        self.node(node).devices.get(&role).copied()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// NIC resources a transfer from `src` to `dst` traverses; empty for
+    /// node-local transfers (loopback never leaves the host).
+    pub fn lan_path(&self, src: NodeId, dst: NodeId) -> Vec<ResourceId> {
+        if src == dst {
+            vec![self.membus[src.0]]
+        } else {
+            vec![self.node(src).nic_out, self.node(dst).nic_in]
+        }
+    }
+
+    /// Path from a node up to the object store (PUT direction).
+    pub fn wan_put_path(&self, src: NodeId) -> Vec<ResourceId> {
+        vec![self.node(src).nic_out, self.wan_up]
+    }
+
+    /// Path from the object store down to a node (GET direction).
+    pub fn wan_get_path(&self, dst: NodeId) -> Vec<ResourceId> {
+        vec![self.wan_down, self.node(dst).nic_in]
+    }
+}
+
+/// Builder mirroring the paper's testbed shape (§4.1): one or more
+/// servers, each with DRAM, PMEM (AppDirect) and SSD, on a 10 Gb/s
+/// overlay; WAN to S3 at ~5 Gb/s effective with ~20 ms RTT.
+pub struct TopologyBuilder {
+    pub nodes: usize,
+    pub slots_per_node: usize,
+    pub nic_gbps: f64,
+    pub pmem_capacity: u64,
+    pub ssd_capacity: u64,
+    pub dram_capacity: u64,
+    pub wan_gbps: f64,
+    pub wan_rtt: SimNs,
+    pub with_hdd: bool,
+}
+
+impl Default for TopologyBuilder {
+    fn default() -> Self {
+        use crate::util::bytes::GIB;
+        TopologyBuilder {
+            nodes: 1,
+            // Paper testbed: 32 CPUs on the single server.
+            slots_per_node: 32,
+            nic_gbps: 10.0,
+            pmem_capacity: 700 * GIB,
+            ssd_capacity: 960 * GIB,
+            dram_capacity: 360 * GIB,
+            wan_gbps: 5.0,
+            wan_rtt: SimNs::from_millis(20),
+            with_hdd: false,
+        }
+    }
+}
+
+impl TopologyBuilder {
+    pub fn build(&self, engine: &mut Engine) -> Topology {
+        assert!(self.nodes > 0);
+        let gbps = |g: f64| g * 1e9 / 8.0; // bytes/sec
+        let mut nodes = Vec::with_capacity(self.nodes);
+        let mut devices = Vec::new();
+        let mut membus = Vec::with_capacity(self.nodes);
+        for i in 0..self.nodes {
+            let name = format!("node{i}");
+            let nic_in = engine
+                .add_resource(&format!("{name}.nic.in"), gbps(self.nic_gbps));
+            let nic_out = engine
+                .add_resource(&format!("{name}.nic.out"), gbps(self.nic_gbps));
+            membus.push(engine.add_resource(
+                &format!("{name}.membus"),
+                // Loopback/DRAM copy bandwidth — far above NIC speed.
+                40.0 * crate::util::bytes::GIB as f64,
+            ));
+            let mut map = BTreeMap::new();
+            let mut add = |role: DeviceRole, spec: MediaSpec,
+                           devices: &mut Vec<Device>,
+                           engine: &mut Engine| {
+                let dev = Device::new(
+                    engine,
+                    &format!("{name}.{:?}", role).to_lowercase(),
+                    spec,
+                );
+                devices.push(dev);
+                map.insert(role, DevId(devices.len() - 1));
+            };
+            add(DeviceRole::Pmem, MediaSpec::pmem(self.pmem_capacity),
+                &mut devices, engine);
+            add(DeviceRole::Ssd, MediaSpec::ssd(self.ssd_capacity),
+                &mut devices, engine);
+            add(DeviceRole::Dram, MediaSpec::dram(self.dram_capacity),
+                &mut devices, engine);
+            if self.with_hdd {
+                add(DeviceRole::Hdd, MediaSpec::hdd(4 * self.ssd_capacity),
+                    &mut devices, engine);
+            }
+            nodes.push(Node {
+                name,
+                nic_in,
+                nic_out,
+                devices: map,
+                slots: self.slots_per_node,
+            });
+        }
+        let wan_up = engine.add_resource("wan.up", gbps(self.wan_gbps));
+        let wan_down = engine.add_resource("wan.down", gbps(self.wan_gbps));
+        Topology {
+            nodes,
+            devices,
+            wan_up,
+            wan_down,
+            wan_rtt: self.wan_rtt,
+            membus,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Stage;
+
+    fn topo(nodes: usize) -> (Engine, Topology) {
+        let mut e = Engine::new();
+        let t = TopologyBuilder { nodes, ..Default::default() }.build(&mut e);
+        (e, t)
+    }
+
+    #[test]
+    fn builds_roles_per_node() {
+        let (_, t) = topo(3);
+        assert_eq!(t.n_nodes(), 3);
+        for i in 0..3 {
+            let n = NodeId(i);
+            assert!(t.device_of(n, DeviceRole::Pmem).is_some());
+            assert!(t.device_of(n, DeviceRole::Ssd).is_some());
+            assert!(t.device_of(n, DeviceRole::Dram).is_some());
+            assert!(t.device_of(n, DeviceRole::Hdd).is_none());
+        }
+    }
+
+    #[test]
+    fn local_path_uses_membus_not_nic() {
+        let (_, t) = topo(2);
+        let local = t.lan_path(NodeId(0), NodeId(0));
+        assert_eq!(local, vec![t.membus[0]]);
+        let remote = t.lan_path(NodeId(0), NodeId(1));
+        assert_eq!(remote.len(), 2);
+    }
+
+    #[test]
+    fn nic_caps_cross_node_transfer() {
+        let (mut e, t) = topo(2);
+        // 1.25 GB over a 10 Gb/s NIC ≈ 1 s.
+        e.spawn("xfer", vec![Stage::Flow {
+            bytes: 1.25e9,
+            path: t.lan_path(NodeId(0), NodeId(1)),
+            tag: 0,
+        }]);
+        let end = e.run().unwrap();
+        assert!((end.as_secs_f64() - 1.0).abs() < 0.01, "{end}");
+    }
+
+    #[test]
+    fn wan_slower_than_lan() {
+        let (mut e, t) = topo(1);
+        e.spawn("up", vec![Stage::Flow {
+            bytes: 1.25e9,
+            path: t.wan_put_path(NodeId(0)),
+            tag: 0,
+        }]);
+        let end = e.run().unwrap();
+        // 1.25 GB at 5 Gb/s = 2 s.
+        assert!((end.as_secs_f64() - 2.0).abs() < 0.01, "{end}");
+    }
+}

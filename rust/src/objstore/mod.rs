@@ -1,0 +1,232 @@
+//! Remote object store — the S3 analog backing the Lambda/Corral
+//! baseline (and the "+S3 durability" Marvel variants of Figure 1).
+//!
+//! Mechanisms modeled (all cited by the paper as the baseline's
+//! bottlenecks): per-request round-trip latency, a shared WAN pipe,
+//! request-rate throttling per prefix (AWS's published 5 500 GET /
+//! 3 500 PUT per second — requests beyond the rate queue, the fluid
+//! analog of 503-retry loops), and account-level transfer quotas that
+//! fail the job outright (Corral's observed 15 GB failure).
+
+use std::collections::BTreeMap;
+
+use crate::net::{NodeId, Topology};
+use crate::sim::{Engine, ResourceId, SimNs, Stage};
+use crate::storage::Payload;
+
+/// AWS-published default request rates per prefix.
+pub const DEFAULT_GET_RPS: f64 = 5_500.0;
+pub const DEFAULT_PUT_RPS: f64 = 3_500.0;
+
+#[derive(Clone, Debug)]
+pub struct ObjStoreConfig {
+    pub get_rps: f64,
+    pub put_rps: f64,
+    /// Per-request round trip (on top of WAN bandwidth time).
+    pub request_rtt: SimNs,
+    /// Internal frontend bandwidth cap (bytes/sec) across all clients.
+    pub frontend_gbps: f64,
+    /// Per-connection throughput cap (bytes/sec): a single S3 GET/PUT
+    /// stream sustains ~35 MB/s in practice — the mechanism that
+    /// throttles Corral's per-function transfers.
+    pub stream_bps: f64,
+}
+
+impl Default for ObjStoreConfig {
+    fn default() -> Self {
+        ObjStoreConfig {
+            get_rps: DEFAULT_GET_RPS,
+            put_rps: DEFAULT_PUT_RPS,
+            request_rtt: SimNs::from_millis(20),
+            frontend_gbps: 25.0,
+            stream_bps: 35e6,
+        }
+    }
+}
+
+/// Data-plane + time-plane handle for the object store.
+pub struct ObjectStore {
+    objects: BTreeMap<String, Payload>,
+    get_rate: ResourceId,
+    put_rate: ResourceId,
+    frontend_in: ResourceId,
+    frontend_out: ResourceId,
+    rtt: SimNs,
+    stream_bps: f64,
+    pub stats: ObjStats,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ObjStats {
+    pub gets: u64,
+    pub puts: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+impl ObjectStore {
+    pub fn new(engine: &mut Engine, cfg: &ObjStoreConfig) -> ObjectStore {
+        let bps = cfg.frontend_gbps * 1e9 / 8.0;
+        ObjectStore {
+            objects: BTreeMap::new(),
+            get_rate: engine.add_resource("s3.get_rate", cfg.get_rps),
+            put_rate: engine.add_resource("s3.put_rate", cfg.put_rps),
+            frontend_in: engine.add_resource("s3.frontend.in", bps),
+            frontend_out: engine.add_resource("s3.frontend.out", bps),
+            rtt: cfg.request_rtt,
+            stream_bps: cfg.stream_bps,
+            stats: ObjStats::default(),
+        }
+    }
+
+    // ---- data plane -------------------------------------------------
+
+    pub fn put(&mut self, key: &str, value: Payload) {
+        self.stats.puts += 1;
+        self.stats.bytes_in += value.len();
+        self.objects.insert(key.to_string(), value);
+    }
+
+    pub fn get(&mut self, key: &str) -> Option<Payload> {
+        let v = self.objects.get(key).cloned();
+        if let Some(p) = &v {
+            self.stats.gets += 1;
+            self.stats.bytes_out += p.len();
+        }
+        v
+    }
+
+    pub fn delete(&mut self, key: &str) -> bool {
+        self.objects.remove(key).is_some()
+    }
+
+    pub fn list(&self, prefix: &str) -> Vec<String> {
+        self.objects
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.objects.values().map(|p| p.len()).sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.objects.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.objects.is_empty()
+    }
+
+    // ---- time plane -------------------------------------------------
+
+    /// Stages for one GET of `bytes` flowing down to `node`. Each
+    /// request gets a private stream resource capping its rate at
+    /// `stream_bps` on top of the shared WAN/frontend fair shares.
+    pub fn get_stages(&self, engine: &mut Engine, topo: &Topology,
+                      node: NodeId, bytes: u64, tag: u32) -> Vec<Stage> {
+        let stream = engine.add_resource("s3.stream", self.stream_bps);
+        let mut path = vec![stream, self.frontend_out];
+        path.extend(topo.wan_get_path(node));
+        vec![
+            Stage::Delay(self.rtt),
+            // One token through the GET rate limiter (queues under load).
+            Stage::Flow { bytes: 1.0, path: vec![self.get_rate], tag },
+            Stage::Flow { bytes: bytes as f64, path, tag },
+        ]
+    }
+
+    /// Stages for one PUT of `bytes` flowing up from `node`.
+    pub fn put_stages(&self, engine: &mut Engine, topo: &Topology,
+                      node: NodeId, bytes: u64, tag: u32) -> Vec<Stage> {
+        let stream = engine.add_resource("s3.stream", self.stream_bps);
+        let mut path = vec![stream, self.frontend_in];
+        path.extend(topo.wan_put_path(node));
+        vec![
+            Stage::Delay(self.rtt),
+            Stage::Flow { bytes: 1.0, path: vec![self.put_rate], tag },
+            Stage::Flow { bytes: bytes as f64, path, tag },
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::TopologyBuilder;
+
+    fn setup() -> (Engine, Topology, ObjectStore) {
+        let mut e = Engine::new();
+        let t = TopologyBuilder::default().build(&mut e);
+        let s = ObjectStore::new(&mut e, &ObjStoreConfig::default());
+        (e, t, s)
+    }
+
+    #[test]
+    fn data_plane_roundtrip() {
+        let (_, _, mut s) = setup();
+        s.put("a/1", Payload::real(vec![1, 2, 3]));
+        s.put("a/2", Payload::synthetic(10));
+        s.put("b/1", Payload::real(vec![9]));
+        assert_eq!(s.get("a/1").unwrap().len(), 3);
+        assert_eq!(s.list("a/").len(), 2);
+        assert_eq!(s.total_bytes(), 14);
+        assert!(s.delete("b/1"));
+        assert!(!s.delete("b/1"));
+        assert_eq!(s.stats.gets, 1);
+        assert_eq!(s.stats.puts, 3);
+    }
+
+    #[test]
+    fn single_get_is_stream_capped() {
+        let (mut e, t, s) = setup();
+        // One 350 MB GET: stream cap 35 MB/s dominates the shared WAN
+        // → ≈ 10 s + 20 ms RTT.
+        let st = s.get_stages(&mut e, &t, NodeId(0), 350_000_000, 0);
+        e.spawn("get", st);
+        let end = e.run().unwrap().as_secs_f64();
+        assert!((end - 10.02).abs() < 0.05, "{end}");
+    }
+
+    #[test]
+    fn parallel_gets_fill_the_wan() {
+        let (mut e, t, s) = setup();
+        // 8 × 500 MB in parallel: each stream capped at 35 MB/s
+        // (aggregate 280 MB/s < WAN) -> ~14.3 s, far better than the
+        // ~114 s eight serial transfers would take.
+        for i in 0..8u32 {
+            let st = s.get_stages(&mut e, &t, NodeId(0), 500_000_000, i);
+            e.spawn(&format!("g{i}"), st);
+        }
+        let end = e.run().unwrap().as_secs_f64();
+        assert!(end > 13.0 && end < 16.0, "{end}");
+    }
+
+    #[test]
+    fn request_rate_throttles_small_ops() {
+        let (mut e, t, s) = setup();
+        // 11 000 tiny GETs at 5 500/s ≈ 2 s even though bytes ≈ 0.
+        for i in 0..11_000u32 {
+            let st = s.get_stages(&mut e, &t, NodeId(0), 1, i);
+            e.spawn(&format!("g{i}"), st);
+        }
+        let end = e.run().unwrap().as_secs_f64();
+        assert!(end > 1.8 && end < 2.5, "{end}");
+    }
+
+    #[test]
+    fn puts_and_gets_use_separate_limiters() {
+        let (mut e, t, s) = setup();
+        for i in 0..3_500u32 {
+            let stp = s.put_stages(&mut e, &t, NodeId(0), 1, i);
+            e.spawn(&format!("p{i}"), stp);
+            let stg = s.get_stages(&mut e, &t, NodeId(0), 1, i);
+            e.spawn(&format!("g{i}"), stg);
+        }
+        // If they shared one limiter this would take ≈ 7000/4500 s more.
+        let end = e.run().unwrap().as_secs_f64();
+        assert!(end < 1.6, "{end}");
+    }
+}

@@ -1,0 +1,300 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text) once at startup,
+//! compiles them on the CPU PJRT client, and executes combine batches on
+//! the request path. Python is never involved at runtime — this module
+//! plus `artifacts/` is the entire compute stack (DESIGN.md §3).
+//!
+//! Falls back to `oracle` when artifacts are absent so the library works
+//! pre-`make artifacts`; integration tests assert PJRT-vs-oracle
+//! equality whenever the artifacts exist.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use super::manifest::Manifest;
+use super::oracle::{self, CombineScheme};
+
+/// Execution statistics for §Perf.
+#[derive(Clone, Debug, Default)]
+pub struct RtStats {
+    pub batches: u64,
+    pub pjrt_ns: u64,
+    pub oracle_ns: u64,
+}
+
+enum Exec {
+    Pjrt { exe: xla::PjRtLoadedExecutable },
+    Oracle,
+}
+
+/// The runtime engine. One compiled executable per artifact.
+pub struct RtEngine {
+    pub manifest: Manifest,
+    client: Option<xla::PjRtClient>,
+    execs: HashMap<String, Exec>,
+    pub stats: RtStats,
+}
+
+impl RtEngine {
+    /// Load + compile everything in `dir`; `None` dir → oracle mode.
+    pub fn load(dir: Option<&Path>) -> Result<RtEngine, String> {
+        let (manifest, use_pjrt) = match dir {
+            Some(d) if d.join("manifest.json").exists() => {
+                (Manifest::load(d)?, true)
+            }
+            _ => (default_manifest(), false),
+        };
+        let mut execs = HashMap::new();
+        let client = if use_pjrt {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| format!("pjrt client: {e}"))?;
+            for (name, meta) in &manifest.artifacts {
+                let proto = xla::HloModuleProto::from_text_file(
+                    meta.file.to_str().ok_or("bad path")?,
+                )
+                .map_err(|e| format!("load {name}: {e}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| format!("compile {name}: {e}"))?;
+                execs.insert(name.clone(), Exec::Pjrt { exe });
+            }
+            Some(client)
+        } else {
+            for name in ["wordcount_combine", "wordcount_combine_small",
+                         "grep_combine", "agg_combine"] {
+                execs.insert(name.to_string(), Exec::Oracle);
+            }
+            None
+        };
+        Ok(RtEngine { manifest, client, execs, stats: RtStats::default() })
+    }
+
+    pub fn is_pjrt(&self) -> bool {
+        self.client.is_some()
+    }
+
+    pub fn scheme(&self) -> CombineScheme {
+        CombineScheme {
+            parts: self.manifest.parts,
+            buckets: self.manifest.buckets,
+            part_shift: self.manifest.part_shift,
+        }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.manifest.tokens_per_batch
+    }
+
+    /// Resolve a logical artifact name, preferring the CPU-specialized
+    /// lowering when present (EXPERIMENTS.md §Perf: the interpret-mode
+    /// Pallas grid costs ~40 ms/batch on CPU-PJRT; the scatter-add
+    /// lowering of the same math runs in microseconds).
+    fn resolve(&self, name: &str) -> String {
+        let cpu = format!("{name}_cpu");
+        if self.execs.contains_key(&cpu) {
+            cpu
+        } else {
+            name.to_string()
+        }
+    }
+
+    fn run_pjrt(
+        &mut self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<Vec<f32>>, String> {
+        let name = &self.resolve(name);
+        let exe = match self.execs.get(name.as_str()) {
+            Some(Exec::Pjrt { exe }) => exe,
+            _ => return Err(format!("artifact {name} not loaded as PJRT")),
+        };
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| format!("execute {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("sync {name}: {e}"))?;
+        // Artifacts are lowered with return_tuple=True.
+        let parts = result
+            .to_tuple()
+            .map_err(|e| format!("tuple {name}: {e}"))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(
+                p.to_vec::<f32>()
+                    .map_err(|e| format!("to_vec {name}: {e}"))?,
+            );
+        }
+        self.stats.batches += 1;
+        self.stats.pjrt_ns += t0.elapsed().as_nanos() as u64;
+        Ok(out)
+    }
+
+    /// WordCount combine over exactly one batch (N tokens, padded).
+    /// Returns flattened (R*B) counts.
+    pub fn wordcount_batch(
+        &mut self,
+        hashes: &[i32],
+        mask: &[f32],
+    ) -> Result<Vec<f32>, String> {
+        let n = self.manifest.tokens_per_batch;
+        assert_eq!(hashes.len(), n, "batch must be padded to N={n}");
+        if self.is_pjrt() {
+            let h = xla::Literal::vec1(hashes);
+            let m = xla::Literal::vec1(mask);
+            Ok(self.run_pjrt("wordcount_combine", &[h, m])?.remove(0))
+        } else {
+            let t0 = Instant::now();
+            let out = oracle::wordcount_combine(&self.scheme(), hashes, mask);
+            self.stats.batches += 1;
+            self.stats.oracle_ns += t0.elapsed().as_nanos() as u64;
+            Ok(out)
+        }
+    }
+
+    /// Grep combine over one batch: (R*B counts, total matches).
+    pub fn grep_batch(
+        &mut self,
+        tokens: &[i32],
+        hashes: &[i32],
+        mask: &[f32],
+        pattern: &[i32],
+    ) -> Result<(Vec<f32>, f32), String> {
+        let n = self.manifest.tokens_per_batch;
+        let w = self.manifest.word_width;
+        assert_eq!(tokens.len(), n * w);
+        assert_eq!(pattern.len(), w);
+        if self.is_pjrt() {
+            let t = xla::Literal::vec1(tokens)
+                .reshape(&[n as i64, w as i64])
+                .map_err(|e| format!("reshape: {e}"))?;
+            let h = xla::Literal::vec1(hashes);
+            let m = xla::Literal::vec1(mask);
+            let p = xla::Literal::vec1(pattern);
+            let mut out = self.run_pjrt("grep_combine", &[t, h, m, p])?;
+            let total = out.pop().ok_or("missing total")?;
+            let counts = out.pop().ok_or("missing counts")?;
+            Ok((counts, total[0]))
+        } else {
+            let t0 = Instant::now();
+            let r = oracle::grep_combine(&self.scheme(), tokens, hashes,
+                                         mask, pattern, w);
+            self.stats.batches += 1;
+            self.stats.oracle_ns += t0.elapsed().as_nanos() as u64;
+            Ok(r)
+        }
+    }
+
+    /// Aggregation combine over one small batch: (sums, counts).
+    pub fn agg_batch(
+        &mut self,
+        seg_ids: &[i32],
+        values: &[f32],
+        mask: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>), String> {
+        let n = self.manifest.small_batch;
+        assert_eq!(seg_ids.len(), n);
+        if self.is_pjrt() {
+            let s = xla::Literal::vec1(seg_ids);
+            let v = xla::Literal::vec1(values);
+            let m = xla::Literal::vec1(mask);
+            let mut out = self.run_pjrt("agg_combine", &[s, v, m])?;
+            let counts = out.pop().ok_or("missing counts")?;
+            let sums = out.pop().ok_or("missing sums")?;
+            Ok((sums, counts))
+        } else {
+            let t0 = Instant::now();
+            let r = oracle::agg_combine(self.manifest.segments, seg_ids,
+                                        values, mask);
+            self.stats.batches += 1;
+            self.stats.oracle_ns += t0.elapsed().as_nanos() as u64;
+            Ok(r)
+        }
+    }
+
+    /// Mean measured latency per batch, ns (0 before first batch).
+    pub fn mean_batch_ns(&self) -> u64 {
+        if self.stats.batches == 0 {
+            0
+        } else {
+            (self.stats.pjrt_ns + self.stats.oracle_ns) / self.stats.batches
+        }
+    }
+}
+
+/// Manifest used in oracle mode (same constants as model.py).
+fn default_manifest() -> Manifest {
+    Manifest {
+        artifacts: std::collections::BTreeMap::new(),
+        tokens_per_batch: 8192,
+        small_batch: 1024,
+        word_width: 16,
+        buckets: 1024,
+        parts: 32,
+        segments: 1024,
+        part_shift: 10,
+    }
+}
+
+/// Locate `artifacts/` relative to the crate root, if built.
+pub fn default_artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_mode_works_without_artifacts() {
+        let mut rt = RtEngine::load(None).unwrap();
+        assert!(!rt.is_pjrt());
+        let n = rt.batch_size();
+        let hashes: Vec<i32> = (0..n as i32).collect();
+        let mask = vec![1f32; n];
+        let out = rt.wordcount_batch(&hashes, &mask).unwrap();
+        assert_eq!(out.len(), 32 * 1024);
+        assert_eq!(out.iter().sum::<f32>(), n as f32);
+        assert_eq!(rt.stats.batches, 1);
+    }
+
+    #[test]
+    fn grep_oracle_batch() {
+        let mut rt = RtEngine::load(None).unwrap();
+        let n = rt.batch_size();
+        let w = rt.manifest.word_width;
+        let mut tokens = vec![0i32; n * w];
+        for i in 0..n / 2 {
+            tokens[i * w] = 42; // half the tokens start with 42
+        }
+        let hashes = vec![1i32; n];
+        let mask = vec![1f32; n];
+        let mut pattern = vec![oracle::WILD_REST; w];
+        pattern[0] = 42;
+        let (_, total) = rt
+            .grep_batch(&tokens, &hashes, &mask, &pattern)
+            .unwrap();
+        assert_eq!(total, (n / 2) as f32);
+    }
+
+    #[test]
+    fn agg_oracle_batch() {
+        let mut rt = RtEngine::load(None).unwrap();
+        let n = rt.manifest.small_batch;
+        let ids: Vec<i32> = (0..n as i32).map(|i| i % 7).collect();
+        let vals = vec![2f32; n];
+        let mask = vec![1f32; n];
+        let (sums, cnts) = rt.agg_batch(&ids, &vals, &mask).unwrap();
+        assert_eq!(sums.iter().sum::<f32>(), 2.0 * n as f32);
+        assert_eq!(cnts.iter().sum::<f32>(), n as f32);
+    }
+
+    // PJRT-vs-oracle equivalence lives in rust/tests/pjrt_runtime.rs
+    // (needs `make artifacts` first).
+}

@@ -1,0 +1,189 @@
+//! Parse `artifacts/manifest.json` written by `python/compile/aot.py`.
+//! The manifest pins the shapes/constants the AOT artifacts were lowered
+//! with; the Rust side must build literals that match exactly.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub params: Vec<ParamSpec>,
+    pub outputs: Vec<Vec<usize>>,
+    pub n: usize,
+    pub sha256: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    pub tokens_per_batch: usize,
+    pub small_batch: usize,
+    pub word_width: usize,
+    pub buckets: usize,
+    pub parts: usize,
+    pub segments: usize,
+    pub part_shift: u32,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| format!("read manifest: {e}"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, String> {
+        let j = Json::parse(text)?;
+        let consts = j
+            .get("constants")
+            .ok_or("manifest missing constants")?;
+        let c = |k: &str| -> Result<usize, String> {
+            consts
+                .get(k)
+                .and_then(|v| v.as_u64())
+                .map(|v| v as usize)
+                .ok_or_else(|| format!("manifest missing constant {k}"))
+        };
+        let mut artifacts = BTreeMap::new();
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or("manifest missing artifacts")?;
+        for (name, meta) in arts {
+            let file = meta
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| format!("artifact {name} missing file"))?;
+            let params = meta
+                .get("params")
+                .and_then(|p| p.as_arr())
+                .ok_or_else(|| format!("artifact {name} missing params"))?
+                .iter()
+                .map(|p| {
+                    let shape = p
+                        .get("shape")
+                        .and_then(|s| s.as_arr())
+                        .map(|a| {
+                            a.iter()
+                                .filter_map(|v| v.as_u64())
+                                .map(|v| v as usize)
+                                .collect()
+                        })
+                        .unwrap_or_default();
+                    let dtype = p
+                        .get("dtype")
+                        .and_then(|d| d.as_str())
+                        .unwrap_or("?")
+                        .to_string();
+                    ParamSpec { shape, dtype }
+                })
+                .collect();
+            let outputs = meta
+                .get("outputs")
+                .and_then(|o| o.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .map(|o| {
+                            o.as_arr()
+                                .map(|d| {
+                                    d.iter()
+                                        .filter_map(|v| v.as_u64())
+                                        .map(|v| v as usize)
+                                        .collect()
+                                })
+                                .unwrap_or_default()
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    params,
+                    outputs,
+                    n: meta.get("n").and_then(|v| v.as_u64()).unwrap_or(0)
+                        as usize,
+                    sha256: meta
+                        .get("sha256")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                },
+            );
+        }
+        Ok(Manifest {
+            artifacts,
+            tokens_per_batch: c("tokens_per_batch")?,
+            small_batch: c("small_batch")?,
+            word_width: c("word_width")?,
+            buckets: c("buckets")?,
+            parts: c("parts")?,
+            segments: c("segments")?,
+            part_shift: c("part_shift")? as u32,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text/return-tuple",
+      "constants": {"tokens_per_batch": 8192, "small_batch": 1024,
+                    "word_width": 16, "buckets": 1024, "parts": 32,
+                    "segments": 1024, "part_shift": 10},
+      "artifacts": {
+        "wordcount_combine": {
+          "file": "wordcount_combine.hlo.txt", "n": 8192,
+          "sha256": "ab", "outputs": [[32, 1024]],
+          "params": [{"shape": [8192], "dtype": "int32"},
+                     {"shape": [8192], "dtype": "float32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        assert_eq!(m.tokens_per_batch, 8192);
+        assert_eq!(m.parts, 32);
+        let a = &m.artifacts["wordcount_combine"];
+        assert_eq!(a.file, PathBuf::from("/art/wordcount_combine.hlo.txt"));
+        assert_eq!(a.params.len(), 2);
+        assert_eq!(a.params[0].shape, vec![8192]);
+        assert_eq!(a.params[0].dtype, "int32");
+        assert_eq!(a.outputs, vec![vec![32, 1024]]);
+    }
+
+    #[test]
+    fn missing_constant_errors() {
+        assert!(Manifest::parse(r#"{"constants": {}, "artifacts": {}}"#,
+                                Path::new("/")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // When `make artifacts` has run, validate the real file.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifacts.contains_key("wordcount_combine"));
+            assert!(m.artifacts.contains_key("grep_combine"));
+            assert!(m.artifacts.contains_key("agg_combine"));
+            assert_eq!(m.buckets, 1024);
+        }
+    }
+}

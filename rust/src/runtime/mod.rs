@@ -1,0 +1,11 @@
+//! Runtime layer: PJRT client wrapping the `xla` crate — loads
+//! `artifacts/*.hlo.txt` (AOT-lowered by python/compile/aot.py), compiles
+//! once, executes combine batches from the L3 hot path.
+
+pub mod engine;
+pub mod manifest;
+pub mod oracle;
+
+pub use engine::{default_artifacts_dir, RtEngine, RtStats};
+pub use manifest::{ArtifactMeta, Manifest};
+pub use oracle::CombineScheme;

@@ -1,0 +1,179 @@
+//! Pure-Rust reference of the AOT combine computations. Two roles:
+//! (1) the ground truth the integration tests hold the PJRT path to,
+//! and (2) the fallback compute path when `artifacts/` has not been
+//! built (keeps unit tests and examples runnable pre-`make artifacts`).
+//!
+//! Must mirror python/compile/model.py exactly (same bit-level
+//! partition/bucket scheme).
+
+/// Partition/bucket scheme shared with the kernels. B and R must match
+/// the manifest; the shift is log2(B).
+#[derive(Clone, Copy, Debug)]
+pub struct CombineScheme {
+    pub parts: usize,
+    pub buckets: usize,
+    pub part_shift: u32,
+}
+
+impl CombineScheme {
+    pub fn bucket(&self, hash: i32) -> usize {
+        (hash as usize) & (self.buckets - 1)
+    }
+
+    pub fn part(&self, hash: i32) -> usize {
+        ((hash as usize) >> self.part_shift) & (self.parts - 1)
+    }
+
+    pub fn flat(&self, hash: i32) -> usize {
+        self.part(hash) * self.buckets + self.bucket(hash)
+    }
+}
+
+/// wordcount_combine: masked counts per (part, bucket), flattened R*B.
+pub fn wordcount_combine(
+    scheme: &CombineScheme,
+    hashes: &[i32],
+    mask: &[f32],
+) -> Vec<f32> {
+    assert_eq!(hashes.len(), mask.len());
+    let mut out = vec![0f32; scheme.parts * scheme.buckets];
+    for (h, m) in hashes.iter().zip(mask) {
+        out[scheme.flat(*h)] += m;
+    }
+    out
+}
+
+/// grep pattern sentinels (mirror kernels/grep_match.py).
+pub const WILD_ONE: i32 = -1;
+pub const WILD_REST: i32 = -2;
+
+/// grep_match: 0/1 per padded token row.
+pub fn grep_match(tokens: &[i32], pattern: &[i32], width: usize) -> Vec<f32> {
+    assert_eq!(tokens.len() % width, 0);
+    let n = tokens.len() / width;
+    let mut out = vec![0f32; n];
+    for (i, row) in tokens.chunks(width).enumerate() {
+        let mut ok = true;
+        let mut rest = false;
+        for (t, p) in row.iter().zip(pattern) {
+            rest |= *p == WILD_REST;
+            if rest || *p == WILD_ONE || t == p {
+                continue;
+            }
+            ok = false;
+            break;
+        }
+        out[i] = if ok { 1.0 } else { 0.0 };
+    }
+    out
+}
+
+/// grep_combine: counts of matching tokens per (part, bucket) + total.
+pub fn grep_combine(
+    scheme: &CombineScheme,
+    tokens: &[i32],
+    hashes: &[i32],
+    mask: &[f32],
+    pattern: &[i32],
+    width: usize,
+) -> (Vec<f32>, f32) {
+    let m = grep_match(tokens, pattern, width);
+    let weights: Vec<f32> =
+        m.iter().zip(mask).map(|(a, b)| a * b).collect();
+    let counts = wordcount_combine(scheme, hashes, &weights);
+    let total = weights.iter().sum();
+    (counts, total)
+}
+
+/// agg_combine: masked (sums, counts) per segment.
+pub fn agg_combine(
+    segments: usize,
+    seg_ids: &[i32],
+    values: &[f32],
+    mask: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let mut sums = vec![0f32; segments];
+    let mut cnts = vec![0f32; segments];
+    for ((s, v), m) in seg_ids.iter().zip(values).zip(mask) {
+        let idx = *s as i64;
+        if idx >= 0 && (idx as usize) < segments {
+            sums[idx as usize] += v * m;
+            cnts[idx as usize] += m;
+        }
+    }
+    (sums, cnts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scheme() -> CombineScheme {
+        CombineScheme { parts: 32, buckets: 1024, part_shift: 10 }
+    }
+
+    #[test]
+    fn bit_scheme_matches_python() {
+        // bucket = h & 1023, part = (h >> 10) & 31 — spot values.
+        let s = scheme();
+        let h = 123456789i32;
+        assert_eq!(s.bucket(h), (123456789usize) & 1023);
+        assert_eq!(s.part(h), (123456789usize >> 10) & 31);
+        assert_eq!(s.flat(h), s.part(h) * 1024 + s.bucket(h));
+    }
+
+    #[test]
+    fn wordcount_mass_conserved() {
+        let s = scheme();
+        let hashes: Vec<i32> = (0..1000u32)
+            .map(|i| (i.wrapping_mul(2654435761) & 0x7fffffff) as i32)
+            .collect();
+        let mask = vec![1f32; 1000];
+        let out = wordcount_combine(&s, &hashes, &mask);
+        assert_eq!(out.iter().sum::<f32>(), 1000.0);
+    }
+
+    #[test]
+    fn masked_tokens_skipped() {
+        let s = scheme();
+        let out = wordcount_combine(&s, &[5, 5, 5], &[1.0, 0.0, 1.0]);
+        assert_eq!(out[s.flat(5)], 2.0);
+    }
+
+    #[test]
+    fn grep_wildcards() {
+        let pat = vec![7, WILD_ONE, 9, 0];
+        let toks = vec![
+            7, 8, 9, 0, // match
+            7, 8, 8, 0, // no
+            7, 1, 9, 0, // match
+        ];
+        assert_eq!(grep_match(&toks, &pat, 4), vec![1.0, 0.0, 1.0]);
+        let pat_rest = vec![7, WILD_REST, 0, 0];
+        assert_eq!(grep_match(&toks, &pat_rest, 4), vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn grep_combine_totals() {
+        let s = scheme();
+        let toks = vec![1, 0, 2, 0]; // two tokens, width 2
+        let pat = vec![1, 0];
+        let (counts, total) = grep_combine(&s, &toks, &[100, 200], &[1.0, 1.0],
+                                           &pat, 2);
+        assert_eq!(total, 1.0);
+        assert_eq!(counts[s.flat(100)], 1.0);
+        assert_eq!(counts[s.flat(200)], 0.0);
+    }
+
+    #[test]
+    fn agg_sums_and_counts() {
+        let (sums, cnts) = agg_combine(
+            4,
+            &[0, 1, 1, 3, 9],
+            &[1.0, 2.0, 3.0, 4.0, 100.0],
+            &[1.0, 1.0, 1.0, 1.0, 1.0],
+        );
+        assert_eq!(sums, vec![1.0, 5.0, 0.0, 4.0]); // id 9 out of range
+        assert_eq!(cnts, vec![1.0, 2.0, 0.0, 1.0]);
+    }
+}

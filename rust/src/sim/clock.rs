@@ -1,0 +1,113 @@
+//! Virtual time. All simulated durations are integer nanoseconds — the
+//! testbed's wall clock replaced by a deterministic axis.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point or span on the virtual time axis, in nanoseconds.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SimNs(pub u64);
+
+impl SimNs {
+    pub const ZERO: SimNs = SimNs(0);
+
+    pub fn from_secs_f64(s: f64) -> SimNs {
+        debug_assert!(s >= 0.0, "negative duration {s}");
+        SimNs((s * 1e9).round() as u64)
+    }
+
+    /// Round *up* to whole nanoseconds — used for flow completion times
+    /// so the event loop always makes progress (a sub-ns residue would
+    /// otherwise schedule a zero-length step forever).
+    pub fn from_secs_f64_ceil(s: f64) -> SimNs {
+        debug_assert!(s >= 0.0, "negative duration {s}");
+        SimNs((s * 1e9).ceil() as u64)
+    }
+    pub fn from_millis(ms: u64) -> SimNs {
+        SimNs(ms * 1_000_000)
+    }
+    pub fn from_micros(us: u64) -> SimNs {
+        SimNs(us * 1_000)
+    }
+    pub fn from_nanos(ns: u64) -> SimNs {
+        SimNs(ns)
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+    pub fn as_nanos(self) -> u64 {
+        self.0
+    }
+
+    pub fn saturating_sub(self, rhs: SimNs) -> SimNs {
+        SimNs(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl Add for SimNs {
+    type Output = SimNs;
+    fn add(self, rhs: SimNs) -> SimNs {
+        SimNs(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for SimNs {
+    fn add_assign(&mut self, rhs: SimNs) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for SimNs {
+    type Output = SimNs;
+    fn sub(self, rhs: SimNs) -> SimNs {
+        debug_assert!(self.0 >= rhs.0, "time went backwards");
+        SimNs(self.0 - rhs.0)
+    }
+}
+
+impl fmt::Display for SimNs {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = self.as_secs_f64();
+        if s >= 1.0 {
+            write!(f, "{s:.3}s")
+        } else if self.0 >= 1_000_000 {
+            write!(f, "{:.3}ms", self.0 as f64 / 1e6)
+        } else if self.0 >= 1_000 {
+            write!(f, "{:.3}µs", self.0 as f64 / 1e3)
+        } else {
+            write!(f, "{}ns", self.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        assert_eq!(SimNs::from_secs_f64(1.5).0, 1_500_000_000);
+        assert_eq!(SimNs::from_millis(3).0, 3_000_000);
+        assert_eq!(SimNs::from_micros(7).0, 7_000);
+        assert!((SimNs(2_500_000_000).as_secs_f64() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn arithmetic() {
+        assert_eq!(SimNs(5) + SimNs(7), SimNs(12));
+        assert_eq!(SimNs(7) - SimNs(5), SimNs(2));
+        assert_eq!(SimNs(5).saturating_sub(SimNs(7)), SimNs(0));
+        let mut t = SimNs(1);
+        t += SimNs(2);
+        assert_eq!(t, SimNs(3));
+    }
+
+    #[test]
+    fn display_units() {
+        assert_eq!(format!("{}", SimNs(500)), "500ns");
+        assert_eq!(format!("{}", SimNs(1_500)), "1.500µs");
+        assert_eq!(format!("{}", SimNs(2_000_000)), "2.000ms");
+        assert_eq!(format!("{}", SimNs(3_000_000_000)), "3.000s");
+    }
+}

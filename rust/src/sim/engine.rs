@@ -1,0 +1,465 @@
+//! Discrete-event engine: *procs* (simulated tasks) execute *stages*
+//! against shared resources — slot pools (containers), fair-shared
+//! bandwidth (flows), fixed latencies, and barriers (phase boundaries).
+//!
+//! The MapReduce driver compiles every map/reduce task into a proc; the
+//! engine then yields deterministic completion times. This replaces the
+//! authors' physical testbed as the time axis (DESIGN.md §2).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use super::clock::SimNs;
+use super::flow::{FlowId, FlowSim, ResourceId};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ProcId(pub usize);
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PoolId(pub usize);
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BarrierId(pub usize);
+
+/// One step in a proc's lifecycle.
+#[derive(Clone, Debug)]
+pub enum Stage {
+    /// Wait for (then hold) one slot from a pool — a container, a Lambda
+    /// concurrency token, a YARN vcore.
+    Acquire(PoolId),
+    /// Return a held slot.
+    Release(PoolId),
+    /// Fixed latency: cold start, per-request overhead, storage op latency.
+    Delay(SimNs),
+    /// Move `bytes` through `path` under max–min fair sharing.
+    Flow { bytes: f64, path: Vec<ResourceId>, tag: u32 },
+    /// Signal one arrival at a barrier.
+    Arrive(BarrierId),
+    /// Block until the barrier has received all its arrivals.
+    Await(BarrierId),
+    /// Abort this proc (quota exceeded, injected fault). The engine keeps
+    /// running; the failure is recorded on the proc.
+    Fail(String),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum ProcState {
+    Ready,
+    Blocked,
+    Finished,
+    Failed(String),
+}
+
+#[derive(Debug)]
+struct Proc {
+    stages: VecDeque<Stage>,
+    state: ProcState,
+    started: SimNs,
+    finished: SimNs,
+    label: String,
+}
+
+struct Pool {
+    capacity: usize,
+    in_use: usize,
+    waiters: VecDeque<ProcId>,
+}
+
+struct Barrier {
+    target: usize,
+    arrived: usize,
+    waiters: Vec<ProcId>,
+    opened_at: Option<SimNs>,
+}
+
+/// Completed-flow accounting entry (throughput reporting, Figure 6).
+#[derive(Clone, Debug)]
+pub struct FlowLog {
+    pub tag: u32,
+    pub bytes: f64,
+    pub start: SimNs,
+    pub end: SimNs,
+}
+
+pub struct Engine {
+    pub flows: FlowSim,
+    procs: Vec<Proc>,
+    pools: Vec<Pool>,
+    barriers: Vec<Barrier>,
+    ready: VecDeque<ProcId>,
+    timers: BinaryHeap<Reverse<(SimNs, u64, ProcId)>>,
+    timer_seq: u64,
+    flow_owner: Vec<(FlowId, ProcId, SimNs)>,
+    now: SimNs,
+    pub flow_log: Vec<FlowLog>,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Engine {
+    pub fn new() -> Self {
+        Engine {
+            flows: FlowSim::new(),
+            procs: Vec::new(),
+            pools: Vec::new(),
+            barriers: Vec::new(),
+            ready: VecDeque::new(),
+            timers: BinaryHeap::new(),
+            timer_seq: 0,
+            flow_owner: Vec::new(),
+            now: SimNs::ZERO,
+            flow_log: Vec::new(),
+        }
+    }
+
+    pub fn now(&self) -> SimNs {
+        self.now
+    }
+
+    pub fn add_resource(&mut self, name: &str, capacity: f64) -> ResourceId {
+        self.flows.add_resource(name, capacity)
+    }
+
+    pub fn add_pool(&mut self, capacity: usize) -> PoolId {
+        self.pools.push(Pool { capacity, in_use: 0, waiters: VecDeque::new() });
+        PoolId(self.pools.len() - 1)
+    }
+
+    pub fn add_barrier(&mut self, target: usize) -> BarrierId {
+        self.barriers.push(Barrier {
+            target,
+            arrived: 0,
+            waiters: Vec::new(),
+            opened_at: if target == 0 { Some(SimNs::ZERO) } else { None },
+        });
+        BarrierId(self.barriers.len() - 1)
+    }
+
+    pub fn spawn(&mut self, label: &str, stages: Vec<Stage>) -> ProcId {
+        let id = ProcId(self.procs.len());
+        self.procs.push(Proc {
+            stages: stages.into(),
+            state: ProcState::Ready,
+            started: self.now,
+            finished: SimNs::ZERO,
+            label: label.to_string(),
+        });
+        self.ready.push_back(id);
+        id
+    }
+
+    pub fn state(&self, id: ProcId) -> &ProcState {
+        &self.procs[id.0].state
+    }
+
+    pub fn finished_at(&self, id: ProcId) -> SimNs {
+        self.procs[id.0].finished
+    }
+
+    pub fn started_at(&self, id: ProcId) -> SimNs {
+        self.procs[id.0].started
+    }
+
+    pub fn label(&self, id: ProcId) -> &str {
+        &self.procs[id.0].label
+    }
+
+    pub fn barrier_opened_at(&self, id: BarrierId) -> Option<SimNs> {
+        self.barriers[id.0].opened_at
+    }
+
+    /// Ids of procs that ended in `Failed`.
+    pub fn failures(&self) -> Vec<(ProcId, String)> {
+        self.procs
+            .iter()
+            .enumerate()
+            .filter_map(|(i, p)| match &p.state {
+                ProcState::Failed(m) => Some((ProcId(i), m.clone())),
+                _ => None,
+            })
+            .collect()
+    }
+
+    fn wake(&mut self, id: ProcId) {
+        self.procs[id.0].state = ProcState::Ready;
+        self.ready.push_back(id);
+    }
+
+    /// Execute stages of `id` until it blocks or finishes.
+    fn step(&mut self, id: ProcId) {
+        loop {
+            let stage = match self.procs[id.0].stages.pop_front() {
+                Some(s) => s,
+                None => {
+                    self.procs[id.0].state = ProcState::Finished;
+                    self.procs[id.0].finished = self.now;
+                    return;
+                }
+            };
+            match stage {
+                Stage::Acquire(p) => {
+                    let pool = &mut self.pools[p.0];
+                    if pool.in_use < pool.capacity {
+                        pool.in_use += 1;
+                    } else {
+                        pool.waiters.push_back(id);
+                        // Re-queue the acquire so it retries on wake.
+                        self.procs[id.0].stages.push_front(Stage::Acquire(p));
+                        self.procs[id.0].state = ProcState::Blocked;
+                        return;
+                    }
+                }
+                Stage::Release(p) => {
+                    let pool = &mut self.pools[p.0];
+                    assert!(pool.in_use > 0, "release on empty pool");
+                    pool.in_use -= 1;
+                    if let Some(w) = pool.waiters.pop_front() {
+                        self.wake(w);
+                    }
+                }
+                Stage::Delay(d) => {
+                    self.timer_seq += 1;
+                    self.timers
+                        .push(Reverse((self.now + d, self.timer_seq, id)));
+                    self.procs[id.0].state = ProcState::Blocked;
+                    return;
+                }
+                Stage::Flow { bytes, path, tag } => {
+                    let fid = self.flows.start(bytes, path, tag);
+                    self.flow_owner.push((fid, id, self.now));
+                    self.procs[id.0].state = ProcState::Blocked;
+                    return;
+                }
+                Stage::Arrive(b) => {
+                    let bar = &mut self.barriers[b.0];
+                    bar.arrived += 1;
+                    if bar.arrived >= bar.target && bar.opened_at.is_none() {
+                        bar.opened_at = Some(self.now);
+                        let ws = std::mem::take(&mut bar.waiters);
+                        for w in ws {
+                            self.wake(w);
+                        }
+                    }
+                }
+                Stage::Await(b) => {
+                    let bar = &mut self.barriers[b.0];
+                    if bar.opened_at.is_none() {
+                        bar.waiters.push(id);
+                        self.procs[id.0].state = ProcState::Blocked;
+                        return;
+                    }
+                }
+                Stage::Fail(msg) => {
+                    self.procs[id.0].state = ProcState::Failed(msg);
+                    self.procs[id.0].finished = self.now;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Run until every proc is finished/failed. Errors on deadlock.
+    pub fn run(&mut self) -> Result<SimNs, String> {
+        loop {
+            while let Some(id) = self.ready.pop_front() {
+                if self.procs[id.0].state == ProcState::Ready {
+                    self.step(id);
+                }
+            }
+            let live = self
+                .procs
+                .iter()
+                .any(|p| matches!(p.state, ProcState::Ready | ProcState::Blocked));
+            if !live {
+                return Ok(self.now);
+            }
+
+            // Next event: earliest of timer pop and flow completion.
+            let t_timer = self.timers.peek().map(|Reverse((t, _, _))| *t);
+            // Ceil to whole ns: guarantees the step is non-zero so a
+            // sub-ns residue cannot spin the loop (flows overshoot by at
+            // most one ns of progress, which `advance` treats as done).
+            let t_flow = self
+                .flows
+                .time_to_next_completion()
+                .map(|dt| self.now + SimNs::from_secs_f64_ceil(dt));
+            let next = match (t_timer, t_flow) {
+                (Some(a), Some(b)) => a.min(b),
+                (Some(a), None) => a,
+                (None, Some(b)) => b,
+                (None, None) => {
+                    let stuck: Vec<&str> = self
+                        .procs
+                        .iter()
+                        .filter(|p| p.state == ProcState::Blocked)
+                        .map(|p| p.label.as_str())
+                        .collect();
+                    return Err(format!(
+                        "deadlock at {} — blocked procs: {stuck:?}",
+                        self.now
+                    ));
+                }
+            };
+
+            // Advance flows by the elapsed wall of virtual time.
+            let dt = (next - self.now).as_secs_f64();
+            let completed = self.flows.advance(dt);
+            self.now = next;
+
+            for rec in completed {
+                let pos = self
+                    .flow_owner
+                    .iter()
+                    .position(|(f, _, _)| *f == rec.id)
+                    .expect("flow without owner");
+                let (_, owner, started) = self.flow_owner.swap_remove(pos);
+                self.flow_log.push(FlowLog {
+                    tag: rec.tag,
+                    bytes: rec.bytes,
+                    start: started,
+                    end: self.now,
+                });
+                self.wake(owner);
+            }
+            // Fire due timers.
+            while let Some(Reverse((t, _, id))) = self.timers.peek().copied() {
+                if t > self.now {
+                    break;
+                }
+                self.timers.pop();
+                self.wake(id);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delays_sequence() {
+        let mut e = Engine::new();
+        let p = e.spawn("a", vec![
+            Stage::Delay(SimNs::from_millis(5)),
+            Stage::Delay(SimNs::from_millis(7)),
+        ]);
+        let end = e.run().unwrap();
+        assert_eq!(end, SimNs::from_millis(12));
+        assert_eq!(*e.state(p), ProcState::Finished);
+    }
+
+    #[test]
+    fn pool_serializes() {
+        // 3 procs, pool of 1, each holds for 10ms → 30ms total.
+        let mut e = Engine::new();
+        let pool = e.add_pool(1);
+        for i in 0..3 {
+            e.spawn(&format!("p{i}"), vec![
+                Stage::Acquire(pool),
+                Stage::Delay(SimNs::from_millis(10)),
+                Stage::Release(pool),
+            ]);
+        }
+        assert_eq!(e.run().unwrap(), SimNs::from_millis(30));
+    }
+
+    #[test]
+    fn pool_parallelizes() {
+        let mut e = Engine::new();
+        let pool = e.add_pool(3);
+        for i in 0..3 {
+            e.spawn(&format!("p{i}"), vec![
+                Stage::Acquire(pool),
+                Stage::Delay(SimNs::from_millis(10)),
+                Stage::Release(pool),
+            ]);
+        }
+        assert_eq!(e.run().unwrap(), SimNs::from_millis(10));
+    }
+
+    #[test]
+    fn flows_share_bandwidth() {
+        let mut e = Engine::new();
+        let link = e.add_resource("link", 100.0);
+        // Two 500-byte flows share a 100 B/s link → both end at 10s.
+        for i in 0..2 {
+            e.spawn(&format!("f{i}"), vec![Stage::Flow {
+                bytes: 500.0,
+                path: vec![link],
+                tag: i,
+            }]);
+        }
+        let end = e.run().unwrap();
+        assert!((end.as_secs_f64() - 10.0).abs() < 1e-6);
+        assert_eq!(e.flow_log.len(), 2);
+    }
+
+    #[test]
+    fn barrier_gates_reducers() {
+        let mut e = Engine::new();
+        let maps_done = e.add_barrier(2);
+        for i in 0..2 {
+            e.spawn(&format!("map{i}"), vec![
+                Stage::Delay(SimNs::from_millis(10 * (i + 1))),
+                Stage::Arrive(maps_done),
+            ]);
+        }
+        let red = e.spawn("reduce", vec![
+            Stage::Await(maps_done),
+            Stage::Delay(SimNs::from_millis(5)),
+        ]);
+        let end = e.run().unwrap();
+        // reduce starts at 20ms (slowest map), ends at 25ms.
+        assert_eq!(end, SimNs::from_millis(25));
+        assert_eq!(e.finished_at(red), SimNs::from_millis(25));
+        assert_eq!(
+            e.barrier_opened_at(maps_done),
+            Some(SimNs::from_millis(20))
+        );
+    }
+
+    #[test]
+    fn failure_recorded_others_continue() {
+        let mut e = Engine::new();
+        let f = e.spawn("bad", vec![Stage::Fail("quota".into())]);
+        let g = e.spawn("good", vec![Stage::Delay(SimNs::from_millis(1))]);
+        e.run().unwrap();
+        assert!(matches!(e.state(f), ProcState::Failed(m) if m == "quota"));
+        assert_eq!(*e.state(g), ProcState::Finished);
+        assert_eq!(e.failures().len(), 1);
+    }
+
+    #[test]
+    fn deadlock_detected() {
+        let mut e = Engine::new();
+        let never = e.add_barrier(1); // nobody arrives
+        e.spawn("stuck", vec![Stage::Await(never)]);
+        assert!(e.run().is_err());
+    }
+
+    #[test]
+    fn determinism() {
+        let build = || {
+            let mut e = Engine::new();
+            let link = e.add_resource("l", 50.0);
+            let pool = e.add_pool(2);
+            let bar = e.add_barrier(3);
+            for i in 0..3u32 {
+                e.spawn(&format!("t{i}"), vec![
+                    Stage::Acquire(pool),
+                    Stage::Flow { bytes: 100.0 * (i + 1) as f64, path: vec![link], tag: i },
+                    Stage::Release(pool),
+                    Stage::Arrive(bar),
+                ]);
+            }
+            e.spawn("j", vec![Stage::Await(bar)]);
+            e.run().unwrap()
+        };
+        assert_eq!(build(), build());
+    }
+}

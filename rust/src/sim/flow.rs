@@ -1,0 +1,287 @@
+//! Flow-level bandwidth simulation with max–min fair sharing.
+//!
+//! A *flow* moves `bytes` through a *path* of resources (device read
+//! channel → source NIC → destination NIC → device write channel, say).
+//! Each resource has a capacity in bytes/sec (or ops/sec for IOPS-class
+//! resources). Whenever the active-flow set changes, rates are
+//! recomputed by progressive filling: repeatedly find the most
+//! constrained resource, freeze the fair share of every unfrozen flow
+//! through it, remove its capacity, repeat. This is the classic fluid
+//! model used by flow-level datacenter simulators.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ResourceId(pub usize);
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FlowId(pub u64);
+
+#[derive(Clone, Debug)]
+pub struct Resource {
+    pub name: String,
+    pub capacity: f64, // bytes/sec (or ops/sec)
+}
+
+#[derive(Clone, Debug)]
+struct Flow {
+    remaining: f64,
+    path: Vec<ResourceId>,
+    rate: f64,
+    tag: u32,
+    total: f64,
+}
+
+/// Record of a finished flow, for throughput accounting.
+#[derive(Clone, Debug)]
+pub struct FlowRecord {
+    pub id: FlowId,
+    pub bytes: f64,
+    pub tag: u32,
+}
+
+#[derive(Default)]
+pub struct FlowSim {
+    resources: Vec<Resource>,
+    flows: HashMap<FlowId, Flow>,
+    next_id: u64,
+    dirty: bool,
+}
+
+const EPS: f64 = 1e-6;
+
+impl FlowSim {
+    pub fn new() -> Self {
+        FlowSim::default()
+    }
+
+    pub fn add_resource(&mut self, name: &str, capacity: f64) -> ResourceId {
+        assert!(capacity > 0.0, "resource {name} needs capacity > 0");
+        self.resources.push(Resource { name: name.to_string(), capacity });
+        ResourceId(self.resources.len() - 1)
+    }
+
+    pub fn resource(&self, id: ResourceId) -> &Resource {
+        &self.resources[id.0]
+    }
+
+    pub fn active_flows(&self) -> usize {
+        self.flows.len()
+    }
+
+    /// Start a flow of `bytes` through `path`. Zero-byte flows are legal
+    /// and complete at the next event boundary.
+    pub fn start(&mut self, bytes: f64, path: Vec<ResourceId>, tag: u32) -> FlowId {
+        assert!(!path.is_empty(), "flow needs a non-empty path");
+        for r in &path {
+            assert!(r.0 < self.resources.len(), "unknown resource {r:?}");
+        }
+        let id = FlowId(self.next_id);
+        self.next_id += 1;
+        self.flows.insert(
+            id,
+            Flow { remaining: bytes.max(0.0), path, rate: 0.0, tag, total: bytes.max(0.0) },
+        );
+        self.dirty = true;
+        id
+    }
+
+    /// Recompute max–min fair rates (progressive filling).
+    fn recompute(&mut self) {
+        if !self.dirty {
+            return;
+        }
+        self.dirty = false;
+        let mut residual: Vec<f64> =
+            self.resources.iter().map(|r| r.capacity).collect();
+        let mut unfrozen: Vec<FlowId> = self.flows.keys().copied().collect();
+        unfrozen.sort_unstable(); // determinism
+        for f in self.flows.values_mut() {
+            f.rate = 0.0;
+        }
+        while !unfrozen.is_empty() {
+            // Count unfrozen flows per resource.
+            let mut counts = vec![0usize; self.resources.len()];
+            for id in &unfrozen {
+                for r in &self.flows[id].path {
+                    counts[r.0] += 1;
+                }
+            }
+            // Bottleneck = resource minimizing residual / count.
+            let mut best: Option<(f64, usize)> = None;
+            for (i, &c) in counts.iter().enumerate() {
+                if c == 0 {
+                    continue;
+                }
+                let share = residual[i] / c as f64;
+                if best.map_or(true, |(s, _)| share < s - EPS) {
+                    best = Some((share, i));
+                }
+            }
+            let Some((share, bottleneck)) = best else { break };
+            // Freeze every unfrozen flow through the bottleneck at `share`.
+            let mut still = Vec::with_capacity(unfrozen.len());
+            for id in unfrozen {
+                let through = self.flows[&id].path.contains(&ResourceId(bottleneck));
+                if through {
+                    let f = self.flows.get_mut(&id).unwrap();
+                    f.rate = share;
+                    for r in f.path.clone() {
+                        residual[r.0] = (residual[r.0] - share).max(0.0);
+                    }
+                } else {
+                    still.push(id);
+                }
+            }
+            residual[bottleneck] = 0.0;
+            unfrozen = still;
+        }
+    }
+
+    /// Seconds until the next flow completes, if any flow is active.
+    pub fn time_to_next_completion(&mut self) -> Option<f64> {
+        if self.flows.is_empty() {
+            return None;
+        }
+        self.recompute();
+        let mut t = f64::INFINITY;
+        for f in self.flows.values() {
+            if f.remaining <= EPS {
+                return Some(0.0);
+            }
+            if f.rate > 0.0 {
+                t = t.min(f.remaining / f.rate);
+            }
+        }
+        if t.is_finite() {
+            Some(t)
+        } else {
+            // All active flows fully starved — should be impossible while
+            // every resource has positive capacity.
+            None
+        }
+    }
+
+    /// Advance all flows by `dt` seconds; return flows that completed.
+    pub fn advance(&mut self, dt: f64) -> Vec<FlowRecord> {
+        self.recompute();
+        let mut done = Vec::new();
+        for (id, f) in self.flows.iter_mut() {
+            f.remaining -= f.rate * dt;
+            // Complete when less than one ns of service remains — the
+            // engine's event clock cannot resolve anything finer.
+            if f.remaining <= EPS + f.rate * 1e-9 {
+                done.push(FlowRecord { id: *id, bytes: f.total, tag: f.tag });
+            }
+        }
+        done.sort_by_key(|r| r.id); // determinism
+        for r in &done {
+            self.flows.remove(&r.id);
+        }
+        if !done.is_empty() {
+            self.dirty = true;
+        }
+        done
+    }
+
+    /// Current rate of a flow (test hook).
+    pub fn rate_of(&mut self, id: FlowId) -> Option<f64> {
+        self.recompute();
+        self.flows.get(&id).map(|f| f.rate)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_flow_gets_full_capacity() {
+        let mut s = FlowSim::new();
+        let r = s.add_resource("link", 100.0);
+        let f = s.start(1000.0, vec![r], 0);
+        assert!((s.rate_of(f).unwrap() - 100.0).abs() < 1e-9);
+        let t = s.time_to_next_completion().unwrap();
+        assert!((t - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn equal_share_two_flows() {
+        let mut s = FlowSim::new();
+        let r = s.add_resource("link", 100.0);
+        let a = s.start(1000.0, vec![r], 0);
+        let b = s.start(1000.0, vec![r], 0);
+        assert!((s.rate_of(a).unwrap() - 50.0).abs() < 1e-9);
+        assert!((s.rate_of(b).unwrap() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_min_reallocates_leftover() {
+        // Flow A through narrow (10) + wide (100); flow B through wide only.
+        // A bottlenecked at 10; B gets the remaining 90.
+        let mut s = FlowSim::new();
+        let narrow = s.add_resource("narrow", 10.0);
+        let wide = s.add_resource("wide", 100.0);
+        let a = s.start(1e6, vec![narrow, wide], 0);
+        let b = s.start(1e6, vec![wide], 0);
+        assert!((s.rate_of(a).unwrap() - 10.0).abs() < 1e-6);
+        assert!((s.rate_of(b).unwrap() - 90.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn completion_frees_bandwidth() {
+        let mut s = FlowSim::new();
+        let r = s.add_resource("link", 100.0);
+        let _a = s.start(100.0, vec![r], 1); // 2s at 50
+        let b = s.start(1000.0, vec![r], 2);
+        let t1 = s.time_to_next_completion().unwrap(); // a finishes at 2s
+        assert!((t1 - 2.0).abs() < 1e-9);
+        let done = s.advance(t1);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].tag, 1);
+        // b now alone: rate 100, remaining 900 → 9s
+        assert!((s.rate_of(b).unwrap() - 100.0).abs() < 1e-9);
+        let t2 = s.time_to_next_completion().unwrap();
+        assert!((t2 - 9.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_byte_flow_completes_immediately() {
+        let mut s = FlowSim::new();
+        let r = s.add_resource("link", 100.0);
+        s.start(0.0, vec![r], 7);
+        let t = s.time_to_next_completion().unwrap();
+        assert_eq!(t, 0.0);
+        let done = s.advance(0.0);
+        assert_eq!(done.len(), 1);
+    }
+
+    #[test]
+    fn conservation_total_rate_le_capacity() {
+        let mut s = FlowSim::new();
+        let r1 = s.add_resource("a", 37.0);
+        let r2 = s.add_resource("b", 53.0);
+        let mut ids = Vec::new();
+        for i in 0..10 {
+            let path = match i % 3 {
+                0 => vec![r1],
+                1 => vec![r2],
+                _ => vec![r1, r2],
+            };
+            ids.push(s.start(1e9, path, 0));
+        }
+        let mut through_r1 = 0.0;
+        let mut through_r2 = 0.0;
+        for (i, id) in ids.iter().enumerate() {
+            let rate = s.rate_of(*id).unwrap();
+            if i % 3 == 0 || i % 3 == 2 {
+                through_r1 += rate;
+            }
+            if i % 3 == 1 || i % 3 == 2 {
+                through_r2 += rate;
+            }
+        }
+        assert!(through_r1 <= 37.0 + 1e-6, "r1 oversubscribed {through_r1}");
+        assert!(through_r2 <= 53.0 + 1e-6, "r2 oversubscribed {through_r2}");
+    }
+}

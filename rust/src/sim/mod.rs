@@ -1,0 +1,10 @@
+//! Deterministic discrete-event simulation: the virtual time axis that
+//! replaces the paper's physical testbed (see DESIGN.md §2).
+
+pub mod clock;
+pub mod engine;
+pub mod flow;
+
+pub use clock::SimNs;
+pub use engine::{BarrierId, Engine, FlowLog, PoolId, ProcId, ProcState, Stage};
+pub use flow::{FlowId, FlowSim, ResourceId};

@@ -1,0 +1,199 @@
+//! Storage media models, calibrated to the paper's **own Table 2**
+//! (FIO, 4 KiB blocks, 8 streams: IOPS / bandwidth / latency for PMEM in
+//! AppDirect mode vs. enterprise SSD). The substitution argument
+//! (DESIGN.md §2): every downstream result that depends on "PMEM is
+//! 10–100× faster than SSD" flows from the very numbers the authors
+//! measured on real Optane hardware.
+
+use crate::sim::SimNs;
+use crate::util::bytes::GIB;
+
+/// Access pattern classes as in Table 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Access {
+    Seq,
+    Rand,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dir {
+    Read,
+    Write,
+}
+
+/// Service parameters for one (access, dir) class.
+#[derive(Clone, Copy, Debug)]
+pub struct OpClass {
+    /// Sustained bandwidth, bytes/sec.
+    pub bandwidth: f64,
+    /// Per-request access latency.
+    pub latency: SimNs,
+}
+
+/// A storage medium: four op classes + a capacity.
+#[derive(Clone, Debug)]
+pub struct MediaSpec {
+    pub name: &'static str,
+    pub seq_read: OpClass,
+    pub seq_write: OpClass,
+    pub rand_read: OpClass,
+    pub rand_write: OpClass,
+    pub capacity: u64,
+}
+
+impl MediaSpec {
+    pub fn class(&self, access: Access, dir: Dir) -> OpClass {
+        match (access, dir) {
+            (Access::Seq, Dir::Read) => self.seq_read,
+            (Access::Seq, Dir::Write) => self.seq_write,
+            (Access::Rand, Dir::Read) => self.rand_read,
+            (Access::Rand, Dir::Write) => self.rand_write,
+        }
+    }
+
+    /// Implied IOPS at a given block size (Table 2 reports 4 KiB).
+    pub fn iops(&self, access: Access, dir: Dir, block: u64) -> f64 {
+        self.class(access, dir).bandwidth / block as f64
+    }
+
+    /// Intel Optane DC PMEM, AppDirect mode, DAX ext4, libpmem —
+    /// paper Table 2 PMEM rows.
+    pub fn pmem(capacity: u64) -> MediaSpec {
+        MediaSpec {
+            name: "pmem",
+            seq_read: OpClass {
+                bandwidth: 41.0 * GIB as f64,
+                latency: SimNs::from_nanos(600), // 0.6 µs
+            },
+            seq_write: OpClass {
+                bandwidth: 13.6 * GIB as f64,
+                latency: SimNs::from_nanos(1_900), // 1.9 µs
+            },
+            rand_read: OpClass {
+                bandwidth: 4.6 * GIB as f64,
+                latency: SimNs::from_nanos(600), // 0.6 µs
+            },
+            rand_write: OpClass {
+                bandwidth: 1.4 * GIB as f64,
+                latency: SimNs::from_nanos(2_300), // 2.3 µs
+            },
+            capacity,
+        }
+    }
+
+    /// Enterprise SATA/NVMe-class SSD with libaio — paper Table 2 SSD rows.
+    pub fn ssd(capacity: u64) -> MediaSpec {
+        MediaSpec {
+            name: "ssd",
+            seq_read: OpClass {
+                bandwidth: 0.4 * GIB as f64,
+                latency: SimNs::from_micros(4_700), // 4.7 ms
+            },
+            seq_write: OpClass {
+                bandwidth: 0.5 * GIB as f64,
+                latency: SimNs::from_micros(5_000), // 5.0 ms
+            },
+            rand_read: OpClass {
+                bandwidth: 0.3 * GIB as f64,
+                latency: SimNs::from_micros(800), // 0.8 ms
+            },
+            rand_write: OpClass {
+                bandwidth: 0.3 * GIB as f64,
+                latency: SimNs::from_micros(1_000), // 1.0 ms
+            },
+            capacity,
+        }
+    }
+
+    /// DRAM tier for the IGFS in-memory cache (not in Table 2; standard
+    /// DDR4 stream numbers, far above PMEM so the cache is never the
+    /// media bottleneck — matching the paper's "near-DRAM" framing).
+    pub fn dram(capacity: u64) -> MediaSpec {
+        MediaSpec {
+            name: "dram",
+            seq_read: OpClass {
+                bandwidth: 90.0 * GIB as f64,
+                latency: SimNs::from_nanos(100),
+            },
+            seq_write: OpClass {
+                bandwidth: 60.0 * GIB as f64,
+                latency: SimNs::from_nanos(100),
+            },
+            rand_read: OpClass {
+                bandwidth: 30.0 * GIB as f64,
+                latency: SimNs::from_nanos(100),
+            },
+            rand_write: OpClass {
+                bandwidth: 20.0 * GIB as f64,
+                latency: SimNs::from_nanos(100),
+            },
+            capacity,
+        }
+    }
+
+    /// Spinning disk (ablation baseline; not in the paper's table).
+    pub fn hdd(capacity: u64) -> MediaSpec {
+        MediaSpec {
+            name: "hdd",
+            seq_read: OpClass {
+                bandwidth: 0.18 * GIB as f64,
+                latency: SimNs::from_micros(8_500),
+            },
+            seq_write: OpClass {
+                bandwidth: 0.16 * GIB as f64,
+                latency: SimNs::from_micros(9_500),
+            },
+            rand_read: OpClass {
+                bandwidth: 0.002 * GIB as f64,
+                latency: SimNs::from_micros(12_000),
+            },
+            rand_write: OpClass {
+                bandwidth: 0.002 * GIB as f64,
+                latency: SimNs::from_micros(14_000),
+            },
+            capacity,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::KIB;
+
+    #[test]
+    fn table2_iops_reproduced() {
+        // Table 2 reports IOPS at 4 KiB blocks; bandwidth / 4 KiB must
+        // land near the published IOPS column.
+        let pmem = MediaSpec::pmem(GIB);
+        let iops = pmem.iops(Access::Seq, Dir::Read, 4 * KIB);
+        assert!((iops / 1000.0 - 10700.0).abs() / 10700.0 < 0.01, "{iops}");
+        let iops = pmem.iops(Access::Rand, Dir::Write, 4 * KIB);
+        assert!((iops / 1000.0 - 335.0).abs() / 335.0 < 0.10, "{iops}");
+
+        let ssd = MediaSpec::ssd(GIB);
+        let iops = ssd.iops(Access::Seq, Dir::Read, 4 * KIB);
+        assert!((iops / 1000.0 - 108.0).abs() / 108.0 < 0.05, "{iops}");
+    }
+
+    #[test]
+    fn pmem_dominates_ssd() {
+        let p = MediaSpec::pmem(GIB);
+        let s = MediaSpec::ssd(GIB);
+        for access in [Access::Seq, Access::Rand] {
+            for dir in [Dir::Read, Dir::Write] {
+                let pc = p.class(access, dir);
+                let sc = s.class(access, dir);
+                assert!(pc.bandwidth > 4.0 * sc.bandwidth);
+                assert!(pc.latency < sc.latency);
+            }
+        }
+    }
+
+    #[test]
+    fn class_lookup() {
+        let p = MediaSpec::pmem(GIB);
+        assert_eq!(p.class(Access::Seq, Dir::Write).latency,
+                   SimNs::from_nanos(1_900));
+    }
+}

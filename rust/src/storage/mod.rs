@@ -1,0 +1,12 @@
+//! Storage substrate: media models calibrated to the paper's Table 2,
+//! device instances wired into the DES, payload data plane, and the
+//! fio-style microbenchmark that regenerates Table 2.
+
+pub mod device;
+pub mod fio;
+pub mod media;
+pub mod payload;
+
+pub use device::Device;
+pub use media::{Access, Dir, MediaSpec, OpClass};
+pub use payload::Payload;

@@ -1,0 +1,113 @@
+//! The data plane's unit of storage: real bytes for small runs (so the
+//! whole stack moves actual data through actual code), or an exact byte
+//! *accounting* for multi-GB sweeps (same code path, no materialization).
+//! The two modes are cross-validated in tests (DESIGN.md §2).
+
+use std::sync::Arc;
+
+#[derive(Clone, Debug)]
+pub enum Payload {
+    Real(Arc<Vec<u8>>),
+    Synthetic { len: u64 },
+}
+
+impl Payload {
+    pub fn real(bytes: Vec<u8>) -> Payload {
+        Payload::Real(Arc::new(bytes))
+    }
+
+    pub fn synthetic(len: u64) -> Payload {
+        Payload::Synthetic { len }
+    }
+
+    pub fn len(&self) -> u64 {
+        match self {
+            Payload::Real(b) => b.len() as u64,
+            Payload::Synthetic { len } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_real(&self) -> bool {
+        matches!(self, Payload::Real(_))
+    }
+
+    /// Borrow the real bytes; None for synthetic payloads.
+    pub fn bytes(&self) -> Option<&[u8]> {
+        match self {
+            Payload::Real(b) => Some(b),
+            Payload::Synthetic { .. } => None,
+        }
+    }
+
+    /// Concatenate payloads; result is synthetic if any part is.
+    pub fn concat(parts: &[Payload]) -> Payload {
+        if parts.iter().all(|p| p.is_real()) {
+            let total: usize = parts.iter().map(|p| p.len() as usize).sum();
+            let mut out = Vec::with_capacity(total);
+            for p in parts {
+                out.extend_from_slice(p.bytes().unwrap());
+            }
+            Payload::real(out)
+        } else {
+            Payload::synthetic(parts.iter().map(|p| p.len()).sum())
+        }
+    }
+
+    /// Slice by byte range (clamped); synthetic slices stay synthetic.
+    pub fn slice(&self, start: u64, len: u64) -> Payload {
+        let end = (start + len).min(self.len());
+        let start = start.min(self.len());
+        match self {
+            Payload::Real(b) => {
+                Payload::real(b[start as usize..end as usize].to_vec())
+            }
+            Payload::Synthetic { .. } => Payload::synthetic(end - start),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_roundtrip() {
+        let p = Payload::real(vec![1, 2, 3, 4]);
+        assert_eq!(p.len(), 4);
+        assert_eq!(p.bytes(), Some(&[1u8, 2, 3, 4][..]));
+    }
+
+    #[test]
+    fn synthetic_accounting() {
+        let p = Payload::synthetic(1 << 40);
+        assert_eq!(p.len(), 1 << 40);
+        assert!(p.bytes().is_none());
+    }
+
+    #[test]
+    fn concat_mixed_degrades_to_synthetic() {
+        let c = Payload::concat(&[Payload::real(vec![1; 10]),
+                                  Payload::synthetic(5)]);
+        assert_eq!(c.len(), 15);
+        assert!(!c.is_real());
+    }
+
+    #[test]
+    fn concat_real_stays_real() {
+        let c = Payload::concat(&[Payload::real(vec![1, 2]),
+                                  Payload::real(vec![3])]);
+        assert_eq!(c.bytes(), Some(&[1u8, 2, 3][..]));
+    }
+
+    #[test]
+    fn slice_clamps() {
+        let p = Payload::real(vec![0, 1, 2, 3, 4]);
+        assert_eq!(p.slice(3, 10).bytes(), Some(&[3u8, 4][..]));
+        assert_eq!(p.slice(9, 1).len(), 0);
+        assert_eq!(Payload::synthetic(100).slice(90, 20).len(), 10);
+    }
+}

@@ -1,0 +1,136 @@
+//! In-repo micro/bench harness (criterion is unavailable offline).
+//!
+//! `Bench::run` performs warm-up, then timed iterations, reporting
+//! mean/p50/p99/min. Bench binaries (`benches/*.rs`, `harness = false`)
+//! use this plus `util::table` to print the paper's tables/figures.
+
+use std::time::Instant;
+
+use super::stats::Percentiles;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        if self.mean_ns <= 0.0 {
+            return 0.0;
+        }
+        items_per_iter / (self.mean_ns / 1e9)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} {:>10} iters  mean {:>12}  p50 {:>12}  p99 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+pub struct Bench {
+    pub warmup_iters: u64,
+    pub iters: u64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 3, iters: 10 }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup_iters: u64, iters: u64) -> Self {
+        Bench { warmup_iters, iters: iters.max(1) }
+    }
+
+    /// Time `f`, preventing dead-code elimination via the returned value.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut p = Percentiles::new();
+        let mut min = f64::INFINITY;
+        let mut total = 0.0;
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            let dt = t0.elapsed().as_nanos() as f64;
+            p.push(dt);
+            min = min.min(dt);
+            total += dt;
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_ns: total / self.iters as f64,
+            p50_ns: p.p50(),
+            p99_ns: p.p99(),
+            min_ns: min,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench::new(1, 5);
+        let r = b.run("spin", || {
+            let mut s = 0u64;
+            for i in 0..10_000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p99_ns >= r.p50_ns);
+        assert!(r.min_ns <= r.mean_ns);
+        assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5e3).ends_with("µs"));
+        assert!(fmt_ns(5e6).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e9,
+            p50_ns: 1e9,
+            p99_ns: 1e9,
+            min_ns: 1e9,
+        };
+        assert!((r.throughput(100.0) - 100.0).abs() < 1e-9);
+    }
+}

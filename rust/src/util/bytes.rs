@@ -1,0 +1,83 @@
+//! Byte-size formatting and parsing ("5GB", "512MiB", "1.2 GiB/s").
+
+pub const KIB: u64 = 1024;
+pub const MIB: u64 = 1024 * KIB;
+pub const GIB: u64 = 1024 * MIB;
+pub const KB: u64 = 1000;
+pub const MB: u64 = 1000 * KB;
+pub const GB: u64 = 1000 * MB;
+
+/// Human-readable binary size ("1.50 GiB").
+pub fn human(bytes: u64) -> String {
+    let b = bytes as f64;
+    if bytes >= GIB {
+        format!("{:.2} GiB", b / GIB as f64)
+    } else if bytes >= MIB {
+        format!("{:.2} MiB", b / MIB as f64)
+    } else if bytes >= KIB {
+        format!("{:.2} KiB", b / KIB as f64)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Gigabits-per-second from bytes over seconds (paper Figure 6 unit).
+pub fn gbps(bytes: u64, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        return 0.0;
+    }
+    (bytes as f64 * 8.0) / secs / 1e9
+}
+
+/// Parse "512", "4KB", "4KiB", "1.5GB", "2 GiB" (case-insensitive).
+pub fn parse_size(s: &str) -> Result<u64, String> {
+    let t = s.trim().to_ascii_lowercase().replace(' ', "");
+    let split = t
+        .find(|c: char| c.is_ascii_alphabetic())
+        .unwrap_or(t.len());
+    let (num, unit) = t.split_at(split);
+    let v: f64 = num
+        .parse()
+        .map_err(|_| format!("bad size number in {s:?}"))?;
+    let mult = match unit {
+        "" | "b" => 1,
+        "k" | "kb" => KB,
+        "kib" => KIB,
+        "m" | "mb" => MB,
+        "mib" => MIB,
+        "g" | "gb" => GB,
+        "gib" => GIB,
+        _ => return Err(format!("bad size unit in {s:?}")),
+    };
+    Ok((v * mult as f64).round() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_variants() {
+        assert_eq!(parse_size("512").unwrap(), 512);
+        assert_eq!(parse_size("4KB").unwrap(), 4000);
+        assert_eq!(parse_size("4KiB").unwrap(), 4096);
+        assert_eq!(parse_size("1.5GB").unwrap(), 1_500_000_000);
+        assert_eq!(parse_size("2 GiB").unwrap(), 2 * GIB);
+        assert!(parse_size("x5").is_err());
+        assert!(parse_size("5xx").is_err());
+    }
+
+    #[test]
+    fn human_sizes() {
+        assert_eq!(human(42), "42 B");
+        assert_eq!(human(2048), "2.00 KiB");
+        assert_eq!(human(3 * GIB / 2), "1.50 GiB");
+    }
+
+    #[test]
+    fn gbps_math() {
+        // 1.25 GB in 1s = 10 Gbps
+        assert!((gbps(1_250_000_000, 1.0) - 10.0).abs() < 1e-9);
+        assert_eq!(gbps(100, 0.0), 0.0);
+    }
+}

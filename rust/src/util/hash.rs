@@ -1,0 +1,80 @@
+//! Hashing — MUST stay in lock-step with the partition scheme baked into
+//! the AOT artifacts (python/compile/model.py):
+//!
+//! ```text
+//! h      = fnv1a32(word) & 0x7fff_ffff      (non-negative i32)
+//! bucket = h & (B - 1)                      (B = 1024)
+//! part   = (h >> 10) & (R - 1)              (R = 32)
+//! ```
+//!
+//! `runtime::oracle` and the integration tests cross-check Rust-side and
+//! kernel-side placement for every word.
+
+/// FNV-1a 32-bit.
+#[inline]
+pub fn fnv1a32(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// FNV-1a 64-bit (internal hash maps / rendezvous hashing).
+#[inline]
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// 64-bit finalizer (splitmix-style avalanche) for combining ids.
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The non-negative token hash fed to the combine kernels.
+#[inline]
+pub fn token_hash(word: &[u8]) -> i32 {
+    (fnv1a32(word) & 0x7fff_ffff) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv32_known_vectors() {
+        // Published FNV-1a test vectors.
+        assert_eq!(fnv1a32(b""), 0x811c9dc5);
+        assert_eq!(fnv1a32(b"a"), 0xe40c292c);
+        assert_eq!(fnv1a32(b"foobar"), 0xbf9cf968);
+    }
+
+    #[test]
+    fn fnv64_known_vectors() {
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+    }
+
+    #[test]
+    fn token_hash_non_negative() {
+        for w in [&b"the"[..], b"zipf", b"x", b"antidisestablishment"] {
+            assert!(token_hash(w) >= 0);
+        }
+    }
+
+    #[test]
+    fn mix64_changes_bits() {
+        assert_ne!(mix64(1), mix64(2));
+        // mix64 is a bijective finalizer with fixed point 0.
+        assert_ne!(mix64(1), 0);
+    }
+}

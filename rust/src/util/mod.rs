@@ -1,0 +1,13 @@
+//! Foundation utilities built in-repo (the offline crate set has no
+//! rand/serde/toml/proptest/criterion — see DESIGN.md §7).
+
+pub mod bench;
+pub mod bytes;
+pub mod hash;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod toml_mini;

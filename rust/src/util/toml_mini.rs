@@ -1,0 +1,212 @@
+//! Mini-TOML parser for the config system (no `toml` crate offline).
+//!
+//! Supported subset: `[section]`, `[section.sub]`, `key = value` with
+//! string / integer / float / bool / size-string values, `#` comments.
+//! Flat enough for cluster + experiment configs, strict enough to reject
+//! typos (unknown syntax is an error, not silently ignored).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: section path ("a.b") → key → value.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, String> {
+        let mut doc = Doc::default();
+        let mut section = String::new();
+        doc.sections.entry(String::new()).or_default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno, "unterminated section"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(err(lineno, "empty section name"));
+                }
+                section = name.to_string();
+                doc.sections.entry(section.clone()).or_default();
+            } else if let Some(eq) = line.find('=') {
+                let key = line[..eq].trim();
+                let val = line[eq + 1..].trim();
+                if key.is_empty() {
+                    return Err(err(lineno, "empty key"));
+                }
+                let v = parse_value(val)
+                    .map_err(|e| err(lineno, &e))?;
+                doc.sections
+                    .get_mut(&section)
+                    .unwrap()
+                    .insert(key.to_string(), v);
+            } else {
+                return Err(err(lineno, "expected `[section]` or `key = value`"));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    /// Byte size: accepts int (bytes) or size string ("4GiB").
+    pub fn size_or(&self, section: &str, key: &str, default: u64) -> u64 {
+        match self.get(section, key) {
+            Some(Value::Int(i)) => *i as u64,
+            Some(Value::Str(s)) => {
+                crate::util::bytes::parse_size(s).unwrap_or(default)
+            }
+            _ => default,
+        }
+    }
+}
+
+fn err(lineno: usize, msg: &str) -> String {
+    format!("line {}: {}", lineno + 1, msg)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.starts_with('"') {
+        let inner = s
+            .strip_prefix('"')
+            .and_then(|t| t.strip_suffix('"'))
+            .ok_or_else(|| format!("unterminated string {s:?}"))?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# cluster config
+name = "test"          # inline comment
+[cluster]
+nodes = 4
+pmem_per_node = "700GiB"
+replication = 3
+fast = true
+[cluster.nic]
+gbps = 10.0
+"#;
+
+    #[test]
+    fn parse_sample() {
+        let d = Doc::parse(SAMPLE).unwrap();
+        assert_eq!(d.str_or("", "name", "?"), "test");
+        assert_eq!(d.i64_or("cluster", "nodes", 0), 4);
+        assert_eq!(d.size_or("cluster", "pmem_per_node", 0), 700 * 1024 * 1024 * 1024);
+        assert!(d.bool_or("cluster", "fast", false));
+        assert_eq!(d.f64_or("cluster.nic", "gbps", 0.0), 10.0);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let d = Doc::parse("").unwrap();
+        assert_eq!(d.i64_or("x", "y", 7), 7);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Doc::parse("not a kv line").is_err());
+        assert!(Doc::parse("[unterminated").is_err());
+        assert!(Doc::parse("k = @bad").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string() {
+        let d = Doc::parse("k = \"a#b\"").unwrap();
+        assert_eq!(d.str_or("", "k", ""), "a#b");
+    }
+
+    #[test]
+    fn underscored_ints() {
+        let d = Doc::parse("n = 1_000_000").unwrap();
+        assert_eq!(d.i64_or("", "n", 0), 1_000_000);
+    }
+}

@@ -1,0 +1,250 @@
+//! Zipfian text corpus generator + its analytic expectations.
+//!
+//! Real mode emits actual text (space-separated words drawn from a
+//! fixed vocabulary with Zipf frequencies — the distribution that makes
+//! map-side combining effective). Synthetic mode reuses the *same*
+//! vocabulary and probabilities to compute exact expected byte counts,
+//! so real and synthetic job runs agree (cross-checked in tests).
+
+use crate::runtime::CombineScheme;
+use crate::util::hash::token_hash;
+use crate::util::rng::{Rng, Zipf};
+
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub vocab: Vec<Vec<u8>>,
+    pub hashes: Vec<i32>,
+    pub probs: Vec<f64>,
+    zipf: Zipf,
+    /// E[word length] under the rank distribution.
+    pub mean_word_len: f64,
+}
+
+/// Synthesize the rank-th vocabulary word: compact, letters only,
+/// shorter words for frequent ranks (like natural language).
+pub fn rank_word(rank: u64) -> Vec<u8> {
+    let len = 3 + (64 - (rank + 1).leading_zeros() as u64) / 2;
+    let mut w = Vec::with_capacity(len as usize);
+    let mut x = rank.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+    for _ in 0..len {
+        w.push(b'a' + (x % 26) as u8);
+        x /= 26;
+        if x == 0 {
+            x = rank + 7;
+        }
+    }
+    w
+}
+
+impl Corpus {
+    pub fn new(vocab_size: usize, s: f64) -> Corpus {
+        assert!(vocab_size > 1);
+        let vocab: Vec<Vec<u8>> =
+            (0..vocab_size as u64).map(rank_word).collect();
+        let hashes: Vec<i32> =
+            vocab.iter().map(|w| token_hash(w)).collect();
+        let mut probs: Vec<f64> = (0..vocab_size)
+            .map(|k| 1.0 / ((k + 1) as f64).powf(s))
+            .collect();
+        let z: f64 = probs.iter().sum();
+        for p in probs.iter_mut() {
+            *p /= z;
+        }
+        let mean_word_len = vocab
+            .iter()
+            .zip(&probs)
+            .map(|(w, p)| w.len() as f64 * p)
+            .sum();
+        Corpus {
+            vocab,
+            hashes,
+            probs,
+            zipf: Zipf::new(vocab_size as u64, s),
+            mean_word_len,
+        }
+    }
+
+    /// Expected bytes per token in the text ("word " incl. separator).
+    pub fn mean_token_bytes(&self) -> f64 {
+        self.mean_word_len + 1.0
+    }
+
+    /// Expected tokens in `bytes` of generated text.
+    pub fn expected_tokens(&self, bytes: u64) -> u64 {
+        (bytes as f64 / self.mean_token_bytes()).round() as u64
+    }
+
+    /// Generate exactly `bytes` of real text.
+    pub fn generate(&self, bytes: u64, rng: &mut Rng) -> Vec<u8> {
+        let mut out = Vec::with_capacity(bytes as usize);
+        while (out.len() as u64) < bytes {
+            let w = &self.vocab[self.zipf.sample(rng) as usize];
+            out.extend_from_slice(w);
+            out.push(b' ');
+        }
+        out.truncate(bytes as usize);
+        // Blank out any truncated tail word so every token is in-vocab.
+        if let Some(p) = out.iter().rposition(|b| *b == b' ') {
+            for b in &mut out[p + 1..] {
+                *b = b' ';
+            }
+        }
+        out
+    }
+
+    /// A grep prefix guaranteed to exist in this vocabulary: the first
+    /// `len` bytes of the rank-th word.
+    pub fn prefix_of_rank(&self, rank: usize, len: usize) -> Vec<u8> {
+        let w = &self.vocab[rank.min(self.vocab.len() - 1)];
+        w[..len.min(w.len())].to_vec()
+    }
+
+    /// Probability-weighted share of intermediate bytes per reducer
+    /// partition when emitting `<word,1>` records of
+    /// `len(word) + overhead` bytes (the no-combiner data path).
+    pub fn partition_record_fractions(
+        &self,
+        scheme: &CombineScheme,
+        overhead: u64,
+    ) -> Vec<f64> {
+        let mut frac = vec![0.0; scheme.parts];
+        let mut total = 0.0;
+        for ((w, h), p) in self.vocab.iter().zip(&self.hashes).zip(&self.probs)
+        {
+            let bytes = (w.len() as u64 + overhead) as f64 * p;
+            frac[scheme.part(*h)] += bytes;
+            total += bytes;
+        }
+        for f in frac.iter_mut() {
+            *f /= total;
+        }
+        frac
+    }
+
+    /// Expected `<word,1>` record bytes per token.
+    pub fn mean_record_bytes(&self, overhead: u64) -> f64 {
+        self.mean_word_len + overhead as f64
+    }
+
+    /// Distinct (part, bucket) cells the vocabulary occupies, per part —
+    /// the size of a combined partition once the whole vocab has been
+    /// seen (true for any input ≥ ~100 MiB at these vocab sizes).
+    pub fn occupied_buckets_per_part(&self, scheme: &CombineScheme)
+        -> Vec<u64>
+    {
+        let mut seen =
+            vec![false; scheme.parts * scheme.buckets];
+        let mut counts = vec![0u64; scheme.parts];
+        for h in &self.hashes {
+            let flat = scheme.flat(*h);
+            if !seen[flat] {
+                seen[flat] = true;
+                counts[scheme.part(*h)] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Distinct vocabulary words per partition (reduce output sizing).
+    pub fn vocab_per_part(&self, scheme: &CombineScheme) -> Vec<u64> {
+        let mut counts = vec![0u64; scheme.parts];
+        for h in &self.hashes {
+            counts[scheme.part(*h)] += 1;
+        }
+        counts
+    }
+
+    /// Expected output bytes per partition for exact wordcount
+    /// (`word<sep>count\n` ≈ len + `overhead`).
+    pub fn output_bytes_per_part(
+        &self,
+        scheme: &CombineScheme,
+        overhead: u64,
+    ) -> Vec<u64> {
+        let mut out = vec![0u64; scheme.parts];
+        for (w, h) in self.vocab.iter().zip(&self.hashes) {
+            out[scheme.part(*h)] += w.len() as u64 + overhead;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scheme() -> CombineScheme {
+        CombineScheme { parts: 32, buckets: 1024, part_shift: 10 }
+    }
+
+    #[test]
+    fn vocab_words_distinct() {
+        let c = Corpus::new(5000, 1.07);
+        let mut v = c.vocab.clone();
+        v.sort();
+        v.dedup();
+        assert_eq!(v.len(), 5000, "vocabulary collision");
+    }
+
+    #[test]
+    fn generates_exact_bytes_and_tokenizable() {
+        let c = Corpus::new(1000, 1.07);
+        let mut rng = Rng::new(42);
+        let text = c.generate(10_000, &mut rng);
+        assert_eq!(text.len(), 10_000);
+        assert_eq!(*text.last().unwrap(), b' ');
+        // Every word tokenized is in-vocab.
+        for w in text.split(|b| *b == b' ').filter(|w| !w.is_empty()) {
+            assert!(c.vocab.iter().any(|v| v == w),
+                    "unknown word {:?}", String::from_utf8_lossy(w));
+        }
+    }
+
+    #[test]
+    fn token_count_matches_expectation() {
+        let c = Corpus::new(2000, 1.07);
+        let mut rng = Rng::new(7);
+        let text = c.generate(200_000, &mut rng);
+        let actual = text
+            .split(|b| *b == b' ')
+            .filter(|w| !w.is_empty())
+            .count() as f64;
+        let expected = c.expected_tokens(200_000) as f64;
+        assert!((actual - expected).abs() / expected < 0.03,
+                "actual {actual} vs expected {expected}");
+    }
+
+    #[test]
+    fn zipf_head_dominates() {
+        let c = Corpus::new(1000, 1.07);
+        let mut rng = Rng::new(9);
+        let text = c.generate(100_000, &mut rng);
+        let top = &c.vocab[0];
+        let count = text
+            .split(|b| *b == b' ')
+            .filter(|w| w == top)
+            .count();
+        // p_0 ≈ 1/H ≈ 0.11 at s=1.07, n=1000 → thousands of hits.
+        assert!(count > 500, "head word count {count}");
+    }
+
+    #[test]
+    fn partition_fractions_sum_to_one() {
+        let c = Corpus::new(5000, 1.07);
+        let f = c.partition_record_fractions(&scheme(), 28);
+        let sum: f64 = f.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        assert!(f.iter().all(|x| *x > 0.0), "empty partition");
+    }
+
+    #[test]
+    fn occupied_buckets_bounded_by_vocab() {
+        let c = Corpus::new(5000, 1.07);
+        let occ = c.occupied_buckets_per_part(&scheme());
+        let total: u64 = occ.iter().sum();
+        assert!(total <= 5000);
+        assert!(total > 4000, "implausible collision rate: {total}");
+        let vp = c.vocab_per_part(&scheme());
+        assert_eq!(vp.iter().sum::<u64>(), 5000);
+    }
+}

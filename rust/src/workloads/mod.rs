@@ -1,0 +1,12 @@
+//! The paper's benchmark workloads: WordCount, Grep (Figures 4/5/6),
+//! and the Scan / Aggregation / Join queries (Table 1).
+
+pub mod corpus;
+pub mod grep;
+pub mod queries;
+pub mod wordcount;
+
+pub use corpus::Corpus;
+pub use grep::Grep;
+pub use queries::{AggregationQuery, JoinQuery, ScanQuery};
+pub use wordcount::WordCount;

@@ -1,0 +1,589 @@
+//! SQL-style MapReduce workloads from the paper's Table 1: Scan Query,
+//! Aggregation Query, Join Query (the AMPLab-benchmark-shaped trio).
+//!
+//! Rows are CSV-ish records `id,category,value,padding\n` generated from
+//! the same seeded RNG in real and synthetic modes, so byte accounting
+//! agrees across modes.
+
+use crate::mapreduce::{
+    CombinerMode, MapOutput, ReduceOutput, SystemConfig, Workload,
+};
+use crate::runtime::RtEngine;
+use crate::storage::Payload;
+use crate::util::rng::Rng;
+
+/// Exact generated row length: fixed-width fields keep real/synthetic
+/// byte accounting in lock-step (id:8, cat:4, val:6, pad:14 + commas +
+/// newline = 36).
+pub const ROW_LEN: f64 = 36.0;
+
+/// Generate ≈`bytes` of rows; `categories` bounds the GROUP BY key.
+pub fn gen_rows(bytes: u64, categories: u32, rng: &mut Rng) -> Vec<u8> {
+    let mut out = Vec::with_capacity(bytes as usize + 64);
+    let mut id = 0u64;
+    while (out.len() as u64) < bytes {
+        let cat = rng.below(categories.min(9999) as u64);
+        let val = rng.below(100_000);
+        let pad: String = (0..14)
+            .map(|i| (b'a' + ((i as u64 + id) % 26) as u8) as char)
+            .collect();
+        out.extend_from_slice(
+            format!("{id:08},{cat:04},{val:06},{pad}\n").as_bytes(),
+        );
+        id += 1;
+    }
+    out.truncate(bytes as usize);
+    // Keep the tail row-parseable.
+    if let Some(p) = out.iter().rposition(|b| *b == b'\n') {
+        out.truncate(p + 1);
+        let missing = bytes as usize - out.len();
+        out.extend(std::iter::repeat(b' ').take(missing));
+    }
+    out
+}
+
+fn parse_rows(text: &[u8]) -> impl Iterator<Item = (u64, u32, u32)> + '_ {
+    text.split(|b| *b == b'\n').filter_map(|line| {
+        let mut it = line.split(|b| *b == b',');
+        let id = std::str::from_utf8(it.next()?).ok()?.trim();
+        if id.is_empty() {
+            return None;
+        }
+        let id: u64 = id.parse().ok()?;
+        let cat: u32 = std::str::from_utf8(it.next()?).ok()?.parse().ok()?;
+        let val: u32 = std::str::from_utf8(it.next()?).ok()?.parse().ok()?;
+        Some((id, cat, val))
+    })
+}
+
+// ---------------------------------------------------------------------
+// Scan Query: SELECT id, value WHERE value < threshold.
+// ---------------------------------------------------------------------
+
+pub struct ScanQuery {
+    pub categories: u32,
+    /// Predicate selectivity (fraction of rows passing).
+    pub selectivity: f64,
+}
+
+impl ScanQuery {
+    pub fn new() -> ScanQuery {
+        ScanQuery { categories: 1024, selectivity: 0.9 }
+    }
+
+    fn threshold(&self) -> u32 {
+        (100_000.0 * self.selectivity) as u32
+    }
+}
+
+impl Default for ScanQuery {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Workload for ScanQuery {
+    fn name(&self) -> &str {
+        "scan_query"
+    }
+
+    fn generate_input(&self, bytes: u64, materialize: bool, rng: &mut Rng)
+        -> Payload
+    {
+        if materialize {
+            Payload::real(gen_rows(bytes, self.categories, rng))
+        } else {
+            Payload::synthetic(bytes)
+        }
+    }
+
+    fn map_split(
+        &self,
+        split: &Payload,
+        parts: usize,
+        cfg: &SystemConfig,
+        _rt: &mut RtEngine,
+        _rng: &mut Rng,
+    ) -> MapOutput {
+        let ov = cfg.ser.record_overhead();
+        match split.bytes() {
+            Some(text) => {
+                let mut parts_bytes: Vec<Vec<u8>> = vec![Vec::new(); parts];
+                let mut records = 0u64;
+                let thr = self.threshold();
+                for (id, _cat, val) in parse_rows(text) {
+                    records += 1;
+                    if val < thr {
+                        let j = (id % parts as u64) as usize;
+                        let rec = format!("{id:08},{val:06},padddddddddd"); // 27 B
+                        let buf = &mut parts_bytes[j];
+                        buf.extend_from_slice(rec.as_bytes());
+                        buf.extend(std::iter::repeat(b'x').take(ov as usize));
+                    }
+                }
+                MapOutput {
+                    partitions: parts_bytes
+                        .into_iter()
+                        .map(Payload::real)
+                        .collect(),
+                    records,
+                }
+            }
+            None => {
+                let rows = (split.len() as f64 / ROW_LEN) as u64;
+                let kept = (rows as f64 * self.selectivity) as u64;
+                let rec_bytes = 27.0 + ov as f64; // projected record = 27 B
+                let per_part =
+                    (kept as f64 * rec_bytes / parts as f64).round() as u64;
+                MapOutput {
+                    partitions: (0..parts)
+                        .map(|_| Payload::synthetic(per_part))
+                        .collect(),
+                    records: rows,
+                }
+            }
+        }
+    }
+
+    fn reduce_partition(
+        &self,
+        _part: usize,
+        _parts: usize,
+        inputs: &[Payload],
+        cfg: &SystemConfig,
+        _rt: &mut RtEngine,
+    ) -> ReduceOutput {
+        // Scan reducers strip the framing and emit the projection.
+        let in_bytes: u64 = inputs.iter().map(|p| p.len()).sum();
+        let ov = cfg.ser.record_overhead();
+        let rec = 27.0 + ov as f64;
+        let records = (in_bytes as f64 / rec) as u64;
+        let out_bytes = (records as f64 * 9.0) as u64; // "id\n" = 9 B
+        ReduceOutput { output: Payload::synthetic(out_bytes), records }
+    }
+
+    fn map_rate(&self) -> f64 {
+        45e6
+    }
+    fn reduce_rate(&self) -> f64 {
+        100e6
+    }
+}
+
+// ---------------------------------------------------------------------
+// Aggregation Query: SELECT cat, AVG(value) GROUP BY cat.
+// ---------------------------------------------------------------------
+
+pub struct AggregationQuery {
+    pub categories: u32,
+}
+
+impl AggregationQuery {
+    pub fn new(rt: &RtEngine) -> AggregationQuery {
+        AggregationQuery {
+            categories: rt.manifest.segments as u32,
+        }
+    }
+
+    /// Kernel path: segmented sums over one split (real data plane).
+    fn combine_rows(&self, text: &[u8], rt: &mut RtEngine)
+        -> (Vec<f32>, Vec<f32>, u64)
+    {
+        let n = rt.manifest.small_batch;
+        let mut sums = vec![0f32; rt.manifest.segments];
+        let mut cnts = vec![0f32; rt.manifest.segments];
+        let mut ids = Vec::with_capacity(n);
+        let mut vals = Vec::with_capacity(n);
+        let mut rows = 0u64;
+        let flush = |ids: &mut Vec<i32>,
+                         vals: &mut Vec<f32>,
+                         rt: &mut RtEngine,
+                         sums: &mut Vec<f32>,
+                         cnts: &mut Vec<f32>| {
+            if ids.is_empty() {
+                return;
+            }
+            let used = ids.len();
+            ids.resize(n, 0);
+            vals.resize(n, 0.0);
+            let mut mask = vec![0f32; n];
+            for m in mask.iter_mut().take(used) {
+                *m = 1.0;
+            }
+            let (s, c) = rt.agg_batch(ids, vals, &mask).expect("agg batch");
+            for ((acc, x), (ca, cx)) in
+                sums.iter_mut().zip(&s).zip(cnts.iter_mut().zip(&c))
+            {
+                *acc += x;
+                *ca += cx;
+            }
+            ids.clear();
+            vals.clear();
+        };
+        for (_, cat, val) in parse_rows(text) {
+            rows += 1;
+            ids.push(cat as i32);
+            vals.push(val as f32);
+            if ids.len() == n {
+                flush(&mut ids, &mut vals, rt, &mut sums, &mut cnts);
+            }
+        }
+        flush(&mut ids, &mut vals, rt, &mut sums, &mut cnts);
+        (sums, cnts, rows)
+    }
+}
+
+impl Workload for AggregationQuery {
+    fn name(&self) -> &str {
+        "aggregation_query"
+    }
+
+    fn generate_input(&self, bytes: u64, materialize: bool, rng: &mut Rng)
+        -> Payload
+    {
+        if materialize {
+            Payload::real(gen_rows(bytes, self.categories, rng))
+        } else {
+            Payload::synthetic(bytes)
+        }
+    }
+
+    fn map_split(
+        &self,
+        split: &Payload,
+        parts: usize,
+        cfg: &SystemConfig,
+        rt: &mut RtEngine,
+        _rng: &mut Rng,
+    ) -> MapOutput {
+        let ov = cfg.ser.record_overhead();
+        match (split.bytes(), cfg.combiner) {
+            (Some(text), CombinerMode::Kernel) => {
+                let (sums, cnts, rows) = self.combine_rows(text, rt);
+                // Partition segments round-robin; 12 B per live segment.
+                let mut parts_bytes: Vec<Vec<u8>> = vec![Vec::new(); parts];
+                for (seg, (s, c)) in sums.iter().zip(&cnts).enumerate() {
+                    if *c > 0.0 {
+                        let j = seg % parts;
+                        parts_bytes[j]
+                            .extend_from_slice(&(seg as u32).to_le_bytes());
+                        parts_bytes[j].extend_from_slice(&s.to_le_bytes());
+                        parts_bytes[j].extend_from_slice(&c.to_le_bytes());
+                    }
+                }
+                MapOutput {
+                    partitions: parts_bytes
+                        .into_iter()
+                        .map(Payload::real)
+                        .collect(),
+                    records: rows,
+                }
+            }
+            (Some(text), CombinerMode::None) => {
+                let mut parts_bytes: Vec<Vec<u8>> = vec![Vec::new(); parts];
+                let mut rows = 0u64;
+                for (id, cat, val) in parse_rows(text) {
+                    rows += 1;
+                    let j = (cat as usize) % parts;
+                    let rec = format!("{cat:04},{val:06},{id:08},pad456789"); // 30 B
+                    parts_bytes[j].extend_from_slice(rec.as_bytes());
+                    parts_bytes[j]
+                        .extend(std::iter::repeat(b'x').take(ov as usize));
+                }
+                MapOutput {
+                    partitions: parts_bytes
+                        .into_iter()
+                        .map(Payload::real)
+                        .collect(),
+                    records: rows,
+                }
+            }
+            (None, CombinerMode::Kernel) => {
+                let rows = (split.len() as f64 / ROW_LEN) as u64;
+                let live = self.categories.min(rows as u32) as u64;
+                let per_part = live / parts as u64 * 12;
+                MapOutput {
+                    partitions: (0..parts)
+                        .map(|_| Payload::synthetic(per_part))
+                        .collect(),
+                    records: rows,
+                }
+            }
+            (None, CombinerMode::None) => {
+                let rows = (split.len() as f64 / ROW_LEN) as u64;
+                // Corral re-keys the near-full row (30 B) + framing:
+                // intermediate *exceeds* input (Table 1: 17.4 from 10.5).
+                let rec = 30.0 + ov as f64;
+                let per_part =
+                    (rows as f64 * rec / parts as f64).round() as u64;
+                MapOutput {
+                    partitions: (0..parts)
+                        .map(|_| Payload::synthetic(per_part))
+                        .collect(),
+                    records: rows,
+                }
+            }
+        }
+    }
+
+    fn reduce_partition(
+        &self,
+        _part: usize,
+        _parts: usize,
+        inputs: &[Payload],
+        cfg: &SystemConfig,
+        _rt: &mut RtEngine,
+    ) -> ReduceOutput {
+        // AVG per category → one tiny record per category
+        // (Table 1: 0.01–0.03 GB outputs).
+        let live = match cfg.combiner {
+            CombinerMode::Kernel => {
+                let bytes: u64 = inputs.iter().map(|p| p.len()).sum();
+                bytes / 12
+            }
+            CombinerMode::None => self.categories as u64,
+        };
+        ReduceOutput {
+            output: Payload::synthetic(live * 12),
+            records: live,
+        }
+    }
+
+    fn map_rate(&self) -> f64 {
+        40e6
+    }
+    fn reduce_rate(&self) -> f64 {
+        80e6
+    }
+}
+
+// ---------------------------------------------------------------------
+// Join Query: R ⋈ S on key — both tables shuffled in full, tagged.
+// ---------------------------------------------------------------------
+
+pub struct JoinQuery {
+    pub categories: u32,
+    /// Output rows per input row (join hit expansion).
+    pub match_factor: f64,
+}
+
+impl JoinQuery {
+    pub fn new() -> JoinQuery {
+        JoinQuery { categories: 4096, match_factor: 0.8 }
+    }
+}
+
+impl Default for JoinQuery {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Workload for JoinQuery {
+    fn name(&self) -> &str {
+        "join_query"
+    }
+
+    fn generate_input(&self, bytes: u64, materialize: bool, rng: &mut Rng)
+        -> Payload
+    {
+        if materialize {
+            Payload::real(gen_rows(bytes, self.categories, rng))
+        } else {
+            Payload::synthetic(bytes)
+        }
+    }
+
+    fn map_split(
+        &self,
+        split: &Payload,
+        parts: usize,
+        cfg: &SystemConfig,
+        _rt: &mut RtEngine,
+        _rng: &mut Rng,
+    ) -> MapOutput {
+        // Joins shuffle *entire* tagged rows regardless of combiner —
+        // the paper's Table 1 shows the 4× blow-up (12.5 → 49.6 GB).
+        let ov = cfg.ser.record_overhead();
+        match split.bytes() {
+            Some(text) => {
+                let mut parts_bytes: Vec<Vec<u8>> = vec![Vec::new(); parts];
+                let mut rows = 0u64;
+                for (id, cat, val) in parse_rows(text) {
+                    rows += 1;
+                    let j = (cat as usize) % parts;
+                    // Tagged + re-keyed row, shipped for BOTH sides of
+                    // the self-join (R side and S side).
+                    for side in 0..2u8 {
+                        let rec =
+                            format!("{side}|{cat:04},{id:08},{val:06},\
+12345678901234567890"); // 43 B
+                        parts_bytes[j].extend_from_slice(rec.as_bytes());
+                        parts_bytes[j]
+                            .extend(std::iter::repeat(b'x').take(ov as usize));
+                    }
+                }
+                MapOutput {
+                    partitions: parts_bytes
+                        .into_iter()
+                        .map(Payload::real)
+                        .collect(),
+                    records: rows,
+                }
+            }
+            None => {
+                let rows = (split.len() as f64 / ROW_LEN) as u64;
+                let rec = 2.0 * (43.0 + ov as f64); // both sides
+                let per_part =
+                    (rows as f64 * rec / parts as f64).round() as u64;
+                MapOutput {
+                    partitions: (0..parts)
+                        .map(|_| Payload::synthetic(per_part))
+                        .collect(),
+                    records: rows,
+                }
+            }
+        }
+    }
+
+    fn reduce_partition(
+        &self,
+        _part: usize,
+        _parts: usize,
+        inputs: &[Payload],
+        cfg: &SystemConfig,
+        _rt: &mut RtEngine,
+    ) -> ReduceOutput {
+        let in_bytes: u64 = inputs.iter().map(|p| p.len()).sum();
+        let ov = cfg.ser.record_overhead();
+        let rec = 2.0 * (43.0 + ov as f64);
+        let rows = in_bytes as f64 / rec;
+        let out_rows = rows * self.match_factor;
+        // Joined row ≈ 36 B ("cat,idR,idS,valR,valS\n").
+        ReduceOutput {
+            output: Payload::synthetic((out_rows * 36.0) as u64),
+            records: out_rows as u64,
+        }
+    }
+
+    fn map_rate(&self) -> f64 {
+        30e6
+    }
+    fn reduce_rate(&self) -> f64 {
+        40e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::SystemConfig;
+
+    #[test]
+    fn rows_parse_back() {
+        let mut rng = Rng::new(1);
+        let rows = gen_rows(10_000, 100, &mut rng);
+        assert_eq!(rows.len(), 10_000);
+        let parsed: Vec<_> = parse_rows(&rows).collect();
+        assert!(parsed.len() > 150, "only {} rows", parsed.len());
+        for (_, cat, val) in &parsed {
+            assert!(*cat < 100);
+            assert!(*val < 100_000);
+        }
+    }
+
+    #[test]
+    fn scan_selectivity_filters() {
+        let mut rt = RtEngine::load(None).unwrap();
+        let mut rng = Rng::new(2);
+        let q = ScanQuery::new();
+        let text = gen_rows(100_000, q.categories, &mut rng);
+        let cfg = SystemConfig::corral_lambda();
+        let mo = q.map_split(&Payload::real(text), 8, &cfg, &mut rt,
+                             &mut rng);
+        // Intermediate ≈ selectivity × rows × record bytes.
+        let rows = mo.records as f64;
+        let expect = rows * 0.9 * (27.0 + 31.0);
+        let got = mo.total_bytes() as f64;
+        assert!((got - expect).abs() / expect < 0.15,
+                "got {got} expect {expect}");
+    }
+
+    #[test]
+    fn agg_kernel_vs_scalar_consistency() {
+        let mut rt = RtEngine::load(None).unwrap();
+        let mut rng = Rng::new(3);
+        let q = AggregationQuery::new(&rt);
+        let text = gen_rows(50_000, q.categories, &mut rng);
+        let (sums, cnts, rows) = q.combine_rows(&text, &mut rt);
+        // Scalar check.
+        let mut esum = vec![0f64; q.categories as usize];
+        let mut ecnt = vec![0u64; q.categories as usize];
+        let mut erows = 0u64;
+        for (_, cat, val) in parse_rows(&text) {
+            esum[cat as usize] += val as f64;
+            ecnt[cat as usize] += 1;
+            erows += 1;
+        }
+        assert_eq!(rows, erows);
+        for i in 0..q.categories as usize {
+            assert_eq!(cnts[i] as u64, ecnt[i], "cnt seg {i}");
+            let rel = (sums[i] as f64 - esum[i]).abs() / esum[i].max(1.0);
+            assert!(rel < 1e-3, "sum seg {i}: {} vs {}", sums[i], esum[i]);
+        }
+    }
+
+    #[test]
+    fn agg_combiner_crushes_intermediate() {
+        let mut rt = RtEngine::load(None).unwrap();
+        let mut rng = Rng::new(4);
+        let q = AggregationQuery::new(&rt);
+        let text = gen_rows(100_000, q.categories, &mut rng);
+        let k = q.map_split(&Payload::real(text.clone()), 8,
+                            &SystemConfig::marvel_igfs(), &mut rt, &mut rng);
+        let raw = q.map_split(&Payload::real(text), 8,
+                              &SystemConfig::corral_lambda(), &mut rt,
+                              &mut rng);
+        // Raw > input (Table 1 shape); kernel ≤ S × 12 B.
+        assert!(raw.total_bytes() > 90_000);
+        assert!(k.total_bytes() <= 1024 * 12);
+    }
+
+    #[test]
+    fn join_expands_intermediate() {
+        let mut rt = RtEngine::load(None).unwrap();
+        let mut rng = Rng::new(5);
+        let q = JoinQuery::new();
+        let text = gen_rows(100_000, q.categories, &mut rng);
+        let cfg = SystemConfig::corral_lambda();
+        let mo = q.map_split(&Payload::real(text), 8, &cfg, &mut rt,
+                             &mut rng);
+        let factor = mo.total_bytes() as f64 / 100_000.0;
+        // Table 1: join intermediate ≈ 4× input.
+        assert!(factor > 2.0 && factor < 6.0, "join factor {factor}");
+    }
+
+    #[test]
+    fn synthetic_matches_real_for_queries() {
+        let mut rt = RtEngine::load(None).unwrap();
+        let agg = AggregationQuery::new(&rt);
+        let cfg = SystemConfig::corral_lambda();
+        let bytes = 200_000u64;
+        let mut check = |wl: &dyn Workload| {
+            let mut rng = Rng::new(6);
+            let real_in = wl.generate_input(bytes, true, &mut rng);
+            let mut rng2 = Rng::new(6);
+            let real =
+                wl.map_split(&real_in, 8, &cfg, &mut rt, &mut rng2.fork(0));
+            let synth = wl.map_split(&Payload::synthetic(bytes), 8, &cfg,
+                                     &mut rt, &mut rng2);
+            let (r, s) =
+                (real.total_bytes() as f64, synth.total_bytes() as f64);
+            assert!((r - s).abs() / r < 0.15,
+                    "{}: real {r} synth {s}", wl.name());
+        };
+        check(&ScanQuery::new());
+        check(&agg);
+        check(&JoinQuery::new());
+    }
+}

@@ -1,0 +1,103 @@
+//! YARN analog: ResourceManager + NodeManagers + a locality-aware
+//! container scheduler. The paper uses YARN to "determine the
+//! appropriate number of Mappers/Reducers per job" (§3.3) and to place
+//! them where OpenWhisk invokers run (§3.5 steps 3–4, 8).
+
+pub mod scheduler;
+
+use crate::net::NodeId;
+
+pub use scheduler::{Allocation, LocalityLevel, Scheduler};
+
+/// Per-node capacity advertised by a NodeManager.
+#[derive(Clone, Debug)]
+pub struct NodeCapacity {
+    pub node: NodeId,
+    pub vcores: u32,
+    pub memory_mb: u64,
+}
+
+/// A container request from an application master.
+#[derive(Clone, Debug)]
+pub struct ContainerRequest {
+    pub vcores: u32,
+    pub memory_mb: u64,
+    /// Nodes holding this task's input blocks, best first.
+    pub locality: Vec<NodeId>,
+}
+
+/// ResourceManager: tracks cluster capacity, sizes jobs, and delegates
+/// placement to the scheduler.
+pub struct ResourceManager {
+    pub nodes: Vec<NodeCapacity>,
+    pub scheduler: Scheduler,
+}
+
+impl ResourceManager {
+    pub fn new(nodes: Vec<NodeCapacity>) -> ResourceManager {
+        ResourceManager { nodes, scheduler: Scheduler::new() }
+    }
+
+    pub fn total_vcores(&self) -> u32 {
+        self.nodes.iter().map(|n| n.vcores).sum()
+    }
+
+    pub fn total_memory_mb(&self) -> u64 {
+        self.nodes.iter().map(|n| n.memory_mb).sum()
+    }
+
+    /// The paper's YARN role: how many mappers/reducers a job gets.
+    /// Mappers = one per input split (Hadoop semantics); reducers one
+    /// per vcore (wordcount reduce is I/O-bound), capped by the
+    /// artifact partition count R.
+    pub fn size_job(&self, splits: usize, max_reducers: usize)
+        -> (usize, usize)
+    {
+        let mappers = splits.max(1);
+        let reducers =
+            (self.total_vcores() as usize).max(1).min(max_reducers);
+        (mappers, reducers)
+    }
+
+    /// Allocate containers for a wave of requests.
+    pub fn allocate(&mut self, requests: &[ContainerRequest])
+        -> Vec<Allocation>
+    {
+        self.scheduler.allocate(&self.nodes, requests)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rm(nodes: usize, vcores: u32) -> ResourceManager {
+        ResourceManager::new(
+            (0..nodes)
+                .map(|i| NodeCapacity {
+                    node: NodeId(i),
+                    vcores,
+                    memory_mb: 64 * 1024,
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn job_sizing_follows_splits_and_cores() {
+        let rm = rm(4, 16);
+        let (m, r) = rm.size_job(100, 32);
+        assert_eq!(m, 100);
+        assert_eq!(r, 32); // 64 vcores, capped at R=32
+        let (m, r) = rm.size_job(3, 8);
+        assert_eq!(m, 3);
+        assert_eq!(r, 8); // reducers independent of mapper count
+    }
+
+    #[test]
+    fn totals() {
+        let rm = rm(3, 8);
+        assert_eq!(rm.total_vcores(), 24);
+        assert_eq!(rm.total_memory_mb(), 3 * 64 * 1024);
+    }
+}

@@ -1,0 +1,188 @@
+//! Locality-aware container scheduler (capacity-scheduler shape, one
+//! queue): grant node-local placements first, then fall back to any
+//! node with headroom, tracking per-node commitments so waves never
+//! over-commit vcores or memory.
+
+use std::collections::HashMap;
+
+use crate::net::NodeId;
+
+use super::{ContainerRequest, NodeCapacity};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LocalityLevel {
+    NodeLocal,
+    OffNode,
+    /// Request queued: cluster had no headroom in this wave (the caller
+    /// schedules it in a later wave; the DES slot pools serialize
+    /// execution anyway).
+    Queued,
+}
+
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    pub request_idx: usize,
+    pub node: NodeId,
+    pub locality: LocalityLevel,
+}
+
+#[derive(Default)]
+pub struct Scheduler {
+    pub node_local: u64,
+    pub off_node: u64,
+    pub queued: u64,
+}
+
+impl Scheduler {
+    pub fn new() -> Scheduler {
+        Scheduler::default()
+    }
+
+    /// One allocation wave. Requests are served in order; each takes the
+    /// best available placement. Requests that fit nowhere are marked
+    /// `Queued` and assigned their preferred node (execution will wait
+    /// on that node's slot pool).
+    pub fn allocate(
+        &mut self,
+        nodes: &[NodeCapacity],
+        requests: &[ContainerRequest],
+    ) -> Vec<Allocation> {
+        let mut free: HashMap<NodeId, (u32, u64)> = nodes
+            .iter()
+            .map(|n| (n.node, (n.vcores, n.memory_mb)))
+            .collect();
+        let mut out = Vec::with_capacity(requests.len());
+        let node_ids: Vec<NodeId> = nodes.iter().map(|n| n.node).collect();
+        let mut rr = 0usize;
+        for (idx, req) in requests.iter().enumerate() {
+            let fits = |f: &(u32, u64)| {
+                f.0 >= req.vcores && f.1 >= req.memory_mb
+            };
+            // 1. node-local
+            let mut placed = None;
+            for pref in &req.locality {
+                if let Some(f) = free.get_mut(pref) {
+                    if fits(f) {
+                        f.0 -= req.vcores;
+                        f.1 -= req.memory_mb;
+                        placed = Some((*pref, LocalityLevel::NodeLocal));
+                        break;
+                    }
+                }
+            }
+            // 2. anywhere with headroom (round-robin start for balance)
+            if placed.is_none() {
+                for k in 0..node_ids.len() {
+                    let cand = node_ids[(rr + k) % node_ids.len()];
+                    let f = free.get_mut(&cand).unwrap();
+                    if fits(f) {
+                        f.0 -= req.vcores;
+                        f.1 -= req.memory_mb;
+                        placed = Some((cand, LocalityLevel::OffNode));
+                        rr = (rr + k + 1) % node_ids.len();
+                        break;
+                    }
+                }
+            }
+            // 3. queue on the preferred (or first) node
+            let (node, locality) = placed.unwrap_or_else(|| {
+                let node = req
+                    .locality
+                    .first()
+                    .copied()
+                    .unwrap_or(node_ids[idx % node_ids.len()]);
+                (node, LocalityLevel::Queued)
+            });
+            match locality {
+                LocalityLevel::NodeLocal => self.node_local += 1,
+                LocalityLevel::OffNode => self.off_node += 1,
+                LocalityLevel::Queued => self.queued += 1,
+            }
+            out.push(Allocation { request_idx: idx, node, locality });
+        }
+        out
+    }
+
+    /// Fraction of non-queued placements that were node-local.
+    pub fn locality_ratio(&self) -> f64 {
+        let placed = self.node_local + self.off_node;
+        if placed == 0 {
+            return 0.0;
+        }
+        self.node_local as f64 / placed as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nodes(n: usize, vcores: u32) -> Vec<NodeCapacity> {
+        (0..n)
+            .map(|i| NodeCapacity {
+                node: NodeId(i),
+                vcores,
+                memory_mb: 16 * 1024,
+            })
+            .collect()
+    }
+
+    fn req(locality: Vec<NodeId>) -> ContainerRequest {
+        ContainerRequest { vcores: 1, memory_mb: 1024, locality }
+    }
+
+    #[test]
+    fn local_preference_honored() {
+        let mut s = Scheduler::new();
+        let allocs = s.allocate(&nodes(3, 4), &[req(vec![NodeId(2)])]);
+        assert_eq!(allocs[0].node, NodeId(2));
+        assert_eq!(allocs[0].locality, LocalityLevel::NodeLocal);
+    }
+
+    #[test]
+    fn falls_off_node_when_preferred_full() {
+        let mut s = Scheduler::new();
+        let ns = nodes(2, 1);
+        let reqs = vec![req(vec![NodeId(0)]), req(vec![NodeId(0)])];
+        let allocs = s.allocate(&ns, &reqs);
+        assert_eq!(allocs[0].locality, LocalityLevel::NodeLocal);
+        assert_eq!(allocs[1].locality, LocalityLevel::OffNode);
+        assert_eq!(allocs[1].node, NodeId(1));
+    }
+
+    #[test]
+    fn queues_when_cluster_full() {
+        let mut s = Scheduler::new();
+        let ns = nodes(1, 1);
+        let reqs = vec![req(vec![NodeId(0)]), req(vec![NodeId(0)])];
+        let allocs = s.allocate(&ns, &reqs);
+        assert_eq!(allocs[1].locality, LocalityLevel::Queued);
+        assert_eq!(s.queued, 1);
+    }
+
+    #[test]
+    fn never_overcommits() {
+        let mut s = Scheduler::new();
+        let ns = nodes(3, 2);
+        let reqs: Vec<_> = (0..20).map(|_| req(vec![])).collect();
+        let allocs = s.allocate(&ns, &reqs);
+        let mut used: HashMap<NodeId, u32> = HashMap::new();
+        for a in &allocs {
+            if a.locality != LocalityLevel::Queued {
+                *used.entry(a.node).or_default() += 1;
+            }
+        }
+        for (_, u) in used {
+            assert!(u <= 2, "overcommitted: {u}");
+        }
+        assert_eq!(s.queued, 20 - 6);
+    }
+
+    #[test]
+    fn locality_ratio_math() {
+        let mut s = Scheduler::new();
+        s.node_local = 3;
+        s.off_node = 1;
+        assert!((s.locality_ratio() - 0.75).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,97 @@
+//! Real-vs-synthetic data plane cross-validation: the same job run just
+//! below and just above the materialization cap must report nearly
+//! identical byte accounting and virtual times (DESIGN.md §2).
+
+use marvel::coordinator::{ClusterSpec, Marvel};
+use marvel::mapreduce::{SystemConfig, Workload};
+use marvel::util::bytes::MIB;
+use marvel::workloads::{
+    AggregationQuery, Corpus, Grep, JoinQuery, ScanQuery, WordCount,
+};
+
+/// Run `wl` at the same size with materialization forced on/off by
+/// moving the cap, and compare accounting.
+fn cross_validate(wl: &dyn Workload, cfg_base: &SystemConfig, tol: f64) {
+    let bytes = 8 * MIB;
+    let run = |materialize: bool| {
+        let mut m = Marvel::new(ClusterSpec::default(), 77).unwrap();
+        let mut cfg = cfg_base.clone();
+        cfg.materialize_cap = if materialize { 16 * MIB } else { 0 };
+        let r = m.run(&cfg, wl, bytes);
+        assert!(r.ok(), "{}: {:?}", cfg.name, r.failed);
+        r
+    };
+    let real = run(true);
+    let synth = run(false);
+    let rel = |a: u64, b: u64| -> f64 {
+        if a == 0 && b == 0 {
+            return 0.0;
+        }
+        (a as f64 - b as f64).abs() / (a.max(b) as f64)
+    };
+    assert!(
+        rel(real.intermediate_bytes, synth.intermediate_bytes) < tol,
+        "{}: intermediate real {} vs synth {}",
+        wl.name(), real.intermediate_bytes, synth.intermediate_bytes
+    );
+    assert!(
+        rel(real.output_bytes, synth.output_bytes) < 0.5,
+        "{}: output real {} vs synth {}",
+        wl.name(), real.output_bytes, synth.output_bytes
+    );
+    let t_rel = (real.job_time.as_secs_f64() - synth.job_time.as_secs_f64())
+        .abs()
+        / real.job_time.as_secs_f64();
+    assert!(t_rel < tol,
+            "{}: time real {} vs synth {}", wl.name(), real.job_time,
+            synth.job_time);
+}
+
+#[test]
+fn wordcount_raw_modes_agree() {
+    let wc = {
+        let m = Marvel::new(ClusterSpec::default(), 1).unwrap();
+        WordCount::new(10_000, 1.07, &m.rt)
+    };
+    cross_validate(&wc, &SystemConfig::corral_lambda(), 0.10);
+}
+
+#[test]
+fn wordcount_kernel_modes_agree() {
+    let wc = {
+        let m = Marvel::new(ClusterSpec::default(), 1).unwrap();
+        WordCount::new(10_000, 1.07, &m.rt)
+    };
+    // Kernel aggregates: synthetic assumes full vocab coverage; at 8 MiB
+    // real coverage is slightly below — allow a wider band.
+    cross_validate(&wc, &SystemConfig::marvel_igfs(), 0.25);
+}
+
+#[test]
+fn grep_modes_agree() {
+    let g = {
+        let m = Marvel::new(ClusterSpec::default(), 1).unwrap();
+        let prefix = Corpus::new(10_000, 1.07).prefix_of_rank(3, 2);
+        Grep::new(10_000, 1.07, &prefix, &m.rt)
+    };
+    cross_validate(&g, &SystemConfig::marvel_igfs(), 0.35);
+}
+
+#[test]
+fn scan_modes_agree() {
+    cross_validate(&ScanQuery::new(), &SystemConfig::corral_lambda(), 0.15);
+}
+
+#[test]
+fn agg_modes_agree() {
+    let agg = {
+        let m = Marvel::new(ClusterSpec::default(), 1).unwrap();
+        AggregationQuery::new(&m.rt)
+    };
+    cross_validate(&agg, &SystemConfig::corral_lambda(), 0.15);
+}
+
+#[test]
+fn join_modes_agree() {
+    cross_validate(&JoinQuery::new(), &SystemConfig::corral_lambda(), 0.15);
+}

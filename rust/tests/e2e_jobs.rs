@@ -1,0 +1,117 @@
+//! Integration: every workload × every system configuration on small
+//! *real* inputs — the full Figure-3 workflow, end to end.
+
+use marvel::coordinator::{ClusterSpec, Marvel};
+use marvel::mapreduce::{JobResult, SystemConfig, Workload};
+use marvel::util::bytes::MIB;
+use marvel::workloads::{
+    AggregationQuery, Corpus, Grep, JoinQuery, ScanQuery, WordCount,
+};
+
+fn all_configs() -> Vec<SystemConfig> {
+    use marvel::net::DeviceRole;
+    vec![
+        SystemConfig::corral_lambda(),
+        SystemConfig::marvel_hdfs(),
+        SystemConfig::marvel_igfs(),
+        SystemConfig::onprem(DeviceRole::Pmem, false),
+        SystemConfig::onprem(DeviceRole::Pmem, true),
+        SystemConfig::onprem(DeviceRole::Ssd, false),
+        SystemConfig::onprem(DeviceRole::Ssd, true),
+    ]
+}
+
+fn check(r: &JobResult) {
+    assert!(r.ok(), "{} on {}: {:?}", r.job, r.config, r.failed);
+    assert!(r.job_time.as_secs_f64() > 0.0);
+    assert!(r.input_bytes > 0);
+    assert!(r.intermediate_bytes > 0, "{} {}", r.job, r.config);
+    assert!(r.output_bytes > 0, "{} {}", r.job, r.config);
+    assert!(r.map.tasks > 0 && r.reduce.tasks > 0);
+    assert!(r.io.total_bytes > 0.0);
+}
+
+#[test]
+fn wordcount_all_systems() {
+    let mut m = Marvel::new(ClusterSpec::default(), 1).unwrap();
+    let wc = WordCount::new(3000, 1.07, &m.rt);
+    for cfg in all_configs() {
+        check(&m.run(&cfg, &wc, 3 * MIB));
+    }
+}
+
+#[test]
+fn grep_all_systems() {
+    let mut m = Marvel::new(ClusterSpec::default(), 2).unwrap();
+    let prefix = Corpus::new(3000, 1.07).prefix_of_rank(2, 2);
+    let g = Grep::new(3000, 1.07, &prefix, &m.rt);
+    for cfg in all_configs() {
+        check(&m.run(&cfg, &g, 3 * MIB));
+    }
+}
+
+#[test]
+fn queries_on_marvel_and_lambda() {
+    let mut m = Marvel::new(ClusterSpec::default(), 3).unwrap();
+    let agg = AggregationQuery::new(&m.rt);
+    let wls: Vec<Box<dyn Workload>> = vec![
+        Box::new(ScanQuery::new()),
+        Box::new(JoinQuery::new()),
+    ];
+    for cfg in [SystemConfig::corral_lambda(), SystemConfig::marvel_igfs()] {
+        check(&m.run(&cfg, &agg, 3 * MIB));
+        for wl in &wls {
+            check(&m.run(&cfg, wl.as_ref(), 3 * MIB));
+        }
+    }
+}
+
+#[test]
+fn multi_node_cluster_runs_and_uses_locality() {
+    let mut m = Marvel::new(ClusterSpec::with_nodes(4), 4).unwrap();
+    let wc = WordCount::new(3000, 1.07, &m.rt);
+    let mut cfg = SystemConfig::marvel_hdfs();
+    cfg.replication = 2;
+    let r = m.run(&cfg, &wc, 8 * MIB);
+    check(&r);
+    // All input blocks written from node 0 with first-replica-local
+    // placement → map tasks should read mostly locally.
+    assert!(r.locality_ratio > 0.5, "locality {}", r.locality_ratio);
+}
+
+#[test]
+fn ordering_holds_on_medium_synthetic_input() {
+    // 2 GB synthetic: the Figure-4 ordering must hold well above the
+    // materialization cap.
+    let mut m = Marvel::new(ClusterSpec::default(), 5).unwrap();
+    let wc = WordCount::new(10_000, 1.07, &m.rt);
+    let r = m.compare(
+        &[
+            SystemConfig::corral_lambda(),
+            SystemConfig::marvel_hdfs(),
+            SystemConfig::marvel_igfs(),
+        ],
+        &wc,
+        2_000_000_000,
+    );
+    for x in &r {
+        assert!(x.ok(), "{}: {:?}", x.config, x.failed);
+    }
+    assert!(r[0].job_time > r[1].job_time, "lambda must lose to hdfs");
+    assert!(r[1].job_time >= r[2].job_time, "igfs must not lose to hdfs");
+}
+
+#[test]
+fn job_reports_are_internally_consistent() {
+    let mut m = Marvel::new(ClusterSpec::default(), 6).unwrap();
+    let wc = WordCount::new(3000, 1.07, &m.rt);
+    let r = m.run(&SystemConfig::marvel_igfs(), &wc, 4 * MIB);
+    check(&r);
+    // Phases partition the makespan.
+    let total = r.map.duration + r.reduce.duration;
+    assert_eq!(total, r.job_time);
+    // Reduce consumed exactly what maps produced.
+    assert_eq!(r.map.bytes_out, r.intermediate_bytes);
+    assert_eq!(r.reduce.bytes_in, r.intermediate_bytes);
+    assert_eq!(r.reduce.bytes_out, r.output_bytes);
+}

@@ -1,0 +1,108 @@
+//! Fast regression guards on the paper's headline *shapes* (small-scale
+//! versions of the bench assertions, so `cargo test` alone catches
+//! calibration drift without running the full sweeps).
+
+use marvel::coordinator::{reduction, ClusterSpec, Marvel};
+use marvel::mapreduce::{CombinerMode, SystemConfig};
+use marvel::metrics::tags;
+use marvel::net::DeviceRole;
+use marvel::workloads::{AggregationQuery, JoinQuery, WordCount};
+
+const GB: u64 = 1_000_000_000;
+
+#[test]
+fn fig4_shape_at_2gb() {
+    let mut m = Marvel::new(ClusterSpec::default(), 42).unwrap();
+    let wc = WordCount::new(10_000, 1.07, &m.rt);
+    let r = m.compare(
+        &[
+            SystemConfig::corral_lambda(),
+            SystemConfig::marvel_hdfs_paper(),
+            SystemConfig::marvel_igfs_paper(),
+        ],
+        &wc,
+        2 * GB,
+    );
+    assert!(r.iter().all(|x| x.ok()));
+    let red = reduction(&r[0], &r[2]);
+    assert!(red > 0.75 && red < 0.95,
+            "fig4 2GB reduction drifted: {red}");
+    assert!(r[1].job_time >= r[2].job_time, "IGFS lost to HDFS");
+}
+
+#[test]
+fn lambda_quota_boundary() {
+    let mut m = Marvel::new(ClusterSpec::default(), 42).unwrap();
+    let wc = WordCount::new(10_000, 1.07, &m.rt);
+    assert!(m.run(&SystemConfig::corral_lambda(), &wc, 15 * GB).ok());
+    assert!(!m.run(&SystemConfig::corral_lambda(), &wc, 16 * GB).ok());
+    assert!(m.run(&SystemConfig::marvel_igfs(), &wc, 16 * GB).ok());
+}
+
+#[test]
+fn table1_expansion_regimes() {
+    let mut m = Marvel::new(ClusterSpec::default(), 42).unwrap();
+    let cfg = SystemConfig::onprem(DeviceRole::Pmem, false);
+    let wc = WordCount::new(10_000, 1.07, &m.rt);
+    let r = m.run(&cfg, &wc, GB);
+    let ratio = r.intermediate_bytes as f64 / r.input_bytes as f64;
+    assert!((ratio - 5.5).abs() < 1.0, "wordcount expansion {ratio}");
+
+    let agg = AggregationQuery::new(&m.rt);
+    let r = m.run(&cfg, &agg, GB);
+    let ratio = r.intermediate_bytes as f64 / r.input_bytes as f64;
+    assert!((ratio - 1.66).abs() < 0.3, "aggregation expansion {ratio}");
+
+    let join = JoinQuery::new();
+    let r = m.run(&cfg, &join, GB);
+    let ratio = r.intermediate_bytes as f64 / r.input_bytes as f64;
+    assert!((ratio - 3.97).abs() < 0.6, "join expansion {ratio}");
+}
+
+#[test]
+fn fig1_device_ordering_at_1gb() {
+    let mut m = Marvel::new(ClusterSpec::default(), 42).unwrap();
+    let wc = WordCount::new(10_000, 1.07, &m.rt);
+    let pmem = m.run(&SystemConfig::onprem(DeviceRole::Pmem, false), &wc, GB);
+    let ssd = m.run(&SystemConfig::onprem(DeviceRole::Ssd, false), &wc, GB);
+    let s3 = m.run(&SystemConfig::corral_lambda(), &wc, GB);
+    assert!(pmem.job_time < ssd.job_time, "pmem !< ssd");
+    assert!(ssd.job_time < s3.job_time, "ssd !< s3");
+}
+
+#[test]
+fn fig6_igfs_throughput_dominates() {
+    let mut m = Marvel::new(ClusterSpec::default(), 42).unwrap();
+    let wc = WordCount::new(10_000, 1.07, &m.rt);
+    let st = [tags::INTERMEDIATE_WRITE, tags::INTERMEDIATE_READ];
+    let h = m.run(&SystemConfig::marvel_hdfs_paper(), &wc, 2 * GB);
+    let g = m.run(&SystemConfig::marvel_igfs_paper(), &wc, 2 * GB);
+    assert!(g.io.gbps_over_makespan(&st) >= h.io.gbps_over_makespan(&st));
+}
+
+#[test]
+fn combiner_ablation_shape() {
+    let mut m = Marvel::new(ClusterSpec::default(), 42).unwrap();
+    let wc = WordCount::new(10_000, 1.07, &m.rt);
+    let with = m.run(&SystemConfig::marvel_igfs(), &wc, GB);
+    let mut cfg = SystemConfig::marvel_igfs();
+    cfg.combiner = CombinerMode::None;
+    let without = m.run(&cfg, &wc, GB);
+    assert!(with.intermediate_bytes * 10 < without.intermediate_bytes);
+    assert!(with.job_time <= without.job_time);
+}
+
+#[test]
+fn grep_cheaper_shuffle_than_wordcount() {
+    let mut m = Marvel::new(ClusterSpec::default(), 42).unwrap();
+    let wc = WordCount::new(10_000, 1.07, &m.rt);
+    let prefix =
+        marvel::workloads::Corpus::new(10_000, 1.07).prefix_of_rank(5, 2);
+    let grep = marvel::workloads::Grep::new(10_000, 1.07, &prefix, &m.rt);
+    let cfg = SystemConfig::marvel_igfs_paper();
+    let a = m.run(&cfg, &wc, GB);
+    let b = m.run(&cfg, &grep, GB);
+    assert!(b.intermediate_bytes * 5 < a.intermediate_bytes,
+            "grep shuffle should be far smaller: {} vs {}",
+            b.intermediate_bytes, a.intermediate_bytes);
+}

@@ -1,0 +1,133 @@
+//! PJRT-vs-oracle equivalence: the core cross-layer correctness signal.
+//! Requires `make artifacts`; tests self-skip (with a loud message)
+//! when the artifacts have not been built.
+
+use marvel::runtime::{default_artifacts_dir, oracle, RtEngine};
+use marvel::util::rng::Rng;
+
+fn engines() -> Option<(RtEngine, RtEngine)> {
+    let dir = default_artifacts_dir()?;
+    let pjrt = RtEngine::load(Some(&dir)).expect("load artifacts");
+    assert!(pjrt.is_pjrt());
+    let orac = RtEngine::load(None).expect("oracle");
+    Some((pjrt, orac))
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match engines() {
+            Some(e) => e,
+            None => {
+                eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn wordcount_combine_pjrt_equals_oracle() {
+    let (mut pjrt, mut orac) = require_artifacts!();
+    let n = pjrt.batch_size();
+    for seed in [1u64, 2, 3] {
+        let mut rng = Rng::new(seed);
+        let hashes: Vec<i32> =
+            (0..n).map(|_| (rng.next_u32() & 0x7fffffff) as i32).collect();
+        let mask: Vec<f32> =
+            (0..n).map(|_| if rng.chance(0.9) { 1.0 } else { 0.0 }).collect();
+        let a = pjrt.wordcount_batch(&hashes, &mask).unwrap();
+        let b = orac.wordcount_batch(&hashes, &mask).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert!((x - y).abs() < 1e-3, "seed {seed} cell {i}: {x} vs {y}");
+        }
+        let total: f32 = a.iter().sum();
+        let live: f32 = mask.iter().sum();
+        assert!((total - live).abs() < 1e-2, "mass: {total} vs {live}");
+    }
+}
+
+#[test]
+fn grep_combine_pjrt_equals_oracle() {
+    let (mut pjrt, mut orac) = require_artifacts!();
+    let n = pjrt.batch_size();
+    let w = pjrt.manifest.word_width;
+    let mut rng = Rng::new(7);
+    let tokens: Vec<i32> =
+        (0..n * w).map(|_| (rng.below(4) + 97) as i32).collect();
+    let hashes: Vec<i32> =
+        (0..n).map(|_| (rng.next_u32() & 0x7fffffff) as i32).collect();
+    let mask = vec![1f32; n];
+    let mut pattern = vec![oracle::WILD_REST; w];
+    pattern[0] = 97; // 1/4 of tokens match on first byte
+    let (ca, ta) = pjrt.grep_batch(&tokens, &hashes, &mask, &pattern).unwrap();
+    let (cb, tb) = orac.grep_batch(&tokens, &hashes, &mask, &pattern).unwrap();
+    assert!((ta - tb).abs() < 1e-3, "totals {ta} vs {tb}");
+    assert!(ta > 0.0, "degenerate: no matches");
+    for (x, y) in ca.iter().zip(&cb) {
+        assert!((x - y).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn agg_combine_pjrt_equals_oracle() {
+    let (mut pjrt, mut orac) = require_artifacts!();
+    let n = pjrt.manifest.small_batch;
+    let s = pjrt.manifest.segments;
+    let mut rng = Rng::new(11);
+    let ids: Vec<i32> = (0..n).map(|_| rng.below(s as u64) as i32).collect();
+    let vals: Vec<f32> = (0..n).map(|_| rng.f64() as f32 * 100.0).collect();
+    let mask: Vec<f32> =
+        (0..n).map(|_| if rng.chance(0.8) { 1.0 } else { 0.0 }).collect();
+    let (sa, ca) = pjrt.agg_batch(&ids, &vals, &mask).unwrap();
+    let (sb, cb) = orac.agg_batch(&ids, &vals, &mask).unwrap();
+    for i in 0..s {
+        assert!((sa[i] - sb[i]).abs() < 0.5, "sum seg {i}: {} vs {}",
+                sa[i], sb[i]);
+        assert!((ca[i] - cb[i]).abs() < 1e-3, "cnt seg {i}");
+    }
+}
+
+#[test]
+fn manifest_hashes_match_files() {
+    let Some(dir) = default_artifacts_dir() else {
+        eprintln!("SKIP: artifacts/ not built");
+        return;
+    };
+    let m = marvel::runtime::Manifest::load(&dir).unwrap();
+    for (name, meta) in &m.artifacts {
+        let text = std::fs::read_to_string(&meta.file).unwrap();
+        assert!(text.contains("HloModule"), "{name} not HLO text");
+        assert!(!meta.sha256.is_empty(), "{name} missing digest");
+    }
+}
+
+#[test]
+fn pjrt_full_job_equals_oracle_job() {
+    // Same seed, same workload — the PJRT-backed job must produce
+    // byte-identical data-plane results to the oracle-backed job.
+    use marvel::coordinator::{ClusterSpec, Marvel};
+    use marvel::mapreduce::SystemConfig;
+    use marvel::util::bytes::MIB;
+    use marvel::workloads::WordCount;
+
+    if default_artifacts_dir().is_none() {
+        eprintln!("SKIP: artifacts/ not built");
+        return;
+    }
+    let run = |force_oracle: bool| {
+        let mut m = Marvel::new(ClusterSpec::default(), 5).unwrap();
+        if force_oracle {
+            m.rt = RtEngine::load(None).unwrap();
+        }
+        let wc = WordCount::new(3000, 1.07, &m.rt);
+        let r = m.run(&SystemConfig::marvel_igfs(), &wc, 4 * MIB);
+        assert!(r.ok());
+        (r.intermediate_bytes, r.output_bytes, r.job_time)
+    };
+    let (ia, oa, ta) = run(false);
+    let (ib, ob, tb) = run(true);
+    assert_eq!(ia, ib, "intermediate bytes differ pjrt vs oracle");
+    assert_eq!(oa, ob, "output bytes differ");
+    assert_eq!(ta, tb, "virtual time differs");
+}

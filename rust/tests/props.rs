@@ -1,0 +1,224 @@
+//! Property tests over coordinator/substrate invariants (in-repo mini
+//! framework — see `util::prop`).
+
+use marvel::hdfs::Hdfs;
+use marvel::igfs::{CacheNode, PartitionMap};
+use marvel::net::{DeviceRole, NodeId, TopologyBuilder};
+use marvel::prop_assert;
+use marvel::runtime::{oracle, CombineScheme};
+use marvel::sim::{Engine, SimNs, Stage};
+use marvel::storage::Payload;
+use marvel::util::prop::check;
+use marvel::workloads::wordcount::fold_parts;
+use marvel::yarn::{ContainerRequest, NodeCapacity, ResourceManager};
+
+fn scheme() -> CombineScheme {
+    CombineScheme { parts: 32, buckets: 1024, part_shift: 10 }
+}
+
+#[test]
+fn prop_partitioner_total_and_stability() {
+    // Same key → same partition; all partitions within range; folding
+    // onto fewer reducers conserves mass.
+    check("partitioner", 100, |g| {
+        let s = scheme();
+        let n = g.usize_up_to(500) + 1;
+        let hashes: Vec<i32> = (0..n)
+            .map(|_| (g.rng.next_u32() & 0x7fffffff) as i32)
+            .collect();
+        let mask = vec![1f32; n];
+        let counts = oracle::wordcount_combine(&s, &hashes, &mask);
+        let total: f32 = counts.iter().sum();
+        prop_assert!((total - n as f32).abs() < 1e-2,
+                     "mass {total} != {n}");
+        let parts = g.usize_up_to(31) + 1;
+        let per_part: Vec<f32> = (0..s.parts)
+            .map(|p| counts[p * s.buckets..(p + 1) * s.buckets]
+                 .iter().sum::<f32>())
+            .collect();
+        let folded = fold_parts(&per_part, parts);
+        let fsum: f32 = folded.iter().sum();
+        prop_assert!((fsum - total).abs() < 1e-2, "fold lost mass");
+        for h in &hashes {
+            prop_assert!(s.part(*h) < s.parts);
+            prop_assert!(s.bucket(*h) < s.buckets);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hdfs_replicas_distinct_and_data_preserved() {
+    check("hdfs-replicas", 60, |g| {
+        let nodes = g.usize_up_to(6) + 2;
+        let replication = g.usize_up_to(4) + 1;
+        let mut engine = Engine::new();
+        let topo = TopologyBuilder { nodes, ..Default::default() }
+            .build(&mut engine);
+        let mut h = Hdfs::new(&topo, DeviceRole::Pmem, replication);
+        h.block_size = (g.u64_up_to(200) + 16).max(16);
+        let data = g.bytes(2000);
+        let writer = NodeId(g.usize_up_to(nodes - 1));
+        h.put(&topo, writer, "/f", Payload::real(data.clone()), 0)
+            .map_err(|e| e)?;
+        // Every block: replicas distinct, count = min(rep, nodes).
+        for (meta, reps) in h.block_locations("/f") {
+            let mut d = reps.clone();
+            d.sort();
+            d.dedup();
+            prop_assert!(d.len() == reps.len(), "dup replicas");
+            prop_assert!(reps.len() == replication.min(nodes),
+                         "rep count {} vs {}", reps.len(),
+                         replication.min(nodes));
+            prop_assert!(meta.len <= h.block_size);
+        }
+        // Read back from every node: bytes identical.
+        for r in 0..nodes {
+            let (got, _, _, _) =
+                h.read(&topo, NodeId(r), "/f", 0).map_err(|e| e)?;
+            prop_assert!(got.bytes() == Some(&data[..]), "corrupt read");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cache_capacity_and_no_loss() {
+    check("cache-capacity", 80, |g| {
+        let cap = g.u64_up_to(1000) + 50;
+        let mut c = CacheNode::new(cap);
+        let n = g.usize_up_to(60) + 1;
+        let mut keys = Vec::new();
+        for i in 0..n {
+            let len = g.u64_up_to(300);
+            let key = format!("k{i}");
+            c.put(&key, Payload::synthetic(len));
+            keys.push((key, len));
+            prop_assert!(c.used() <= cap, "cap exceeded: {} > {cap}",
+                         c.used());
+        }
+        // Nothing is lost: every key readable from DRAM or backing.
+        for (k, len) in &keys {
+            let (v, _) = c.get(k).ok_or(format!("lost key {k}"))?;
+            prop_assert!(v.len() == *len, "len changed");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rendezvous_minimal_disruption() {
+    check("rendezvous", 40, |g| {
+        let n = g.usize_up_to(8) + 2;
+        let map = PartitionMap::new((0..n).map(NodeId).collect());
+        let mut smaller = map.clone();
+        let removed = NodeId(g.usize_up_to(n - 1));
+        smaller.remove(removed);
+        for i in 0..200 {
+            let k = format!("key-{i}-{}", g.rng.next_u32());
+            let before = map.owner(&k);
+            let after = smaller.owner(&k);
+            if before != removed {
+                prop_assert!(before == after,
+                             "non-removed key moved: {k}");
+            } else {
+                prop_assert!(after != removed, "key still on removed node");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scheduler_never_overcommits() {
+    check("scheduler", 60, |g| {
+        let nodes = g.usize_up_to(6) + 1;
+        let vcores = (g.usize_up_to(8) + 1) as u32;
+        let caps: Vec<NodeCapacity> = (0..nodes)
+            .map(|i| NodeCapacity {
+                node: NodeId(i),
+                vcores,
+                memory_mb: 8192,
+            })
+            .collect();
+        let mut rm = ResourceManager::new(caps);
+        let n_reqs = g.usize_up_to(80) + 1;
+        let reqs: Vec<ContainerRequest> = (0..n_reqs)
+            .map(|_| ContainerRequest {
+                vcores: 1,
+                memory_mb: 512,
+                locality: if g.rng.chance(0.5) {
+                    vec![NodeId(g.usize_up_to(nodes - 1))]
+                } else {
+                    vec![]
+                },
+            })
+            .collect();
+        let allocs = rm.allocate(&reqs);
+        prop_assert!(allocs.len() == n_reqs, "dropped requests");
+        let mut used = vec![0u32; nodes];
+        for a in &allocs {
+            if a.locality != marvel::yarn::LocalityLevel::Queued {
+                used[a.node.0] += 1;
+            }
+        }
+        for (i, &u) in used.iter().enumerate() {
+            prop_assert!(u <= vcores, "node {i} overcommitted {u}/{vcores}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engine_time_monotone_and_conserving() {
+    check("engine-flows", 40, |g| {
+        let mut e = Engine::new();
+        let cap = (g.u64_up_to(1000) + 10) as f64;
+        let link = e.add_resource("l", cap);
+        let n = g.usize_up_to(30) + 1;
+        let mut total_bytes = 0f64;
+        for i in 0..n {
+            let b = (g.u64_up_to(10_000) + 1) as f64;
+            total_bytes += b;
+            e.spawn(&format!("f{i}"), vec![
+                Stage::Delay(SimNs::from_micros(g.u64_up_to(50))),
+                Stage::Flow { bytes: b, path: vec![link], tag: 0 },
+            ]);
+        }
+        let end = e.run().map_err(|x| x)?;
+        // Makespan ≥ serialized transfer time (capacity bound)...
+        let lower = total_bytes / cap;
+        prop_assert!(end.as_secs_f64() + 1e-6 >= lower,
+                     "finished faster than link capacity allows");
+        // ...and every byte is accounted in the flow log.
+        let logged: f64 = e.flow_log.iter().map(|f| f.bytes).sum();
+        prop_assert!((logged - total_bytes).abs() < 1e-6, "bytes lost");
+        for f in &e.flow_log {
+            prop_assert!(f.end >= f.start, "negative flow duration");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shuffle_conservation_real_jobs() {
+    // Σ map outputs == Σ reduce inputs for real runs with random
+    // sizes/vocab — the shuffle loses and invents nothing.
+    use marvel::coordinator::{ClusterSpec, Marvel};
+    use marvel::mapreduce::SystemConfig;
+    use marvel::workloads::WordCount;
+    check("shuffle-conservation", 8, |g| {
+        let seed = g.rng.next_u64();
+        let vocab = g.usize_up_to(3000) + 100;
+        let mut m = Marvel::new(ClusterSpec::default(), seed)
+            .map_err(|e| e)?;
+        let wc = WordCount::new(vocab, 1.07, &m.rt);
+        let bytes = (g.u64_up_to(2_000_000) + 100_000).max(100_000);
+        let r = m.run(&SystemConfig::marvel_igfs(), &wc, bytes);
+        prop_assert!(r.ok(), "job failed: {:?}", r.failed);
+        prop_assert!(r.map.bytes_out == r.reduce.bytes_in,
+                     "shuffle not conserving: {} vs {}",
+                     r.map.bytes_out, r.reduce.bytes_in);
+        Ok(())
+    });
+}
