@@ -1,17 +1,26 @@
 //! Microbenchmarks of the hot paths (§Perf): PJRT combine batch
-//! latency/throughput vs the pure-Rust oracle, DES event throughput,
-//! and the tokenize+hash data plane rate that calibrates
-//! `Workload::map_rate`.
+//! latency/throughput vs the pure-Rust oracle, the tokenize+hash data
+//! plane rate that calibrates `Workload::map_rate`, the full map_split
+//! hot path serial vs the parallel map data plane, zero-copy payload
+//! view ops, and DES event throughput.
+//!
+//! Emits `BENCH_micro_hotpath.json` (machine-readable; feeds PERF.md's
+//! perf trajectory) next to the human-readable table.
 
-use marvel::mapreduce::Workload;
+use std::path::Path;
+
+use marvel::mapreduce::{map_splits_parallel, SystemConfig, Workload};
 use marvel::runtime::{default_artifacts_dir, RtEngine};
 use marvel::sim::{Engine, SimNs, Stage};
-use marvel::util::bench::{fmt_ns, Bench};
+use marvel::storage::Payload;
+use marvel::util::bench::{fmt_ns, write_report, Bench, BenchResult};
 use marvel::util::rng::Rng;
 use marvel::workloads::{Corpus, WordCount};
 
 fn main() {
     let bench = Bench::new(3, 15);
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut metrics: Vec<(&str, f64)> = Vec::new();
 
     // -- PJRT combine batch vs oracle
     let dir = default_artifacts_dir();
@@ -31,12 +40,16 @@ fn main() {
     });
     println!("{}", r_p.summary());
     println!("{}", r_o.summary());
+    let pjrt_tok_s = r_p.throughput(n as f64);
+    let oracle_tok_s = r_o.throughput(n as f64);
     println!(
         "  pjrt tokens/s: {:.1} M   oracle tokens/s: {:.1} M   mode: {}",
-        r_p.throughput(n as f64) / 1e6,
-        r_o.throughput(n as f64) / 1e6,
+        pjrt_tok_s / 1e6,
+        oracle_tok_s / 1e6,
         if pjrt.is_pjrt() { "PJRT" } else { "oracle-fallback" },
     );
+    metrics.push(("pjrt_tokens_per_s", pjrt_tok_s));
+    metrics.push(("oracle_tokens_per_s", oracle_tok_s));
 
     // -- tokenize+hash data plane (calibrates map_rate)
     let corpus = Corpus::new(10_000, 1.07);
@@ -49,19 +62,83 @@ fn main() {
             .fold(0i64, |a, h| a + h as i64)
     });
     println!("{}", r_t.summary());
-    println!("  data plane rate: {:.1} MB/s",
-             r_t.throughput(8_000_000.0) / 1e6);
+    let tok_mb_s = r_t.throughput(8_000_000.0) / 1e6;
+    println!("  data plane rate: {tok_mb_s:.1} MB/s");
+    metrics.push(("tokenize_hash_mb_per_s", tok_mb_s));
 
     // -- full map_split through the runtime (the real map hot path)
     let wc = WordCount::new(10_000, 1.07, &pjrt);
-    let cfg = marvel::mapreduce::SystemConfig::marvel_igfs();
-    let payload = marvel::storage::Payload::real(text.clone());
+    let cfg = SystemConfig::marvel_igfs();
+    let payload = Payload::real(text.clone());
     let r_m = bench.run("map_split 8 MB (kernel combine)", || {
         wc.map_split(&payload, 32, &cfg, &mut pjrt, &mut Rng::new(3))
     });
     println!("{}", r_m.summary());
-    println!("  map_split rate: {:.1} MB/s (feeds map_rate calibration)",
-             r_m.throughput(8_000_000.0) / 1e6);
+    let ms_mb_s = r_m.throughput(8_000_000.0) / 1e6;
+    println!("  map_split rate: {ms_mb_s:.1} MB/s (feeds map_rate calibration)");
+    metrics.push(("map_split_mb_per_s", ms_mb_s));
+
+    // -- parallel map data plane: 1 worker vs all cores over the same
+    // splits (the driver's map phase minus the DES). Outputs must be
+    // byte-identical at any worker count — asserted below.
+    let n_workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4);
+    let n_splits = 16usize;
+    let split_bytes = 2_000_000u64;
+    let splits: Vec<Payload> = (0..n_splits as u64)
+        .map(|i| {
+            Payload::real(corpus.generate(split_bytes,
+                                          &mut Rng::new(100 + i)))
+        })
+        .collect();
+    let plane_bytes = (n_splits as u64 * split_bytes) as f64;
+    let r_s1 = bench.run("map plane 16×2 MB, 1 worker", || {
+        map_splits_parallel(&wc, &splits, 32, &cfg, &mut oracle, 7, 1)
+    });
+    let label = format!("map plane 16×2 MB, {n_workers} workers");
+    let r_sn = bench.run(&label, || {
+        map_splits_parallel(&wc, &splits, 32, &cfg, &mut oracle, 7,
+                            n_workers)
+    });
+    println!("{}", r_s1.summary());
+    println!("{}", r_sn.summary());
+    let serial_mb_s = r_s1.throughput(plane_bytes) / 1e6;
+    let par_mb_s = r_sn.throughput(plane_bytes) / 1e6;
+    let speedup = par_mb_s / serial_mb_s.max(1e-9);
+    println!(
+        "  map plane: serial {serial_mb_s:.1} MB/s → parallel \
+         {par_mb_s:.1} MB/s ({speedup:.2}× on {n_workers} workers)"
+    );
+    metrics.push(("map_plane_serial_mb_per_s", serial_mb_s));
+    metrics.push(("map_plane_parallel_mb_per_s", par_mb_s));
+    metrics.push(("map_plane_speedup", speedup));
+    metrics.push(("map_plane_workers", n_workers as f64));
+    // Determinism: parallel output byte-identical to serial.
+    let a = map_splits_parallel(&wc, &splits, 32, &cfg, &mut oracle, 7, 1);
+    let b = map_splits_parallel(&wc, &splits, 32, &cfg, &mut oracle, 7,
+                                n_workers);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.records, y.records);
+        for (px, py) in x.partitions.iter().zip(&y.partitions) {
+            assert_eq!(px.gather(), py.gather(),
+                       "parallel map output diverged from serial");
+        }
+    }
+    println!("  determinism: parallel output == serial output ✓");
+
+    // -- zero-copy payload plumbing: slice+concat as pure view ops
+    // (pre-refactor this memcpy'd ~64 MB per iteration).
+    let big = Payload::real(vec![7u8; 64 << 20]);
+    let r_v = bench.run("payload: 1024 slices + concat of 64 MB", || {
+        let views: Vec<Payload> = (0..1024u64)
+            .map(|i| big.slice(i * 61_440, 65_536))
+            .collect();
+        Payload::concat(&views).len()
+    });
+    println!("{}", r_v.summary());
+    metrics.push(("payload_view_assembly_ns", r_v.mean_ns));
 
     // -- DES engine: events/second
     let r_e = bench.run("DES: 10k procs × 3 stages through 8 pools", || {
@@ -96,5 +173,13 @@ fn main() {
         e.run().unwrap()
     });
     println!("{}", r_f.summary());
+
+    results.extend([r_p, r_o, r_t, r_m, r_s1, r_sn, r_v, r_e, r_f]);
+    let refs: Vec<&BenchResult> = results.iter().collect();
+    let out = Path::new("BENCH_micro_hotpath.json");
+    match write_report(out, &refs, &metrics) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
     println!("micro_hotpath done");
 }

@@ -75,6 +75,11 @@ impl ExperimentConfig {
                 system.igfs_capacity = i.max(0) as u64;
             }
         }
+        // Data-plane map threads; 0 = auto. Output is byte-identical
+        // at any setting (driver determinism contract).
+        if let Some(v) = doc.get("experiment", "map_workers") {
+            system.map_workers = v.as_i64().unwrap_or(0).max(0) as usize;
+        }
         Ok(ExperimentConfig {
             cluster,
             system,
@@ -112,12 +117,14 @@ workload = "grep"
 input = "2GiB"
 seed = 7
 replication = 3
+map_workers = 4
 "#,
         )
         .unwrap();
         assert_eq!(cfg.cluster.nodes, 4);
         assert_eq!(cfg.system.name, "marvel-hdfs");
         assert_eq!(cfg.system.replication, 3);
+        assert_eq!(cfg.system.map_workers, 4);
         assert_eq!(cfg.workload, "grep");
         assert_eq!(cfg.input_bytes, 2 * GIB);
         assert_eq!(cfg.seed, 7);

@@ -119,8 +119,10 @@ impl Hdfs {
         }
     }
 
-    /// Read a whole file into memory on `reader`, preferring local
-    /// replicas. Returns (data, stages, local_bytes, remote_bytes).
+    /// Read a whole file on `reader`, preferring local replicas.
+    /// Returns (data, stages, local_bytes, remote_bytes). The data is
+    /// a zero-copy view assembly over the DataNodes' block buffers —
+    /// chunked when the file spans blocks, never memcpy'd.
     pub fn read(
         &self,
         topo: &Topology,
@@ -166,7 +168,11 @@ impl Hdfs {
         Ok((Payload::concat(&parts), stages, local, remote))
     }
 
-    /// Read one byte range (a map task's input split).
+    /// Read one byte range (a map task's input split). Zero-copy: each
+    /// intersecting block contributes an O(1) sub-view, and the parts
+    /// assemble into a (possibly chunked) view — a split that falls
+    /// inside one block (the planner's common case) comes back as a
+    /// single contiguous borrow of the DataNode's buffer.
     pub fn read_range(
         &self,
         topo: &Topology,
@@ -289,8 +295,23 @@ mod tests {
         h.put(&t, NodeId(0), "/f", Payload::real(data), 0).unwrap();
         let (got, _, local) =
             h.read_range(&t, NodeId(0), "/f", 5, 10, 0).unwrap();
-        assert_eq!(got.bytes().unwrap(), &(5..15u8).collect::<Vec<_>>()[..]);
+        // The range spans two blocks: a zero-copy chunked view.
+        assert_eq!(got.n_chunks(), 2);
+        assert_eq!(got.gather().unwrap(), (5..15u8).collect::<Vec<_>>());
         assert!(local);
+    }
+
+    #[test]
+    fn in_block_range_is_contiguous_borrow() {
+        let (_, t, mut h) = setup(1, 1);
+        h.block_size = 100;
+        let data: Vec<u8> = (0..200u8).collect();
+        h.put(&t, NodeId(0), "/f", Payload::real(data), 0).unwrap();
+        let (got, _, _) =
+            h.read_range(&t, NodeId(0), "/f", 110, 20, 0).unwrap();
+        // Falls inside block 1: contiguous, no gather needed.
+        assert_eq!(got.bytes().unwrap(),
+                   &(110..130).map(|i| i as u8).collect::<Vec<_>>()[..]);
     }
 
     #[test]

@@ -4,18 +4,22 @@
 //! deterministic completion time. Implements the paper's Figure 3
 //! workflow steps 1–10.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
 use crate::faas::{ActionSpec, Controller, Lambda};
 use crate::metrics::{tags, IoSummary};
 use crate::net::{NodeId, Topology};
-use crate::runtime::RtEngine;
+use crate::runtime::{RtEngine, RtStats};
 use crate::sim::{Engine, SimNs, Stage};
+use crate::storage::Payload;
 use crate::yarn::{ContainerRequest, ResourceManager};
 
 use super::shuffle::{interm_key, output_key, Stores};
 use super::types::{
     JobResult, PhaseStats, Platform, StoreKind, SystemConfig,
 };
-use super::workload::{task_rng, Workload};
+use super::workload::{task_rng, MapOutput, Workload};
 
 /// A deployed cluster a job runs against. One job per instance keeps
 /// virtual time and flow logs cleanly attributable.
@@ -108,6 +112,86 @@ fn plan_splits(
     }
 }
 
+/// Resolve the data-plane worker count: explicit from the config, or
+/// the host's available parallelism; never more workers than splits.
+fn effective_map_workers(cfg: &SystemConfig, n_splits: usize) -> usize {
+    let w = if cfg.map_workers == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        cfg.map_workers
+    };
+    w.clamp(1, n_splits.max(1))
+}
+
+/// Run `map_split` over every fetched split, fanning out across
+/// `workers` host threads.
+///
+/// DESIGN — determinism contract: output is byte-identical to the
+/// serial path at ANY worker count because (a) each split's RNG is
+/// derived independently (`task_rng(seed, job, i)` — no shared stream
+/// to race on), (b) each worker owns a private `RtEngine` oracle
+/// instance (same manifest constants; combine counts are
+/// integer-valued f32s, so oracle and PJRT agree bitwise), and (c)
+/// results land in a per-split slot and are consumed in split order —
+/// scheduling order affects nothing but wall-clock. Only the map data
+/// plane parallelizes; the DES time plane stays single-threaded and
+/// deterministic.
+pub fn map_splits_parallel(
+    wl: &dyn Workload,
+    datas: &[Payload],
+    n_reduces: usize,
+    cfg: &SystemConfig,
+    rt: &mut RtEngine,
+    seed: u64,
+    workers: usize,
+) -> Vec<MapOutput> {
+    let job = wl.name();
+    if workers <= 1 || datas.len() <= 1 {
+        return datas
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                let mut rng = task_rng(seed, job, i as u64);
+                wl.map_split(d, n_reduces, cfg, rt, &mut rng)
+            })
+            .collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<MapOutput>>> =
+        (0..datas.len()).map(|_| Mutex::new(None)).collect();
+    let stats = Mutex::new(RtStats::default());
+    let manifest = rt.manifest.clone();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                let mut wrt = RtEngine::oracle_from(manifest.clone());
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= datas.len() {
+                        break;
+                    }
+                    let mut rng = task_rng(seed, job, i as u64);
+                    let mo =
+                        wl.map_split(&datas[i], n_reduces, cfg, &mut wrt,
+                                     &mut rng);
+                    *slots[i].lock().unwrap() = Some(mo);
+                }
+                let mut st = stats.lock().unwrap();
+                st.batches += wrt.stats.batches;
+                st.pjrt_ns += wrt.stats.pjrt_ns;
+                st.oracle_ns += wrt.stats.oracle_ns;
+            });
+        }
+    });
+    rt.absorb_stats(&stats.into_inner().unwrap());
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("map worker died"))
+        .collect()
+}
+
 /// Run one job end-to-end. `seed` drives all data-plane randomness.
 pub fn run_job(
     cluster: &mut Cluster,
@@ -185,12 +269,20 @@ fn run_job_inner(
     let reduce_spec = ActionSpec::reduce(&job, 2048);
 
     // (5–7) Map phase: data plane now, time plane as procs.
+    //
+    // Three sub-phases. Fetch is serial (it touches the stores and the
+    // DES engine) but zero-copy: an HDFS split read is a view assembly
+    // over the DataNodes' block buffers, an S3 split is an O(1) slice
+    // of the object. Map compute — the actually expensive part — fans
+    // out across host threads. Time-plane spawning is serial again, in
+    // split order, so the DES stays deterministic.
     let mut intermediate_bytes = 0u64;
     let mut map_in_local = 0u64;
     let mut map_in_remote = 0u64;
+    let mut datas = Vec::with_capacity(splits.len());
+    let mut in_stages_per_split = Vec::with_capacity(splits.len());
     for (i, split) in splits.iter().enumerate() {
         let node = map_allocs[i].node;
-        // -- data plane: fetch split
         let (data, in_stages) = match cfg.input_store {
             StoreKind::Hdfs | StoreKind::Igfs => {
                 let (d, st, local) = cluster.stores.hdfs.read_range(
@@ -226,11 +318,22 @@ fn run_job_inner(
                 (d, st)
             }
         };
-        // -- data plane: map + combine (the PJRT hot path)
-        let mut rng = task_rng(seed, &job, i as u64);
-        let mo = wl.map_split(&data, n_reduces, cfg, rt, &mut rng);
+        datas.push(data);
+        in_stages_per_split.push(in_stages);
+    }
 
-        // -- time plane
+    // -- data plane: map + combine (the hot path), parallel
+    let workers = effective_map_workers(cfg, splits.len());
+    let map_outs =
+        map_splits_parallel(wl, &datas, n_reduces, cfg, rt, seed, workers);
+    drop(datas); // split views released before the shuffle writes
+
+    // -- time plane, split order
+    for ((i, mo), in_stages) in
+        map_outs.into_iter().enumerate().zip(in_stages_per_split)
+    {
+        let node = map_allocs[i].node;
+        let split = &splits[i];
         let (slot, startup) = match cfg.platform {
             Platform::OpenWhisk => {
                 let inv = cluster.controller.invoke(&map_spec, node);
@@ -298,7 +401,10 @@ fn run_job_inner(
         };
         stages.push(Stage::Acquire(slot));
         stages.push(Stage::Delay(startup));
-        // -- data plane: gather this partition from every mapper
+        // -- data plane: gather this partition from every mapper.
+        // A miss (Ok(None)) is a mapper that emitted nothing; a store
+        // error is data loss and fails the job instead of silently
+        // reducing over a hole.
         let mut inputs = Vec::new();
         for i in 0..n_maps {
             let key = interm_key(&job, i, j);
@@ -308,13 +414,13 @@ fn run_job_inner(
                 cfg.intermediate_store,
                 node,
                 &key,
-            ) {
-                Ok((d, st)) => {
+            )? {
+                Some((d, st)) => {
                     reduce_in_bytes += d.len();
                     inputs.push(d);
                     stages.extend(st);
                 }
-                Err(_) => {} // mapper emitted nothing for this partition
+                None => {} // mapper emitted nothing for this partition
             }
         }
         let ro = wl.reduce_partition(j, n_reduces, &inputs, cfg, rt);

@@ -7,7 +7,7 @@ pub mod shuffle;
 pub mod types;
 pub mod workload;
 
-pub use driver::{run_job, stage_input, Cluster};
+pub use driver::{map_splits_parallel, run_job, stage_input, Cluster};
 pub use shuffle::{interm_key, output_key, Stores};
 pub use types::{
     CombinerMode, JobResult, PhaseStats, Platform, SerFormat, StoreKind,

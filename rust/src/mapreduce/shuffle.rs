@@ -56,7 +56,13 @@ impl Stores {
         }
     }
 
-    /// Read an intermediate partition to `node`; returns (data, stages).
+    /// Read an intermediate partition to `node`.
+    ///
+    /// `Ok(None)` means the key was never written — a mapper that
+    /// emitted nothing for this partition, which the driver must treat
+    /// as empty input. `Err` is a real store failure (e.g. an HDFS
+    /// file whose blocks are gone from every DataNode) and must
+    /// propagate; conflating the two silently drops corrupted data.
     pub fn read_intermediate(
         &mut self,
         engine: &mut Engine,
@@ -64,26 +70,31 @@ impl Stores {
         kind: StoreKind,
         node: NodeId,
         key: &str,
-    ) -> Result<(Payload, Vec<Stage>), String> {
+    ) -> Result<Option<(Payload, Vec<Stage>)>, String> {
         let tag = tags::INTERMEDIATE_READ;
         match kind {
-            StoreKind::S3 => {
-                let data = self
-                    .s3
-                    .get(key)
-                    .ok_or_else(|| format!("s3 miss {key}"))?;
-                let st =
-                    self.s3.get_stages(engine, topo, node, data.len(), tag);
-                Ok((data, st))
-            }
+            StoreKind::S3 => match self.s3.get(key) {
+                None => Ok(None),
+                Some(data) => {
+                    let st = self
+                        .s3
+                        .get_stages(engine, topo, node, data.len(), tag);
+                    Ok(Some((data, st)))
+                }
+            },
             StoreKind::Hdfs => {
+                if self.hdfs.namenode.stat(key).is_none() {
+                    return Ok(None); // never written: a miss, not a fault
+                }
+                // Committed in the namespace: any read failure now is
+                // data loss/corruption and must surface.
                 let (data, st, _, _) = self.hdfs.read(topo, node, key, tag)?;
-                Ok((data, st))
+                Ok(Some((data, st)))
             }
-            StoreKind::Igfs => self
-                .igfs
-                .get(topo, node, key, tag)
-                .ok_or_else(|| format!("igfs miss {key}")),
+            // IGFS demotes evicted entries to the backing tier instead
+            // of dropping them, so a cache miss can only mean the key
+            // was never stored.
+            StoreKind::Igfs => Ok(self.igfs.get(topo, node, key, tag)),
         }
     }
 
@@ -144,7 +155,8 @@ mod tests {
             e.spawn("w", st);
             let (data, st) = s
                 .read_intermediate(&mut e, &t, kind, NodeId(1), &key)
-                .unwrap();
+                .unwrap()
+                .expect("key just written");
             e.spawn("r", st);
             assert_eq!(data.len(), 100, "{kind:?}");
             assert_eq!(data.bytes().unwrap()[0], 7);
@@ -158,13 +170,35 @@ mod tests {
     }
 
     #[test]
-    fn missing_key_errors() {
+    fn missing_key_is_a_miss_not_an_error() {
         let (mut e, t, mut s) = setup();
         for kind in [StoreKind::S3, StoreKind::Hdfs, StoreKind::Igfs] {
-            assert!(s
-                .read_intermediate(&mut e, &t, kind, NodeId(0), "nope")
-                .is_err());
+            assert!(matches!(
+                s.read_intermediate(&mut e, &t, kind, NodeId(0), "nope"),
+                Ok(None)
+            ), "{kind:?}");
         }
+    }
+
+    #[test]
+    fn lost_hdfs_blocks_surface_as_error() {
+        // A key committed in the namespace whose blocks vanished from
+        // every DataNode is corruption, not an empty partition.
+        let (mut e, t, mut s) = setup();
+        s.write_intermediate(&mut e, &t, StoreKind::Hdfs, NodeId(0),
+                             "doomed", Payload::real(vec![1; 64]))
+            .unwrap();
+        let blocks: Vec<_> = s.hdfs.namenode.stat("doomed").unwrap()
+            .blocks.iter().map(|b| b.id).collect();
+        for dn in s.hdfs.datanodes.values_mut() {
+            for id in &blocks {
+                dn.drop_block(*id);
+            }
+        }
+        assert!(s
+            .read_intermediate(&mut e, &t, StoreKind::Hdfs, NodeId(0),
+                               "doomed")
+            .is_err());
     }
 
     #[test]

@@ -74,6 +74,11 @@ pub struct SystemConfig {
     /// Materialize real intermediate payloads only below this total
     /// input size (exact byte accounting always happens).
     pub materialize_cap: u64,
+    /// Data-plane map workers (host threads running `map_split`):
+    /// 0 = auto (available parallelism). Any value produces output
+    /// byte-identical to serial — see the determinism contract in
+    /// `driver::map_splits_parallel`.
+    pub map_workers: usize,
 }
 
 impl SystemConfig {
@@ -94,6 +99,7 @@ impl SystemConfig {
             igfs_capacity: 0,
             prewarm: false,
             materialize_cap: 32 * MIB,
+            map_workers: 0,
         }
     }
 
@@ -114,6 +120,7 @@ impl SystemConfig {
             igfs_capacity: 64 * GIB,
             prewarm: true,
             materialize_cap: 32 * MIB,
+            map_workers: 0,
         }
     }
 
@@ -172,6 +179,7 @@ impl SystemConfig {
             igfs_capacity: 0,
             prewarm: true,
             materialize_cap: 32 * MIB,
+            map_workers: 0,
         }
     }
 }

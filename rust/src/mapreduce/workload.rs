@@ -33,7 +33,11 @@ pub struct ReduceOutput {
     pub records: u64,
 }
 
-pub trait Workload {
+/// `Sync` is a supertrait so the driver's data-plane worker pool can
+/// share one workload across map threads (the workloads are immutable
+/// lookup tables + pure functions; all mutation lives in `RtEngine`,
+/// which each worker owns privately).
+pub trait Workload: Sync {
     fn name(&self) -> &str;
 
     /// Generate (or account for) the job's input and stage it as a

@@ -14,6 +14,12 @@ use std::time::Instant;
 use super::manifest::Manifest;
 use super::oracle::{self, CombineScheme};
 
+// Without the `pjrt` feature the real `xla` crate is replaced by a
+// same-shape stub whose entry points fail at runtime, so `load` falls
+// back to the oracle exactly as it does when artifacts are missing.
+#[cfg(not(feature = "pjrt"))]
+use super::xla_stub as xla;
+
 /// Execution statistics for §Perf.
 #[derive(Clone, Debug, Default)]
 pub struct RtStats {
@@ -27,20 +33,33 @@ enum Exec {
     Oracle,
 }
 
+/// Reusable batch-staging buffers for the combine hot path. The mask
+/// invariant is "all ones": callers zero only the tail of a partial
+/// final chunk and restore it before handing the scratch back, so the
+/// per-batch mask rewrite disappears from full chunks entirely.
+pub struct BatchScratch {
+    pub batch: Vec<i32>,
+    pub mask: Vec<f32>,
+}
+
 /// The runtime engine. One compiled executable per artifact.
 pub struct RtEngine {
     pub manifest: Manifest,
     client: Option<xla::PjRtClient>,
     execs: HashMap<String, Exec>,
     pub stats: RtStats,
+    scratch: Option<BatchScratch>,
 }
 
 impl RtEngine {
     /// Load + compile everything in `dir`; `None` dir → oracle mode.
+    /// Without the `pjrt` feature the manifest constants still load
+    /// (shapes must match the artifacts) but compute stays on the
+    /// oracle — the stub client is never constructed.
     pub fn load(dir: Option<&Path>) -> Result<RtEngine, String> {
         let (manifest, use_pjrt) = match dir {
             Some(d) if d.join("manifest.json").exists() => {
-                (Manifest::load(d)?, true)
+                (Manifest::load(d)?, cfg!(feature = "pjrt"))
             }
             _ => (default_manifest(), false),
         };
@@ -61,13 +80,54 @@ impl RtEngine {
             }
             Some(client)
         } else {
-            for name in ["wordcount_combine", "wordcount_combine_small",
-                         "grep_combine", "agg_combine"] {
-                execs.insert(name.to_string(), Exec::Oracle);
-            }
+            execs = oracle_execs();
             None
         };
-        Ok(RtEngine { manifest, client, execs, stats: RtStats::default() })
+        Ok(RtEngine {
+            manifest,
+            client,
+            execs,
+            stats: RtStats::default(),
+            scratch: None,
+        })
+    }
+
+    /// A fresh oracle-mode engine sharing `manifest`'s constants — the
+    /// per-worker compute instance of the parallel map data plane
+    /// (see DESIGN note in `mapreduce::driver`). Oracle and PJRT
+    /// produce identical integer-valued counts, so outputs stay
+    /// bit-identical to the serial path.
+    pub fn oracle_from(manifest: Manifest) -> RtEngine {
+        RtEngine {
+            manifest,
+            client: None,
+            execs: oracle_execs(),
+            stats: RtStats::default(),
+            scratch: None,
+        }
+    }
+
+    /// Fold a worker engine's stats into this (job-level) engine.
+    pub fn absorb_stats(&mut self, other: &RtStats) {
+        self.stats.batches += other.batches;
+        self.stats.pjrt_ns += other.pjrt_ns;
+        self.stats.oracle_ns += other.oracle_ns;
+    }
+
+    /// Take the reusable batch scratch (sized to `batch_size`, mask all
+    /// ones). Pair with `put_batch_scratch` so the buffers survive
+    /// across `combine_hashes` calls instead of being reallocated per
+    /// split.
+    pub fn take_batch_scratch(&mut self) -> BatchScratch {
+        let n = self.batch_size();
+        match self.scratch.take() {
+            Some(s) if s.batch.len() == n => s,
+            _ => BatchScratch { batch: vec![0; n], mask: vec![1.0; n] },
+        }
+    }
+
+    pub fn put_batch_scratch(&mut self, s: BatchScratch) {
+        self.scratch = Some(s);
     }
 
     pub fn is_pjrt(&self) -> bool {
@@ -221,6 +281,16 @@ impl RtEngine {
             (self.stats.pjrt_ns + self.stats.oracle_ns) / self.stats.batches
         }
     }
+}
+
+/// The oracle-mode executable registry (single source for `load` and
+/// `oracle_from` — add new kernel names here only).
+fn oracle_execs() -> HashMap<String, Exec> {
+    ["wordcount_combine", "wordcount_combine_small", "grep_combine",
+     "agg_combine"]
+        .into_iter()
+        .map(|name| (name.to_string(), Exec::Oracle))
+        .collect()
 }
 
 /// Manifest used in oracle mode (same constants as model.py).

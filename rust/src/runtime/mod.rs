@@ -5,7 +5,9 @@
 pub mod engine;
 pub mod manifest;
 pub mod oracle;
+#[cfg(not(feature = "pjrt"))]
+mod xla_stub;
 
-pub use engine::{default_artifacts_dir, RtEngine, RtStats};
+pub use engine::{default_artifacts_dir, BatchScratch, RtEngine, RtStats};
 pub use manifest::{ArtifactMeta, Manifest};
 pub use oracle::CombineScheme;

@@ -1,0 +1,97 @@
+//! Compile-time stand-in for the `xla` crate, used when the `pjrt`
+//! feature is off (the offline build has no PJRT plugin). The API
+//! surface mirrors exactly what `engine.rs` touches; every runtime
+//! entry point fails, so `RtEngine::load` falls back to the oracle —
+//! same behavior the engine already has when `artifacts/` is absent.
+//!
+//! To run compiled HLO through PJRT, add the real `xla` crate under
+//! `[dependencies]` in rust/Cargo.toml (it is intentionally not
+//! declared — see the manifest header) and build with
+//! `--features pjrt`.
+
+#![allow(dead_code)]
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} (built without the `pjrt` feature)", self.0)
+    }
+}
+
+fn unavailable<T>(what: &str) -> Result<T, Error> {
+    Err(Error(format!("{what}: PJRT unavailable")))
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(
+        &self,
+        _inputs: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_v: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unavailable("Literal::to_vec")
+    }
+}

@@ -9,4 +9,4 @@ pub mod payload;
 
 pub use device::Device;
 pub use media::{Access, Dir, MediaSpec, OpClass};
-pub use payload::Payload;
+pub use payload::{Payload, PayloadCursor};

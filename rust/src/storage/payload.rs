@@ -2,18 +2,64 @@
 //! whole stack moves actual data through actual code), or an exact byte
 //! *accounting* for multi-GB sweeps (same code path, no materialization).
 //! The two modes are cross-validated in tests (DESIGN.md §2).
+//!
+//! Real payloads are zero-copy `Arc`-backed views: `slice()` is an O(1)
+//! refcount bump, and `concat()` assembles a chunked view instead of
+//! memcpying parts into a fresh buffer. Consumers that can tolerate
+//! discontiguous data walk `chunks()` or a [`PayloadCursor`]; `gather()`
+//! is the only place a copy ever happens.
 
+use std::borrow::Cow;
 use std::sync::Arc;
+
+/// A borrowed window into one shared buffer. Cloning bumps the
+/// refcount; the underlying bytes are never copied.
+#[derive(Clone, Debug)]
+pub struct View {
+    buf: Arc<Vec<u8>>,
+    off: usize,
+    len: usize,
+}
+
+impl View {
+    fn full(buf: Arc<Vec<u8>>) -> View {
+        let len = buf.len();
+        View { buf, off: 0, len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf[self.off..self.off + self.len]
+    }
+
+    /// Sub-view (clamped): O(1), shares the backing buffer.
+    fn subview(&self, start: usize, len: usize) -> View {
+        let start = start.min(self.len);
+        let end = start.saturating_add(len).min(self.len);
+        View { buf: Arc::clone(&self.buf), off: self.off + start, len: end - start }
+    }
+}
 
 #[derive(Clone, Debug)]
 pub enum Payload {
-    Real(Arc<Vec<u8>>),
+    /// One contiguous Arc-backed view.
+    Real(View),
+    /// ≥2 non-empty views, possibly over different buffers — the
+    /// zero-copy result of `concat` (e.g. a multi-block HDFS read).
+    Chunked { parts: Vec<View>, len: u64 },
     Synthetic { len: u64 },
 }
 
 impl Payload {
     pub fn real(bytes: Vec<u8>) -> Payload {
-        Payload::Real(Arc::new(bytes))
+        Payload::Real(View::full(Arc::new(bytes)))
     }
 
     pub fn synthetic(len: u64) -> Payload {
@@ -22,7 +68,8 @@ impl Payload {
 
     pub fn len(&self) -> u64 {
         match self {
-            Payload::Real(b) => b.len() as u64,
+            Payload::Real(v) => v.len() as u64,
+            Payload::Chunked { len, .. } => *len,
             Payload::Synthetic { len } => *len,
         }
     }
@@ -32,41 +79,218 @@ impl Payload {
     }
 
     pub fn is_real(&self) -> bool {
-        matches!(self, Payload::Real(_))
+        matches!(self, Payload::Real(_) | Payload::Chunked { .. })
     }
 
-    /// Borrow the real bytes; None for synthetic payloads.
+    /// Number of contiguous runs backing this payload (0 for synthetic).
+    pub fn n_chunks(&self) -> usize {
+        match self {
+            Payload::Real(_) => 1,
+            Payload::Chunked { parts, .. } => parts.len(),
+            Payload::Synthetic { .. } => 0,
+        }
+    }
+
+    /// Borrow the real bytes when contiguous; None for chunked or
+    /// synthetic payloads (use `chunks()`/`contiguous()` for those).
     pub fn bytes(&self) -> Option<&[u8]> {
         match self {
-            Payload::Real(b) => Some(b),
+            Payload::Real(v) => Some(v.as_slice()),
+            _ => None,
+        }
+    }
+
+    /// Real bytes as one run: borrowed (zero-copy) when contiguous,
+    /// gathered into a fresh buffer only when chunked. None = synthetic.
+    pub fn contiguous(&self) -> Option<Cow<'_, [u8]>> {
+        match self {
+            Payload::Real(v) => Some(Cow::Borrowed(v.as_slice())),
+            Payload::Chunked { .. } => self.gather().map(Cow::Owned),
             Payload::Synthetic { .. } => None,
         }
     }
 
-    /// Concatenate payloads; result is synthetic if any part is.
-    pub fn concat(parts: &[Payload]) -> Payload {
-        if parts.iter().all(|p| p.is_real()) {
-            let total: usize = parts.iter().map(|p| p.len() as usize).sum();
-            let mut out = Vec::with_capacity(total);
-            for p in parts {
-                out.extend_from_slice(p.bytes().unwrap());
+    /// Materialize real bytes into an owned buffer; None for synthetic.
+    pub fn gather(&self) -> Option<Vec<u8>> {
+        match self {
+            Payload::Real(v) => Some(v.as_slice().to_vec()),
+            Payload::Chunked { parts, len } => {
+                let mut out = Vec::with_capacity(*len as usize);
+                for p in parts {
+                    out.extend_from_slice(p.as_slice());
+                }
+                Some(out)
             }
-            Payload::real(out)
-        } else {
-            Payload::synthetic(parts.iter().map(|p| p.len()).sum())
+            Payload::Synthetic { .. } => None,
         }
     }
 
-    /// Slice by byte range (clamped); synthetic slices stay synthetic.
-    pub fn slice(&self, start: u64, len: u64) -> Payload {
-        let end = (start + len).min(self.len());
-        let start = start.min(self.len());
-        match self {
-            Payload::Real(b) => {
-                Payload::real(b[start as usize..end as usize].to_vec())
-            }
-            Payload::Synthetic { .. } => Payload::synthetic(end - start),
+    /// Iterate the contiguous runs (empty iterator for synthetic).
+    pub fn chunks(&self) -> impl Iterator<Item = &[u8]> + '_ {
+        let parts: &[View] = match self {
+            Payload::Real(v) => std::slice::from_ref(v),
+            Payload::Chunked { parts, .. } => parts,
+            Payload::Synthetic { .. } => &[],
+        };
+        parts.iter().map(|v| v.as_slice())
+    }
+
+    /// Record-oriented reader over the chunk sequence (real payloads).
+    pub fn cursor(&self) -> PayloadCursor<'_> {
+        PayloadCursor::new(self)
+    }
+
+    /// Concatenate payloads *by reference*: no byte is copied. Result
+    /// is synthetic if any part is; single-run results collapse to
+    /// `Real`, multi-run to `Chunked`.
+    pub fn concat(parts: &[Payload]) -> Payload {
+        if !parts.iter().all(|p| p.is_real()) {
+            return Payload::synthetic(parts.iter().map(|p| p.len()).sum());
         }
+        let mut views: Vec<View> = Vec::new();
+        for p in parts {
+            match p {
+                Payload::Real(v) if !v.is_empty() => views.push(v.clone()),
+                Payload::Chunked { parts, .. } => {
+                    views.extend(parts.iter().cloned())
+                }
+                _ => {}
+            }
+        }
+        Payload::from_views(views)
+    }
+
+    fn from_views(views: Vec<View>) -> Payload {
+        let mut views: Vec<View> =
+            views.into_iter().filter(|v| !v.is_empty()).collect();
+        match views.len() {
+            0 => Payload::real(Vec::new()),
+            1 => Payload::Real(views.pop().unwrap()),
+            _ => {
+                let len = views.iter().map(|v| v.len() as u64).sum();
+                Payload::Chunked { parts: views, len }
+            }
+        }
+    }
+
+    /// Slice by byte range (clamped); O(runs) refcount bumps, zero
+    /// copies. Synthetic slices stay synthetic.
+    pub fn slice(&self, start: u64, len: u64) -> Payload {
+        let total = self.len();
+        let start = start.min(total);
+        let end = start.saturating_add(len).min(total);
+        let want = end - start;
+        match self {
+            Payload::Real(v) => {
+                Payload::Real(v.subview(start as usize, want as usize))
+            }
+            Payload::Chunked { parts, .. } => {
+                let mut views = Vec::new();
+                let (mut skip, mut need) = (start as usize, want as usize);
+                for p in parts {
+                    if need == 0 {
+                        break;
+                    }
+                    if skip >= p.len() {
+                        skip -= p.len();
+                        continue;
+                    }
+                    let take = need.min(p.len() - skip);
+                    views.push(p.subview(skip, take));
+                    skip = 0;
+                    need -= take;
+                }
+                Payload::from_views(views)
+            }
+            Payload::Synthetic { .. } => Payload::synthetic(want),
+        }
+    }
+}
+
+/// Sequential reader across a payload's chunk sequence. `read` hands
+/// back borrowed slices whenever the requested run is contiguous and
+/// copies only the (rare) records that straddle a chunk boundary —
+/// reducers parse multi-mapper input without a concatenated buffer.
+pub struct PayloadCursor<'a> {
+    parts: Vec<&'a [u8]>,
+    part: usize,
+    off: usize,
+    remaining: usize,
+}
+
+impl<'a> PayloadCursor<'a> {
+    fn new(p: &'a Payload) -> PayloadCursor<'a> {
+        let parts: Vec<&'a [u8]> =
+            p.chunks().filter(|c| !c.is_empty()).collect();
+        let remaining = parts.iter().map(|c| c.len()).sum();
+        PayloadCursor { parts, part: 0, off: 0, remaining }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.remaining
+    }
+
+    fn advance(&mut self, mut n: usize) {
+        self.remaining -= n;
+        while n > 0 {
+            let left = self.parts[self.part].len() - self.off;
+            if n < left {
+                self.off += n;
+                return;
+            }
+            n -= left;
+            self.part += 1;
+            self.off = 0;
+        }
+    }
+
+    /// Consume `n` bytes; None if fewer remain. Borrowed when the run
+    /// lies within one chunk, owned only when it straddles a boundary.
+    pub fn read(&mut self, n: usize) -> Option<Cow<'a, [u8]>> {
+        if n > self.remaining {
+            return None;
+        }
+        if n == 0 {
+            return Some(Cow::Borrowed(&[]));
+        }
+        let cur = self.parts[self.part];
+        if self.off + n <= cur.len() {
+            let s = &cur[self.off..self.off + n];
+            self.advance(n);
+            return Some(Cow::Borrowed(s));
+        }
+        let mut out = Vec::with_capacity(n);
+        let mut need = n;
+        while need > 0 {
+            let cur = self.parts[self.part];
+            let take = need.min(cur.len() - self.off);
+            out.extend_from_slice(&cur[self.off..self.off + take]);
+            self.advance(take);
+            need -= take;
+        }
+        Some(Cow::Owned(out))
+    }
+
+    /// Skip `n` bytes; false (cursor exhausted) if fewer remain.
+    pub fn skip(&mut self, n: usize) -> bool {
+        if n > self.remaining {
+            self.remaining = 0;
+            self.part = self.parts.len();
+            self.off = 0;
+            return false;
+        }
+        self.advance(n);
+        true
+    }
+
+    pub fn read_u16_le(&mut self) -> Option<u16> {
+        self.read(2)
+            .map(|b| u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn read_u32_le(&mut self) -> Option<u32> {
+        self.read(4)
+            .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 }
 
@@ -79,6 +303,7 @@ mod tests {
         let p = Payload::real(vec![1, 2, 3, 4]);
         assert_eq!(p.len(), 4);
         assert_eq!(p.bytes(), Some(&[1u8, 2, 3, 4][..]));
+        assert_eq!(p.gather(), Some(vec![1, 2, 3, 4]));
     }
 
     #[test]
@@ -86,6 +311,8 @@ mod tests {
         let p = Payload::synthetic(1 << 40);
         assert_eq!(p.len(), 1 << 40);
         assert!(p.bytes().is_none());
+        assert!(p.gather().is_none());
+        assert_eq!(p.chunks().count(), 0);
     }
 
     #[test]
@@ -100,7 +327,8 @@ mod tests {
     fn concat_real_stays_real() {
         let c = Payload::concat(&[Payload::real(vec![1, 2]),
                                   Payload::real(vec![3])]);
-        assert_eq!(c.bytes(), Some(&[1u8, 2, 3][..]));
+        assert!(c.is_real());
+        assert_eq!(c.gather(), Some(vec![1, 2, 3]));
     }
 
     #[test]
@@ -109,5 +337,103 @@ mod tests {
         assert_eq!(p.slice(3, 10).bytes(), Some(&[3u8, 4][..]));
         assert_eq!(p.slice(9, 1).len(), 0);
         assert_eq!(Payload::synthetic(100).slice(90, 20).len(), 10);
+    }
+
+    #[test]
+    fn slice_is_zero_copy_alias() {
+        // A slice shares the parent's buffer: no allocation of the
+        // payload bytes, just a refcount bump.
+        let p = Payload::real((0..100u8).collect());
+        let s = p.slice(10, 20);
+        let (pb, sb) = (p.bytes().unwrap(), s.bytes().unwrap());
+        assert_eq!(sb, &pb[10..30]);
+        assert!(std::ptr::eq(&pb[10], &sb[0]), "slice must alias parent");
+    }
+
+    #[test]
+    fn slice_of_slice_composes() {
+        let p = Payload::real((0..50u8).collect());
+        let a = p.slice(10, 30); // bytes 10..40
+        let b = a.slice(5, 100); // clamped: bytes 15..40
+        assert_eq!(b.bytes(), Some(&(15..40u8).collect::<Vec<_>>()[..]));
+        // Still aliasing the original buffer.
+        assert!(std::ptr::eq(&p.bytes().unwrap()[15], &b.bytes().unwrap()[0]));
+    }
+
+    #[test]
+    fn concat_of_views_roundtrips() {
+        let base = Payload::real((0..40u8).collect());
+        let c = Payload::concat(&[
+            base.slice(0, 10),
+            base.slice(20, 10),
+            Payload::real(vec![9; 3]),
+        ]);
+        assert_eq!(c.len(), 23);
+        assert_eq!(c.n_chunks(), 3);
+        let mut want: Vec<u8> = (0..10u8).collect();
+        want.extend(20..30u8);
+        want.extend([9; 3]);
+        assert_eq!(c.gather(), Some(want.clone()));
+        assert_eq!(c.contiguous().unwrap().into_owned(), want);
+        // Chunked concat is a view assembly: chunk 0 aliases base.
+        let first = c.chunks().next().unwrap();
+        assert!(std::ptr::eq(&base.bytes().unwrap()[0], &first[0]));
+    }
+
+    #[test]
+    fn concat_flattens_and_collapses() {
+        let inner = Payload::concat(&[Payload::real(vec![1, 2]),
+                                      Payload::real(vec![3])]);
+        let outer = Payload::concat(&[inner, Payload::real(vec![4])]);
+        assert_eq!(outer.n_chunks(), 3);
+        assert_eq!(outer.gather(), Some(vec![1, 2, 3, 4]));
+        // Single non-empty part collapses back to contiguous Real.
+        let one = Payload::concat(&[Payload::real(Vec::new()),
+                                    Payload::real(vec![7, 8])]);
+        assert_eq!(one.n_chunks(), 1);
+        assert_eq!(one.bytes(), Some(&[7u8, 8][..]));
+    }
+
+    #[test]
+    fn chunked_slice_clamps_and_aliases() {
+        let c = Payload::concat(&[Payload::real(vec![0, 1, 2, 3]),
+                                  Payload::real(vec![4, 5, 6, 7])]);
+        assert_eq!(c.slice(2, 4).gather(), Some(vec![2, 3, 4, 5]));
+        assert_eq!(c.slice(6, 100).gather(), Some(vec![6, 7]));
+        assert_eq!(c.slice(100, 5).len(), 0);
+        // Slice within one run collapses to contiguous.
+        assert_eq!(c.slice(4, 4).bytes(), Some(&[4u8, 5, 6, 7][..]));
+    }
+
+    #[test]
+    fn cursor_reads_across_boundaries() {
+        let c = Payload::concat(&[Payload::real(vec![0, 1, 2]),
+                                  Payload::real(vec![3, 4, 5, 6])]);
+        let mut cur = c.cursor();
+        assert_eq!(cur.remaining(), 7);
+        // In-chunk read borrows...
+        match cur.read(2).unwrap() {
+            Cow::Borrowed(s) => assert_eq!(s, &[0, 1]),
+            Cow::Owned(_) => panic!("in-chunk read must borrow"),
+        }
+        // ...straddling read copies exactly the straddled record.
+        match cur.read(3).unwrap() {
+            Cow::Owned(v) => assert_eq!(v, vec![2, 3, 4]),
+            Cow::Borrowed(_) => panic!("straddling read must gather"),
+        }
+        assert!(cur.skip(1));
+        assert_eq!(cur.read_u16_le(), None); // only 1 byte left
+        assert_eq!(cur.read(1).unwrap().as_ref(), &[6]);
+        assert!(cur.read(1).is_none());
+        assert!(!cur.skip(1));
+    }
+
+    #[test]
+    fn cursor_helpers() {
+        let p = Payload::real(vec![0x34, 0x12, 0x78, 0x56, 0x00, 0x00]);
+        let mut cur = p.cursor();
+        assert_eq!(cur.read_u16_le(), Some(0x1234));
+        assert_eq!(cur.read_u32_le(), Some(0x5678));
+        assert_eq!(cur.remaining(), 0);
     }
 }

@@ -4,8 +4,11 @@
 //! mean/p50/p99/min. Bench binaries (`benches/*.rs`, `harness = false`)
 //! use this plus `util::table` to print the paper's tables/figures.
 
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::Instant;
 
+use super::json::Json;
 use super::stats::Percentiles;
 
 #[derive(Clone, Debug)]
@@ -24,6 +27,16 @@ impl BenchResult {
             return 0.0;
         }
         items_per_iter / (self.mean_ns / 1e9)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("iters".into(), Json::Num(self.iters as f64));
+        m.insert("mean_ns".into(), Json::Num(self.mean_ns));
+        m.insert("p50_ns".into(), Json::Num(self.p50_ns));
+        m.insert("p99_ns".into(), Json::Num(self.p99_ns));
+        m.insert("min_ns".into(), Json::Num(self.min_ns));
+        Json::Obj(m)
     }
 
     pub fn summary(&self) -> String {
@@ -93,6 +106,28 @@ impl Bench {
     }
 }
 
+/// Write a machine-readable bench report: per-result timing stats plus
+/// free-form derived metrics (MB/s, tokens/s, speedups). Feeds the
+/// repo's perf trajectory (`BENCH_*.json` files read by PERF.md).
+pub fn write_report(
+    path: &Path,
+    results: &[&BenchResult],
+    metrics: &[(&str, f64)],
+) -> std::io::Result<()> {
+    let mut res = BTreeMap::new();
+    for r in results {
+        res.insert(r.name.clone(), r.to_json());
+    }
+    let mut met = BTreeMap::new();
+    for (k, v) in metrics {
+        met.insert((*k).to_string(), Json::Num(*v));
+    }
+    let mut top = BTreeMap::new();
+    top.insert("results".into(), Json::Obj(res));
+    top.insert("metrics".into(), Json::Obj(met));
+    std::fs::write(path, Json::Obj(top).to_string())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,6 +154,34 @@ mod tests {
         assert!(fmt_ns(5e3).ends_with("µs"));
         assert!(fmt_ns(5e6).ends_with("ms"));
         assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+
+    #[test]
+    fn report_roundtrips_as_json() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 3,
+            mean_ns: 1.5e6,
+            p50_ns: 1.4e6,
+            p99_ns: 2.0e6,
+            min_ns: 1.2e6,
+        };
+        let dir = std::env::temp_dir().join("marvel_bench_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("r.json");
+        write_report(&path, &[&r], &[("mb_per_s", 123.5)]).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap())
+            .unwrap();
+        assert_eq!(
+            j.get("results").unwrap().get("x").unwrap()
+                .get("iters").unwrap().as_u64(),
+            Some(3)
+        );
+        assert_eq!(
+            j.get("metrics").unwrap().get("mb_per_s").unwrap().as_f64(),
+            Some(123.5)
+        );
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

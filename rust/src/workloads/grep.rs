@@ -142,10 +142,10 @@ impl Workload for Grep {
         rt: &mut RtEngine,
         _rng: &mut Rng,
     ) -> MapOutput {
-        match split.bytes() {
+        match split.contiguous() {
             Some(text) => match cfg.combiner {
                 CombinerMode::Kernel => {
-                    let (counts, _, tokens) = self.combine_text(text, rt);
+                    let (counts, _, tokens) = self.combine_text(&text, rt);
                     let b = self.scheme.buckets;
                     // Scheme partitions fold onto reducers via p % parts.
                     let partitions = (0..parts)
@@ -173,8 +173,10 @@ impl Workload for Grep {
                     MapOutput { partitions, records: tokens }
                 }
                 CombinerMode::None => {
-                    // Emit each *matching* word as a raw record.
-                    let ov = cfg.ser.record_overhead() as usize;
+                    // Emit each *matching* word as a raw record (pad
+                    // clamped: overhead < 2 must not underflow).
+                    let pad = (cfg.ser.record_overhead() as usize)
+                        .saturating_sub(2);
                     let mut parts_bytes: Vec<Vec<u8>> = vec![Vec::new(); parts];
                     let mut tokens = 0u64;
                     for w in
@@ -189,7 +191,7 @@ impl Workload for Grep {
                         let buf = &mut parts_bytes[j];
                         buf.extend_from_slice(&(w.len() as u16).to_le_bytes());
                         buf.extend_from_slice(w);
-                        buf.resize(buf.len() + ov - 2, b'x');
+                        buf.resize(buf.len() + pad, b'x');
                     }
                     MapOutput {
                         partitions: parts_bytes
@@ -265,61 +267,20 @@ impl Workload for Grep {
         if inputs.iter().all(|p| p.is_real()) {
             match cfg.combiner {
                 CombinerMode::Kernel => {
-                    let mut merged =
-                        std::collections::BTreeMap::<u32, u64>::new();
-                    for p in inputs {
-                        for rec in p.bytes().unwrap().chunks_exact(8) {
-                            let b = u32::from_le_bytes(
-                                rec[0..4].try_into().unwrap(),
-                            );
-                            let c = u32::from_le_bytes(
-                                rec[4..8].try_into().unwrap(),
-                            );
-                            *merged.entry(b).or_default() += c as u64;
-                        }
-                    }
-                    let mut out = Vec::with_capacity(merged.len() * 12);
-                    for (b, c) in &merged {
-                        out.extend_from_slice(&b.to_le_bytes());
-                        out.extend_from_slice(&c.to_le_bytes());
-                    }
-                    ReduceOutput {
-                        output: Payload::real(out),
-                        records: merged.len() as u64,
-                    }
+                    let (out, records) =
+                        crate::workloads::reduce_aggregates(inputs);
+                    ReduceOutput { output: Payload::real(out), records }
                 }
                 CombinerMode::None => {
-                    let ov = cfg.ser.record_overhead() as usize;
-                    let mut counts =
-                        std::collections::HashMap::<Vec<u8>, u64>::new();
-                    for p in inputs {
-                        let b = p.bytes().unwrap();
-                        let mut i = 0;
-                        while i + 2 <= b.len() {
-                            let len = u16::from_le_bytes(
-                                b[i..i + 2].try_into().unwrap(),
-                            ) as usize;
-                            *counts
-                                .entry(b[i + 2..i + 2 + len].to_vec())
-                                .or_default() += 1;
-                            i += 2 + len + ov - 2;
-                        }
-                    }
-                    let mut keys: Vec<_> = counts.keys().cloned().collect();
-                    keys.sort();
-                    let mut out = Vec::new();
-                    for w in &keys {
-                        out.extend_from_slice(w);
-                        out.push(b'\t');
-                        out.extend_from_slice(
-                            counts[w].to_string().as_bytes(),
+                    // Borrowed-slice keying, chunk-aware (shared with
+                    // wordcount).
+                    let pad = (cfg.ser.record_overhead() as usize)
+                        .saturating_sub(2);
+                    let (out, records) =
+                        crate::workloads::reduce_raw_word_counts(
+                            inputs, pad,
                         );
-                        out.push(b'\n');
-                    }
-                    ReduceOutput {
-                        output: Payload::real(out),
-                        records: keys.len() as u64,
-                    }
+                    ReduceOutput { output: Payload::real(out), records }
                 }
             }
         } else {

@@ -10,3 +10,144 @@ pub use corpus::Corpus;
 pub use grep::Grep;
 pub use queries::{AggregationQuery, JoinQuery, ScanQuery};
 pub use wordcount::WordCount;
+
+use std::borrow::Cow;
+use std::collections::{BTreeMap, HashMap};
+
+use crate::storage::Payload;
+
+/// Reduce-side merge of kernel aggregates: `(cell: u32, count: u32)`
+/// 8-byte records from every mapper payload, element-wise summed and
+/// re-serialized as sorted `(cell: u32, count: u64)` 12-byte rows.
+/// Walks each payload's chunk sequence in place — no concatenated
+/// staging buffer. Returns (output bytes, distinct cells).
+pub(crate) fn reduce_aggregates(inputs: &[Payload]) -> (Vec<u8>, u64) {
+    let mut merged = BTreeMap::<u32, u64>::new();
+    for p in inputs {
+        let mut cur = p.cursor();
+        while cur.remaining() >= 8 {
+            let cell = cur.read_u32_le().unwrap();
+            let count = cur.read_u32_le().unwrap();
+            *merged.entry(cell).or_default() += count as u64;
+        }
+    }
+    let mut out = Vec::with_capacity(merged.len() * 12);
+    for (cell, count) in &merged {
+        out.extend_from_slice(&cell.to_le_bytes());
+        out.extend_from_slice(&count.to_le_bytes());
+    }
+    let records = merged.len() as u64;
+    (out, records)
+}
+
+/// Reduce-side count of raw `<u16 len><word><pad>` shuffle records
+/// across mapper payloads, serialized as sorted `word\tcount\n`
+/// lines. Keys are borrowed slices into the payloads; only records
+/// straddling a chunk boundary are copied (into the `owned` side
+/// map, merged before serialization). `pad` is the record overhead
+/// beyond the 2-byte length (already clamped by callers). Returns
+/// (output bytes, distinct words).
+pub(crate) fn reduce_raw_word_counts(
+    inputs: &[Payload],
+    pad: usize,
+) -> (Vec<u8>, u64) {
+    let mut borrowed = HashMap::<&[u8], u64>::new();
+    let mut owned = HashMap::<Vec<u8>, u64>::new();
+    for p in inputs {
+        let mut cur = p.cursor();
+        while let Some(len) = cur.read_u16_le() {
+            let Some(w) = cur.read(len as usize) else {
+                break; // truncated trailing record
+            };
+            match w {
+                Cow::Borrowed(w) => *borrowed.entry(w).or_default() += 1,
+                Cow::Owned(v) => *owned.entry(v).or_default() += 1,
+            }
+            if !cur.skip(pad) {
+                break;
+            }
+        }
+    }
+    let mut merged: Vec<(&[u8], u64)> =
+        Vec::with_capacity(borrowed.len() + owned.len());
+    for (w, c) in &borrowed {
+        let extra = owned.get(*w).copied().unwrap_or(0);
+        merged.push((*w, c + extra));
+    }
+    for (w, c) in &owned {
+        if !borrowed.contains_key(w.as_slice()) {
+            merged.push((w.as_slice(), *c));
+        }
+    }
+    merged.sort_unstable_by(|a, b| a.0.cmp(b.0));
+    let cap: usize = merged.iter().map(|(w, _)| w.len() + 8).sum();
+    let mut out = Vec::with_capacity(cap);
+    for (w, c) in &merged {
+        out.extend_from_slice(w);
+        out.push(b'\t');
+        out.extend_from_slice(c.to_string().as_bytes());
+        out.push(b'\n');
+    }
+    let records = merged.len() as u64;
+    (out, records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(words: &[&[u8]], pad: usize) -> Vec<u8> {
+        let mut out = Vec::new();
+        for w in words {
+            out.extend_from_slice(&(w.len() as u16).to_le_bytes());
+            out.extend_from_slice(w);
+            out.resize(out.len() + pad, b'x');
+        }
+        out
+    }
+
+    #[test]
+    fn raw_counts_merge_borrowed_and_straddling_records() {
+        let pad = 3;
+        let a = frame(&[b"cat", b"dog", b"cat"], pad);
+        // Split `b` mid-record so "dog" straddles a chunk boundary and
+        // takes the owned path — it must still merge with the
+        // borrowed "dog" from `a`.
+        let b = frame(&[b"dog", b"emu"], pad);
+        let chunked = Payload::concat(&[
+            Payload::real(b[..3].to_vec()),
+            Payload::real(b[3..].to_vec()),
+        ]);
+        assert!(chunked.n_chunks() > 1);
+        let (out, records) =
+            reduce_raw_word_counts(&[Payload::real(a), chunked], pad);
+        assert_eq!(records, 3);
+        assert_eq!(out, b"cat\t2\ndog\t2\nemu\t1\n".to_vec());
+    }
+
+    #[test]
+    fn aggregates_merge_across_chunked_inputs() {
+        let rec = |cell: u32, count: u32| {
+            let mut v = cell.to_le_bytes().to_vec();
+            v.extend_from_slice(&count.to_le_bytes());
+            v
+        };
+        let a = Payload::real([rec(5, 2), rec(1, 1)].concat());
+        // Chunk boundary through the middle of a record.
+        let b_bytes = [rec(5, 3), rec(9, 7)].concat();
+        let b = Payload::concat(&[
+            Payload::real(b_bytes[..6].to_vec()),
+            Payload::real(b_bytes[6..].to_vec()),
+        ]);
+        let (out, records) = reduce_aggregates(&[a, b]);
+        assert_eq!(records, 3);
+        let rows: Vec<(u32, u64)> = out
+            .chunks_exact(12)
+            .map(|r| {
+                (u32::from_le_bytes(r[0..4].try_into().unwrap()),
+                 u64::from_le_bytes(r[4..12].try_into().unwrap()))
+            })
+            .collect();
+        assert_eq!(rows, vec![(1, 1), (5, 5), (9, 7)]);
+    }
+}

@@ -106,12 +106,12 @@ impl Workload for ScanQuery {
         _rng: &mut Rng,
     ) -> MapOutput {
         let ov = cfg.ser.record_overhead();
-        match split.bytes() {
+        match split.contiguous() {
             Some(text) => {
                 let mut parts_bytes: Vec<Vec<u8>> = vec![Vec::new(); parts];
                 let mut records = 0u64;
                 let thr = self.threshold();
-                for (id, _cat, val) in parse_rows(text) {
+                for (id, _cat, val) in parse_rows(&text) {
                     records += 1;
                     if val < thr {
                         let j = (id % parts as u64) as usize;
@@ -257,9 +257,9 @@ impl Workload for AggregationQuery {
         _rng: &mut Rng,
     ) -> MapOutput {
         let ov = cfg.ser.record_overhead();
-        match (split.bytes(), cfg.combiner) {
+        match (split.contiguous(), cfg.combiner) {
             (Some(text), CombinerMode::Kernel) => {
-                let (sums, cnts, rows) = self.combine_rows(text, rt);
+                let (sums, cnts, rows) = self.combine_rows(&text, rt);
                 // Partition segments round-robin; 12 B per live segment.
                 let mut parts_bytes: Vec<Vec<u8>> = vec![Vec::new(); parts];
                 for (seg, (s, c)) in sums.iter().zip(&cnts).enumerate() {
@@ -282,7 +282,7 @@ impl Workload for AggregationQuery {
             (Some(text), CombinerMode::None) => {
                 let mut parts_bytes: Vec<Vec<u8>> = vec![Vec::new(); parts];
                 let mut rows = 0u64;
-                for (id, cat, val) in parse_rows(text) {
+                for (id, cat, val) in parse_rows(&text) {
                     rows += 1;
                     let j = (cat as usize) % parts;
                     let rec = format!("{cat:04},{val:06},{id:08},pad456789"); // 30 B
@@ -405,11 +405,11 @@ impl Workload for JoinQuery {
         // Joins shuffle *entire* tagged rows regardless of combiner —
         // the paper's Table 1 shows the 4× blow-up (12.5 → 49.6 GB).
         let ov = cfg.ser.record_overhead();
-        match split.bytes() {
+        match split.contiguous() {
             Some(text) => {
                 let mut parts_bytes: Vec<Vec<u8>> = vec![Vec::new(); parts];
                 let mut rows = 0u64;
-                for (id, cat, val) in parse_rows(text) {
+                for (id, cat, val) in parse_rows(&text) {
                     rows += 1;
                     let j = (cat as usize) % parts;
                     // Tagged + re-keyed row, shipped for BOTH sides of

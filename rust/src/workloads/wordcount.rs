@@ -33,7 +33,10 @@ impl WordCount {
     }
 
     /// Run the PJRT combine over a hash stream; returns flattened R*B
-    /// counts (padding masked out).
+    /// counts (padding masked out). Batch/mask staging buffers are
+    /// borrowed from the engine and survive across calls; only the
+    /// tail chunk ever rewrites the mask (full chunks use the all-ones
+    /// invariant untouched).
     pub fn combine_hashes(
         &self,
         hashes: &[i32],
@@ -41,20 +44,24 @@ impl WordCount {
     ) -> Vec<f32> {
         let n = rt.batch_size();
         let mut acc = vec![0f32; self.scheme.parts * self.scheme.buckets];
-        let mut batch = vec![0i32; n];
-        let mut mask = vec![0f32; n];
+        let mut scratch = rt.take_batch_scratch();
         for chunk in hashes.chunks(n) {
-            batch[..chunk.len()].copy_from_slice(chunk);
-            for (i, m) in mask.iter_mut().enumerate() {
-                *m = if i < chunk.len() { 1.0 } else { 0.0 };
+            scratch.batch[..chunk.len()].copy_from_slice(chunk);
+            let partial = chunk.len() < n;
+            if partial {
+                scratch.mask[chunk.len()..].fill(0.0);
             }
             let out = rt
-                .wordcount_batch(&batch, &mask)
+                .wordcount_batch(&scratch.batch, &scratch.mask)
                 .expect("combine batch failed");
+            if partial {
+                scratch.mask[chunk.len()..].fill(1.0);
+            }
             for (a, o) in acc.iter_mut().zip(&out) {
                 *a += o;
             }
         }
+        rt.put_batch_scratch(scratch);
         acc
     }
 
@@ -66,7 +73,11 @@ impl WordCount {
         -> Vec<u8>
     {
         let b = self.scheme.buckets;
-        let mut out = Vec::new();
+        // Upper bound: every bucket of every folded scheme partition
+        // occupied — sized once, no growth reallocs on the hot path.
+        let stride_parts =
+            (self.scheme.parts.saturating_sub(part) + parts - 1) / parts;
+        let mut out = Vec::with_capacity(stride_parts * b * 8);
         for p in (part..self.scheme.parts).step_by(parts) {
             for (bucket, c) in counts[p * b..(p + 1) * b].iter().enumerate() {
                 if *c > 0.0 {
@@ -122,8 +133,9 @@ impl Workload for WordCount {
         _rng: &mut Rng,
     ) -> MapOutput {
         assert!(parts <= self.scheme.parts);
-        match split.bytes() {
+        match split.contiguous() {
             Some(text) => {
+                let text: &[u8] = &text;
                 let hashes: Vec<i32> = self
                     .tokenize(text)
                     .map(crate::util::hash::token_hash)
@@ -144,7 +156,12 @@ impl Workload for WordCount {
                         }
                     }
                     CombinerMode::None => {
+                        // Framing: u16 len + word + pad. The pad is the
+                        // record overhead minus the 2-byte length we
+                        // already wrote — clamped so compact formats
+                        // (overhead < 2) can't underflow.
                         let ov = self.raw_record_overhead(cfg) as usize;
+                        let pad = ov.saturating_sub(2);
                         let mut parts_bytes: Vec<Vec<u8>> =
                             vec![Vec::new(); parts];
                         for w in self.tokenize(text) {
@@ -155,7 +172,7 @@ impl Workload for WordCount {
                                 &(w.len() as u16).to_le_bytes(),
                             );
                             buf.extend_from_slice(w);
-                            buf.resize(buf.len() + ov - 2, b'x');
+                            buf.resize(buf.len() + pad, b'x');
                         }
                         MapOutput {
                             partitions: parts_bytes
@@ -217,63 +234,22 @@ impl Workload for WordCount {
         if inputs.iter().all(|p| p.is_real()) {
             match cfg.combiner {
                 CombinerMode::Kernel => {
-                    // Merge (bucket, count) aggregates element-wise.
-                    let mut merged =
-                        std::collections::BTreeMap::<u32, u64>::new();
-                    for p in inputs {
-                        let b = p.bytes().unwrap();
-                        for rec in b.chunks_exact(8) {
-                            let bucket =
-                                u32::from_le_bytes(rec[0..4].try_into().unwrap());
-                            let count =
-                                u32::from_le_bytes(rec[4..8].try_into().unwrap());
-                            *merged.entry(bucket).or_default() += count as u64;
-                        }
-                    }
-                    let mut out = Vec::with_capacity(merged.len() * 12);
-                    for (bucket, count) in &merged {
-                        out.extend_from_slice(&bucket.to_le_bytes());
-                        out.extend_from_slice(&count.to_le_bytes());
-                    }
-                    ReduceOutput {
-                        output: Payload::real(out),
-                        records: merged.len() as u64,
-                    }
+                    // Merge (bucket, count) aggregates element-wise,
+                    // chunk-aware (shared with grep).
+                    let (out, records) =
+                        crate::workloads::reduce_aggregates(inputs);
+                    ReduceOutput { output: Payload::real(out), records }
                 }
                 CombinerMode::None => {
-                    // Count raw records per word.
-                    let mut counts = std::collections::HashMap::<
-                        Vec<u8>,
-                        u64,
-                    >::new();
-                    for p in inputs {
-                        let b = p.bytes().unwrap();
-                        let ov = self.raw_record_overhead(cfg) as usize;
-                        let mut i = 0;
-                        while i + 2 <= b.len() {
-                            let len = u16::from_le_bytes(
-                                b[i..i + 2].try_into().unwrap(),
-                            ) as usize;
-                            let w = b[i + 2..i + 2 + len].to_vec();
-                            *counts.entry(w).or_default() += 1;
-                            i += 2 + len + ov - 2;
-                        }
-                    }
-                    let mut out = Vec::new();
-                    let mut keys: Vec<_> = counts.keys().cloned().collect();
-                    keys.sort();
-                    for w in &keys {
-                        out.extend_from_slice(w);
-                        out.push(b'\t');
-                        out.extend_from_slice(
-                            counts[w].to_string().as_bytes(),
+                    // Count raw records per word with borrowed-slice
+                    // keying (shared with grep).
+                    let pad = (self.raw_record_overhead(cfg) as usize)
+                        .saturating_sub(2);
+                    let (out, records) =
+                        crate::workloads::reduce_raw_word_counts(
+                            inputs, pad,
                         );
-                        out.push(b'\n');
-                    }
-                    ReduceOutput {
-                        output: Payload::real(out),
-                        records: keys.len() as u64,
-                    }
+                    ReduceOutput { output: Payload::real(out), records }
                 }
             }
         } else {

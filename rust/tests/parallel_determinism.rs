@@ -1,0 +1,109 @@
+//! The parallel map data plane's determinism contract: `run_job` must
+//! produce byte-identical results at ANY data-plane worker count —
+//! same JobResult accounting, same virtual completion time, and the
+//! same output bytes in the output store (see the DESIGN note on
+//! `mapreduce::driver::map_splits_parallel`).
+
+use marvel::coordinator::ClusterSpec;
+use marvel::mapreduce::{
+    output_key, run_job, stage_input, JobResult, StoreKind, SystemConfig,
+};
+use marvel::net::NodeId;
+use marvel::runtime::RtEngine;
+use marvel::util::bytes::MIB;
+use marvel::workloads::WordCount;
+
+const SEED: u64 = 11;
+
+/// Run one wordcount job with `workers` map threads over 16 real
+/// splits; return the report plus every reducer's output bytes.
+fn run_with_workers(
+    cfg_base: &SystemConfig,
+    workers: usize,
+) -> (JobResult, Vec<Option<Vec<u8>>>) {
+    let mut cfg = cfg_base.clone();
+    cfg.map_workers = workers;
+    let mut cluster = ClusterSpec::default().deploy(&cfg);
+    // Small blocks → 16 splits from a 4 MiB input, so multiple map
+    // tasks genuinely interleave across workers.
+    cluster.stores.hdfs.block_size = 256 * 1024;
+    let mut rt = RtEngine::load(None).unwrap();
+    let wc = WordCount::new(4000, 1.07, &rt);
+    let input =
+        stage_input(&mut cluster, &cfg, &wc, 4 * MIB, SEED).unwrap();
+    let r = run_job(&mut cluster, &cfg, &wc, &input, &mut rt, SEED);
+    assert!(r.ok(), "workers={workers}: {:?}", r.failed);
+    assert!(r.map.tasks > 1, "need multiple splits to exercise workers");
+    let job = wc.name().to_string();
+    let outs = (0..r.reduce.tasks)
+        .map(|j| {
+            let key = output_key(&job, j);
+            let p = match cfg.output_store {
+                StoreKind::Igfs => cluster
+                    .stores
+                    .igfs
+                    .get(&cluster.topo, NodeId(0), &key, 0)
+                    .map(|(p, _)| p),
+                StoreKind::Hdfs => cluster
+                    .stores
+                    .hdfs
+                    .read(&cluster.topo, NodeId(0), &key, 0)
+                    .ok()
+                    .map(|(p, _, _, _)| p),
+                StoreKind::S3 => cluster.stores.s3.get(&key),
+            };
+            p.map(|p| p.gather().expect("real output"))
+        })
+        .collect();
+    (r, outs)
+}
+
+#[test]
+fn output_byte_identical_for_1_2_and_8_workers() {
+    let cfg = SystemConfig::marvel_igfs();
+    let (r1, o1) = run_with_workers(&cfg, 1);
+    for workers in [2usize, 8] {
+        let (rn, on) = run_with_workers(&cfg, workers);
+        assert_eq!(r1.intermediate_bytes, rn.intermediate_bytes,
+                   "workers={workers}");
+        assert_eq!(r1.output_bytes, rn.output_bytes, "workers={workers}");
+        assert_eq!(r1.map.bytes_out, rn.map.bytes_out, "workers={workers}");
+        assert_eq!(r1.reduce.bytes_in, rn.reduce.bytes_in,
+                   "workers={workers}");
+        assert_eq!(r1.job_time, rn.job_time,
+                   "virtual time must not depend on host threads \
+                    (workers={workers})");
+        assert_eq!(r1.rt_batches, rn.rt_batches, "workers={workers}");
+        assert_eq!(o1.len(), on.len());
+        for (j, (a, b)) in o1.iter().zip(&on).enumerate() {
+            assert_eq!(a, b,
+                       "reducer {j} output diverged at workers={workers}");
+        }
+    }
+    // The outputs are non-trivial: at least one reducer wrote bytes.
+    assert!(o1.iter().any(|o| o.as_ref().map_or(false, |b| !b.is_empty())));
+}
+
+#[test]
+fn auto_worker_count_matches_serial() {
+    // map_workers = 0 (auto) must also match the serial baseline.
+    let cfg = SystemConfig::marvel_igfs();
+    let (r1, o1) = run_with_workers(&cfg, 1);
+    let (ra, oa) = run_with_workers(&cfg, 0);
+    assert_eq!(r1.output_bytes, ra.output_bytes);
+    assert_eq!(r1.job_time, ra.job_time);
+    assert_eq!(o1, oa);
+}
+
+#[test]
+fn raw_path_parallel_determinism() {
+    // The Corral-style raw path (no combiner, JSON framing) goes
+    // through the borrowed-slice reduce keying — same contract.
+    let mut cfg = SystemConfig::marvel_igfs_paper();
+    cfg.materialize_cap = 32 * MIB;
+    let (r1, o1) = run_with_workers(&cfg, 1);
+    let (r4, o4) = run_with_workers(&cfg, 4);
+    assert_eq!(r1.intermediate_bytes, r4.intermediate_bytes);
+    assert_eq!(r1.output_bytes, r4.output_bytes);
+    assert_eq!(o1, o4);
+}
