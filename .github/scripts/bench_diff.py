@@ -1,0 +1,56 @@
+#!/usr/bin/env python3
+"""Warn-only diff of two BENCH_*.json reports (baseline vs current).
+
+Prints a per-metric and per-result delta table. Exits 1 if any
+throughput-style metric regressed by more than THRESHOLD so the CI step
+can raise a warning annotation; the workflow treats that as non-fatal.
+"""
+import json
+import sys
+
+THRESHOLD = 0.15  # 15% regression tolerance — bench runners are noisy
+
+# Metrics where bigger is better ("*_per_s", "*_speedup"); everything
+# else (latencies, "*_ns") is smaller-is-better.
+def bigger_is_better(name: str) -> bool:
+    return name.endswith("_per_s") or name.endswith("_speedup")
+
+
+def main() -> int:
+    base_path, cur_path = sys.argv[1], sys.argv[2]
+    with open(base_path) as f:
+        base = json.load(f)
+    with open(cur_path) as f:
+        cur = json.load(f)
+
+    regressed = []
+    print(f"{'metric':<40} {'baseline':>14} {'current':>14} {'delta':>9}")
+    for name, b in sorted(base.get("metrics", {}).items()):
+        c = cur.get("metrics", {}).get(name)
+        if c is None or not b:
+            continue
+        delta = (c - b) / abs(b)
+        mark = ""
+        bad = -delta if bigger_is_better(name) else delta
+        if bad > THRESHOLD:
+            mark = "  << REGRESSED"
+            regressed.append(name)
+        print(f"{name:<40} {b:>14.2f} {c:>14.2f} {delta:>8.1%}{mark}")
+
+    print()
+    print(f"{'bench (mean ns)':<55} {'baseline':>12} {'current':>12}")
+    for name, b in sorted(base.get("results", {}).items()):
+        c = cur.get("results", {}).get(name)
+        if c is None:
+            continue
+        print(f"{name:<55} {b['mean_ns']:>12.0f} {c['mean_ns']:>12.0f}")
+
+    if regressed:
+        print(f"\nregressed >{THRESHOLD:.0%}: {', '.join(regressed)}")
+        return 1
+    print("\nno metric regressed beyond tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,7 +9,9 @@
 
 use std::path::Path;
 
-use marvel::mapreduce::{map_splits_parallel, SystemConfig, Workload};
+use marvel::mapreduce::{
+    map_splits_parallel, reduce_partitions_parallel, SystemConfig, Workload,
+};
 use marvel::runtime::{default_artifacts_dir, RtEngine};
 use marvel::sim::{Engine, SimNs, Stage};
 use marvel::storage::Payload;
@@ -128,6 +130,56 @@ fn main() {
     }
     println!("  determinism: parallel output == serial output ✓");
 
+    // -- parallel reduce data plane: every partition's inputs gathered
+    // from the map outputs (zero-copy views), merged across partitions
+    // by 1 worker vs all cores. Byte-identical at any count — asserted.
+    let n_parts = 32usize;
+    let inputs_per_part: Vec<Vec<marvel::storage::Payload>> = (0..n_parts)
+        .map(|j| {
+            a.iter()
+                .map(|mo| mo.partitions[j].clone())
+                .filter(|p| !p.is_empty())
+                .collect()
+        })
+        .collect();
+    let red_bytes: f64 = inputs_per_part
+        .iter()
+        .flatten()
+        .map(|p| p.len() as f64)
+        .sum();
+    let r_r1 = bench.run("reduce plane 32 partitions, 1 worker", || {
+        reduce_partitions_parallel(&wc, &inputs_per_part, n_parts, &cfg,
+                                   &mut oracle, 1)
+    });
+    let label = format!("reduce plane 32 partitions, {n_workers} workers");
+    let r_rn = bench.run(&label, || {
+        reduce_partitions_parallel(&wc, &inputs_per_part, n_parts, &cfg,
+                                   &mut oracle, n_workers)
+    });
+    println!("{}", r_r1.summary());
+    println!("{}", r_rn.summary());
+    let red_serial_mb_s = r_r1.throughput(red_bytes) / 1e6;
+    let red_par_mb_s = r_rn.throughput(red_bytes) / 1e6;
+    let red_speedup = red_par_mb_s / red_serial_mb_s.max(1e-9);
+    println!(
+        "  reduce plane: serial {red_serial_mb_s:.1} MB/s → parallel \
+         {red_par_mb_s:.1} MB/s ({red_speedup:.2}× on {n_workers} workers)"
+    );
+    metrics.push(("reduce_plane_serial_mb_per_s", red_serial_mb_s));
+    metrics.push(("reduce_plane_parallel_mb_per_s", red_par_mb_s));
+    metrics.push(("reduce_plane_speedup", red_speedup));
+    let ra = reduce_partitions_parallel(&wc, &inputs_per_part, n_parts,
+                                        &cfg, &mut oracle, 1);
+    let rb = reduce_partitions_parallel(&wc, &inputs_per_part, n_parts,
+                                        &cfg, &mut oracle, n_workers);
+    assert_eq!(ra.len(), rb.len());
+    for (x, y) in ra.iter().zip(&rb) {
+        assert_eq!(x.records, y.records);
+        assert_eq!(x.output.gather(), y.output.gather(),
+                   "parallel reduce output diverged from serial");
+    }
+    println!("  determinism: parallel reduce output == serial output ✓");
+
     // -- zero-copy payload plumbing: slice+concat as pure view ops
     // (pre-refactor this memcpy'd ~64 MB per iteration).
     let big = Payload::real(vec![7u8; 64 << 20]);
@@ -174,7 +226,8 @@ fn main() {
     });
     println!("{}", r_f.summary());
 
-    results.extend([r_p, r_o, r_t, r_m, r_s1, r_sn, r_v, r_e, r_f]);
+    results.extend([r_p, r_o, r_t, r_m, r_s1, r_sn, r_r1, r_rn, r_v, r_e,
+                    r_f]);
     let refs: Vec<&BenchResult> = results.iter().collect();
     let out = Path::new("BENCH_micro_hotpath.json");
     match write_report(out, &refs, &metrics) {

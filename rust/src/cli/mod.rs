@@ -68,6 +68,9 @@ pub fn workload_by_name(
         "scan_query" | "scan" => Box::new(ScanQuery::new()),
         "aggregation_query" | "agg" => Box::new(AggregationQuery::new(rt)),
         "join_query" | "join" => Box::new(JoinQuery::new()),
+        "pagerank" | "pr" => {
+            Box::new(crate::workloads::PageRank::new())
+        }
         other => return Err(format!("unknown workload {other:?}")),
     })
 }

@@ -75,10 +75,14 @@ impl ExperimentConfig {
                 system.igfs_capacity = i.max(0) as u64;
             }
         }
-        // Data-plane map threads; 0 = auto. Output is byte-identical
-        // at any setting (driver determinism contract).
+        // Data-plane map/reduce threads; 0 = auto. Output is byte-
+        // identical at any setting (driver determinism contract).
         if let Some(v) = doc.get("experiment", "map_workers") {
             system.map_workers = v.as_i64().unwrap_or(0).max(0) as usize;
+        }
+        if let Some(v) = doc.get("experiment", "reduce_workers") {
+            system.reduce_workers =
+                v.as_i64().unwrap_or(0).max(0) as usize;
         }
         Ok(ExperimentConfig {
             cluster,
@@ -118,6 +122,7 @@ input = "2GiB"
 seed = 7
 replication = 3
 map_workers = 4
+reduce_workers = 2
 "#,
         )
         .unwrap();
@@ -125,6 +130,7 @@ map_workers = 4
         assert_eq!(cfg.system.name, "marvel-hdfs");
         assert_eq!(cfg.system.replication, 3);
         assert_eq!(cfg.system.map_workers, 4);
+        assert_eq!(cfg.system.reduce_workers, 2);
         assert_eq!(cfg.workload, "grep");
         assert_eq!(cfg.input_bytes, 2 * GIB);
         assert_eq!(cfg.seed, 7);

@@ -65,11 +65,11 @@ impl ClusterSpec {
             with_hdd: true,
         }
         .build(&mut engine);
-        let stores = Stores {
-            hdfs: Hdfs::new(&topo, cfg.hdfs_role, cfg.replication),
-            igfs: Igfs::new(&topo, cfg.igfs_capacity.max(1)),
-            s3: ObjectStore::new(&mut engine, &self.objstore),
-        };
+        let stores = Stores::new(
+            Hdfs::new(&topo, cfg.hdfs_role, cfg.replication),
+            Igfs::new(&topo, cfg.igfs_capacity.max(1)),
+            ObjectStore::new(&mut engine, &self.objstore),
+        );
         let controller = Controller::new(
             &mut engine,
             &vec![self.slots_per_node; self.nodes],

@@ -25,6 +25,22 @@ pub struct CacheStats {
     pub bytes_evicted: u64,
 }
 
+impl CacheStats {
+    /// Counters accumulated since `base` was captured (per-job / per-
+    /// pipeline-stage attribution over a shared cluster's caches).
+    pub fn delta_since(&self, base: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits_dram: self.hits_dram.saturating_sub(base.hits_dram),
+            hits_backing: self.hits_backing.saturating_sub(base.hits_backing),
+            misses: self.misses.saturating_sub(base.misses),
+            evictions: self.evictions.saturating_sub(base.evictions),
+            bytes_evicted: self
+                .bytes_evicted
+                .saturating_sub(base.bytes_evicted),
+        }
+    }
+}
+
 #[derive(Debug)]
 pub struct CacheNode {
     capacity: u64,
@@ -115,6 +131,20 @@ impl CacheNode {
         None
     }
 
+    /// Non-mutating probe: the stored value's length in either tier.
+    /// No hit/miss accounting — planners use this to size work without
+    /// disturbing the stats a later `get` will record.
+    pub fn len_of(&self, key: &str) -> Option<u64> {
+        self.entries
+            .get(key)
+            .map(|(v, _)| v.len())
+            .or_else(|| self.backing.get(key).map(|v| v.len()))
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.len_of(key).is_some()
+    }
+
     pub fn remove(&mut self, key: &str) -> bool {
         let mut found = false;
         if let Some((v, _)) = self.entries.remove(key) {
@@ -196,6 +226,33 @@ mod tests {
         let mut c = CacheNode::new(10);
         assert!(c.get("nope").is_none());
         assert_eq!(c.stats.misses, 1);
+    }
+
+    #[test]
+    fn len_of_probes_both_tiers_without_stats() {
+        let mut c = CacheNode::new(100);
+        c.put("a", Payload::synthetic(30));
+        c.put("big", Payload::synthetic(500)); // straight to backing
+        assert_eq!(c.len_of("a"), Some(30));
+        assert_eq!(c.len_of("big"), Some(500));
+        assert_eq!(c.len_of("nope"), None);
+        assert!(c.contains("a") && !c.contains("nope"));
+        // The probe recorded neither hits nor misses.
+        assert_eq!(c.stats.hits_dram + c.stats.hits_backing, 0);
+        assert_eq!(c.stats.misses, 0);
+    }
+
+    #[test]
+    fn stats_delta_since() {
+        let mut c = CacheNode::new(100);
+        c.put("a", Payload::synthetic(10));
+        c.get("a");
+        let base = c.stats.clone();
+        c.get("a");
+        c.get("missing");
+        let d = c.stats.delta_since(&base);
+        assert_eq!(d.hits_dram, 1);
+        assert_eq!(d.misses, 1);
     }
 
     #[test]

@@ -84,6 +84,18 @@ impl Igfs {
         key: &str,
         tag: u32,
     ) -> Option<(Payload, Vec<Stage>)> {
+        self.get_tiered(topo, to, key, tag).map(|(v, st, _)| (v, st))
+    }
+
+    /// `get` with the serving tier exposed — pipeline stage handoff
+    /// accounting distinguishes a DRAM hit from a PMEM backing hit.
+    pub fn get_tiered(
+        &mut self,
+        topo: &Topology,
+        to: NodeId,
+        key: &str,
+        tag: u32,
+    ) -> Option<(Payload, Vec<Stage>, Tier)> {
         let owner = self.owner(key);
         let (value, tier) = self.caches.get_mut(&owner)?.get(key)?;
         let role = match tier {
@@ -104,7 +116,16 @@ impl Igfs {
                 tag,
             },
         ];
-        Some((value, stages))
+        Some((value, stages, tier))
+    }
+
+    /// Non-mutating length probe across tiers (no hit/miss accounting).
+    pub fn len_of(&self, key: &str) -> Option<u64> {
+        self.caches.get(&self.owner(key))?.len_of(key)
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.len_of(key).is_some()
     }
 
     pub fn remove(&mut self, key: &str) -> bool {
@@ -152,6 +173,24 @@ mod tests {
         e.spawn("g", st);
         e.run().unwrap();
         assert_eq!(v.len(), 100);
+    }
+
+    #[test]
+    fn get_tiered_reports_serving_tier_and_len_probe_is_silent() {
+        let (_, t, mut g) = setup(1, 100);
+        g.put(&t, NodeId(0), "a", Payload::synthetic(80), 0);
+        g.put(&t, NodeId(0), "b", Payload::synthetic(80), 0); // demotes a
+        assert_eq!(g.len_of("a"), Some(80));
+        assert_eq!(g.len_of("b"), Some(80));
+        assert_eq!(g.len_of("zzz"), None);
+        assert!(g.contains("a") && !g.contains("zzz"));
+        // len_of probes recorded nothing.
+        let s = g.stats();
+        assert_eq!(s.hits_dram + s.hits_backing + s.misses, 0);
+        let (_, _, tier) = g.get_tiered(&t, NodeId(0), "a", 0).unwrap();
+        assert_eq!(tier, Tier::Backing);
+        let (_, _, tier) = g.get_tiered(&t, NodeId(0), "b", 0).unwrap();
+        assert_eq!(tier, Tier::Dram);
     }
 
     #[test]

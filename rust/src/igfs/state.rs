@@ -75,6 +75,13 @@ impl StateStore {
         Ok(())
     }
 
+    /// Non-mutating read: no restore accounting. Pipeline resume uses
+    /// this to *validate* a checkpoint (outputs still resolvable?)
+    /// before deciding to consume it via [`StateStore::restore`].
+    pub fn peek(&self, job: &str, task: u32) -> Option<&TaskState> {
+        self.entries.get(&(job.to_string(), task))
+    }
+
     /// Restore the latest checkpoint for a task, if any.
     pub fn restore(&mut self, job: &str, task: u32) -> Option<TaskState> {
         let v = self.entries.get(&(job.to_string(), task)).cloned();
@@ -111,6 +118,17 @@ mod tests {
         assert_eq!(st.progress, 1024);
         assert_eq!(st.partial, vec![7, 7]);
         assert!(s.restore("job1", 4).is_none());
+    }
+
+    #[test]
+    fn peek_does_not_count_as_restore() {
+        let mut s = StateStore::new();
+        s.checkpoint("j", 0, 0, 5, vec![1]).unwrap();
+        assert_eq!(s.peek("j", 0).unwrap().progress, 5);
+        assert!(s.peek("j", 1).is_none());
+        assert_eq!(s.restores, 0);
+        s.restore("j", 0).unwrap();
+        assert_eq!(s.restores, 1);
     }
 
     #[test]

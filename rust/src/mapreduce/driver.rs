@@ -1,28 +1,37 @@
-//! Job driver: plans a MapReduce job against a deployed cluster, runs
+//! Job driver: plans a MapReduce stage against a deployed cluster, runs
 //! the *data plane* eagerly (real bytes through the real combine path),
 //! compiles every task into a DES proc, and runs the *time plane* to a
 //! deterministic completion time. Implements the paper's Figure 3
 //! workflow steps 1–10.
+//!
+//! A stage's input comes either from a staged path ([`StageInput::Path`],
+//! the classic single job) or from an upstream pipeline stage's reducer
+//! outputs ([`StageInput::Handoff`]) resolved through the IGFS tiers:
+//! DRAM hit → PMEM backing hit → HDFS → S3 fallback. Both the map and the
+//! reduce data planes fan out over scoped host-thread pools under the
+//! byte-identical determinism contract (see `pool_run`).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::faas::{ActionSpec, Controller, Lambda};
+use crate::igfs::Tier;
 use crate::metrics::{tags, IoSummary};
 use crate::net::{NodeId, Topology};
 use crate::runtime::{RtEngine, RtStats};
-use crate::sim::{Engine, SimNs, Stage};
+use crate::sim::{Engine, PoolId, SimNs, Stage};
 use crate::storage::Payload;
 use crate::yarn::{ContainerRequest, ResourceManager};
 
-use super::shuffle::{interm_key, output_key, Stores};
+use super::shuffle::{interm_key, output_key, KeyHome, Stores};
 use super::types::{
-    JobResult, PhaseStats, Platform, StoreKind, SystemConfig,
+    HandoffStats, JobResult, PhaseStats, Platform, StoreKind, SystemConfig,
 };
-use super::workload::{task_rng, MapOutput, Workload};
+use super::workload::{task_rng, MapOutput, ReduceOutput, Workload};
 
-/// A deployed cluster a job runs against. One job per instance keeps
-/// virtual time and flow logs cleanly attributable.
+/// A deployed cluster a job runs against. A pipeline chains several
+/// stages over one instance so virtual time and cache state carry
+/// across stages; independent jobs use one instance each.
 pub struct Cluster {
     pub engine: Engine,
     pub topo: Topology,
@@ -61,8 +70,24 @@ pub fn stage_input(
     Ok(path)
 }
 
+/// Where a stage's input splits come from.
+pub enum StageInput {
+    /// A staged path in `cfg.input_store`, split by block locations
+    /// (HDFS) or `split_bytes` (S3).
+    Path(String),
+    /// Handoff from an upstream pipeline stage: one split per upstream
+    /// reducer output key, resolved at read time through the IGFS
+    /// tiers (DRAM → PMEM backing → HDFS → S3 fallback).
+    Handoff { keys: Vec<String> },
+}
+
+enum SplitSource {
+    Range { offset: u64 },
+    Key(String),
+}
+
 struct SplitPlan {
-    offset: u64,
+    source: SplitSource,
     len: u64,
     locality: Vec<NodeId>,
 }
@@ -83,7 +108,7 @@ fn plan_splits(
                 total,
                 locs.into_iter()
                     .map(|(b, nodes)| SplitPlan {
-                        offset: b.offset,
+                        source: SplitSource::Range { offset: b.offset },
                         len: b.len,
                         locality: nodes,
                     })
@@ -101,66 +126,142 @@ fn plan_splits(
             let mut off = 0;
             while off < total {
                 let len = cfg.split_bytes.min(total - off);
-                splits.push(SplitPlan { offset: off, len, locality: vec![] });
+                splits.push(SplitPlan {
+                    source: SplitSource::Range { offset: off },
+                    len,
+                    locality: vec![],
+                });
                 off += len;
             }
             if splits.is_empty() {
-                splits.push(SplitPlan { offset: 0, len: 0, locality: vec![] });
+                splits.push(SplitPlan {
+                    source: SplitSource::Range { offset: 0 },
+                    len: 0,
+                    locality: vec![],
+                });
             }
             Ok((total, splits))
         }
     }
 }
 
-/// Resolve the data-plane worker count: explicit from the config, or
-/// the host's available parallelism; never more workers than splits.
-fn effective_map_workers(cfg: &SystemConfig, n_splits: usize) -> usize {
-    let w = if cfg.map_workers == 0 {
+/// Plan handoff splits: one per upstream output key, located through
+/// `Stores::locate` (the shared IGFS → HDFS → S3 chain; disturbs no
+/// cache statistics). Locality hints: the IGFS owner, the first HDFS
+/// replica set, or none for remote S3; a key absent everywhere is an
+/// upstream reducer that emitted nothing.
+fn plan_handoff(
+    cluster: &mut Cluster,
+    keys: Vec<String>,
+) -> (u64, Vec<SplitPlan>) {
+    let mut total = 0u64;
+    let mut plans = Vec::with_capacity(keys.len());
+    for key in keys {
+        let (len, locality) = match cluster.stores.locate(&key) {
+            Some((len, KeyHome::Igfs)) => {
+                (len, vec![cluster.stores.igfs.owner(&key)])
+            }
+            Some((len, KeyHome::Hdfs)) => {
+                let locs = cluster.stores.hdfs.block_locations(&key);
+                let first = locs
+                    .first()
+                    .map(|(_, nodes)| nodes.clone())
+                    .unwrap_or_default();
+                (len, first)
+            }
+            Some((len, KeyHome::S3)) => (len, Vec::new()),
+            None => (0, Vec::new()),
+        };
+        total += len;
+        plans.push(SplitPlan {
+            source: SplitSource::Key(key),
+            len,
+            locality,
+        });
+    }
+    (total, plans)
+}
+
+/// Which tier served a handoff split.
+enum HandoffTier {
+    Dram,
+    Backing,
+    Hdfs,
+    S3,
+    Empty,
+}
+
+/// Resolve one handoff key on `node`: IGFS first (the tier the hit came
+/// from prices the read), then HDFS, then S3, else an empty split. The
+/// payload is a zero-copy view over the serving store's buffers in
+/// every case.
+fn read_handoff(
+    stores: &mut Stores,
+    engine: &mut Engine,
+    topo: &Topology,
+    node: NodeId,
+    key: &str,
+) -> Result<(Payload, Vec<Stage>, HandoffTier, bool), String> {
+    if let Some((data, st, tier)) =
+        stores.igfs.get_tiered(topo, node, key, tags::INPUT_READ)
+    {
+        let local = stores.igfs.owner(key) == node;
+        let tier = match tier {
+            Tier::Dram => HandoffTier::Dram,
+            Tier::Backing => HandoffTier::Backing,
+        };
+        return Ok((data, st, tier, local));
+    }
+    if stores.hdfs.namenode.stat(key).is_some() {
+        let (data, st, _, remote) =
+            stores.hdfs.read(topo, node, key, tags::INPUT_READ)?;
+        return Ok((data, st, HandoffTier::Hdfs, remote == 0));
+    }
+    if let Some(data) = stores.s3.get(key) {
+        let st = stores.s3.get_stages(engine, topo, node, data.len(),
+                                      tags::INPUT_READ);
+        return Ok((data, st, HandoffTier::S3, false));
+    }
+    Ok((Payload::real(Vec::new()), Vec::new(), HandoffTier::Empty, true))
+}
+
+/// Resolve a data-plane worker count: explicit, or the host's available
+/// parallelism when `requested` is 0; never more workers than items.
+fn effective_workers(requested: usize, n_items: usize) -> usize {
+    let w = if requested == 0 {
         std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(1)
     } else {
-        cfg.map_workers
+        requested
     };
-    w.clamp(1, n_splits.max(1))
+    w.clamp(1, n_items.max(1))
 }
 
-/// Run `map_split` over every fetched split, fanning out across
-/// `workers` host threads.
+/// Run `f(i, rt)` for every `i in 0..n`, fanning out across `workers`
+/// host threads.
 ///
 /// DESIGN — determinism contract: output is byte-identical to the
-/// serial path at ANY worker count because (a) each split's RNG is
-/// derived independently (`task_rng(seed, job, i)` — no shared stream
-/// to race on), (b) each worker owns a private `RtEngine` oracle
-/// instance (same manifest constants; combine counts are
-/// integer-valued f32s, so oracle and PJRT agree bitwise), and (c)
-/// results land in a per-split slot and are consumed in split order —
-/// scheduling order affects nothing but wall-clock. Only the map data
-/// plane parallelizes; the DES time plane stays single-threaded and
-/// deterministic.
-pub fn map_splits_parallel(
-    wl: &dyn Workload,
-    datas: &[Payload],
-    n_reduces: usize,
-    cfg: &SystemConfig,
-    rt: &mut RtEngine,
-    seed: u64,
-    workers: usize,
-) -> Vec<MapOutput> {
-    let job = wl.name();
-    if workers <= 1 || datas.len() <= 1 {
-        return datas
-            .iter()
-            .enumerate()
-            .map(|(i, d)| {
-                let mut rng = task_rng(seed, job, i as u64);
-                wl.map_split(d, n_reduces, cfg, rt, &mut rng)
-            })
-            .collect();
+/// serial path at ANY worker count because (a) each item's work is
+/// derived independently (no shared mutable state between items), (b)
+/// each worker owns a private `RtEngine` oracle instance (same manifest
+/// constants; combine counts are integer-valued f32s, so oracle and
+/// PJRT agree bitwise), and (c) results land in a per-item slot and are
+/// consumed in item order — scheduling order affects nothing but
+/// wall-clock. Only the data plane parallelizes; the DES time plane
+/// stays single-threaded and deterministic. Worker `RtStats` are folded
+/// back into the job-level engine.
+fn pool_run<T, F>(rt: &mut RtEngine, workers: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, &mut RtEngine) -> T + Sync,
+{
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(|i| f(i, rt)).collect();
     }
     let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<MapOutput>>> =
-        (0..datas.len()).map(|_| Mutex::new(None)).collect();
+    let slots: Vec<Mutex<Option<T>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
     let stats = Mutex::new(RtStats::default());
     let manifest = rt.manifest.clone();
     std::thread::scope(|s| {
@@ -169,14 +270,11 @@ pub fn map_splits_parallel(
                 let mut wrt = RtEngine::oracle_from(manifest.clone());
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= datas.len() {
+                    if i >= n {
                         break;
                     }
-                    let mut rng = task_rng(seed, job, i as u64);
-                    let mo =
-                        wl.map_split(&datas[i], n_reduces, cfg, &mut wrt,
-                                     &mut rng);
-                    *slots[i].lock().unwrap() = Some(mo);
+                    let out = f(i, &mut wrt);
+                    *slots[i].lock().unwrap() = Some(out);
                 }
                 let mut st = stats.lock().unwrap();
                 st.batches += wrt.stats.batches;
@@ -188,8 +286,45 @@ pub fn map_splits_parallel(
     rt.absorb_stats(&stats.into_inner().unwrap());
     slots
         .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("map worker died"))
+        .map(|m| m.into_inner().unwrap().expect("pool worker died"))
         .collect()
+}
+
+/// Run `map_split` over every fetched split across `workers` host
+/// threads. Per-split RNG streams derive from the *workload name*
+/// (`task_rng(seed, wl.name(), i)`), so the split schedule cannot
+/// influence data — see the `pool_run` determinism contract.
+pub fn map_splits_parallel(
+    wl: &dyn Workload,
+    datas: &[Payload],
+    n_reduces: usize,
+    cfg: &SystemConfig,
+    rt: &mut RtEngine,
+    seed: u64,
+    workers: usize,
+) -> Vec<MapOutput> {
+    let job = wl.name();
+    pool_run(rt, workers, datas.len(), |i, wrt| {
+        let mut rng = task_rng(seed, job, i as u64);
+        wl.map_split(&datas[i], n_reduces, cfg, wrt, &mut rng)
+    })
+}
+
+/// Run `reduce_partition` over every partition's gathered inputs across
+/// `workers` host threads. Each partition is reduced by exactly one
+/// worker over inputs pre-gathered in mapper order, so worker count is
+/// invisible in every output bit (`pool_run` contract).
+pub fn reduce_partitions_parallel(
+    wl: &dyn Workload,
+    inputs: &[Vec<Payload>],
+    n_reduces: usize,
+    cfg: &SystemConfig,
+    rt: &mut RtEngine,
+    workers: usize,
+) -> Vec<ReduceOutput> {
+    pool_run(rt, workers, inputs.len(), |j, wrt| {
+        wl.reduce_partition(j, n_reduces, &inputs[j], cfg, wrt)
+    })
 }
 
 /// Run one job end-to-end. `seed` drives all data-plane randomness.
@@ -201,7 +336,8 @@ pub fn run_job(
     rt: &mut RtEngine,
     seed: u64,
 ) -> JobResult {
-    match run_job_inner(cluster, cfg, wl, input, rt, seed) {
+    let stage_in = StageInput::Path(input.to_string());
+    match run_stage(cluster, cfg, wl, wl.name(), stage_in, rt, seed) {
         Ok(r) => r,
         Err(e) => {
             let input_bytes = match cfg.input_store {
@@ -224,21 +360,45 @@ pub fn run_job(
     }
 }
 
-fn run_job_inner(
+/// Plan bookkeeping for one reducer between the gather and time planes.
+struct ReducePlan {
+    node: NodeId,
+    slot: PoolId,
+    stages: Vec<Stage>,
+}
+
+/// Run one MapReduce stage. `job` names the stage (it prefixes every
+/// shuffle/output key, so pipeline stages sharing a workload stay
+/// disjoint); single jobs pass `wl.name()`.
+pub fn run_stage(
     cluster: &mut Cluster,
     cfg: &SystemConfig,
     wl: &dyn Workload,
-    input: &str,
+    job: &str,
+    input: StageInput,
     rt: &mut RtEngine,
     seed: u64,
 ) -> Result<JobResult, String> {
-    let job = wl.name().to_string();
+    let job = job.to_string();
     let t_start = cluster.engine.now();
     let rt_batches0 = rt.stats.batches;
     let rt_ns0 = rt.stats.pjrt_ns + rt.stats.oracle_ns;
+    let igfs0 = cluster.stores.igfs.stats();
+    // Flow-log / cold-start offsets: a pipeline runs many stages on one
+    // engine, and this stage's report must cover only its own activity.
+    let flows0 = cluster.engine.flow_log.len();
+    let cold0 =
+        cluster.controller.cold_starts() + cluster.lambda.cold_starts;
+    let mut handoff = HandoffStats::default();
 
     // (1–3) Client → controller → YARN: size the job.
-    let (input_bytes, splits) = plan_splits(cluster, cfg, input)?;
+    let (path, (input_bytes, splits)) = match input {
+        StageInput::Path(p) => {
+            let planned = plan_splits(cluster, cfg, &p)?;
+            (Some(p), planned)
+        }
+        StageInput::Handoff { keys } => (None, plan_handoff(cluster, keys)),
+    };
     let n_splits = splits.len();
     let (n_maps, n_reduces) =
         cluster.rm.size_job(n_splits, rt.manifest.parts);
@@ -249,7 +409,8 @@ fn run_job_inner(
         cluster.lambda.admit_job(input_bytes, n_maps + n_reduces)?;
     }
 
-    // (4) Placement for map tasks (locality from the NameNode).
+    // (4) Placement for map tasks (locality from the NameNode for
+    // ranges, from the IGFS owner / HDFS replicas for handoff keys).
     let map_reqs: Vec<ContainerRequest> = splits
         .iter()
         .map(|s| ContainerRequest {
@@ -273,7 +434,8 @@ fn run_job_inner(
     // Three sub-phases. Fetch is serial (it touches the stores and the
     // DES engine) but zero-copy: an HDFS split read is a view assembly
     // over the DataNodes' block buffers, an S3 split is an O(1) slice
-    // of the object. Map compute — the actually expensive part — fans
+    // of the object, and a handoff key is a view over the IGFS owner's
+    // cache entry. Map compute — the actually expensive part — fans
     // out across host threads. Time-plane spawning is serial again, in
     // split order, so the DES stays deterministic.
     let mut intermediate_bytes = 0u64;
@@ -283,38 +445,65 @@ fn run_job_inner(
     let mut in_stages_per_split = Vec::with_capacity(splits.len());
     for (i, split) in splits.iter().enumerate() {
         let node = map_allocs[i].node;
-        let (data, in_stages) = match cfg.input_store {
-            StoreKind::Hdfs | StoreKind::Igfs => {
-                let (d, st, local) = cluster.stores.hdfs.read_range(
+        let (data, in_stages) = match &split.source {
+            SplitSource::Range { offset } => {
+                let path = path.as_deref().expect("range split without path");
+                match cfg.input_store {
+                    StoreKind::Hdfs | StoreKind::Igfs => {
+                        let (d, st, local) = cluster.stores.hdfs.read_range(
+                            &cluster.topo,
+                            node,
+                            path,
+                            *offset,
+                            split.len,
+                            tags::INPUT_READ,
+                        )?;
+                        if local {
+                            map_in_local += split.len;
+                        } else {
+                            map_in_remote += split.len;
+                        }
+                        (d, st)
+                    }
+                    StoreKind::S3 => {
+                        let whole = cluster
+                            .stores
+                            .s3
+                            .get(path)
+                            .ok_or("input vanished")?;
+                        let d = whole.slice(*offset, split.len);
+                        let st = cluster.stores.s3.get_stages(
+                            &mut cluster.engine,
+                            &cluster.topo,
+                            node,
+                            split.len,
+                            tags::INPUT_READ,
+                        );
+                        map_in_remote += split.len;
+                        (d, st)
+                    }
+                }
+            }
+            SplitSource::Key(key) => {
+                let (d, st, tier, local) = read_handoff(
+                    &mut cluster.stores,
+                    &mut cluster.engine,
                     &cluster.topo,
                     node,
-                    input,
-                    split.offset,
-                    split.len,
-                    tags::INPUT_READ,
+                    key,
                 )?;
+                match tier {
+                    HandoffTier::Dram => handoff.dram += 1,
+                    HandoffTier::Backing => handoff.backing += 1,
+                    HandoffTier::Hdfs => handoff.hdfs += 1,
+                    HandoffTier::S3 => handoff.s3 += 1,
+                    HandoffTier::Empty => handoff.empty += 1,
+                }
                 if local {
                     map_in_local += split.len;
                 } else {
                     map_in_remote += split.len;
                 }
-                (d, st)
-            }
-            StoreKind::S3 => {
-                let whole = cluster
-                    .stores
-                    .s3
-                    .get(input)
-                    .ok_or("input vanished")?;
-                let d = whole.slice(split.offset, split.len);
-                let st = cluster.stores.s3.get_stages(
-                    &mut cluster.engine,
-                    &cluster.topo,
-                    node,
-                    split.len,
-                    tags::INPUT_READ,
-                );
-                map_in_remote += split.len;
                 (d, st)
             }
         };
@@ -323,7 +512,7 @@ fn run_job_inner(
     }
 
     // -- data plane: map + combine (the hot path), parallel
-    let workers = effective_map_workers(cfg, splits.len());
+    let workers = effective_workers(cfg.map_workers, splits.len());
     let map_outs =
         map_splits_parallel(wl, &datas, n_reduces, cfg, rt, seed, workers);
     drop(datas); // split views released before the shuffle writes
@@ -375,7 +564,12 @@ fn run_job_inner(
         }
     }
 
-    // (8–10) Reduce phase.
+    // (8–10) Reduce phase — the same three-sub-phase shape as map.
+    // Gather is serial (stores + DES engine): for every partition,
+    // invoke the container and collect each mapper's payload for it as
+    // zero-copy views. A miss (Ok(None)) is a mapper that emitted
+    // nothing; a store error is data loss and fails the job instead of
+    // silently reducing over a hole.
     let reduce_reqs: Vec<ContainerRequest> = (0..n_reduces)
         .map(|_| ContainerRequest {
             vcores: 1,
@@ -384,8 +578,10 @@ fn run_job_inner(
         })
         .collect();
     let reduce_allocs = cluster.rm.allocate(&reduce_reqs);
-    let mut output_bytes = 0u64;
     let mut reduce_in_bytes = 0u64;
+    let mut plans: Vec<ReducePlan> = Vec::with_capacity(n_reduces);
+    let mut inputs_per_part: Vec<Vec<Payload>> =
+        Vec::with_capacity(n_reduces);
     for j in 0..n_reduces {
         let node = reduce_allocs[j].node;
         let mut stages = vec![Stage::Await(maps_done)];
@@ -401,10 +597,6 @@ fn run_job_inner(
         };
         stages.push(Stage::Acquire(slot));
         stages.push(Stage::Delay(startup));
-        // -- data plane: gather this partition from every mapper.
-        // A miss (Ok(None)) is a mapper that emitted nothing; a store
-        // error is data loss and fails the job instead of silently
-        // reducing over a hole.
         let mut inputs = Vec::new();
         for i in 0..n_maps {
             let key = interm_key(&job, i, j);
@@ -423,8 +615,29 @@ fn run_job_inner(
                 None => {} // mapper emitted nothing for this partition
             }
         }
-        let ro = wl.reduce_partition(j, n_reduces, &inputs, cfg, rt);
-        let in_bytes: u64 = inputs.iter().map(|p| p.len()).sum();
+        plans.push(ReducePlan { node, slot, stages });
+        inputs_per_part.push(inputs);
+    }
+
+    // -- data plane: reduce merge across partitions, parallel
+    let r_workers = effective_workers(cfg.reduce_workers, n_reduces);
+    let reduce_outs = reduce_partitions_parallel(
+        wl,
+        &inputs_per_part,
+        n_reduces,
+        cfg,
+        rt,
+        r_workers,
+    );
+
+    // -- time plane, partition order
+    let mut output_bytes = 0u64;
+    for (j, (plan, ro)) in
+        plans.into_iter().zip(reduce_outs).enumerate()
+    {
+        let in_bytes: u64 =
+            inputs_per_part[j].iter().map(|p| p.len()).sum();
+        let mut stages = plan.stages;
         stages.push(Stage::Delay(SimNs::from_secs_f64(
             in_bytes as f64 / wl.reduce_rate(),
         )));
@@ -434,17 +647,17 @@ fn run_job_inner(
                 &mut cluster.engine,
                 &cluster.topo,
                 cfg.output_store,
-                node,
+                plan.node,
                 &output_key(&job, j),
                 ro.output,
             )?;
             stages.extend(st);
         }
-        stages.push(Stage::Release(slot));
+        stages.push(Stage::Release(plan.slot));
         stages.push(Stage::Arrive(job_done));
         cluster.engine.spawn(&format!("{job}/red{j}"), stages);
         if cfg.platform == Platform::OpenWhisk {
-            cluster.controller.complete(&reduce_spec, node);
+            cluster.controller.complete(&reduce_spec, plan.node);
         } else {
             cluster.lambda.finish();
         }
@@ -460,7 +673,8 @@ fn run_job_inner(
         .barrier_opened_at(maps_done)
         .unwrap_or(end);
     let job_time = end - t_start;
-    let io = IoSummary::from_flow_log(&cluster.engine.flow_log, job_time);
+    let io = IoSummary::from_flow_log(&cluster.engine.flow_log[flows0..],
+                                      job_time);
 
     let placed = map_in_local + map_in_remote;
     Ok(JobResult {
@@ -484,7 +698,8 @@ fn run_job_inner(
         job_time,
         failed: None,
         cold_starts: cluster.controller.cold_starts()
-            + cluster.lambda.cold_starts,
+            + cluster.lambda.cold_starts
+            - cold0,
         locality_ratio: if placed > 0 {
             map_in_local as f64 / placed as f64
         } else {
@@ -493,6 +708,8 @@ fn run_job_inner(
         io,
         rt_batches: rt.stats.batches - rt_batches0,
         rt_compute_ns: rt.stats.pjrt_ns + rt.stats.oracle_ns - rt_ns0,
+        igfs: cluster.stores.igfs.stats().delta_since(&igfs0),
+        handoff,
     })
 }
 
@@ -502,5 +719,13 @@ mod tests {
     #[test]
     fn interm_key_stable() {
         assert_eq!(super::interm_key("j", 2, 3), "j/shuffle/m00002/p003");
+    }
+
+    #[test]
+    fn effective_workers_clamps() {
+        assert_eq!(super::effective_workers(4, 16), 4);
+        assert_eq!(super::effective_workers(16, 4), 4);
+        assert_eq!(super::effective_workers(3, 0), 1);
+        assert!(super::effective_workers(0, 64) >= 1);
     }
 }

@@ -1,16 +1,22 @@
 //! MapReduce engine: job/system configuration, workload abstraction,
-//! shuffle backends (S3 / HDFS / IGFS), and the driver that plans tasks,
-//! runs the real data plane, and simulates the time plane.
+//! shuffle backends (S3 / HDFS / IGFS), the driver that plans tasks,
+//! runs the real data plane, and simulates the time plane, and the
+//! stateful multi-stage pipeline chaining jobs over cached state.
 
 pub mod driver;
+pub mod pipeline;
 pub mod shuffle;
 pub mod types;
 pub mod workload;
 
-pub use driver::{map_splits_parallel, run_job, stage_input, Cluster};
-pub use shuffle::{interm_key, output_key, Stores};
+pub use driver::{
+    map_splits_parallel, reduce_partitions_parallel, run_job, run_stage,
+    stage_input, Cluster, StageInput,
+};
+pub use pipeline::{JobPipeline, PipelineResult, PipelineStage};
+pub use shuffle::{interm_key, output_key, KeyHome, Stores};
 pub use types::{
-    CombinerMode, JobResult, PhaseStats, Platform, SerFormat, StoreKind,
-    SystemConfig,
+    CombinerMode, HandoffStats, JobResult, PhaseStats, Platform, SerFormat,
+    StoreKind, SystemConfig,
 };
 pub use workload::{task_rng, MapOutput, ReduceOutput, Workload};

@@ -1,0 +1,262 @@
+//! Multi-stage stateful job pipelines — the paper's core claim made
+//! end-to-end: chained MapReduce stages share intermediate results
+//! through the in-memory caching layer instead of round-tripping
+//! through remote storage (Cloudburst/Faasm-style stateful chaining).
+//!
+//! Stage *k+1*'s input is stage *k*'s reducer outputs, resolved through
+//! the IGFS tiers at read time (DRAM hit → PMEM backing hit → HDFS →
+//! S3 fallback — [`super::driver::StageInput::Handoff`]). After each
+//! stage the pipeline checkpoints a completion record in the IGFS
+//! state store (`crate::igfs::StateStore`); re-running on the same
+//! cluster validates each checkpoint against the still-cached outputs
+//! and skips every stage whose results survive — resumption from cached
+//! state costs zero virtual time and zero recompute.
+//!
+//! Determinism: a pipeline's final output is byte-identical at any
+//! `{map,reduce}_workers` setting, any IGFS capacity (eviction only
+//! moves bytes between tiers), and any per-stage store choice — pinned
+//! by `rust/tests/pipeline_stateful.rs`.
+
+use crate::igfs::CacheStats;
+use crate::runtime::RtEngine;
+use crate::sim::SimNs;
+
+use super::driver::{run_stage, Cluster, StageInput};
+use super::shuffle::output_key;
+use super::types::{HandoffStats, JobResult, SystemConfig};
+use super::workload::Workload;
+
+/// One stage: a workload plus the system config it runs under (stores
+/// may differ per stage — e.g. IGFS handoff mid-pipeline, durable HDFS
+/// for the final output).
+pub struct PipelineStage<'a> {
+    pub wl: &'a dyn Workload,
+    pub cfg: SystemConfig,
+}
+
+/// A named chain of MapReduce stages over one cluster.
+pub struct JobPipeline<'a> {
+    pub name: String,
+    /// Attempt recorded on fresh checkpoints (a re-submitted pipeline
+    /// bumps this; stale zombie checkpoints cannot clobber it).
+    pub attempt: u32,
+    pub stages: Vec<PipelineStage<'a>>,
+}
+
+/// Everything a pipeline run reports.
+#[derive(Clone, Debug)]
+pub struct PipelineResult {
+    pub name: String,
+    /// Per-stage reports, in stage order (checkpoint-skipped stages
+    /// appear as empty reports carrying only `output_bytes`).
+    pub stages: Vec<JobResult>,
+    /// Whether each stage was restored from its checkpoint.
+    pub restored: Vec<bool>,
+    /// Stage-handoff tier resolution, summed over executed stages.
+    pub handoff: HandoffStats,
+    /// IGFS cache counters accumulated by this run.
+    pub igfs: CacheStats,
+    /// Virtual time the run added to the cluster's clock (restored
+    /// stages are free — that is the point of cached state).
+    pub job_time: SimNs,
+    /// State-store checkpoints written / restores consumed by this run.
+    pub checkpoints: u64,
+    pub restores: u64,
+    pub failed: Option<String>,
+}
+
+impl PipelineResult {
+    pub fn ok(&self) -> bool {
+        self.failed.is_none()
+    }
+
+    pub fn final_stage(&self) -> Option<&JobResult> {
+        self.stages.last()
+    }
+}
+
+const CP_MAGIC: &[u8; 4] = b"MPL1";
+
+/// Checkpoint payload: magic, reducer count, total output bytes.
+fn encode_checkpoint(n_reduces: usize, output_bytes: u64) -> Vec<u8> {
+    let mut v = Vec::with_capacity(16);
+    v.extend_from_slice(CP_MAGIC);
+    v.extend_from_slice(&(n_reduces as u32).to_le_bytes());
+    v.extend_from_slice(&output_bytes.to_le_bytes());
+    v
+}
+
+fn decode_checkpoint(partial: &[u8]) -> Option<(usize, u64)> {
+    if partial.len() != 16 || &partial[..4] != CP_MAGIC {
+        return None;
+    }
+    let n = u32::from_le_bytes(partial[4..8].try_into().unwrap()) as usize;
+    let bytes = u64::from_le_bytes(partial[8..16].try_into().unwrap());
+    Some((n, bytes))
+}
+
+impl<'a> JobPipeline<'a> {
+    pub fn new(name: &str) -> JobPipeline<'a> {
+        JobPipeline {
+            name: name.to_string(),
+            attempt: 0,
+            stages: Vec::new(),
+        }
+    }
+
+    /// Append a stage (builder style).
+    pub fn stage(mut self, wl: &'a dyn Workload, cfg: SystemConfig) -> Self {
+        self.stages.push(PipelineStage { wl, cfg });
+        self
+    }
+
+    /// The job name keying stage `k`'s shuffle and output data.
+    pub fn stage_job(&self, k: usize) -> String {
+        format!("{}/s{k:02}", self.name)
+    }
+
+    /// Bytes of stage output still resolvable through the handoff
+    /// chain (`Stores::locate`) — must equal the committed total for
+    /// the checkpoint to be trusted.
+    fn available_output_bytes(
+        cluster: &mut Cluster,
+        job: &str,
+        n_reduces: usize,
+    ) -> u64 {
+        (0..n_reduces)
+            .map(|j| {
+                cluster
+                    .stores
+                    .locate(&output_key(job, j))
+                    .map_or(0, |(len, _)| len)
+            })
+            .sum()
+    }
+
+    /// Run (or resume) the pipeline. `input` is the staged path feeding
+    /// stage 0; every later stage reads its predecessor's outputs
+    /// through the IGFS tiers. `seed` drives all data-plane randomness.
+    pub fn run(
+        &self,
+        cluster: &mut Cluster,
+        rt: &mut RtEngine,
+        seed: u64,
+        input: &str,
+    ) -> PipelineResult {
+        let t0 = cluster.engine.now();
+        let igfs0 = cluster.stores.igfs.stats();
+        let cp0 = cluster.stores.igfs.state.checkpoints;
+        let rs0 = cluster.stores.igfs.state.restores;
+        let mut stages_out = Vec::new();
+        let mut restored = Vec::new();
+        let mut handoff = HandoffStats::default();
+        let mut prev: Option<(String, usize)> = None;
+        let mut failed = None;
+
+        for (k, st) in self.stages.iter().enumerate() {
+            let job = self.stage_job(k);
+            // Resume: a decodable checkpoint whose outputs are still
+            // fully resolvable lets the whole stage be skipped.
+            let cp = cluster
+                .stores
+                .igfs
+                .state
+                .peek(&self.name, k as u32)
+                .and_then(|ts| decode_checkpoint(&ts.partial));
+            if let Some((nr, out_bytes)) = cp {
+                let avail =
+                    Self::available_output_bytes(cluster, &job, nr);
+                if avail == out_bytes {
+                    cluster.stores.igfs.state.restore(&self.name, k as u32);
+                    let mut jr = JobResult::empty(&job, &st.cfg.name);
+                    jr.output_bytes = out_bytes;
+                    stages_out.push(jr);
+                    restored.push(true);
+                    prev = Some((job, nr));
+                    continue;
+                }
+            }
+            // Executing (or re-executing after an invalidated
+            // checkpoint): scrub any stale shuffle/output keys first —
+            // write-once backends (HDFS) reject colliding survivors,
+            // and determinism makes the rewrite byte-identical anyway.
+            cluster.stores.clear_prefix(&format!("{job}/"));
+            let stage_input = match &prev {
+                None => StageInput::Path(input.to_string()),
+                Some((pjob, nr)) => StageInput::Handoff {
+                    keys: (0..*nr).map(|j| output_key(pjob, j)).collect(),
+                },
+            };
+            match run_stage(cluster, &st.cfg, st.wl, &job, stage_input, rt,
+                            seed)
+            {
+                Ok(jr) => {
+                    handoff.add(&jr.handoff);
+                    // Record completion; any prior (now-invalid)
+                    // checkpoint is superseded by a higher attempt.
+                    let att = cluster
+                        .stores
+                        .igfs
+                        .state
+                        .peek(&self.name, k as u32)
+                        .map(|p| p.attempt + 1)
+                        .unwrap_or(self.attempt);
+                    if let Err(e) = cluster.stores.igfs.state.checkpoint(
+                        &self.name,
+                        k as u32,
+                        att,
+                        jr.output_bytes,
+                        encode_checkpoint(jr.reduce.tasks, jr.output_bytes),
+                    ) {
+                        failed = Some(format!("stage {k} checkpoint: {e}"));
+                        stages_out.push(jr);
+                        restored.push(false);
+                        break;
+                    }
+                    prev = Some((job, jr.reduce.tasks));
+                    stages_out.push(jr);
+                    restored.push(false);
+                }
+                Err(e) => {
+                    failed =
+                        Some(format!("stage {k} ({}): {e}", st.wl.name()));
+                    break;
+                }
+            }
+        }
+        let now = cluster.stores.igfs.stats();
+        PipelineResult {
+            name: self.name.clone(),
+            stages: stages_out,
+            restored,
+            handoff,
+            igfs: now.delta_since(&igfs0),
+            job_time: cluster.engine.now() - t0,
+            checkpoints: cluster.stores.igfs.state.checkpoints - cp0,
+            restores: cluster.stores.igfs.state.restores - rs0,
+            failed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let enc = encode_checkpoint(32, 123_456);
+        assert_eq!(decode_checkpoint(&enc), Some((32, 123_456)));
+        assert_eq!(decode_checkpoint(&enc[..8]), None);
+        let mut bad = enc.clone();
+        bad[0] = b'X';
+        assert_eq!(decode_checkpoint(&bad), None);
+    }
+
+    #[test]
+    fn stage_jobs_are_disjoint() {
+        let p = JobPipeline::new("pipe");
+        assert_eq!(p.stage_job(0), "pipe/s00");
+        assert_ne!(p.stage_job(1), p.stage_job(10));
+    }
+}

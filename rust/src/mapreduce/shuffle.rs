@@ -5,6 +5,8 @@
 //! PMEM-backed HDFS files (Marvel-HDFS), or (c) the Ignite in-memory
 //! cache (Marvel-IGFS).
 
+use std::collections::HashMap;
+
 use crate::hdfs::Hdfs;
 use crate::igfs::Igfs;
 use crate::metrics::tags;
@@ -20,6 +22,11 @@ pub struct Stores {
     pub hdfs: Hdfs,
     pub igfs: Igfs,
     pub s3: ObjectStore,
+    /// Integrity manifest: committed length per intermediate key.
+    /// A read that comes back with a different length (or nothing at
+    /// all for a committed key) is corruption and surfaces as `Err` —
+    /// never as a silent miss.
+    interm_len: HashMap<String, u64>,
 }
 
 /// Key for one mapper's output for one partition.
@@ -32,7 +39,75 @@ pub fn output_key(job: &str, part: usize) -> String {
     format!("{job}/out/p{part:03}")
 }
 
+/// Which store a key resolved in, probing the stage-handoff chain in
+/// order: IGFS (either tier) → HDFS → S3.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KeyHome {
+    Igfs,
+    Hdfs,
+    S3,
+}
+
 impl Stores {
+    pub fn new(hdfs: Hdfs, igfs: Igfs, s3: ObjectStore) -> Stores {
+        Stores { hdfs, igfs, s3, interm_len: HashMap::new() }
+    }
+
+    /// Probe the handoff resolution chain (IGFS tiers → HDFS → S3) for
+    /// `key`: its stored length and which store holds it. The single
+    /// source of truth for stage-handoff planning and checkpoint
+    /// validation — keep any new tier here, not at the call sites.
+    /// Disturbs no cache hit/miss statistics.
+    pub fn locate(&mut self, key: &str) -> Option<(u64, KeyHome)> {
+        if let Some(len) = self.igfs.len_of(key) {
+            return Some((len, KeyHome::Igfs));
+        }
+        if let Some(inode) = self.hdfs.namenode.stat(key) {
+            return Some((inode.len, KeyHome::Hdfs));
+        }
+        self.s3.get(key).map(|p| (p.len(), KeyHome::S3))
+    }
+
+    /// Delete every key under `prefix` from all three stores (and the
+    /// intermediate-length manifest). A pipeline clears a stage's stale
+    /// shuffle/output keys with this before re-executing it, so
+    /// write-once backends (HDFS) cannot collide with survivors of an
+    /// invalidated checkpoint. Returns the number of keys removed.
+    pub fn clear_prefix(&mut self, prefix: &str) -> usize {
+        let mut n = 0;
+        let cached: Vec<String> = self
+            .igfs
+            .caches
+            .values()
+            .flat_map(|c| c.keys())
+            .filter(|k| k.starts_with(prefix))
+            .collect();
+        for k in cached {
+            if self.igfs.remove(&k) {
+                n += 1;
+            }
+        }
+        let files: Vec<String> = self
+            .hdfs
+            .namenode
+            .list(prefix)
+            .into_iter()
+            .map(|inode| inode.path.clone())
+            .collect();
+        for p in files {
+            if self.hdfs.delete(&p) {
+                n += 1;
+            }
+        }
+        for k in self.s3.list(prefix) {
+            if self.s3.delete(&k) {
+                n += 1;
+            }
+        }
+        self.interm_len.retain(|k, _| !k.starts_with(prefix));
+        n
+    }
+
     /// Write an intermediate partition from `node`; returns stages.
     pub fn write_intermediate(
         &mut self,
@@ -44,6 +119,7 @@ impl Stores {
         data: Payload,
     ) -> Result<Vec<Stage>, String> {
         let tag = tags::INTERMEDIATE_WRITE;
+        self.interm_len.insert(key.to_string(), data.len());
         match kind {
             StoreKind::S3 => {
                 let st =
@@ -72,30 +148,53 @@ impl Stores {
         key: &str,
     ) -> Result<Option<(Payload, Vec<Stage>)>, String> {
         let tag = tags::INTERMEDIATE_READ;
-        match kind {
+        let got = match kind {
             StoreKind::S3 => match self.s3.get(key) {
-                None => Ok(None),
+                None => None,
                 Some(data) => {
                     let st = self
                         .s3
                         .get_stages(engine, topo, node, data.len(), tag);
-                    Ok(Some((data, st)))
+                    Some((data, st))
                 }
             },
             StoreKind::Hdfs => {
                 if self.hdfs.namenode.stat(key).is_none() {
-                    return Ok(None); // never written: a miss, not a fault
+                    None // never written in the namespace
+                } else {
+                    // Committed in the namespace: any read failure now
+                    // is data loss/corruption and must surface.
+                    let (data, st, _, _) =
+                        self.hdfs.read(topo, node, key, tag)?;
+                    Some((data, st))
                 }
-                // Committed in the namespace: any read failure now is
-                // data loss/corruption and must surface.
-                let (data, st, _, _) = self.hdfs.read(topo, node, key, tag)?;
-                Ok(Some((data, st)))
             }
             // IGFS demotes evicted entries to the backing tier instead
             // of dropping them, so a cache miss can only mean the key
-            // was never stored.
-            StoreKind::Igfs => Ok(self.igfs.get(topo, node, key, tag)),
+            // was never stored (or lost — the manifest check below).
+            StoreKind::Igfs => self.igfs.get(topo, node, key, tag),
+        };
+        // Integrity manifest: a committed key must come back with
+        // exactly the committed length, whatever the backend.
+        if let Some(&want) = self.interm_len.get(key) {
+            match &got {
+                None => {
+                    return Err(format!(
+                        "intermediate {key} lost: committed {want} \
+                         bytes, store has none"
+                    ));
+                }
+                Some((data, _)) if data.len() != want => {
+                    return Err(format!(
+                        "intermediate {key} corrupt: read {} bytes, \
+                         committed {want}",
+                        data.len()
+                    ));
+                }
+                _ => {}
+            }
         }
+        Ok(got)
     }
 
     /// Write final output from `node`.
@@ -134,11 +233,11 @@ mod tests {
         let mut e = Engine::new();
         let t = TopologyBuilder { nodes: 2, ..Default::default() }
             .build(&mut e);
-        let stores = Stores {
-            hdfs: Hdfs::new(&t, DeviceRole::Pmem, 1),
-            igfs: Igfs::new(&t, GIB),
-            s3: ObjectStore::new(&mut e, &ObjStoreConfig::default()),
-        };
+        let stores = Stores::new(
+            Hdfs::new(&t, DeviceRole::Pmem, 1),
+            Igfs::new(&t, GIB),
+            ObjectStore::new(&mut e, &ObjStoreConfig::default()),
+        );
         (e, t, stores)
     }
 
@@ -199,6 +298,105 @@ mod tests {
             .read_intermediate(&mut e, &t, StoreKind::Hdfs, NodeId(0),
                                "doomed")
             .is_err());
+    }
+
+    #[test]
+    fn corrupted_intermediate_is_an_error_every_backend() {
+        // A committed key whose stored bytes changed length behind the
+        // manifest's back must read back as Err, not as data.
+        let (mut e, t, mut s) = setup();
+        for kind in [StoreKind::S3, StoreKind::Hdfs, StoreKind::Igfs] {
+            let key = format!("{kind:?}/corrupt");
+            s.write_intermediate(&mut e, &t, kind, NodeId(0), &key,
+                                 Payload::real(vec![1; 64]))
+                .unwrap();
+            // Tamper through the raw store, bypassing the manifest.
+            match kind {
+                StoreKind::S3 => {
+                    s.s3.put(&key, Payload::real(vec![9; 10]));
+                }
+                StoreKind::Hdfs => {
+                    assert!(s.hdfs.delete(&key));
+                    s.hdfs
+                        .put(&t, NodeId(0), &key,
+                             Payload::real(vec![9; 10]), 0)
+                        .unwrap();
+                }
+                StoreKind::Igfs => {
+                    s.igfs.put(&t, NodeId(0), &key,
+                               Payload::real(vec![9; 10]), 0);
+                }
+            }
+            let r = s.read_intermediate(&mut e, &t, kind, NodeId(1), &key);
+            assert!(r.is_err(), "{kind:?} must surface corruption");
+            assert!(r.unwrap_err().contains("corrupt"), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn lost_committed_intermediate_is_an_error_every_backend() {
+        // Committed, then vanished entirely: Err, never Ok(None).
+        let (mut e, t, mut s) = setup();
+        for kind in [StoreKind::S3, StoreKind::Hdfs, StoreKind::Igfs] {
+            let key = format!("{kind:?}/lost");
+            s.write_intermediate(&mut e, &t, kind, NodeId(0), &key,
+                                 Payload::real(vec![2; 32]))
+                .unwrap();
+            match kind {
+                StoreKind::S3 => assert!(s.s3.delete(&key)),
+                StoreKind::Hdfs => assert!(s.hdfs.delete(&key)),
+                StoreKind::Igfs => assert!(s.igfs.remove(&key)),
+            }
+            let r = s.read_intermediate(&mut e, &t, kind, NodeId(0), &key);
+            assert!(r.is_err(), "{kind:?} must surface loss");
+            assert!(r.unwrap_err().contains("lost"), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn locate_probes_the_full_chain() {
+        let (mut e, t, mut s) = setup();
+        s.write_intermediate(&mut e, &t, StoreKind::Igfs, NodeId(0), "g/k",
+                             Payload::real(vec![1; 11]))
+            .unwrap();
+        s.write_intermediate(&mut e, &t, StoreKind::Hdfs, NodeId(0), "h/k",
+                             Payload::real(vec![1; 22]))
+            .unwrap();
+        s.write_intermediate(&mut e, &t, StoreKind::S3, NodeId(0), "s/k",
+                             Payload::real(vec![1; 33]))
+            .unwrap();
+        assert_eq!(s.locate("g/k"), Some((11, KeyHome::Igfs)));
+        assert_eq!(s.locate("h/k"), Some((22, KeyHome::Hdfs)));
+        assert_eq!(s.locate("s/k"), Some((33, KeyHome::S3)));
+        assert_eq!(s.locate("absent"), None);
+    }
+
+    #[test]
+    fn clear_prefix_scrubs_every_backend_and_the_manifest() {
+        let (mut e, t, mut s) = setup();
+        for (kind, key) in [(StoreKind::Igfs, "job/s01/shuffle/a"),
+                            (StoreKind::Hdfs, "job/s01/out/b"),
+                            (StoreKind::S3, "job/s01/out/c")] {
+            s.write_intermediate(&mut e, &t, kind, NodeId(0), key,
+                                 Payload::real(vec![5; 16]))
+                .unwrap();
+        }
+        s.write_intermediate(&mut e, &t, StoreKind::Igfs, NodeId(0),
+                             "job/s02/keep", Payload::real(vec![5; 16]))
+            .unwrap();
+        assert_eq!(s.clear_prefix("job/s01/"), 3);
+        // Cleared keys read back as a plain miss — the manifest entry
+        // is gone too, so this is Ok(None), not Err("lost").
+        for (kind, key) in [(StoreKind::Igfs, "job/s01/shuffle/a"),
+                            (StoreKind::Hdfs, "job/s01/out/b"),
+                            (StoreKind::S3, "job/s01/out/c")] {
+            assert!(matches!(
+                s.read_intermediate(&mut e, &t, kind, NodeId(0), key),
+                Ok(None)
+            ), "{kind:?}");
+        }
+        // Other prefixes untouched.
+        assert!(s.locate("job/s02/keep").is_some());
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! runtime uses compact binary — this drives the Table 1 intermediate
 //! expansion factors).
 
+use crate::igfs::CacheStats;
 use crate::net::DeviceRole;
 use crate::sim::SimNs;
 use crate::util::bytes::{GIB, MIB};
@@ -79,9 +80,53 @@ pub struct SystemConfig {
     /// byte-identical to serial — see the determinism contract in
     /// `driver::map_splits_parallel`.
     pub map_workers: usize,
+    /// Data-plane reduce workers (host threads running
+    /// `reduce_partition` across partitions): 0 = auto. Same
+    /// determinism contract as `map_workers` — each partition is
+    /// reduced by exactly one worker over inputs gathered in mapper
+    /// order, so worker count is invisible in every output bit.
+    pub reduce_workers: usize,
+}
+
+/// Parse one worker-count override value (the pure half of `from_env`,
+/// unit-testable without touching the process environment — writing
+/// env vars from tests races other threads' `getenv`).
+fn parse_workers(val: Option<&str>) -> Option<usize> {
+    val?.trim().parse().ok()
 }
 
 impl SystemConfig {
+    /// Apply environment overrides: `MARVEL_MAP_WORKERS` /
+    /// `MARVEL_REDUCE_WORKERS` force the data-plane worker counts.
+    /// Every preset constructor applies this, so CI's determinism
+    /// matrix can sweep worker counts across the whole test suite —
+    /// the byte-identical contract means outputs cannot change, only
+    /// wall-clock can. Explicit field assignment after construction
+    /// still wins (the pinned determinism tests rely on that).
+    pub fn from_env(self) -> SystemConfig {
+        let map = std::env::var("MARVEL_MAP_WORKERS").ok();
+        let reduce = std::env::var("MARVEL_REDUCE_WORKERS").ok();
+        self.with_worker_overrides(
+            parse_workers(map.as_deref()),
+            parse_workers(reduce.as_deref()),
+        )
+    }
+
+    /// Apply already-parsed worker overrides (`None` = leave as-is).
+    pub fn with_worker_overrides(
+        mut self,
+        map: Option<usize>,
+        reduce: Option<usize>,
+    ) -> SystemConfig {
+        if let Some(w) = map {
+            self.map_workers = w;
+        }
+        if let Some(w) = reduce {
+            self.reduce_workers = w;
+        }
+        self
+    }
+
     /// Corral on AWS Lambda with S3 for everything — the baseline of
     /// Figures 4/5 ("Lambda" series).
     pub fn corral_lambda() -> SystemConfig {
@@ -100,7 +145,9 @@ impl SystemConfig {
             prewarm: false,
             materialize_cap: 32 * MIB,
             map_workers: 0,
+            reduce_workers: 0,
         }
+        .from_env()
     }
 
     /// Marvel with PMEM-backed HDFS for intermediate data
@@ -121,7 +168,9 @@ impl SystemConfig {
             prewarm: true,
             materialize_cap: 32 * MIB,
             map_workers: 0,
+            reduce_workers: 0,
         }
+        .from_env()
     }
 
     /// Marvel with intermediate data in the Ignite in-memory cache
@@ -180,7 +229,9 @@ impl SystemConfig {
             prewarm: true,
             materialize_cap: 32 * MIB,
             map_workers: 0,
+            reduce_workers: 0,
         }
+        .from_env()
     }
 }
 
@@ -191,6 +242,34 @@ pub struct PhaseStats {
     pub bytes_in: u64,
     pub bytes_out: u64,
     pub duration: SimNs,
+}
+
+/// How a pipeline stage's input splits resolved through the driver's
+/// DRAM → PMEM-backing → HDFS → S3 fallback chain. `empty` counts
+/// upstream reducers that emitted nothing. All-zero for path-staged
+/// inputs.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HandoffStats {
+    pub dram: u64,
+    pub backing: u64,
+    pub hdfs: u64,
+    pub s3: u64,
+    pub empty: u64,
+}
+
+impl HandoffStats {
+    pub fn add(&mut self, other: &HandoffStats) {
+        self.dram += other.dram;
+        self.backing += other.backing;
+        self.hdfs += other.hdfs;
+        self.s3 += other.s3;
+        self.empty += other.empty;
+    }
+
+    /// Splits that resolved to actual bytes (any tier).
+    pub fn resolved(&self) -> u64 {
+        self.dram + self.backing + self.hdfs + self.s3
+    }
 }
 
 /// Everything a job run reports (feeds every table/figure bench).
@@ -211,28 +290,45 @@ pub struct JobResult {
     /// Real wall-clock spent in the PJRT/oracle combine path.
     pub rt_batches: u64,
     pub rt_compute_ns: u64,
+    /// IGFS cache activity attributable to this job: stage-handoff
+    /// reads plus intermediate shuffle traffic through the cache.
+    pub igfs: CacheStats,
+    /// How the job's input splits resolved when they came from an
+    /// upstream pipeline stage (all-zero for path-staged inputs).
+    pub handoff: HandoffStats,
 }
 
 impl JobResult {
-    pub fn failed(job: &str, config: &str, input_bytes: u64, msg: String)
-        -> JobResult
-    {
+    /// An all-zero successful report — the base for `failed` and the
+    /// placeholder a pipeline records for a checkpoint-skipped stage.
+    pub fn empty(job: &str, config: &str) -> JobResult {
         JobResult {
             job: job.into(),
             config: config.into(),
-            input_bytes,
+            input_bytes: 0,
             intermediate_bytes: 0,
             output_bytes: 0,
             map: PhaseStats::default(),
             reduce: PhaseStats::default(),
             job_time: SimNs::ZERO,
-            failed: Some(msg),
+            failed: None,
             cold_starts: 0,
             locality_ratio: 0.0,
             io: Default::default(),
             rt_batches: 0,
             rt_compute_ns: 0,
+            igfs: CacheStats::default(),
+            handoff: HandoffStats::default(),
         }
+    }
+
+    pub fn failed(job: &str, config: &str, input_bytes: u64, msg: String)
+        -> JobResult
+    {
+        let mut r = JobResult::empty(job, config);
+        r.input_bytes = input_bytes;
+        r.failed = Some(msg);
+        r
     }
 
     pub fn ok(&self) -> bool {
@@ -265,6 +361,45 @@ mod tests {
         assert!(a.name.contains("ssd+s3"));
         let b = SystemConfig::onprem(DeviceRole::Pmem, false);
         assert_eq!(b.input_store, StoreKind::Hdfs);
+    }
+
+    #[test]
+    fn worker_overrides_parse_and_apply() {
+        // The pure halves of from_env — tested without env mutation
+        // (set_var would race concurrent getenv in other test threads).
+        assert_eq!(parse_workers(Some("3")), Some(3));
+        assert_eq!(parse_workers(Some(" 8 ")), Some(8));
+        assert_eq!(parse_workers(Some("auto")), None);
+        assert_eq!(parse_workers(None), None);
+        let c = SystemConfig::marvel_igfs()
+            .with_worker_overrides(Some(3), Some(5));
+        assert_eq!(c.map_workers, 3);
+        assert_eq!(c.reduce_workers, 5);
+        let d = c.clone().with_worker_overrides(None, None);
+        assert_eq!(d.map_workers, 3);
+        assert_eq!(d.reduce_workers, 5);
+        // When CI's determinism matrix sets the env vars, every preset
+        // picks them up; both fields agree under the matrix.
+        let e = SystemConfig::marvel_igfs();
+        let want_map = parse_workers(
+            std::env::var("MARVEL_MAP_WORKERS").ok().as_deref(),
+        )
+        .unwrap_or(0);
+        assert_eq!(e.map_workers, want_map);
+    }
+
+    #[test]
+    fn handoff_stats_accumulate() {
+        let mut a = HandoffStats {
+            dram: 1,
+            backing: 2,
+            hdfs: 3,
+            s3: 4,
+            empty: 5,
+        };
+        a.add(&HandoffStats { dram: 10, ..Default::default() });
+        assert_eq!(a.dram, 11);
+        assert_eq!(a.resolved(), 11 + 2 + 3 + 4);
     }
 
     #[test]

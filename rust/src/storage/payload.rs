@@ -292,6 +292,14 @@ impl<'a> PayloadCursor<'a> {
         self.read(4)
             .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
+
+    pub fn read_u64_le(&mut self) -> Option<u64> {
+        self.read(8).map(|b| {
+            u64::from_le_bytes([
+                b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+            ])
+        })
+    }
 }
 
 #[cfg(test)]
@@ -435,5 +443,7 @@ mod tests {
         assert_eq!(cur.read_u16_le(), Some(0x1234));
         assert_eq!(cur.read_u32_le(), Some(0x5678));
         assert_eq!(cur.remaining(), 0);
+        let q = Payload::real(0x1122_3344_5566_7788u64.to_le_bytes().to_vec());
+        assert_eq!(q.cursor().read_u64_le(), Some(0x1122_3344_5566_7788));
     }
 }

@@ -1,13 +1,16 @@
 //! The paper's benchmark workloads: WordCount, Grep (Figures 4/5/6),
-//! and the Scan / Aggregation / Join queries (Table 1).
+//! the Scan / Aggregation / Join queries (Table 1), and the iterative
+//! PageRank used by the multi-stage stateful pipeline.
 
 pub mod corpus;
 pub mod grep;
+pub mod pagerank;
 pub mod queries;
 pub mod wordcount;
 
 pub use corpus::Corpus;
 pub use grep::Grep;
+pub use pagerank::PageRank;
 pub use queries::{AggregationQuery, JoinQuery, ScanQuery};
 pub use wordcount::WordCount;
 

@@ -1,0 +1,340 @@
+//! PageRank — the iterative workload for multi-stage stateful
+//! pipelines (multi-round rank propagation, Cloudburst/Faasm-style
+//! chained functions over cached state).
+//!
+//! Record format: 12-byte LE rows `(node: u32, rank: u64)` — exactly
+//! the kernel WordCount reducer's output rows, so a wordcount stage
+//! seeds the rank vector (cell → count) and every PageRank round
+//! chains directly on the previous round's output. Rounds therefore
+//! need no adjacency data in flight: a node's out-degree and neighbor
+//! ids derive deterministically from `mix64(node)` over the fixed
+//! [`NODE_SPACE`] (the combine scheme's parts × buckets flat cell
+//! space), the classic synthetic-graph trick.
+//!
+//! Ranks are integer fixed-point and every round conserves total mass
+//! exactly: a node sends `floor(floor(r·85/100)/deg)` to each of its
+//! `deg` neighbors and keeps the remainder, so `Σ ranks` is invariant
+//! across rounds — pinned by the unit tests below and exercised
+//! end-to-end by `rust/tests/pipeline_stateful.rs`.
+
+use std::collections::BTreeMap;
+
+use crate::mapreduce::{MapOutput, ReduceOutput, SystemConfig, Workload};
+use crate::runtime::RtEngine;
+use crate::storage::Payload;
+use crate::util::hash::mix64;
+use crate::util::rng::Rng;
+
+/// Node id space: the combine scheme's parts × buckets flat cell space
+/// (32 × 1024), so wordcount cells are valid graph nodes.
+pub const NODE_SPACE: u64 = 32 * 1024;
+
+/// Bytes per `(node: u32, rank: u64)` row.
+pub const ROW: usize = 12;
+
+const DEG_SALT: u64 = 0xA5A5_5A5A_C0FF_EE00;
+const NBR_SALT: u64 = 0x9E37_79B9_7F4A_7C15;
+
+#[derive(Clone, Debug, Default)]
+pub struct PageRank;
+
+impl PageRank {
+    pub fn new() -> PageRank {
+        PageRank
+    }
+
+    /// Deterministic synthetic out-degree of `node`: 1..=4.
+    pub fn degree(node: u32) -> u64 {
+        1 + (mix64(node as u64 ^ DEG_SALT) & 3)
+    }
+
+    /// Deterministic i-th out-neighbor of `node` (i < degree).
+    pub fn neighbor(node: u32, i: u64) -> u32 {
+        let h = mix64(((node as u64) << 3) ^ (i + 1).wrapping_mul(NBR_SALT));
+        (h % NODE_SPACE) as u32
+    }
+
+    /// Reducer partition owning `node`'s contributions.
+    fn partition(node: u32, parts: usize) -> usize {
+        (mix64(node as u64) % parts as u64) as usize
+    }
+
+    fn push_row(buf: &mut Vec<u8>, node: u32, val: u64) {
+        buf.extend_from_slice(&node.to_le_bytes());
+        buf.extend_from_slice(&val.to_le_bytes());
+    }
+}
+
+impl Workload for PageRank {
+    fn name(&self) -> &str {
+        "pagerank"
+    }
+
+    /// Standalone seeding: whole 12-byte rank rows, zero-padded tail
+    /// (the parser ignores a trailing run shorter than one row).
+    fn generate_input(&self, bytes: u64, materialize: bool, rng: &mut Rng)
+        -> Payload
+    {
+        if !materialize {
+            return Payload::synthetic(bytes);
+        }
+        let rows = (bytes as usize) / ROW;
+        let mut out = Vec::with_capacity(bytes as usize);
+        for _ in 0..rows {
+            let node = (rng.next_u64() % NODE_SPACE) as u32;
+            let rank = 1 + rng.next_u64() % 1000;
+            Self::push_row(&mut out, node, rank);
+        }
+        out.resize(bytes as usize, 0);
+        Payload::real(out)
+    }
+
+    fn map_split(
+        &self,
+        split: &Payload,
+        parts: usize,
+        _cfg: &SystemConfig,
+        _rt: &mut RtEngine,
+        _rng: &mut Rng,
+    ) -> MapOutput {
+        match split.contiguous() {
+            Some(rows) => {
+                let rows: &[u8] = &rows;
+                let mut parts_bytes: Vec<Vec<u8>> =
+                    vec![Vec::new(); parts];
+                let mut records = 0u64;
+                for row in rows.chunks_exact(ROW) {
+                    let node =
+                        u32::from_le_bytes(row[0..4].try_into().unwrap());
+                    let rank =
+                        u64::from_le_bytes(row[4..12].try_into().unwrap());
+                    if rank == 0 {
+                        continue;
+                    }
+                    let deg = Self::degree(node);
+                    // Integer damping: send floor(r·85/100)/deg per
+                    // neighbor, keep the remainder → mass conserved
+                    // exactly (kept + contrib·deg == rank).
+                    let contrib =
+                        ((rank as u128 * 85 / 100) as u64) / deg;
+                    let kept = rank - contrib * deg;
+                    if kept > 0 {
+                        let j = Self::partition(node, parts);
+                        Self::push_row(&mut parts_bytes[j], node, kept);
+                        records += 1;
+                    }
+                    if contrib > 0 {
+                        for i in 0..deg {
+                            let nb = Self::neighbor(node, i);
+                            let j = Self::partition(nb, parts);
+                            Self::push_row(&mut parts_bytes[j], nb, contrib);
+                            records += 1;
+                        }
+                    }
+                }
+                MapOutput {
+                    partitions: parts_bytes
+                        .into_iter()
+                        .map(Payload::real)
+                        .collect(),
+                    records,
+                }
+            }
+            None => {
+                // Synthetic: each input row fans out to ≤ deg+1 rows;
+                // exact-expectation accounting with E[deg] = 2.5.
+                let rows = split.len() / ROW as u64;
+                let out_rows = rows * 7 / 2;
+                let per = out_rows / parts as u64;
+                let rem = (out_rows % parts as u64) as usize;
+                let partitions = (0..parts)
+                    .map(|j| {
+                        let r = per + u64::from(j < rem);
+                        Payload::synthetic(r * ROW as u64)
+                    })
+                    .collect();
+                MapOutput { partitions, records: out_rows }
+            }
+        }
+    }
+
+    fn reduce_partition(
+        &self,
+        _part: usize,
+        parts: usize,
+        inputs: &[Payload],
+        _cfg: &SystemConfig,
+        _rt: &mut RtEngine,
+    ) -> ReduceOutput {
+        if inputs.iter().all(|p| p.is_real()) {
+            // Merge-sum contributions per node, chunk-aware, output
+            // sorted rows — the same 12-byte format the next round's
+            // map parses.
+            let mut merged = BTreeMap::<u32, u64>::new();
+            for p in inputs {
+                let mut cur = p.cursor();
+                while cur.remaining() >= ROW {
+                    let node = cur.read_u32_le().unwrap();
+                    let val = cur.read_u64_le().unwrap();
+                    *merged.entry(node).or_default() += val;
+                }
+            }
+            let mut out = Vec::with_capacity(merged.len() * ROW);
+            let mut records = 0u64;
+            for (node, val) in &merged {
+                if *val == 0 {
+                    continue;
+                }
+                Self::push_row(&mut out, *node, *val);
+                records += 1;
+            }
+            ReduceOutput { output: Payload::real(out), records }
+        } else {
+            // Synthetic: distinct nodes bounded by the partition's
+            // share of the id space and by the rows that arrived.
+            let rows: u64 =
+                inputs.iter().map(|p| p.len() / ROW as u64).sum();
+            let cap = NODE_SPACE / parts.max(1) as u64 + 1;
+            let distinct = rows.min(cap);
+            ReduceOutput {
+                output: Payload::synthetic(distinct * ROW as u64),
+                records: distinct,
+            }
+        }
+    }
+
+    /// Rank propagation is parse + hash + emit — memory-bound
+    /// streaming, modeled well above the JVM wordcount rate.
+    fn map_rate(&self) -> f64 {
+        150e6
+    }
+
+    /// Reduce is a merge of pre-sorted aggregate rows.
+    fn reduce_rate(&self) -> f64 {
+        400e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::SystemConfig;
+
+    fn rows_of(p: &Payload) -> Vec<(u32, u64)> {
+        let b = p.gather().unwrap();
+        b.chunks_exact(ROW)
+            .map(|r| {
+                (u32::from_le_bytes(r[0..4].try_into().unwrap()),
+                 u64::from_le_bytes(r[4..12].try_into().unwrap()))
+            })
+            .collect()
+    }
+
+    fn seed_rows(n: usize) -> (Payload, u64) {
+        let mut buf = Vec::new();
+        let mut mass = 0u64;
+        for i in 0..n {
+            let node = ((i as u64 * 37) % NODE_SPACE) as u32;
+            let rank = 10 + (i as u64 % 90);
+            mass += rank;
+            PageRank::push_row(&mut buf, node, rank);
+        }
+        (Payload::real(buf), mass)
+    }
+
+    #[test]
+    fn adjacency_is_deterministic_and_in_range() {
+        for node in [0u32, 1, 4095, 32767] {
+            let deg = PageRank::degree(node);
+            assert!((1..=4).contains(&deg), "deg {deg}");
+            assert_eq!(deg, PageRank::degree(node));
+            for i in 0..deg {
+                let nb = PageRank::neighbor(node, i);
+                assert!((nb as u64) < NODE_SPACE);
+                assert_eq!(nb, PageRank::neighbor(node, i));
+            }
+        }
+    }
+
+    #[test]
+    fn map_conserves_total_mass() {
+        let mut rt = RtEngine::load(None).unwrap();
+        let pr = PageRank::new();
+        let (input, mass) = seed_rows(500);
+        let cfg = SystemConfig::marvel_igfs();
+        let mo = pr.map_split(&input, 8, &cfg, &mut rt,
+                              &mut Rng::new(1));
+        let out_mass: u64 = mo
+            .partitions
+            .iter()
+            .flat_map(|p| rows_of(p))
+            .map(|(_, v)| v)
+            .sum();
+        assert_eq!(out_mass, mass, "damping must conserve rank mass");
+    }
+
+    #[test]
+    fn rounds_chain_on_reduce_output_format() {
+        // map → reduce → map again: the reduce output must parse as a
+        // valid next-round input and keep conserving mass.
+        let mut rt = RtEngine::load(None).unwrap();
+        let pr = PageRank::new();
+        let (input, mass) = seed_rows(300);
+        let cfg = SystemConfig::marvel_igfs();
+        let parts = 4;
+        let mo = pr.map_split(&input, parts, &cfg, &mut rt,
+                              &mut Rng::new(2));
+        let mut round1 = Vec::new();
+        for j in 0..parts {
+            let ro = pr.reduce_partition(
+                j, parts, &[mo.partitions[j].clone()], &cfg, &mut rt);
+            // Sorted, deduplicated rows.
+            let rows = rows_of(&ro.output);
+            assert!(rows.windows(2).all(|w| w[0].0 < w[1].0));
+            round1.push(ro.output);
+        }
+        let r1_mass: u64 = round1
+            .iter()
+            .flat_map(|p| rows_of(p))
+            .map(|(_, v)| v)
+            .sum();
+        assert_eq!(r1_mass, mass);
+        let next = Payload::concat(&round1);
+        let mo2 = pr.map_split(&next, parts, &cfg, &mut rt,
+                               &mut Rng::new(3));
+        let m2: u64 = mo2
+            .partitions
+            .iter()
+            .flat_map(|p| rows_of(p))
+            .map(|(_, v)| v)
+            .sum();
+        assert_eq!(m2, mass);
+    }
+
+    #[test]
+    fn generate_input_exact_bytes_and_parseable() {
+        let pr = PageRank::new();
+        let mut rng = Rng::new(7);
+        for bytes in [0u64, 5, 1200, 1207] {
+            let p = pr.generate_input(bytes, true, &mut rng);
+            assert_eq!(p.len(), bytes);
+        }
+        assert_eq!(pr.generate_input(999, false, &mut rng).len(), 999);
+    }
+
+    #[test]
+    fn synthetic_accounting_deterministic() {
+        let mut rt = RtEngine::load(None).unwrap();
+        let pr = PageRank::new();
+        let cfg = SystemConfig::marvel_igfs();
+        let a = pr.map_split(&Payload::synthetic(120_000), 8, &cfg,
+                             &mut rt, &mut Rng::new(1));
+        let b = pr.map_split(&Payload::synthetic(120_000), 8, &cfg,
+                             &mut rt, &mut Rng::new(2));
+        assert_eq!(a.total_bytes(), b.total_bytes());
+        assert_eq!(a.records, b.records);
+        let ro = pr.reduce_partition(0, 8, &a.partitions, &cfg, &mut rt);
+        assert!(!ro.output.is_empty());
+        assert!(!ro.output.is_real());
+    }
+}

@@ -1,8 +1,8 @@
-//! The parallel map data plane's determinism contract: `run_job` must
-//! produce byte-identical results at ANY data-plane worker count —
+//! The parallel data plane's determinism contract: `run_job` must
+//! produce byte-identical results at ANY map or reduce worker count —
 //! same JobResult accounting, same virtual completion time, and the
 //! same output bytes in the output store (see the DESIGN note on
-//! `mapreduce::driver::map_splits_parallel`).
+//! `mapreduce::driver::pool_run`).
 
 use marvel::coordinator::ClusterSpec;
 use marvel::mapreduce::{
@@ -15,14 +15,16 @@ use marvel::workloads::WordCount;
 
 const SEED: u64 = 11;
 
-/// Run one wordcount job with `workers` map threads over 16 real
-/// splits; return the report plus every reducer's output bytes.
+/// Run one wordcount job with the given data-plane worker counts over
+/// 16 real splits; return the report plus every reducer's output bytes.
 fn run_with_workers(
     cfg_base: &SystemConfig,
-    workers: usize,
+    map_workers: usize,
+    reduce_workers: usize,
 ) -> (JobResult, Vec<Option<Vec<u8>>>) {
     let mut cfg = cfg_base.clone();
-    cfg.map_workers = workers;
+    cfg.map_workers = map_workers;
+    cfg.reduce_workers = reduce_workers;
     let mut cluster = ClusterSpec::default().deploy(&cfg);
     // Small blocks → 16 splits from a 4 MiB input, so multiple map
     // tasks genuinely interleave across workers.
@@ -32,7 +34,8 @@ fn run_with_workers(
     let input =
         stage_input(&mut cluster, &cfg, &wc, 4 * MIB, SEED).unwrap();
     let r = run_job(&mut cluster, &cfg, &wc, &input, &mut rt, SEED);
-    assert!(r.ok(), "workers={workers}: {:?}", r.failed);
+    assert!(r.ok(), "workers={map_workers}/{reduce_workers}: {:?}",
+            r.failed);
     assert!(r.map.tasks > 1, "need multiple splits to exercise workers");
     let job = wc.name().to_string();
     let outs = (0..r.reduce.tasks)
@@ -58,38 +61,66 @@ fn run_with_workers(
     (r, outs)
 }
 
+fn assert_identical(
+    r1: &JobResult,
+    o1: &[Option<Vec<u8>>],
+    rn: &JobResult,
+    on: &[Option<Vec<u8>>],
+    label: &str,
+) {
+    assert_eq!(r1.intermediate_bytes, rn.intermediate_bytes, "{label}");
+    assert_eq!(r1.output_bytes, rn.output_bytes, "{label}");
+    assert_eq!(r1.map.bytes_out, rn.map.bytes_out, "{label}");
+    assert_eq!(r1.reduce.bytes_in, rn.reduce.bytes_in, "{label}");
+    assert_eq!(r1.job_time, rn.job_time,
+               "virtual time must not depend on host threads ({label})");
+    assert_eq!(r1.rt_batches, rn.rt_batches, "{label}");
+    assert_eq!(o1.len(), on.len());
+    for (j, (a, b)) in o1.iter().zip(on).enumerate() {
+        assert_eq!(a, b, "reducer {j} output diverged at {label}");
+    }
+}
+
 #[test]
-fn output_byte_identical_for_1_2_and_8_workers() {
+fn output_byte_identical_for_1_2_and_8_map_workers() {
     let cfg = SystemConfig::marvel_igfs();
-    let (r1, o1) = run_with_workers(&cfg, 1);
+    let (r1, o1) = run_with_workers(&cfg, 1, 1);
     for workers in [2usize, 8] {
-        let (rn, on) = run_with_workers(&cfg, workers);
-        assert_eq!(r1.intermediate_bytes, rn.intermediate_bytes,
-                   "workers={workers}");
-        assert_eq!(r1.output_bytes, rn.output_bytes, "workers={workers}");
-        assert_eq!(r1.map.bytes_out, rn.map.bytes_out, "workers={workers}");
-        assert_eq!(r1.reduce.bytes_in, rn.reduce.bytes_in,
-                   "workers={workers}");
-        assert_eq!(r1.job_time, rn.job_time,
-                   "virtual time must not depend on host threads \
-                    (workers={workers})");
-        assert_eq!(r1.rt_batches, rn.rt_batches, "workers={workers}");
-        assert_eq!(o1.len(), on.len());
-        for (j, (a, b)) in o1.iter().zip(&on).enumerate() {
-            assert_eq!(a, b,
-                       "reducer {j} output diverged at workers={workers}");
-        }
+        let (rn, on) = run_with_workers(&cfg, workers, 1);
+        assert_identical(&r1, &o1, &rn, &on,
+                         &format!("map_workers={workers}"));
     }
     // The outputs are non-trivial: at least one reducer wrote bytes.
     assert!(o1.iter().any(|o| o.as_ref().map_or(false, |b| !b.is_empty())));
 }
 
 #[test]
-fn auto_worker_count_matches_serial() {
-    // map_workers = 0 (auto) must also match the serial baseline.
+fn output_byte_identical_for_1_4_and_8_reduce_workers() {
     let cfg = SystemConfig::marvel_igfs();
-    let (r1, o1) = run_with_workers(&cfg, 1);
-    let (ra, oa) = run_with_workers(&cfg, 0);
+    let (r1, o1) = run_with_workers(&cfg, 1, 1);
+    for workers in [4usize, 8] {
+        let (rn, on) = run_with_workers(&cfg, 1, workers);
+        assert_identical(&r1, &o1, &rn, &on,
+                         &format!("reduce_workers={workers}"));
+    }
+    assert!(r1.reduce.tasks > 1, "need multiple partitions");
+}
+
+#[test]
+fn map_and_reduce_workers_compose() {
+    // Sweeping both planes together must still match fully serial.
+    let cfg = SystemConfig::marvel_igfs();
+    let (r1, o1) = run_with_workers(&cfg, 1, 1);
+    let (rn, on) = run_with_workers(&cfg, 8, 8);
+    assert_identical(&r1, &o1, &rn, &on, "map=8/reduce=8");
+}
+
+#[test]
+fn auto_worker_count_matches_serial() {
+    // workers = 0 (auto) must also match the serial baseline.
+    let cfg = SystemConfig::marvel_igfs();
+    let (r1, o1) = run_with_workers(&cfg, 1, 1);
+    let (ra, oa) = run_with_workers(&cfg, 0, 0);
     assert_eq!(r1.output_bytes, ra.output_bytes);
     assert_eq!(r1.job_time, ra.job_time);
     assert_eq!(o1, oa);
@@ -101,8 +132,8 @@ fn raw_path_parallel_determinism() {
     // through the borrowed-slice reduce keying — same contract.
     let mut cfg = SystemConfig::marvel_igfs_paper();
     cfg.materialize_cap = 32 * MIB;
-    let (r1, o1) = run_with_workers(&cfg, 1);
-    let (r4, o4) = run_with_workers(&cfg, 4);
+    let (r1, o1) = run_with_workers(&cfg, 1, 1);
+    let (r4, o4) = run_with_workers(&cfg, 4, 4);
     assert_eq!(r1.intermediate_bytes, r4.intermediate_bytes);
     assert_eq!(r1.output_bytes, r4.output_bytes);
     assert_eq!(o1, o4);

@@ -1,0 +1,311 @@
+//! Multi-stage stateful pipeline, end to end: a wordcount seed stage
+//! plus three PageRank rounds chained over the IGFS tiers.
+//!
+//! Pins the acceptance contract: byte-identical final output at any
+//! `reduce_workers` (and `map_workers`) setting, nonzero IGFS DRAM
+//! hits for stage-to-stage handoff, checkpoint-based resume from the
+//! state store, eviction pressure served from the PMEM backing tier,
+//! and the HDFS fallback when a middle stage writes durable output.
+
+use marvel::coordinator::ClusterSpec;
+use marvel::mapreduce::{
+    output_key, stage_input, Cluster, JobPipeline, PipelineResult,
+    StoreKind, SystemConfig,
+};
+use marvel::net::NodeId;
+use marvel::runtime::RtEngine;
+use marvel::util::bytes::{GIB, MIB};
+use marvel::workloads::{PageRank, WordCount};
+
+const SEED: u64 = 23;
+/// PageRank rounds chained after the wordcount seed stage.
+const ROUNDS: usize = 3;
+
+fn stage_cfg(base: &SystemConfig, out: StoreKind) -> SystemConfig {
+    let mut c = base.clone();
+    c.output_store = out;
+    c
+}
+
+/// Fetch reducer outputs for a stage job: IGFS first (any tier), then
+/// HDFS — mirroring the handoff chain.
+fn fetch_outputs(
+    cluster: &mut Cluster,
+    job: &str,
+    n: usize,
+) -> Vec<Option<Vec<u8>>> {
+    (0..n)
+        .map(|j| {
+            let key = output_key(job, j);
+            if let Some((p, _)) =
+                cluster.stores.igfs.get(&cluster.topo, NodeId(0), &key, 0)
+            {
+                return p.gather();
+            }
+            cluster
+                .stores
+                .hdfs
+                .read(&cluster.topo, NodeId(0), &key, 0)
+                .ok()
+                .and_then(|(p, _, _, _)| p.gather())
+        })
+        .collect()
+}
+
+struct Run {
+    res: PipelineResult,
+    outs: Vec<Option<Vec<u8>>>,
+}
+
+/// Deploy a fresh cluster, stage 4 MiB of corpus, run the 1+ROUNDS
+/// stage pipeline. Non-final stages write their output to `mid_store`;
+/// the final stage always writes to IGFS.
+fn run_pipeline(
+    map_workers: usize,
+    reduce_workers: usize,
+    igfs_capacity: u64,
+    mid_store: StoreKind,
+) -> Run {
+    let mut base = SystemConfig::marvel_igfs();
+    base.map_workers = map_workers;
+    base.reduce_workers = reduce_workers;
+    base.igfs_capacity = igfs_capacity;
+    let mut cluster = ClusterSpec::default().deploy(&base);
+    cluster.stores.hdfs.block_size = 256 * 1024;
+    let mut rt = RtEngine::load(None).unwrap();
+    let wc = WordCount::new(4000, 1.07, &rt);
+    let pr = PageRank::new();
+    let input =
+        stage_input(&mut cluster, &base, &wc, 4 * MIB, SEED).unwrap();
+    let mut pipe = JobPipeline::new("wc-pagerank")
+        .stage(&wc, stage_cfg(&base, mid_store));
+    for k in 0..ROUNDS {
+        let out =
+            if k == ROUNDS - 1 { StoreKind::Igfs } else { mid_store };
+        pipe = pipe.stage(&pr, stage_cfg(&base, out));
+    }
+    let res = pipe.run(&mut cluster, &mut rt, SEED, &input);
+    assert!(res.ok(), "pipeline failed: {:?}", res.failed);
+    assert_eq!(res.stages.len(), 1 + ROUNDS);
+    let last = res.stages.last().unwrap();
+    let n = last.reduce.tasks.max(32);
+    let outs = fetch_outputs(&mut cluster, &last.job, n);
+    Run { res, outs }
+}
+
+fn total_mass(outs: &[Option<Vec<u8>>]) -> u64 {
+    outs.iter()
+        .flatten()
+        .flat_map(|b| b.chunks_exact(12))
+        .map(|r| u64::from_le_bytes(r[4..12].try_into().unwrap()))
+        .sum()
+}
+
+#[test]
+fn pipeline_chains_stages_over_igfs_dram() {
+    let r = run_pipeline(0, 0, 64 * GIB, StoreKind::Igfs);
+    assert!(r.res.restored.iter().all(|x| !x), "nothing to resume yet");
+    assert_eq!(r.res.checkpoints, (1 + ROUNDS) as u64);
+    // Stage-to-stage handoff was served from DRAM, never from HDFS.
+    assert!(r.res.handoff.dram > 0, "handoff: {:?}", r.res.handoff);
+    assert_eq!(r.res.handoff.hdfs, 0);
+    // Every chained stage's own JobResult shows IGFS DRAM hits.
+    for jr in &r.res.stages[1..] {
+        assert!(jr.igfs.hits_dram > 0, "{}: {:?}", jr.job, jr.igfs);
+        assert!(jr.handoff.dram > 0, "{}: {:?}", jr.job, jr.handoff);
+        assert!(jr.output_bytes > 0, "{}", jr.job);
+    }
+    // The virtual clock is continuous across stages.
+    let staged = r
+        .res
+        .stages
+        .iter()
+        .fold(marvel::sim::SimNs::ZERO, |a, s| a + s.job_time);
+    assert_eq!(staged, r.res.job_time);
+    // Final output is real 12-byte rank rows with nonzero mass.
+    assert!(r.outs.iter().any(|o| o.as_ref().is_some_and(|b| !b.is_empty())));
+    for b in r.outs.iter().flatten() {
+        assert_eq!(b.len() % 12, 0, "final output must be rank rows");
+    }
+    assert!(total_mass(&r.outs) > 0);
+}
+
+#[test]
+fn pipeline_output_byte_identical_at_reduce_worker_counts() {
+    // The acceptance pin: a ≥3-stage pipeline over IGFS produces
+    // byte-identical final output at reduce_workers ∈ {1, 4, 8}.
+    let r1 = run_pipeline(1, 1, 64 * GIB, StoreKind::Igfs);
+    assert!(r1.res.stages[1].igfs.hits_dram > 0,
+            "handoff must hit DRAM");
+    for workers in [4usize, 8] {
+        let rn = run_pipeline(1, workers, 64 * GIB, StoreKind::Igfs);
+        assert_eq!(r1.outs, rn.outs,
+                   "final output diverged at reduce_workers={workers}");
+        assert_eq!(r1.res.job_time, rn.res.job_time,
+                   "virtual time diverged at reduce_workers={workers}");
+        for (a, b) in r1.res.stages.iter().zip(&rn.res.stages) {
+            assert_eq!(a.output_bytes, b.output_bytes, "{}", a.job);
+            assert_eq!(a.intermediate_bytes, b.intermediate_bytes,
+                       "{}", a.job);
+        }
+    }
+    // Map-plane parallelism composes with the reduce plane.
+    let rm = run_pipeline(8, 8, 64 * GIB, StoreKind::Igfs);
+    assert_eq!(r1.outs, rm.outs, "map=8/reduce=8 diverged");
+}
+
+#[test]
+fn pipeline_resumes_from_checkpointed_state() {
+    // One cluster, run the pipeline twice: the second run must restore
+    // every stage from the state store without recomputing anything.
+    let base = {
+        let mut b = SystemConfig::marvel_igfs();
+        b.map_workers = 2;
+        b.reduce_workers = 2;
+        b
+    };
+    let mut cluster = ClusterSpec::default().deploy(&base);
+    cluster.stores.hdfs.block_size = 256 * 1024;
+    let mut rt = RtEngine::load(None).unwrap();
+    let wc = WordCount::new(4000, 1.07, &rt);
+    let pr = PageRank::new();
+    let input =
+        stage_input(&mut cluster, &base, &wc, 4 * MIB, SEED).unwrap();
+    let mut pipe = JobPipeline::new("resume-me")
+        .stage(&wc, stage_cfg(&base, StoreKind::Igfs));
+    for _ in 0..ROUNDS {
+        pipe = pipe.stage(&pr, stage_cfg(&base, StoreKind::Igfs));
+    }
+    let res1 = pipe.run(&mut cluster, &mut rt, SEED, &input);
+    assert!(res1.ok(), "{:?}", res1.failed);
+    let last1 = res1.stages.last().unwrap();
+    let outs1 = fetch_outputs(&mut cluster, &last1.job, 32);
+    let batches_after_first = rt.stats.batches;
+
+    let res2 = pipe.run(&mut cluster, &mut rt, SEED, &input);
+    assert!(res2.ok(), "{:?}", res2.failed);
+    assert!(res2.restored.iter().all(|x| *x),
+            "every stage must restore: {:?}", res2.restored);
+    assert_eq!(res2.restores, (1 + ROUNDS) as u64);
+    assert_eq!(res2.checkpoints, 0, "no recompute, no new checkpoints");
+    assert_eq!(res2.job_time.as_nanos(), 0,
+               "resumed stages cost zero virtual time");
+    assert_eq!(rt.stats.batches, batches_after_first,
+               "resume must not re-run the combine kernel");
+    // Outputs unchanged and still resolvable.
+    let outs2 = fetch_outputs(&mut cluster, &last1.job, 32);
+    assert_eq!(outs1, outs2);
+    // Per-stage reports carry the checkpointed output accounting.
+    for (a, b) in res1.stages.iter().zip(&res2.stages) {
+        assert_eq!(a.output_bytes, b.output_bytes);
+    }
+
+    // Extending the pipeline resumes the shared prefix and computes
+    // only the new round on top of the cached final stage.
+    let extended = {
+        let mut p = JobPipeline::new("resume-me")
+            .stage(&wc, stage_cfg(&base, StoreKind::Igfs));
+        for _ in 0..ROUNDS + 1 {
+            p = p.stage(&pr, stage_cfg(&base, StoreKind::Igfs));
+        }
+        p
+    };
+    let res3 = extended.run(&mut cluster, &mut rt, SEED, &input);
+    assert!(res3.ok(), "{:?}", res3.failed);
+    assert_eq!(res3.restored.len(), 2 + ROUNDS);
+    assert!(res3.restored[..1 + ROUNDS].iter().all(|x| *x));
+    assert!(!res3.restored[1 + ROUNDS]);
+    let new_stage = res3.stages.last().unwrap();
+    assert!(new_stage.handoff.resolved() > 0,
+            "new round reads the cached previous round");
+    assert!(new_stage.output_bytes > 0);
+}
+
+#[test]
+fn pipeline_under_capacity_pressure_spills_to_backing_tier() {
+    // Satellite: fill the CacheNode far past capacity mid-pipeline and
+    // verify evicted intermediates are served from the PMEM backing
+    // tier — with the final output still byte-identical.
+    let roomy = run_pipeline(2, 2, 64 * GIB, StoreKind::Igfs);
+    let tight = run_pipeline(2, 2, 256 * 1024, StoreKind::Igfs);
+    assert!(tight.res.igfs.evictions > 0,
+            "256 KiB cache must evict: {:?}", tight.res.igfs);
+    assert!(tight.res.igfs.bytes_evicted > 0);
+    assert!(tight.res.igfs.hits_backing > 0,
+            "evicted entries must be served from backing: {:?}",
+            tight.res.igfs);
+    assert!(tight.res.igfs.hits_dram > 0, "hot entries still hit DRAM");
+    // Under no pressure the same pipeline never touches the backing
+    // tier and never evicts.
+    assert_eq!(roomy.res.igfs.evictions, 0);
+    assert_eq!(roomy.res.igfs.hits_backing, 0);
+    // Tiering is invisible in the data: byte-identical final output
+    // and per-stage accounting.
+    assert_eq!(roomy.outs, tight.outs);
+    for (a, b) in roomy.res.stages.iter().zip(&tight.res.stages) {
+        assert_eq!(a.output_bytes, b.output_bytes, "{}", a.job);
+    }
+}
+
+#[test]
+fn pipeline_middle_stage_falls_back_to_hdfs_or_s3() {
+    // Middle stages writing durable HDFS (or remote S3) output
+    // exercise the tail of the DRAM → backing → HDFS → S3 chain.
+    let igfs = run_pipeline(2, 2, 64 * GIB, StoreKind::Igfs);
+    let hdfs = run_pipeline(2, 2, 64 * GIB, StoreKind::Hdfs);
+    assert!(hdfs.res.handoff.hdfs > 0, "{:?}", hdfs.res.handoff);
+    assert_eq!(hdfs.res.handoff.dram, 0,
+               "mid outputs were never cached in DRAM");
+    let s3 = run_pipeline(2, 2, 64 * GIB, StoreKind::S3);
+    assert!(s3.res.handoff.s3 > 0, "{:?}", s3.res.handoff);
+    assert_eq!(s3.res.handoff.dram + s3.res.handoff.hdfs, 0);
+    // The store a stage hands off through cannot change the data.
+    assert_eq!(igfs.outs, hdfs.outs);
+    assert_eq!(igfs.outs, s3.outs);
+    assert_eq!(total_mass(&igfs.outs), total_mass(&hdfs.outs));
+}
+
+#[test]
+fn pipeline_recomputes_invalidated_stage_without_collision() {
+    // Lose one output of a mid stage on a write-once backend (HDFS):
+    // the stage's checkpoint must fail validation, the stage must
+    // re-execute cleanly (stale keys scrubbed, no 'already exists'),
+    // and downstream stages with intact outputs stay restored.
+    let base = {
+        let mut b = SystemConfig::marvel_igfs();
+        b.map_workers = 2;
+        b.reduce_workers = 2;
+        b
+    };
+    let mut cluster = ClusterSpec::default().deploy(&base);
+    cluster.stores.hdfs.block_size = 256 * 1024;
+    let mut rt = RtEngine::load(None).unwrap();
+    let wc = WordCount::new(4000, 1.07, &rt);
+    let pr = PageRank::new();
+    let input =
+        stage_input(&mut cluster, &base, &wc, 4 * MIB, SEED).unwrap();
+    let mut pipe = JobPipeline::new("redo")
+        .stage(&wc, stage_cfg(&base, StoreKind::Hdfs));
+    for _ in 0..ROUNDS {
+        pipe = pipe.stage(&pr, stage_cfg(&base, StoreKind::Hdfs));
+    }
+    let res1 = pipe.run(&mut cluster, &mut rt, SEED, &input);
+    assert!(res1.ok(), "{:?}", res1.failed);
+    let last_job = pipe.stage_job(ROUNDS);
+    let outs1 = fetch_outputs(&mut cluster, &last_job, 32);
+
+    // Delete one of stage 1's committed outputs.
+    let victim = (0..32)
+        .map(|j| output_key(&pipe.stage_job(1), j))
+        .find(|k| cluster.stores.hdfs.namenode.stat(k).is_some())
+        .expect("stage 1 wrote at least one output");
+    assert!(cluster.stores.hdfs.delete(&victim));
+
+    let res2 = pipe.run(&mut cluster, &mut rt, SEED, &input);
+    assert!(res2.ok(), "re-run failed: {:?}", res2.failed);
+    assert_eq!(res2.restored, vec![true, false, true, true],
+               "only the invalidated stage recomputes");
+    // Deterministic recompute: the final output is unchanged.
+    let outs2 = fetch_outputs(&mut cluster, &last_job, 32);
+    assert_eq!(outs1, outs2);
+}
