@@ -1,6 +1,6 @@
 //! Ablations over the storage substrate: HDFS backing device
 //! (PMEM / SSD / HDD), replication factor, and container pre-warming —
-//! the deployment knobs DESIGN.md §4 calls out.
+//! the deployment knobs ARCHITECTURE.md (Layer 1) calls out.
 
 use marvel::coordinator::{ClusterSpec, Marvel};
 use marvel::mapreduce::SystemConfig;

@@ -1,0 +1,124 @@
+//! Figure 7 (repo extension): multi-tenant consolidation — one job on
+//! a private cluster vs a 4-way mixed co-run over ONE shared cluster.
+//!
+//! Reports, per configuration: virtual job/makespan times, aggregate
+//! virtual throughput (bytes of input retired per virtual second),
+//! cross-job warm-container reuse, and the real wall-clock cost of the
+//! data planes. Emits `BENCH_fig7_multitenant.json` through the same
+//! `util::bench::write_report` flow `bench_diff.py` consumes.
+
+use std::path::Path;
+
+use marvel::coordinator::ClusterSpec;
+use marvel::mapreduce::{
+    run_job, stage_named_input, JobServer, SystemConfig,
+};
+use marvel::runtime::RtEngine;
+use marvel::util::bench::{write_report, Bench, BenchResult};
+use marvel::util::bytes::MIB;
+use marvel::workloads::{Corpus, Grep, PageRank, WordCount};
+
+const SEED: u64 = 42;
+const INPUT: u64 = 8 * MIB;
+
+fn base_cfg() -> SystemConfig {
+    let mut c = SystemConfig::marvel_igfs();
+    c.map_workers = 0; // auto
+    c.reduce_workers = 0;
+    c
+}
+
+fn main() {
+    let bench = Bench::new(1, 5);
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut metrics: Vec<(&str, f64)> = Vec::new();
+
+    let rt0 = RtEngine::load(None).expect("rt");
+    let wc = WordCount::new(10_000, 1.07, &rt0);
+    let prefix = Corpus::new(10_000, 1.07).prefix_of_rank(5, 2);
+    let grep = Grep::new(10_000, 1.07, &prefix, &rt0);
+    let pr = PageRank::new();
+    let cfg = base_cfg();
+
+    // -- solo baseline: one wordcount on a private cluster
+    let mut solo_virtual_s = 0.0;
+    let r_solo = bench.run("solo wordcount 8 MiB (private cluster)", || {
+        let mut rt = RtEngine::load(None).expect("rt");
+        let mut cluster = ClusterSpec::default().deploy(&cfg);
+        cluster.stores.hdfs.block_size = 256 * 1024;
+        let input = stage_named_input(&mut cluster, &cfg, &wc, INPUT,
+                                      SEED, "solo/in")
+            .expect("stage");
+        let r = run_job(&mut cluster, &cfg, &wc, &input, &mut rt, SEED);
+        assert!(r.ok(), "{:?}", r.failed);
+        solo_virtual_s = r.job_time.as_secs_f64();
+        r.output_bytes
+    });
+    println!("{}", r_solo.summary());
+    let solo_tput = INPUT as f64 / solo_virtual_s / 1e6;
+    println!("  solo: {solo_virtual_s:.3} virtual s → \
+              {solo_tput:.1} MB/s (virtual)");
+    metrics.push(("solo_virtual_s", solo_virtual_s));
+    metrics.push(("solo_virtual_mb_per_s", solo_tput));
+
+    // -- 4-way mixed co-run on one shared cluster
+    let mut mk_s = 0.0;
+    let mut warm_reuse = 0.0;
+    let mut cold = 0.0;
+    let r_corun = bench.run("4-way co-run 4×8 MiB (shared cluster)", || {
+        let mut rt = RtEngine::load(None).expect("rt");
+        let mut cluster = ClusterSpec::default().deploy(&cfg);
+        cluster.stores.hdfs.block_size = 256 * 1024;
+        let in_wc = stage_named_input(&mut cluster, &cfg, &wc, INPUT,
+                                      SEED, "t-wc/in").expect("stage");
+        let in_wc2 = stage_named_input(&mut cluster, &cfg, &wc, INPUT,
+                                       SEED, "t-wc2/in").expect("stage");
+        let in_gr = stage_named_input(&mut cluster, &cfg, &grep, INPUT,
+                                      SEED, "t-grep/in").expect("stage");
+        let in_pr = stage_named_input(&mut cluster, &cfg, &pr, INPUT,
+                                      SEED, "t-pr/in").expect("stage");
+        let res = JobServer::new()
+            .tenant("t-wc", 1)
+            .tenant("t-wc2", 1)
+            .tenant("t-grep", 1)
+            .tenant("t-pr", 1)
+            .job("t-wc", &wc, cfg.clone(), &in_wc, SEED)
+            .job("t-wc2", &wc, cfg.clone(), &in_wc2, SEED)
+            .job("t-grep", &grep, cfg.clone(), &in_gr, SEED)
+            .job("t-pr", &pr, cfg.clone(), &in_pr, SEED)
+            .run(&mut cluster, &mut rt);
+        assert!(res.ok(), "{:?}", res.failed);
+        mk_s = res.makespan.as_secs_f64();
+        warm_reuse =
+            res.jobs.iter().map(|j| j.cross_job_warm).sum::<u64>() as f64;
+        cold = res
+            .jobs
+            .iter()
+            .flat_map(|j| &j.stages)
+            .map(|s| s.cold_starts)
+            .sum::<u64>() as f64;
+        res.jobs.len()
+    });
+    println!("{}", r_corun.summary());
+    let agg_tput = 4.0 * INPUT as f64 / mk_s / 1e6;
+    let consolidation = agg_tput / solo_tput.max(1e-9);
+    println!(
+        "  co-run: {mk_s:.3} virtual s makespan → {agg_tput:.1} MB/s \
+         aggregate ({consolidation:.2}× solo), cross-job warm reuse \
+         {warm_reuse}, cold starts {cold}"
+    );
+    metrics.push(("corun_virtual_makespan_s", mk_s));
+    metrics.push(("corun_aggregate_virtual_mb_per_s", agg_tput));
+    metrics.push(("corun_consolidation_x", consolidation));
+    metrics.push(("corun_cross_job_warm", warm_reuse));
+    metrics.push(("corun_cold_starts", cold));
+
+    results.extend([r_solo, r_corun]);
+    let refs: Vec<&BenchResult> = results.iter().collect();
+    let out = Path::new("BENCH_fig7_multitenant.json");
+    match write_report(out, &refs, &metrics) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+    println!("fig7_multitenant done");
+}

@@ -1,4 +1,4 @@
-//! End-to-end driver (DESIGN.md §E2E): a real small workload through
+//! End-to-end driver (see ARCHITECTURE.md): a real small workload through
 //! every layer of the stack, on all three system configurations.
 //!
 //! Pipeline proven here: zipf corpus generation (real bytes) → HDFS

@@ -4,16 +4,22 @@
 //! ```text
 //! marvel run   [--config FILE] [--system NAME] [--workload NAME]
 //!              [--input SIZE] [--seed N] [--nodes N]
+//! marvel corun [--tenants a:3,b:1] [--workloads wc,grep] [--input SIZE]
 //! marvel fio   [--streams N] [--ops N]            # Table 2
 //! marvel sweep [--workload NAME] [--sizes a,b,c] [--systems x,y]
 //! marvel info                                     # artifacts + cluster
 //! ```
+//!
+//! See `ARCHITECTURE.md` for the system the commands drive.
 
 use std::collections::BTreeMap;
 
-use crate::config::{system_by_name, ExperimentConfig};
+use crate::config::{parse_tenant_spec, system_by_name, ExperimentConfig};
 use crate::coordinator::{ClusterSpec, Marvel};
-use crate::mapreduce::{JobResult, SystemConfig, Workload};
+use crate::mapreduce::{
+    stage_named_input, JobResult, JobServer, ServerResult, SystemConfig,
+    Workload,
+};
 use crate::metrics::tags;
 use crate::storage::fio;
 use crate::util::bytes::{self, parse_size};
@@ -97,6 +103,7 @@ pub fn print_job_result(r: &JobResult) {
     t.row_strs(&["reduce phase", &format!("{} tasks, {}", r.reduce.tasks,
                                           r.reduce.duration)]);
     t.row_strs(&["cold starts", &r.cold_starts.to_string()]);
+    t.row_strs(&["warm starts", &r.warm_starts.to_string()]);
     t.row_strs(&["locality", &format!("{:.0} %", r.locality_ratio * 100.0)]);
     t.row_strs(&["shuffle I/O", &format!(
         "{:.2} Gbps",
@@ -107,16 +114,15 @@ pub fn print_job_result(r: &JobResult) {
     t.print();
 }
 
-fn cmd_run(args: &Args) -> Result<(), String> {
+/// Load the experiment config and apply the flag overrides `run` and
+/// `corun` share (--config/--system/--input/--seed/--nodes).
+fn load_experiment(args: &Args) -> Result<ExperimentConfig, String> {
     let mut cfg = match args.get("config") {
         Some(path) => ExperimentConfig::load(path)?,
         None => ExperimentConfig::parse("")?,
     };
     if let Some(s) = args.get("system") {
         cfg.system = system_by_name(s)?;
-    }
-    if let Some(w) = args.get("workload") {
-        cfg.workload = w.to_string();
     }
     if let Some(i) = args.get("input") {
         cfg.input_bytes = parse_size(i)?;
@@ -127,6 +133,14 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     if let Some(n) = args.get("nodes") {
         cfg.cluster.nodes = n.parse().map_err(|_| "bad --nodes")?;
     }
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let mut cfg = load_experiment(args)?;
+    if let Some(w) = args.get("workload") {
+        cfg.workload = w.to_string();
+    }
     let mut m = Marvel::new(cfg.cluster.clone(), cfg.seed)?;
     println!(
         "runtime: {} ({} artifacts)",
@@ -136,6 +150,124 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let wl = workload_by_name(&cfg.workload, cfg.vocab, cfg.zipf_s, &m.rt)?;
     let r = m.run(&cfg.system, wl.as_ref(), cfg.input_bytes);
     print_job_result(&r);
+    Ok(())
+}
+
+/// Print a co-run report: one row per job, then the tenant summary.
+pub fn print_server_result(res: &ServerResult) {
+    let mut t = Table::new(
+        "co-run jobs (shared cluster)",
+        &["tenant", "job", "status", "output", "job time", "cold", "warm",
+          "x-job warm"],
+    );
+    for run in &res.jobs {
+        for (i, jr) in run.stages.iter().enumerate() {
+            t.row(&[
+                run.tenant.clone(),
+                jr.job.clone(),
+                match &jr.failed {
+                    Some(m) => format!("FAILED: {m}"),
+                    None => "ok".into(),
+                },
+                bytes::human(jr.output_bytes),
+                format!("{}", jr.job_time),
+                jr.cold_starts.to_string(),
+                jr.warm_starts.to_string(),
+                // Per submission, not per stage: once per chain.
+                if i == 0 {
+                    run.cross_job_warm.to_string()
+                } else {
+                    String::new()
+                },
+            ]);
+        }
+    }
+    t.print();
+    let mut t = Table::new(
+        &format!("tenants (virtual makespan {})", res.makespan),
+        &["tenant", "share", "jobs", "completion", "cold", "warm",
+          "dram hits", "evictions"],
+    );
+    for rep in &res.tenants {
+        t.row(&[
+            rep.name.clone(),
+            rep.share.to_string(),
+            rep.jobs.to_string(),
+            format!("{}", rep.completion),
+            rep.cold_starts.to_string(),
+            rep.warm_starts.to_string(),
+            rep.igfs.hits_dram.to_string(),
+            rep.igfs.evictions.to_string(),
+        ]);
+    }
+    t.print();
+}
+
+/// `marvel corun`: admit one job per workload, round-robin across the
+/// tenant roster, and co-run them over one shared cluster.
+fn cmd_corun(args: &Args) -> Result<(), String> {
+    let mut cfg = load_experiment(args)?;
+    if let Some(t) = args.get("tenants") {
+        cfg.tenants = parse_tenant_spec(t)?;
+    }
+    if let Some(w) = args.get("workloads") {
+        cfg.corun_workloads =
+            w.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    if cfg.tenants.is_empty() {
+        cfg.tenants = parse_tenant_spec("alice:3,bob:1")?;
+    }
+    if cfg.corun_workloads.is_empty() {
+        cfg.corun_workloads =
+            vec!["wordcount".into(), "grep".into(), "pagerank".into(),
+                 "agg".into()];
+    }
+
+    let mut m = Marvel::new(cfg.cluster.clone(), cfg.seed)?;
+    let mut cluster = cfg.cluster.deploy(&cfg.system);
+    let wls: Vec<Box<dyn Workload>> = cfg
+        .corun_workloads
+        .iter()
+        .map(|n| workload_by_name(n, cfg.vocab, cfg.zipf_s, &m.rt))
+        .collect::<Result<_, _>>()?;
+    // Stage every job's input under its own namespace first, then
+    // admit: tenant k%T runs workload k.
+    let mut inputs = Vec::with_capacity(wls.len());
+    for (k, wl) in wls.iter().enumerate() {
+        let tenant = &cfg.tenants[k % cfg.tenants.len()].0;
+        let path = format!("{tenant}/j{k:02}/input");
+        inputs.push(stage_named_input(
+            &mut cluster,
+            &cfg.system,
+            wl.as_ref(),
+            cfg.input_bytes,
+            cfg.seed,
+            &path,
+        )?);
+    }
+    let mut server = JobServer::new();
+    for (name, share) in &cfg.tenants {
+        server = server.tenant(name, *share);
+    }
+    for (k, wl) in wls.iter().enumerate() {
+        let tenant = cfg.tenants[k % cfg.tenants.len()].0.clone();
+        server = server.job(
+            &tenant,
+            wl.as_ref(),
+            cfg.system.clone(),
+            &inputs[k],
+            cfg.seed,
+        );
+    }
+    let res = server.run(&mut cluster, &mut m.rt);
+    print_server_result(&res);
+    if let Some(e) = &res.failed {
+        return Err(format!("co-run failed: {e}"));
+    }
+    let failed_jobs = res.jobs.iter().filter(|r| !r.ok()).count();
+    if failed_jobs > 0 {
+        return Err(format!("{failed_jobs} job(s) failed (see table)"));
+    }
     Ok(())
 }
 
@@ -230,8 +362,10 @@ fn cmd_info() -> Result<(), String> {
 const HELP: &str = "\
 marvel — PMEM-backed stateful serverless MapReduce (paper reproduction)
 
-USAGE: marvel <run|fio|sweep|info|help> [--flag value]...
+USAGE: marvel <run|corun|fio|sweep|info|help> [--flag value]...
   run    one job:   --system marvel-igfs --workload wordcount --input 1GiB
+  corun  multi-tenant co-run over ONE shared cluster:
+         --tenants alice:3,bob:1 --workloads wordcount,grep --input 64MiB
   fio    Table 2 microbenchmark: --streams 8 --ops 100000
   sweep  Figure 4/5 style sweep: --sizes 1GiB,5GiB --systems a,b,c
   info   show runtime/artifact status
@@ -248,6 +382,7 @@ pub fn main_with_args(argv: &[String]) -> i32 {
     };
     let res = match args.cmd.as_str() {
         "run" => cmd_run(&args),
+        "corun" => cmd_corun(&args),
         "fio" => cmd_fio(&args),
         "sweep" => cmd_sweep(&args),
         "info" => cmd_info(),
@@ -303,6 +438,20 @@ mod tests {
     fn help_and_unknown_exit_codes() {
         assert_eq!(main_with_args(&sv(&["help"])), 0);
         assert_eq!(main_with_args(&sv(&["bogus"])), 1);
+    }
+
+    #[test]
+    fn corun_command_runs_small() {
+        assert_eq!(
+            main_with_args(&sv(&[
+                "corun",
+                "--tenants", "a:3,b:1",
+                "--workloads", "wordcount,grep",
+                "--input", "1MiB",
+                "--seed", "5",
+            ])),
+            0
+        );
     }
 
     #[test]

@@ -13,6 +13,8 @@
 //! input = "1GiB"
 //! seed = 42
 //! ```
+//!
+//! See `ARCHITECTURE.md` for what each knob configures.
 
 use crate::coordinator::ClusterSpec;
 use crate::mapreduce::SystemConfig;
@@ -21,6 +23,8 @@ use crate::util::bytes::GIB;
 use crate::util::toml_mini::Doc;
 
 #[derive(Clone, Debug)]
+/// A fully-resolved experiment: cluster shape, system config,
+/// workload, input size, and the optional co-run roster.
 pub struct ExperimentConfig {
     pub cluster: ClusterSpec,
     pub system: SystemConfig,
@@ -29,6 +33,36 @@ pub struct ExperimentConfig {
     pub seed: u64,
     pub vocab: usize,
     pub zipf_s: f64,
+    /// Multi-tenant co-run roster (`[server] tenants = "alice:3,bob:1"`)
+    /// consumed by `marvel corun`; empty when unconfigured.
+    pub tenants: Vec<(String, u64)>,
+    /// Workloads the co-run admits round-robin across `tenants`
+    /// (`[server] workloads = "wordcount,grep"`).
+    pub corun_workloads: Vec<String>,
+}
+
+/// Parse a `name:share,name:share` tenant roster (share defaults to 1).
+pub fn parse_tenant_spec(spec: &str) -> Result<Vec<(String, u64)>, String> {
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+        let mut it = part.trim().splitn(2, ':');
+        let name = it.next().unwrap_or("").trim();
+        if name.is_empty() {
+            return Err(format!("empty tenant name in {spec:?}"));
+        }
+        let share = match it.next() {
+            None => 1,
+            Some(s) => s
+                .trim()
+                .parse::<u64>()
+                .map_err(|_| format!("bad share in {part:?}"))?,
+        };
+        if out.iter().any(|t: &(String, u64)| t.0 == name) {
+            return Err(format!("duplicate tenant {name:?}"));
+        }
+        out.push((name.to_string(), share.max(1)));
+    }
+    Ok(out)
 }
 
 /// Resolve a system-config preset by name.
@@ -84,6 +118,15 @@ impl ExperimentConfig {
             system.reduce_workers =
                 v.as_i64().unwrap_or(0).max(0) as usize;
         }
+        let tenants =
+            parse_tenant_spec(doc.str_or("server", "tenants", ""))?;
+        let corun_workloads: Vec<String> = doc
+            .str_or("server", "workloads", "")
+            .split(',')
+            .map(|s| s.trim())
+            .filter(|s| !s.is_empty())
+            .map(|s| s.to_string())
+            .collect();
         Ok(ExperimentConfig {
             cluster,
             system,
@@ -94,6 +137,8 @@ impl ExperimentConfig {
             seed: doc.i64_or("experiment", "seed", 42) as u64,
             vocab: doc.i64_or("experiment", "vocab", 10_000).max(2) as usize,
             zipf_s: doc.f64_or("experiment", "zipf_s", 1.07),
+            tenants,
+            corun_workloads,
         })
     }
 
@@ -142,6 +187,42 @@ reduce_workers = 2
         assert_eq!(cfg.cluster.nodes, 1);
         assert_eq!(cfg.system.name, "marvel-igfs");
         assert_eq!(cfg.input_bytes, GIB);
+    }
+
+    #[test]
+    fn tenant_spec_parses() {
+        assert_eq!(
+            parse_tenant_spec("alice:3,bob:1").unwrap(),
+            vec![("alice".into(), 3), ("bob".into(), 1)]
+        );
+        assert_eq!(
+            parse_tenant_spec("solo").unwrap(),
+            vec![("solo".into(), 1)]
+        );
+        assert_eq!(parse_tenant_spec("").unwrap(), vec![]);
+        assert!(parse_tenant_spec("a:x").is_err());
+        assert!(parse_tenant_spec(":3").is_err());
+        assert!(parse_tenant_spec("a:1,a:2").is_err());
+        // share 0 is clamped to 1 (a zero-weight queue would starve).
+        assert_eq!(parse_tenant_spec("z:0").unwrap()[0].1, 1);
+    }
+
+    #[test]
+    fn server_section_parses() {
+        let cfg = ExperimentConfig::parse(
+            r#"
+[server]
+tenants = "alice:3,bob:1"
+workloads = "wordcount, grep"
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.tenants.len(), 2);
+        assert_eq!(cfg.tenants[0], ("alice".to_string(), 3));
+        assert_eq!(cfg.corun_workloads, vec!["wordcount", "grep"]);
+        let empty = ExperimentConfig::parse("").unwrap();
+        assert!(empty.tenants.is_empty());
+        assert!(empty.corun_workloads.is_empty());
     }
 
     #[test]

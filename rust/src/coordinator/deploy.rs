@@ -85,7 +85,7 @@ impl ClusterSpec {
                 })
                 .collect(),
         );
-        Cluster { engine, topo, stores, controller, lambda, rm }
+        Cluster { engine, topo, stores, controller, lambda, rm, tenant: 0 }
     }
 }
 

@@ -2,12 +2,17 @@
 //! deploy, stage input, run, collect results. One call per
 //! (system-config, workload, input-size) cell of the evaluation grid.
 
-use crate::mapreduce::{run_job, stage_input, JobResult, SystemConfig};
+use crate::mapreduce::{
+    run_job, run_stage, stage_input, stage_named_input, Cluster, JobResult,
+    StageInput, SystemConfig,
+};
 use crate::mapreduce::Workload;
 use crate::runtime::{default_artifacts_dir, RtEngine};
 
 use super::deploy::ClusterSpec;
 
+/// The user-facing client: deploy, stage, run, collect (Figure 3,
+/// step 1).
 pub struct Marvel {
     pub spec: ClusterSpec,
     pub rt: RtEngine,
@@ -40,6 +45,41 @@ impl Marvel {
                 }
             };
         run_job(&mut cluster, cfg, wl, &input, &mut self.rt, self.seed)
+    }
+
+    /// Run a workload on an *existing* deployment instead of a fresh
+    /// one: warm container pools, cache contents, YARN queues, and the
+    /// virtual clock all carry across calls — so a second job on the
+    /// same cluster pays zero cold starts for containers the first job
+    /// already warmed. `job` must be unique per call on one cluster
+    /// (it namespaces the input path and every shuffle/output key).
+    pub fn run_shared(
+        &mut self,
+        cluster: &mut Cluster,
+        cfg: &SystemConfig,
+        wl: &dyn Workload,
+        bytes: u64,
+        job: &str,
+    ) -> JobResult {
+        let path = format!("{job}/input");
+        let input = match stage_named_input(
+            cluster, cfg, wl, bytes, self.seed, &path,
+        ) {
+            Ok(p) => p,
+            Err(e) => return JobResult::failed(job, &cfg.name, bytes, e),
+        };
+        match run_stage(
+            cluster,
+            cfg,
+            wl,
+            job,
+            StageInput::Path(input),
+            &mut self.rt,
+            self.seed,
+        ) {
+            Ok(r) => r,
+            Err(e) => JobResult::failed(job, &cfg.name, bytes, e),
+        }
     }
 
     /// Convenience: run the same workload/size across several configs

@@ -1,5 +1,7 @@
 //! Marvel coordinator: deployment automation, the client API tying the
 //! Figure 3 workflow together, and checkpoint-based recovery (§4.3).
+//!
+//! See `ARCHITECTURE.md` for how deployment composes the layers.
 
 pub mod deploy;
 pub mod marvel;

@@ -3,6 +3,12 @@
 use crate::net::NodeId;
 use crate::sim::SimNs;
 
+/// The Hadoop-enabled runtime image Marvel ships (paper §3.4.2). One
+/// shared image across all jobs and tenants is what makes warm
+/// containers reusable cluster-wide: a container warmed by one job
+/// serves the next job's actions without a cold start.
+pub const HADOOP_RUNTIME: &str = "marvel-hadoop:latest";
+
 /// What kind of function an invocation runs (drives runtime image
 /// selection and the Hadoop-runtime container reuse policy).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -27,7 +33,7 @@ impl ActionSpec {
     pub fn map(job: &str, memory_mb: u64) -> ActionSpec {
         ActionSpec {
             name: format!("{job}/map"),
-            runtime: "marvel-hadoop:latest".into(),
+            runtime: HADOOP_RUNTIME.into(),
             memory_mb,
             kind: ActionKind::Map,
         }
@@ -36,7 +42,7 @@ impl ActionSpec {
     pub fn reduce(job: &str, memory_mb: u64) -> ActionSpec {
         ActionSpec {
             name: format!("{job}/reduce"),
-            runtime: "marvel-hadoop:latest".into(),
+            runtime: HADOOP_RUNTIME.into(),
             memory_mb,
             kind: ActionKind::Reduce,
         }

@@ -11,6 +11,7 @@ use std::collections::HashMap;
 use crate::sim::SimNs;
 
 #[derive(Clone, Debug)]
+/// Container lifecycle latencies and warm-pool sizing.
 pub struct ContainerConfig {
     /// Docker pull + boot + runtime init.
     pub cold_start: SimNs,

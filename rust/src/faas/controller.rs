@@ -11,6 +11,8 @@ use super::action::{ActionSpec, Invocation};
 use super::container::ContainerConfig;
 use super::invoker::Invoker;
 
+/// The OpenWhisk controller/load-balancer: routes invocations to
+/// per-node invokers; pools survive across jobs on a shared cluster.
 pub struct Controller {
     pub invokers: Vec<Invoker>,
     /// Controller-side per-invocation overhead (auth, routing, queueing).
@@ -85,6 +87,20 @@ impl Controller {
         self.invokers.iter().map(|i| i.containers.cold_starts).sum()
     }
 
+    /// Warm (pool-reuse) starts across all invokers.
+    pub fn warm_starts(&self) -> u64 {
+        self.invokers.iter().map(|i| i.containers.warm_starts).sum()
+    }
+
+    /// Containers currently kept warm for `runtime` across the cluster
+    /// — what a newly admitted job can reuse without a cold start.
+    pub fn warm_count(&self, runtime: &str) -> usize {
+        self.invokers
+            .iter()
+            .map(|i| i.containers.warm_count(runtime))
+            .sum()
+    }
+
     pub fn slots_of(&self, node: NodeId) -> crate::sim::PoolId {
         self.invokers[node.0].slots
     }
@@ -138,6 +154,25 @@ mod tests {
         let second = c.invoke(&spec, NodeId(0));
         assert!(!second.cold);
         assert_eq!(c.cold_starts(), 1);
+    }
+
+    #[test]
+    fn warm_accounting_spans_invokers() {
+        let (_, mut c) = setup(2);
+        let spec = ActionSpec::map("wc", 1024);
+        // Cold on both nodes, then complete → both warm.
+        c.invoke(&spec, NodeId(0));
+        c.invoke(&spec, NodeId(1));
+        c.complete(&spec, NodeId(0));
+        c.complete(&spec, NodeId(1));
+        assert_eq!(c.cold_starts(), 2);
+        assert_eq!(c.warm_starts(), 0);
+        assert_eq!(c.warm_count(&spec.runtime), 2);
+        // A second "job" reuses the pool: zero new cold starts.
+        c.invoke(&spec, NodeId(0));
+        c.invoke(&spec, NodeId(1));
+        assert_eq!(c.cold_starts(), 2);
+        assert_eq!(c.warm_starts(), 2);
     }
 
     #[test]

@@ -6,6 +6,7 @@ use crate::sim::{Engine, PoolId, SimNs};
 
 use super::container::{ContainerConfig, ContainerPool};
 
+/// Per-node invoker: the node's container pool + DES slot pool.
 pub struct Invoker {
     pub node: NodeId,
     pub slots: PoolId,

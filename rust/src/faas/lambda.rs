@@ -9,6 +9,7 @@
 use crate::sim::{Engine, PoolId, SimNs};
 
 #[derive(Clone, Debug)]
+/// AWS Lambda account limits and latencies (Corral baseline).
 pub struct LambdaConfig {
     /// Account-level concurrent execution quota (AWS default 1000).
     pub max_concurrency: usize,
@@ -37,18 +38,22 @@ impl Default for LambdaConfig {
     }
 }
 
+/// The Lambda platform instance: account concurrency pool + warm
+/// execution-environment reuse + quota admission.
 pub struct Lambda {
     pub cfg: LambdaConfig,
     /// One shared concurrency pool for the whole account.
     pub concurrency: PoolId,
     warm: usize,
     pub cold_starts: u64,
+    /// Invocations served by a reused (warm) execution environment.
+    pub warm_starts: u64,
 }
 
 impl Lambda {
     pub fn new(engine: &mut Engine, cfg: LambdaConfig) -> Lambda {
         let concurrency = engine.add_pool(cfg.max_concurrency);
-        Lambda { cfg, concurrency, warm: 0, cold_starts: 0 }
+        Lambda { cfg, concurrency, warm: 0, cold_starts: 0, warm_starts: 0 }
     }
 
     /// Admission check a Corral job must pass before launching.
@@ -78,6 +83,7 @@ impl Lambda {
     pub fn startup(&mut self) -> (SimNs, bool) {
         if self.warm > 0 {
             self.warm -= 1;
+            self.warm_starts += 1;
             (self.cfg.warm_start, false)
         } else {
             self.cold_starts += 1;
@@ -129,6 +135,7 @@ mod tests {
         assert!(!cold);
         assert_eq!(lat, SimNs::from_millis(10));
         assert_eq!(l.cold_starts, 1);
+        assert_eq!(l.warm_starts, 1);
     }
 
     #[test]

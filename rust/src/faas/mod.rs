@@ -1,6 +1,8 @@
 //! FaaS substrate: the OpenWhisk analog Marvel runs on (controller,
 //! per-node invokers, warm/cold container pools) and the AWS Lambda
 //! model under the Corral baseline.
+//!
+//! See `ARCHITECTURE.md` (Layer 2) for the warm-pool sharing model.
 
 pub mod action;
 pub mod container;
@@ -8,7 +10,7 @@ pub mod controller;
 pub mod invoker;
 pub mod lambda;
 
-pub use action::{ActionKind, ActionSpec, Invocation};
+pub use action::{ActionKind, ActionSpec, Invocation, HADOOP_RUNTIME};
 pub use container::{ContainerConfig, ContainerPool};
 pub use controller::Controller;
 pub use invoker::Invoker;

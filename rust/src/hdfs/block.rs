@@ -6,6 +6,7 @@ use crate::util::bytes::MIB;
 pub const DEFAULT_BLOCK_SIZE: u64 = 128 * MIB;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+/// Globally unique block identifier.
 pub struct BlockId(pub u64);
 
 /// Metadata for one block of a file.

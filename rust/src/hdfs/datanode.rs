@@ -10,6 +10,7 @@ use crate::storage::Payload;
 use super::block::BlockId;
 
 #[derive(Clone, Debug)]
+/// One node's block storage on its backing device.
 pub struct DataNode {
     pub node: NodeId,
     pub dev: DevId,

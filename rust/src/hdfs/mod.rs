@@ -2,6 +2,8 @@
 //! (blocks on the node's PMEM/SSD device), and a locality-aware client.
 //! Data/compute co-location — the core of the paper's I/O argument —
 //! emerges from placement + local reads here.
+//!
+//! See `ARCHITECTURE.md` (Layer 1).
 
 pub mod block;
 pub mod client;

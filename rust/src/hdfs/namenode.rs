@@ -12,6 +12,7 @@ use crate::net::NodeId;
 use super::block::{BlockId, BlockMeta};
 
 #[derive(Clone, Debug)]
+/// Namespace entry: a file's block list and total length.
 pub struct INode {
     pub path: String,
     pub len: u64,
@@ -19,6 +20,7 @@ pub struct INode {
 }
 
 #[derive(Clone, Debug)]
+/// The HDFS namespace + block map + replica placement authority.
 pub struct NameNode {
     namespace: BTreeMap<String, INode>,
     /// block → replica holders (order = pipeline order, [0] is primary).

@@ -11,12 +11,15 @@ use std::collections::HashMap;
 use crate::storage::Payload;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Which cache tier served (or would serve) an entry.
 pub enum Tier {
     Dram,
     Backing,
 }
 
 #[derive(Clone, Debug, Default)]
+/// Hit/miss/eviction counters for one cache node (or a cluster-wide
+/// aggregate; deltas attribute activity to a job or tenant).
 pub struct CacheStats {
     pub hits_dram: u64,
     pub hits_backing: u64,
@@ -26,6 +29,16 @@ pub struct CacheStats {
 }
 
 impl CacheStats {
+    /// Accumulate another counter set (per-tenant aggregation across a
+    /// co-run's jobs).
+    pub fn add(&mut self, other: &CacheStats) {
+        self.hits_dram += other.hits_dram;
+        self.hits_backing += other.hits_backing;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+        self.bytes_evicted += other.bytes_evicted;
+    }
+
     /// Counters accumulated since `base` was captured (per-job / per-
     /// pipeline-stage attribution over a shared cluster's caches).
     pub fn delta_since(&self, base: &CacheStats) -> CacheStats {
@@ -42,6 +55,8 @@ impl CacheStats {
 }
 
 #[derive(Debug)]
+/// One node's share of the distributed cache: a DRAM-capacity LRU
+/// over a PMEM-speed backing tier.
 pub struct CacheNode {
     capacity: u64,
     used: u64,

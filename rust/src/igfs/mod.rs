@@ -5,6 +5,8 @@
 //! Keys are rendezvous-hashed to owner nodes; values live in the
 //! owner's DRAM-capacity cache with LRU demotion to a PMEM backing tier
 //! (the paper's §4.3 future-work design, used by the ablation bench).
+//!
+//! See `ARCHITECTURE.md` (Layer 4) for the tiering + tenancy model.
 
 pub mod cache;
 pub mod partition;
@@ -20,6 +22,8 @@ pub use cache::{CacheNode, CacheStats, Tier};
 pub use partition::PartitionMap;
 pub use state::{StateStore, TaskState};
 
+/// The distributed in-memory cache: rendezvous-partitioned
+/// [`CacheNode`]s plus the function state store.
 pub struct Igfs {
     pub partitions: PartitionMap,
     pub caches: HashMap<NodeId, CacheNode>,

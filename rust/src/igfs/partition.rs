@@ -6,6 +6,8 @@ use crate::net::NodeId;
 use crate::util::hash::{fnv1a64, mix64};
 
 #[derive(Clone, Debug)]
+/// Rendezvous (highest-random-weight) key → owner-node mapping;
+/// stable under membership changes.
 pub struct PartitionMap {
     members: Vec<NodeId>,
 }

@@ -9,6 +9,7 @@
 use std::collections::HashMap;
 
 #[derive(Clone, Debug, PartialEq)]
+/// One function's checkpointed execution state.
 pub struct TaskState {
     pub job: String,
     pub task: u32,
@@ -22,6 +23,8 @@ pub struct TaskState {
 }
 
 #[derive(Clone, Debug, Default)]
+/// Cluster-wide (job, task) → [`TaskState`] map with zombie-attempt
+/// fencing — the paper's stateful-function substrate.
 pub struct StateStore {
     entries: HashMap<(String, u32), TaskState>,
     epoch: u64,

@@ -1,6 +1,6 @@
 //! Marvel: persistent-memory-backed stateful serverless computing for
 //! big-data applications — a full reproduction of Li et al. (CS.DC'23)
-//! as a three-layer Rust + JAX + Pallas system. See DESIGN.md.
+//! as a three-layer Rust + JAX + Pallas system. See ARCHITECTURE.md.
 //!
 //! Layer map:
 //! * L1/L2 (build time): `python/compile/` — Pallas combine kernels +

@@ -14,12 +14,12 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::faas::{ActionSpec, Controller, Lambda};
-use crate::igfs::Tier;
+use crate::faas::{ActionSpec, Controller, Lambda, HADOOP_RUNTIME};
+use crate::igfs::{CacheStats, Tier};
 use crate::metrics::{tags, IoSummary};
 use crate::net::{NodeId, Topology};
 use crate::runtime::{RtEngine, RtStats};
-use crate::sim::{Engine, PoolId, SimNs, Stage};
+use crate::sim::{BarrierId, Engine, PoolId, SimNs, Stage};
 use crate::storage::Payload;
 use crate::yarn::{ContainerRequest, ResourceManager};
 
@@ -29,9 +29,11 @@ use super::types::{
 };
 use super::workload::{task_rng, MapOutput, ReduceOutput, Workload};
 
-/// A deployed cluster a job runs against. A pipeline chains several
+/// A deployed cluster jobs run against. A pipeline chains several
 /// stages over one instance so virtual time and cache state carry
-/// across stages; independent jobs use one instance each.
+/// across stages; a [`super::JobServer`] co-runs many tenants' jobs
+/// over one instance so warm container pools, cache capacity, and the
+/// virtual clock are genuinely shared.
 pub struct Cluster {
     pub engine: Engine,
     pub topo: Topology,
@@ -39,10 +41,35 @@ pub struct Cluster {
     pub controller: Controller,
     pub lambda: Lambda,
     pub rm: ResourceManager,
+    /// Fair-share class currently planning against this cluster (0 =
+    /// unscoped single job). Stamped on spawned procs; the flow-tag
+    /// namespace lives in `stores.tag_ns`. Set both via
+    /// [`Cluster::set_tenant`] / [`Cluster::set_scope`].
+    pub tenant: u32,
+}
+
+impl Cluster {
+    /// Switch the tenant class subsequent planning runs under, keeping
+    /// the stores' flow-tag namespace in lockstep (solo / one-job-per-
+    /// tenant paths).
+    pub fn set_tenant(&mut self, class: u32) {
+        self.set_scope(class, class);
+    }
+
+    /// Set the fair-share class and the flow-tag namespace separately.
+    /// A `JobServer` gives every planned *stage* its own tag namespace
+    /// (so per-job I/O summaries never conflate two jobs of the same
+    /// tenant) while all of a tenant's stages share one class.
+    pub fn set_scope(&mut self, class: u32, tag_ns: u32) {
+        self.tenant = class;
+        self.stores.tag_ns = tag_ns;
+    }
 }
 
 /// Stage the job input into the configured input store (deployment-time;
 /// not billed to job execution, matching the paper's methodology).
+/// Stages at the workload's default path — co-running the same
+/// workload for several tenants needs [`stage_named_input`] instead.
 pub fn stage_input(
     cluster: &mut Cluster,
     cfg: &SystemConfig,
@@ -50,11 +77,26 @@ pub fn stage_input(
     bytes: u64,
     seed: u64,
 ) -> Result<String, String> {
+    let path = format!("{}/input", wl.name());
+    stage_named_input(cluster, cfg, wl, bytes, seed, &path)
+}
+
+/// [`stage_input`] at a caller-chosen path. Input *content* depends
+/// only on `(seed, workload)` — never on the path — so a tenant's
+/// staged copy is byte-identical to a solo run's.
+pub fn stage_named_input(
+    cluster: &mut Cluster,
+    cfg: &SystemConfig,
+    wl: &dyn Workload,
+    bytes: u64,
+    seed: u64,
+    path: &str,
+) -> Result<String, String> {
     let materialize = bytes <= cfg.materialize_cap;
     let mut rng = task_rng(seed, wl.name(), u64::MAX);
     let data = wl.generate_input(bytes, materialize, &mut rng);
     assert_eq!(data.len(), bytes, "workload generated wrong input size");
-    let path = format!("{}/input", wl.name());
+    let path = path.to_string();
     match cfg.input_store {
         StoreKind::S3 => {
             cluster.stores.s3.put(&path, data);
@@ -201,9 +243,10 @@ fn read_handoff(
     topo: &Topology,
     node: NodeId,
     key: &str,
+    tag: u32,
 ) -> Result<(Payload, Vec<Stage>, HandoffTier, bool), String> {
     if let Some((data, st, tier)) =
-        stores.igfs.get_tiered(topo, node, key, tags::INPUT_READ)
+        stores.igfs.get_tiered(topo, node, key, tag)
     {
         let local = stores.igfs.owner(key) == node;
         let tier = match tier {
@@ -214,12 +257,11 @@ fn read_handoff(
     }
     if stores.hdfs.namenode.stat(key).is_some() {
         let (data, st, _, remote) =
-            stores.hdfs.read(topo, node, key, tags::INPUT_READ)?;
+            stores.hdfs.read(topo, node, key, tag)?;
         return Ok((data, st, HandoffTier::Hdfs, remote == 0));
     }
     if let Some(data) = stores.s3.get(key) {
-        let st = stores.s3.get_stages(engine, topo, node, data.len(),
-                                      tags::INPUT_READ);
+        let st = stores.s3.get_stages(engine, topo, node, data.len(), tag);
         return Ok((data, st, HandoffTier::S3, false));
     }
     Ok((Payload::real(Vec::new()), Vec::new(), HandoffTier::Empty, true))
@@ -367,9 +409,13 @@ struct ReducePlan {
     stages: Vec<Stage>,
 }
 
-/// Run one MapReduce stage. `job` names the stage (it prefixes every
-/// shuffle/output key, so pipeline stages sharing a workload stay
-/// disjoint); single jobs pass `wl.name()`.
+/// Run one MapReduce stage to completion. `job` names the stage (it
+/// prefixes every shuffle/output key, so pipeline stages sharing a
+/// workload stay disjoint); single jobs pass `wl.name()`.
+///
+/// Equivalent to [`plan_stage`] + `engine.run()` + [`finalize_stage`]
+/// — the split a [`super::JobServer`] uses to overlap many jobs' time
+/// planes on one engine.
 pub fn run_stage(
     cluster: &mut Cluster,
     cfg: &SystemConfig,
@@ -379,16 +425,159 @@ pub fn run_stage(
     rt: &mut RtEngine,
     seed: u64,
 ) -> Result<JobResult, String> {
+    let planned = plan_stage(cluster, cfg, wl, job, input, None, rt, seed)?;
+    let end = cluster.engine.run()?;
+    finalize_stage(cluster, planned, end)
+}
+
+/// A stage whose *data plane* has fully run (real bytes through the
+/// stores) and whose task procs are spawned, but whose *time plane*
+/// has not: the caller still owes an `engine.run()`. Produced by
+/// [`plan_stage`]; turned into a [`JobResult`] by [`finalize_stage`].
+pub struct PlannedStage {
+    /// Job id — prefixes every key and every proc label.
+    pub job: String,
+    /// Opens when the last reducer arrives: the job's completion
+    /// instant, and the gate a chained downstream stage awaits.
+    pub job_done: BarrierId,
+    maps_done: BarrierId,
+    cfg_name: String,
+    tag_ns: u32,
+    t_start: SimNs,
+    flows0: usize,
+    input_bytes: u64,
+    intermediate_bytes: u64,
+    output_bytes: u64,
+    reduce_in_bytes: u64,
+    n_maps: usize,
+    n_reduces: usize,
+    map_in_local: u64,
+    map_in_remote: u64,
+    handoff: HandoffStats,
+    igfs: CacheStats,
+    cold_starts: u64,
+    warm_starts: u64,
+    rt_batches: u64,
+    rt_compute_ns: u64,
+}
+
+impl PlannedStage {
+    /// Reducer count — how many output keys (`output_key(job, 0..n)`)
+    /// this stage will leave behind; a chained next stage's handoff
+    /// key set.
+    pub fn n_reduces(&self) -> usize {
+        self.n_reduces
+    }
+
+    /// Name of the system config this stage was planned under.
+    pub fn cfg_name(&self) -> &str {
+        &self.cfg_name
+    }
+}
+
+/// Assemble the [`JobResult`] for a planned stage once the shared
+/// engine has run. `engine_end` (the `engine.run()` return) backstops
+/// barrier timestamps that never opened. Fails if any of *this job's*
+/// procs failed; co-tenants' failures are theirs to report.
+pub fn finalize_stage(
+    cluster: &Cluster,
+    p: PlannedStage,
+    engine_end: SimNs,
+) -> Result<JobResult, String> {
+    let prefix = format!("{}/", p.job);
+    if let Some(msg) = cluster.engine.failure_with_prefix(&prefix) {
+        return Err(format!("task failed: {msg}"));
+    }
+    let maps_end = cluster
+        .engine
+        .barrier_opened_at(p.maps_done)
+        .unwrap_or(engine_end);
+    let end = cluster
+        .engine
+        .barrier_opened_at(p.job_done)
+        .unwrap_or(engine_end);
+    let job_time = end.saturating_sub(p.t_start);
+    let io = IoSummary::for_tenant(
+        &cluster.engine.flow_log[p.flows0..],
+        p.tag_ns,
+        job_time,
+    );
+    let placed = p.map_in_local + p.map_in_remote;
+    Ok(JobResult {
+        job: p.job,
+        config: p.cfg_name,
+        input_bytes: p.input_bytes,
+        intermediate_bytes: p.intermediate_bytes,
+        output_bytes: p.output_bytes,
+        map: PhaseStats {
+            tasks: p.n_maps,
+            bytes_in: p.input_bytes,
+            bytes_out: p.intermediate_bytes,
+            duration: maps_end.saturating_sub(p.t_start),
+        },
+        reduce: PhaseStats {
+            tasks: p.n_reduces,
+            bytes_in: p.reduce_in_bytes,
+            bytes_out: p.output_bytes,
+            duration: end.saturating_sub(maps_end),
+        },
+        job_time,
+        failed: None,
+        cold_starts: p.cold_starts,
+        warm_starts: p.warm_starts,
+        locality_ratio: if placed > 0 {
+            p.map_in_local as f64 / placed as f64
+        } else {
+            0.0
+        },
+        io,
+        rt_batches: p.rt_batches,
+        rt_compute_ns: p.rt_compute_ns,
+        igfs: p.igfs,
+        handoff: p.handoff,
+    })
+}
+
+/// Plan one MapReduce stage: run its data plane eagerly and spawn its
+/// time-plane procs under the cluster's current tenant class — without
+/// running the engine. `after` gates every map task on an upstream
+/// barrier (chained submissions); `None` for independent jobs.
+///
+/// The data plane executes *here*, in admission order, under the
+/// byte-identical determinism contract (`pool_run`): planning jobs in
+/// any order yields the same bytes in every store because job keys are
+/// prefix-disjoint, task RNGs derive from `(seed, workload, task)`
+/// only, and cache eviction merely moves entries between tiers.
+#[allow(clippy::too_many_arguments)] // one per Figure-3 actor, like run_stage
+pub fn plan_stage(
+    cluster: &mut Cluster,
+    cfg: &SystemConfig,
+    wl: &dyn Workload,
+    job: &str,
+    input: StageInput,
+    after: Option<BarrierId>,
+    rt: &mut RtEngine,
+    seed: u64,
+) -> Result<PlannedStage, String> {
     let job = job.to_string();
+    // Fair-share class (spawned procs, yarn queue) and flow-tag
+    // namespace (I/O attribution) — identical on solo paths, distinct
+    // under a JobServer (class per tenant, namespace per stage).
+    let class = cluster.tenant;
+    let ns = cluster.stores.tag_ns;
+    let in_tag = tags::scoped(tags::INPUT_READ, ns);
     let t_start = cluster.engine.now();
     let rt_batches0 = rt.stats.batches;
     let rt_ns0 = rt.stats.pjrt_ns + rt.stats.oracle_ns;
     let igfs0 = cluster.stores.igfs.stats();
-    // Flow-log / cold-start offsets: a pipeline runs many stages on one
-    // engine, and this stage's report must cover only its own activity.
+    // Flow-log / container-start offsets: a pipeline or a co-run plans
+    // many stages on one engine, and this stage's report must cover
+    // only its own activity.
     let flows0 = cluster.engine.flow_log.len();
     let cold0 =
         cluster.controller.cold_starts() + cluster.lambda.cold_starts;
+    let warm0 =
+        cluster.controller.warm_starts() + cluster.lambda.warm_starts;
     let mut handoff = HandoffStats::default();
 
     // (1–3) Client → controller → YARN: size the job.
@@ -419,9 +608,16 @@ pub fn run_stage(
             locality: s.locality.clone(),
         })
         .collect();
-    let map_allocs = cluster.rm.allocate(&map_reqs);
+    // Placement runs under the tenant's fair queue when one is
+    // registered (JobServer co-runs); the default queue otherwise.
+    let qid = if (class as usize) < cluster.rm.scheduler.queues.len() {
+        class as usize
+    } else {
+        0
+    };
+    let map_allocs = cluster.rm.allocate_for(qid, &map_reqs);
     if cfg.prewarm && cfg.platform == Platform::OpenWhisk {
-        cluster.controller.prewarm("marvel-hadoop:latest", 64);
+        cluster.controller.prewarm(HADOOP_RUNTIME, 64);
     }
 
     let maps_done = cluster.engine.add_barrier(n_maps);
@@ -456,7 +652,7 @@ pub fn run_stage(
                             path,
                             *offset,
                             split.len,
-                            tags::INPUT_READ,
+                            in_tag,
                         )?;
                         if local {
                             map_in_local += split.len;
@@ -477,7 +673,7 @@ pub fn run_stage(
                             &cluster.topo,
                             node,
                             split.len,
-                            tags::INPUT_READ,
+                            in_tag,
                         );
                         map_in_remote += split.len;
                         (d, st)
@@ -491,6 +687,7 @@ pub fn run_stage(
                     &cluster.topo,
                     node,
                     key,
+                    in_tag,
                 )?;
                 match tier {
                     HandoffTier::Dram => handoff.dram += 1,
@@ -533,7 +730,14 @@ pub fn run_stage(
                 (cluster.lambda.concurrency, lat)
             }
         };
-        let mut stages = vec![Stage::Acquire(slot), Stage::Delay(startup)];
+        let mut stages = Vec::new();
+        if let Some(gate) = after {
+            // Chained submission: maps start only once the upstream
+            // stage's reducers have all arrived.
+            stages.push(Stage::Await(gate));
+        }
+        stages.push(Stage::Acquire(slot));
+        stages.push(Stage::Delay(startup));
         stages.extend(in_stages);
         stages.push(Stage::Delay(SimNs::from_secs_f64(
             split.len as f64 / wl.map_rate(),
@@ -556,7 +760,7 @@ pub fn run_stage(
         }
         stages.push(Stage::Release(slot));
         stages.push(Stage::Arrive(maps_done));
-        cluster.engine.spawn(&format!("{job}/map{i}"), stages);
+        cluster.engine.spawn_as(&format!("{job}/map{i}"), class, stages);
         if cfg.platform == Platform::OpenWhisk {
             cluster.controller.complete(&map_spec, node);
         } else {
@@ -577,7 +781,7 @@ pub fn run_stage(
             locality: vec![],
         })
         .collect();
-    let reduce_allocs = cluster.rm.allocate(&reduce_reqs);
+    let reduce_allocs = cluster.rm.allocate_for(qid, &reduce_reqs);
     let mut reduce_in_bytes = 0u64;
     let mut plans: Vec<ReducePlan> = Vec::with_capacity(n_reduces);
     let mut inputs_per_part: Vec<Vec<Payload>> =
@@ -655,7 +859,7 @@ pub fn run_stage(
         }
         stages.push(Stage::Release(plan.slot));
         stages.push(Stage::Arrive(job_done));
-        cluster.engine.spawn(&format!("{job}/red{j}"), stages);
+        cluster.engine.spawn_as(&format!("{job}/red{j}"), class, stages);
         if cfg.platform == Platform::OpenWhisk {
             cluster.controller.complete(&reduce_spec, plan.node);
         } else {
@@ -663,53 +867,36 @@ pub fn run_stage(
         }
     }
 
-    // Run the time plane.
-    let end = cluster.engine.run()?;
-    if let Some((_, msg)) = cluster.engine.failures().first() {
-        return Err(format!("task failed: {msg}"));
-    }
-    let maps_end = cluster
-        .engine
-        .barrier_opened_at(maps_done)
-        .unwrap_or(end);
-    let job_time = end - t_start;
-    let io = IoSummary::from_flow_log(&cluster.engine.flow_log[flows0..],
-                                      job_time);
-
-    let placed = map_in_local + map_in_remote;
-    Ok(JobResult {
+    // Data plane complete; capture this stage's share of every
+    // plan-time counter. The time plane (and with it the barrier
+    // timestamps finalize_stage reads) runs when the caller runs the
+    // engine — together with however many co-planned jobs share it.
+    Ok(PlannedStage {
         job,
-        config: cfg.name.clone(),
+        job_done,
+        maps_done,
+        cfg_name: cfg.name.clone(),
+        tag_ns: ns,
+        t_start,
+        flows0,
         input_bytes,
         intermediate_bytes,
         output_bytes,
-        map: PhaseStats {
-            tasks: n_maps,
-            bytes_in: input_bytes,
-            bytes_out: intermediate_bytes,
-            duration: maps_end - t_start,
-        },
-        reduce: PhaseStats {
-            tasks: n_reduces,
-            bytes_in: reduce_in_bytes,
-            bytes_out: output_bytes,
-            duration: end.saturating_sub(maps_end),
-        },
-        job_time,
-        failed: None,
+        reduce_in_bytes,
+        n_maps,
+        n_reduces,
+        map_in_local,
+        map_in_remote,
+        handoff,
+        igfs: cluster.stores.igfs.stats().delta_since(&igfs0),
         cold_starts: cluster.controller.cold_starts()
             + cluster.lambda.cold_starts
             - cold0,
-        locality_ratio: if placed > 0 {
-            map_in_local as f64 / placed as f64
-        } else {
-            0.0
-        },
-        io,
+        warm_starts: cluster.controller.warm_starts()
+            + cluster.lambda.warm_starts
+            - warm0,
         rt_batches: rt.stats.batches - rt_batches0,
         rt_compute_ns: rt.stats.pjrt_ns + rt.stats.oracle_ns - rt_ns0,
-        igfs: cluster.stores.igfs.stats().delta_since(&igfs0),
-        handoff,
     })
 }
 

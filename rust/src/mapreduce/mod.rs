@@ -1,19 +1,26 @@
 //! MapReduce engine: job/system configuration, workload abstraction,
 //! shuffle backends (S3 / HDFS / IGFS), the driver that plans tasks,
-//! runs the real data plane, and simulates the time plane, and the
-//! stateful multi-stage pipeline chaining jobs over cached state.
+//! runs the real data plane, and simulates the time plane, the
+//! stateful multi-stage pipeline chaining jobs over cached state, and
+//! the multi-tenant [`JobServer`] co-running N jobs over one shared
+//! cluster. See `ARCHITECTURE.md` (Layer 5) for the execution model.
 
 pub mod driver;
 pub mod pipeline;
+pub mod server;
 pub mod shuffle;
 pub mod types;
 pub mod workload;
 
 pub use driver::{
-    map_splits_parallel, reduce_partitions_parallel, run_job, run_stage,
-    stage_input, Cluster, StageInput,
+    finalize_stage, map_splits_parallel, plan_stage,
+    reduce_partitions_parallel, run_job, run_stage, stage_input,
+    stage_named_input, Cluster, PlannedStage, StageInput,
 };
 pub use pipeline::{JobPipeline, PipelineResult, PipelineStage};
+pub use server::{
+    ChainStage, JobRun, JobServer, ServerResult, Submission, TenantReport,
+};
 pub use shuffle::{interm_key, output_key, KeyHome, Stores};
 pub use types::{
     CombinerMode, HandoffStats, JobResult, PhaseStats, Platform, SerFormat,

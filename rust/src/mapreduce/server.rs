@@ -1,0 +1,495 @@
+//! Multi-tenant job server: N independent jobs (or chained
+//! submissions) admitted by weighted-share tenants and co-run over ONE
+//! shared [`Cluster`] — the paper's shared serverless substrate
+//! (OpenWhisk controller + warm container pools + in-memory caching
+//! layer serving many functions at once) made end-to-end, in the
+//! Cloudburst/Faasm tradition of many tenants sharing caches and warm
+//! compute. See `ARCHITECTURE.md` (Multi-tenancy) for the full design.
+//!
+//! What "shared" means here, concretely:
+//!
+//! * **Compute.** All jobs' task procs enter the same DES engine and
+//!   contend on the same invoker slot pools, which drain waiters in
+//!   weighted-fair order by tenant class ([`crate::util::fairq`]) — so
+//!   a 3-share tenant's container waves interleave 3:1 against a
+//!   1-share tenant's, with preemption-free backfill when anyone idles.
+//!   Virtual completion times therefore reflect real contention.
+//! * **Warm containers.** The controller's per-node pools survive
+//!   across jobs: every job runs the one shared Hadoop runtime image,
+//!   so containers warmed (or pre-warmed) by an earlier job serve a
+//!   later job's invocations warm. Cold starts happen only on first
+//!   touch; per-job warm/cold splits land in each [`JobResult`], and
+//!   the cross-job share in [`JobRun`]'s `cross_job_warm`.
+//! * **State.** IGFS tiers, HDFS, and S3 are shared with key-prefix
+//!   namespacing (every key starts with the job id), so co-tenants
+//!   share DRAM/PMEM capacity and evict each other under pressure —
+//!   measured per tenant via the `CacheStats` delta in each job's
+//!   result.
+//!
+//! Determinism contract: per-tenant *outputs* are byte-identical to
+//! the same jobs run solo, at any `{map,reduce}_workers` setting and
+//! any admission order. The data planes run eagerly at admission
+//! (fanned out through `pool_run`); only virtual *times* depend on
+//! shares and co-location. Pinned by `rust/tests/multi_tenant.rs`.
+
+use crate::faas::HADOOP_RUNTIME;
+use crate::igfs::CacheStats;
+use crate::runtime::RtEngine;
+use crate::sim::SimNs;
+
+use super::driver::{
+    finalize_stage, plan_stage, Cluster, PlannedStage, StageInput,
+};
+use super::shuffle::output_key;
+use super::types::{JobResult, SystemConfig};
+use super::workload::Workload;
+
+/// One stage of a submission: a workload and the system config it runs
+/// under (stores may differ per stage).
+pub struct ChainStage<'a> {
+    pub wl: &'a dyn Workload,
+    pub cfg: SystemConfig,
+}
+
+/// A tenant's admission ticket: one job (single stage) or a chain of
+/// stages where stage *k+1* reads stage *k*'s reducer outputs through
+/// the IGFS handoff chain, gated on its completion barrier.
+pub struct Submission<'a> {
+    pub tenant: String,
+    pub stages: Vec<ChainStage<'a>>,
+    /// Staged input path feeding stage 0 (stage it with
+    /// `stage_named_input` so co-tenants' inputs cannot collide).
+    pub input: String,
+    /// Data-plane seed — the same seed solo reproduces the same bytes.
+    pub seed: u64,
+}
+
+/// Admission-and-execution layer over one shared cluster.
+///
+/// ```text
+/// JobServer::new()
+///     .tenant("alice", 3)
+///     .tenant("bob", 1)
+///     .job("alice", &wc, cfg.clone(), &input_a, seed)
+///     .job("bob", &grep, cfg, &input_b, seed)
+///     .run(&mut cluster, &mut rt)
+/// ```
+pub struct JobServer<'a> {
+    tenants: Vec<(String, u64)>,
+    subs: Vec<Submission<'a>>,
+}
+
+/// One submission's outcome: per-stage reports plus its virtual
+/// completion instant on the shared clock.
+#[derive(Clone, Debug)]
+pub struct JobRun {
+    pub tenant: String,
+    /// Per-stage reports in chain order (single jobs have one).
+    pub stages: Vec<JobResult>,
+    /// Virtual time at which the last stage's reducers all finished.
+    pub completion: SimNs,
+    /// Cross-job warm reuse, measured as the warm-container stock
+    /// that earlier jobs (or deployment prewarm) had left available at
+    /// this submission's admission, capped by the warm starts it
+    /// actually recorded. An upper bound on true cross-job reuse —
+    /// containers carry no per-job provenance, so stock reused by
+    /// later intra-job waves is not distinguished. Zero admission
+    /// stock always reports zero.
+    pub cross_job_warm: u64,
+}
+
+impl JobRun {
+    pub fn ok(&self) -> bool {
+        self.stages.iter().all(|s| s.ok())
+    }
+
+    pub fn final_stage(&self) -> Option<&JobResult> {
+        self.stages.last()
+    }
+}
+
+/// Per-tenant aggregate over all of the tenant's submissions.
+#[derive(Clone, Debug)]
+pub struct TenantReport {
+    pub name: String,
+    pub share: u64,
+    /// Submissions this tenant ran.
+    pub jobs: usize,
+    /// Latest completion among the tenant's submissions.
+    pub completion: SimNs,
+    pub cold_starts: u64,
+    pub warm_starts: u64,
+    pub cross_job_warm: u64,
+    /// IGFS cache activity attributed to this tenant's planning —
+    /// including evictions it inflicted on co-tenants under pressure.
+    pub igfs: CacheStats,
+}
+
+/// Everything a co-run reports.
+#[derive(Clone, Debug)]
+pub struct ServerResult {
+    /// One entry per submission, in admission order.
+    pub jobs: Vec<JobRun>,
+    /// One entry per registered tenant, in registration order.
+    pub tenants: Vec<TenantReport>,
+    /// Virtual time from first admission to last completion.
+    pub makespan: SimNs,
+    /// Engine-level failure (deadlock); per-job failures live in the
+    /// individual [`JobResult`]s.
+    pub failed: Option<String>,
+}
+
+impl ServerResult {
+    pub fn ok(&self) -> bool {
+        self.failed.is_none() && self.jobs.iter().all(|j| j.ok())
+    }
+
+    pub fn tenant(&self, name: &str) -> Option<&TenantReport> {
+        self.tenants.iter().find(|t| t.name == name)
+    }
+}
+
+impl<'a> Default for JobServer<'a> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<'a> JobServer<'a> {
+    pub fn new() -> JobServer<'a> {
+        JobServer { tenants: Vec::new(), subs: Vec::new() }
+    }
+
+    /// Register a tenant with a fair-share weight (builder style).
+    /// Tenants referenced by [`JobServer::job`] without registration
+    /// get share 1.
+    pub fn tenant(mut self, name: &str, share: u64) -> Self {
+        if let Some(t) = self.tenants.iter_mut().find(|t| t.0 == name) {
+            t.1 = share.max(1);
+        } else {
+            self.tenants.push((name.to_string(), share.max(1)));
+        }
+        self
+    }
+
+    /// Admit a single-stage job for `tenant`.
+    pub fn job(
+        self,
+        tenant: &str,
+        wl: &'a dyn Workload,
+        cfg: SystemConfig,
+        input: &str,
+        seed: u64,
+    ) -> Self {
+        self.chain(tenant, vec![ChainStage { wl, cfg }], input, seed)
+    }
+
+    /// Admit a multi-stage chain for `tenant`: stage *k+1* consumes
+    /// stage *k*'s reducer outputs (IGFS-tier handoff) and its maps
+    /// await stage *k*'s completion barrier on the shared clock.
+    pub fn chain(
+        mut self,
+        tenant: &str,
+        stages: Vec<ChainStage<'a>>,
+        input: &str,
+        seed: u64,
+    ) -> Self {
+        assert!(!stages.is_empty(), "submission needs at least one stage");
+        if !self.tenants.iter().any(|t| t.0 == tenant) {
+            self.tenants.push((tenant.to_string(), 1));
+        }
+        self.subs.push(Submission {
+            tenant: tenant.to_string(),
+            stages,
+            input: input.to_string(),
+            seed,
+        });
+        self
+    }
+
+    /// Number of admitted submissions.
+    pub fn len(&self) -> usize {
+        self.subs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.subs.is_empty()
+    }
+
+    /// Co-run every admitted submission over `cluster`.
+    ///
+    /// Phase 1 (admission order, serial): each stage's data plane runs
+    /// eagerly and its task procs are spawned under the tenant's class.
+    /// Phase 2: one `engine.run()` interleaves all jobs' time planes —
+    /// slot pools arbitrate by share, flows fair-share bandwidth.
+    /// Phase 3: per-job results are finalized off barrier timestamps.
+    pub fn run(
+        &self,
+        cluster: &mut Cluster,
+        rt: &mut RtEngine,
+    ) -> ServerResult {
+        // Tenant classes: yarn queue index == engine class (queue 0
+        // stays the unscoped default). Flow-tag namespaces are assigned
+        // per planned stage below, so per-job I/O stays separable.
+        let mut classes: Vec<u32> = Vec::with_capacity(self.tenants.len());
+        for (name, share) in &self.tenants {
+            let id = cluster.rm.register_tenant(name, *share) as u32;
+            cluster.engine.set_class_weight(id, *share);
+            classes.push(id);
+        }
+        let class_of = |tenant: &str| -> u32 {
+            self.tenants
+                .iter()
+                .position(|t| t.0 == tenant)
+                .map(|i| classes[i])
+                .unwrap_or(0)
+        };
+
+        let t0 = cluster.engine.now();
+        // Phase 1 — plan (data planes + proc spawning), admission order.
+        struct PlannedSub {
+            tenant: String,
+            warm_at_admission: u64,
+            stages: Vec<Result<PlannedStage, JobResult>>,
+        }
+        let mut planned: Vec<PlannedSub> = Vec::with_capacity(self.subs.len());
+        // Every planned stage gets its own flow-tag namespace so two
+        // jobs of one tenant never conflate their I/O summaries; all
+        // of a tenant's stages share one fair-share class.
+        let mut stage_ns = 0u32;
+        for (k, sub) in self.subs.iter().enumerate() {
+            let class = class_of(&sub.tenant);
+            let warm_at_admission =
+                cluster.controller.warm_count(HADOOP_RUNTIME) as u64;
+            let mut stages = Vec::with_capacity(sub.stages.len());
+            let mut prev: Option<(String, usize, crate::sim::BarrierId)> =
+                None;
+            for (j, st) in sub.stages.iter().enumerate() {
+                stage_ns += 1;
+                cluster.set_scope(class, stage_ns);
+                let job = format!(
+                    "{}/j{k:02}/s{j:02}-{}",
+                    sub.tenant,
+                    st.wl.name()
+                );
+                let (stage_input, gate) = match &prev {
+                    None => (StageInput::Path(sub.input.clone()), None),
+                    Some((pjob, nr, done)) => (
+                        StageInput::Handoff {
+                            keys: (0..*nr)
+                                .map(|i| output_key(pjob, i))
+                                .collect(),
+                        },
+                        Some(*done),
+                    ),
+                };
+                match plan_stage(
+                    cluster, &st.cfg, st.wl, &job, stage_input, gate, rt,
+                    sub.seed,
+                ) {
+                    Ok(p) => {
+                        prev = Some((job, p.n_reduces(), p.job_done));
+                        stages.push(Ok(p));
+                    }
+                    Err(e) => {
+                        stages.push(Err(JobResult::failed(
+                            &job,
+                            &st.cfg.name,
+                            0,
+                            e,
+                        )));
+                        break; // downstream stages have no input
+                    }
+                }
+            }
+            planned.push(PlannedSub {
+                tenant: sub.tenant.clone(),
+                warm_at_admission,
+                stages,
+            });
+        }
+        cluster.set_scope(0, 0);
+
+        // Phase 2 — one shared time plane.
+        let (engine_end, failed) = match cluster.engine.run() {
+            Ok(end) => (end, None),
+            Err(e) => (cluster.engine.now(), Some(e)),
+        };
+
+        // Phase 3 — finalize per submission.
+        let mut jobs: Vec<JobRun> = Vec::with_capacity(planned.len());
+        for ps in planned {
+            let mut stages = Vec::with_capacity(ps.stages.len());
+            let mut completion = t0;
+            let mut warm = 0u64;
+            for st in ps.stages {
+                let jr = match st {
+                    Ok(p) => {
+                        let done = cluster
+                            .engine
+                            .barrier_opened_at(p.job_done)
+                            .unwrap_or(engine_end);
+                        completion = completion.max(done);
+                        let job = p.job.clone();
+                        let cfg = p.cfg_name().to_string();
+                        match finalize_stage(cluster, p, engine_end) {
+                            Ok(jr) => jr,
+                            Err(e) => JobResult::failed(&job, &cfg, 0, e),
+                        }
+                    }
+                    Err(jr) => jr,
+                };
+                warm += jr.warm_starts;
+                stages.push(jr);
+            }
+            jobs.push(JobRun {
+                tenant: ps.tenant,
+                stages,
+                completion,
+                cross_job_warm: warm.min(ps.warm_at_admission),
+            });
+        }
+
+        // Per-tenant aggregates, registration order.
+        let tenants = self
+            .tenants
+            .iter()
+            .map(|(name, share)| {
+                let mut rep = TenantReport {
+                    name: name.clone(),
+                    share: *share,
+                    jobs: 0,
+                    completion: t0,
+                    cold_starts: 0,
+                    warm_starts: 0,
+                    cross_job_warm: 0,
+                    igfs: CacheStats::default(),
+                };
+                for run in jobs.iter().filter(|r| &r.tenant == name) {
+                    rep.jobs += 1;
+                    rep.completion = rep.completion.max(run.completion);
+                    rep.cross_job_warm += run.cross_job_warm;
+                    for s in &run.stages {
+                        rep.cold_starts += s.cold_starts;
+                        rep.warm_starts += s.warm_starts;
+                        rep.igfs.add(&s.igfs);
+                    }
+                }
+                rep
+            })
+            .collect();
+
+        ServerResult {
+            jobs,
+            tenants,
+            makespan: engine_end.saturating_sub(t0),
+            failed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ClusterSpec;
+    use crate::mapreduce::stage_named_input;
+    use crate::util::bytes::MIB;
+    use crate::workloads::WordCount;
+
+    fn cfg() -> SystemConfig {
+        let mut c = SystemConfig::marvel_igfs();
+        c.map_workers = 2;
+        c.reduce_workers = 2;
+        c
+    }
+
+    #[test]
+    fn two_tenants_co_run_one_cluster() {
+        let base = cfg();
+        let mut cluster = ClusterSpec::default().deploy(&base);
+        cluster.stores.hdfs.block_size = 256 * 1024;
+        let mut rt = RtEngine::load(None).unwrap();
+        let wc = WordCount::new(2000, 1.07, &rt);
+        let in_a = stage_named_input(&mut cluster, &base, &wc, 2 * MIB, 7,
+                                     "alice/in").unwrap();
+        let in_b = stage_named_input(&mut cluster, &base, &wc, 2 * MIB, 7,
+                                     "bob/in").unwrap();
+        let res = JobServer::new()
+            .tenant("alice", 3)
+            .tenant("bob", 1)
+            .job("alice", &wc, base.clone(), &in_a, 7)
+            .job("bob", &wc, base.clone(), &in_b, 7)
+            .run(&mut cluster, &mut rt);
+        assert!(res.ok(), "{:?}", res.failed);
+        assert_eq!(res.jobs.len(), 2);
+        assert_eq!(res.tenants.len(), 2);
+        for run in &res.jobs {
+            let jr = run.final_stage().unwrap();
+            assert!(jr.output_bytes > 0, "{}", jr.job);
+            assert!(jr.igfs.hits_dram > 0, "per-tenant cache stats");
+            assert!(run.completion > SimNs::ZERO);
+        }
+        // Shared warm pools: the second admission reuses containers the
+        // first one (or deployment prewarm) left warm.
+        assert!(res.jobs[1].cross_job_warm > 0);
+        // Both tenants' completions are on one shared clock; the co-run
+        // makespan covers the later one.
+        let latest =
+            res.jobs.iter().map(|r| r.completion).max().unwrap();
+        assert_eq!(res.makespan, latest);
+        assert_eq!(res.tenant("alice").unwrap().share, 3);
+        assert!(res.tenant("alice").unwrap().completion > SimNs::ZERO);
+    }
+
+    #[test]
+    fn chained_submission_hands_off_between_stages() {
+        use crate::workloads::PageRank;
+        let base = cfg();
+        let mut cluster = ClusterSpec::default().deploy(&base);
+        cluster.stores.hdfs.block_size = 256 * 1024;
+        let mut rt = RtEngine::load(None).unwrap();
+        let wc = WordCount::new(2000, 1.07, &rt);
+        let pr = PageRank::new();
+        let input = stage_named_input(&mut cluster, &base, &wc, 2 * MIB, 7,
+                                      "carol/in").unwrap();
+        let res = JobServer::new()
+            .tenant("carol", 2)
+            .chain(
+                "carol",
+                vec![
+                    ChainStage { wl: &wc, cfg: base.clone() },
+                    ChainStage { wl: &pr, cfg: base.clone() },
+                ],
+                &input,
+                7,
+            )
+            .run(&mut cluster, &mut rt);
+        assert!(res.ok(), "{:?}", res.failed);
+        let run = &res.jobs[0];
+        assert_eq!(run.stages.len(), 2);
+        // Stage 1 resolved its input through the handoff chain.
+        assert!(run.stages[1].handoff.resolved() > 0,
+                "{:?}", run.stages[1].handoff);
+        // Chain stages are serialized on the virtual clock.
+        assert!(run.stages[1].job_time >= run.stages[0].job_time,
+                "downstream stage waited on the gate");
+    }
+
+    #[test]
+    fn unregistered_tenant_defaults_to_share_one() {
+        let s = JobServer::new();
+        assert!(s.is_empty());
+        let base = cfg();
+        let mut cluster = ClusterSpec::default().deploy(&base);
+        let mut rt = RtEngine::load(None).unwrap();
+        let wc = WordCount::new(500, 1.07, &rt);
+        let input = stage_named_input(&mut cluster, &base, &wc, MIB, 3,
+                                      "dave/in").unwrap();
+        let res = JobServer::new()
+            .job("dave", &wc, base.clone(), &input, 3)
+            .run(&mut cluster, &mut rt);
+        assert!(res.ok(), "{:?}", res.failed);
+        assert_eq!(res.tenant("dave").unwrap().share, 1);
+        assert_eq!(res.jobs.len(), 1);
+    }
+}

@@ -18,10 +18,21 @@ use crate::storage::Payload;
 use super::types::StoreKind;
 
 /// All stores a cluster deployment provides; jobs borrow it.
+///
+/// Multi-tenancy: co-running jobs share these stores with *key-prefix
+/// namespacing* — every shuffle/output key starts with the job id
+/// ([`interm_key`]/[`output_key`]), so tenants share DRAM/PMEM
+/// capacity (and evict each other under pressure) without ever
+/// colliding on keys; `clear_prefix` scrubs one job's keys without
+/// touching its co-tenants'. `tag_ns` stamps the tenant class on every
+/// flow this struct emits so shared-cluster I/O stays attributable
+/// (`crate::metrics::tags::scoped`).
 pub struct Stores {
     pub hdfs: Hdfs,
     pub igfs: Igfs,
     pub s3: ObjectStore,
+    /// Tenant class stamped on emitted flow tags (0 = unscoped).
+    pub tag_ns: u32,
     /// Integrity manifest: committed length per intermediate key.
     /// A read that comes back with a different length (or nothing at
     /// all for a committed key) is corruption and surfaces as `Err` —
@@ -50,7 +61,7 @@ pub enum KeyHome {
 
 impl Stores {
     pub fn new(hdfs: Hdfs, igfs: Igfs, s3: ObjectStore) -> Stores {
-        Stores { hdfs, igfs, s3, interm_len: HashMap::new() }
+        Stores { hdfs, igfs, s3, tag_ns: 0, interm_len: HashMap::new() }
     }
 
     /// Probe the handoff resolution chain (IGFS tiers → HDFS → S3) for
@@ -118,7 +129,7 @@ impl Stores {
         key: &str,
         data: Payload,
     ) -> Result<Vec<Stage>, String> {
-        let tag = tags::INTERMEDIATE_WRITE;
+        let tag = tags::scoped(tags::INTERMEDIATE_WRITE, self.tag_ns);
         self.interm_len.insert(key.to_string(), data.len());
         match kind {
             StoreKind::S3 => {
@@ -147,7 +158,7 @@ impl Stores {
         node: NodeId,
         key: &str,
     ) -> Result<Option<(Payload, Vec<Stage>)>, String> {
-        let tag = tags::INTERMEDIATE_READ;
+        let tag = tags::scoped(tags::INTERMEDIATE_READ, self.tag_ns);
         let got = match kind {
             StoreKind::S3 => match self.s3.get(key) {
                 None => None,
@@ -207,7 +218,7 @@ impl Stores {
         key: &str,
         data: Payload,
     ) -> Result<Vec<Stage>, String> {
-        let tag = tags::OUTPUT_WRITE;
+        let tag = tags::scoped(tags::OUTPUT_WRITE, self.tag_ns);
         match kind {
             StoreKind::S3 => {
                 let st =

@@ -13,6 +13,7 @@ use crate::sim::SimNs;
 use crate::util::bytes::{GIB, MIB};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Which FaaS substrate runs the functions.
 pub enum Platform {
     /// OpenWhisk with the Marvel Hadoop runtime (stateful).
     OpenWhisk,
@@ -21,6 +22,7 @@ pub enum Platform {
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Which store backs a data path (input/intermediate/output).
 pub enum StoreKind {
     S3,
     Hdfs,
@@ -28,6 +30,7 @@ pub enum StoreKind {
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Intermediate record serialization format.
 pub enum SerFormat {
     /// Corral-style JSON records: {"key":"...","value":N}.
     Json,
@@ -48,6 +51,7 @@ impl SerFormat {
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Whether the map-side combiner (the L1 kernel) runs.
 pub enum CombinerMode {
     /// Ship raw <key,1> records (Corral has no combiner).
     None,
@@ -56,6 +60,8 @@ pub enum CombinerMode {
 }
 
 #[derive(Clone, Debug)]
+/// One evaluated system configuration (a column of the paper's
+/// comparison grid).
 pub struct SystemConfig {
     pub name: String,
     pub platform: Platform,
@@ -285,6 +291,10 @@ pub struct JobResult {
     pub job_time: SimNs,
     pub failed: Option<String>,
     pub cold_starts: u64,
+    /// Invocations served by an already-warm container — on a shared
+    /// cluster this includes containers warmed by *earlier jobs*
+    /// (cross-job reuse; `super::JobServer` reports the split).
+    pub warm_starts: u64,
     pub locality_ratio: f64,
     pub io: crate::metrics::IoSummary,
     /// Real wall-clock spent in the PJRT/oracle combine path.
@@ -313,6 +323,7 @@ impl JobResult {
             job_time: SimNs::ZERO,
             failed: None,
             cold_starts: 0,
+            warm_starts: 0,
             locality_ratio: 0.0,
             io: Default::default(),
             rt_batches: 0,

@@ -1,9 +1,16 @@
 //! Metrics: flow tags, counters, and report assembly for the bench
-//! harness (tables/figures) and EXPERIMENTS.md.
+//! harness (tables/figures) and EXPERIMENTS.md. See `ARCHITECTURE.md`
+//! (Observability) for how tags attribute shared-cluster traffic.
 
 pub mod tags {
     //! Flow tags — label every simulated transfer so throughput can be
     //! attributed per phase (Figure 6 needs I/O throughput by backend).
+    //!
+    //! The low [`TENANT_SHIFT`] bits carry the *phase* (the constants
+    //! below); the high bits carry the *tenant class* a multi-tenant
+    //! co-run stamps on its traffic ([`scoped`]). Single-job runs use
+    //! tenant 0, for which `scoped(base, 0) == base` — the legacy tag
+    //! values are unchanged.
     pub const INPUT_READ: u32 = 1;
     pub const INTERMEDIATE_WRITE: u32 = 2;
     pub const INTERMEDIATE_READ: u32 = 3;
@@ -13,8 +20,27 @@ pub mod tags {
     pub const REPLICATION: u32 = 7;
     pub const FIO: u32 = 8;
 
+    /// Bits reserved for the phase; tenant class lives above them.
+    pub const TENANT_SHIFT: u32 = 8;
+
+    /// Stamp a phase tag with a tenant class.
+    pub fn scoped(base: u32, tenant: u32) -> u32 {
+        debug_assert!(base < (1 << TENANT_SHIFT));
+        base | (tenant << TENANT_SHIFT)
+    }
+
+    /// The phase constant of a (possibly tenant-scoped) tag.
+    pub fn base_of(tag: u32) -> u32 {
+        tag & ((1 << TENANT_SHIFT) - 1)
+    }
+
+    /// The tenant class of a tag (0 = unscoped / single job).
+    pub fn tenant_of(tag: u32) -> u32 {
+        tag >> TENANT_SHIFT
+    }
+
     pub fn name(tag: u32) -> &'static str {
-        match tag {
+        match base_of(tag) {
             INPUT_READ => "input_read",
             INTERMEDIATE_WRITE => "intermediate_write",
             INTERMEDIATE_READ => "intermediate_read",
@@ -78,6 +104,24 @@ impl IoSummary {
             per_tag.get_mut(&tag).unwrap().1 = busy as f64 / 1e9;
         }
         IoSummary { per_tag, total_bytes: total, makespan }
+    }
+
+    /// Summarize only one tenant's flows out of a shared co-run log,
+    /// normalizing tags back to their phase constants so `bytes_for`
+    /// and friends answer with the usual keys. Tenant 0 selects
+    /// unscoped (single-job) traffic — for a solo run over its own
+    /// flow-log slice this is identical to [`IoSummary::from_flow_log`].
+    pub fn for_tenant(
+        log: &[FlowLog],
+        tenant: u32,
+        makespan: SimNs,
+    ) -> IoSummary {
+        let scoped: Vec<FlowLog> = log
+            .iter()
+            .filter(|f| tags::tenant_of(f.tag) == tenant)
+            .map(|f| FlowLog { tag: tags::base_of(f.tag), ..f.clone() })
+            .collect();
+        IoSummary::from_flow_log(&scoped, makespan)
     }
 
     pub fn bytes_for(&self, tag: u32) -> f64 {
@@ -149,6 +193,32 @@ mod tests {
     #[test]
     fn tag_names() {
         assert_eq!(tags::name(tags::INPUT_READ), "input_read");
-        assert_eq!(tags::name(999), "other");
+        assert_eq!(tags::name(0xff), "other");
+    }
+
+    #[test]
+    fn scoped_tags_roundtrip_and_zero_is_identity() {
+        let t = tags::scoped(tags::OUTPUT_WRITE, 3);
+        assert_eq!(tags::base_of(t), tags::OUTPUT_WRITE);
+        assert_eq!(tags::tenant_of(t), 3);
+        assert_eq!(tags::name(t), "output_write");
+        assert_eq!(tags::scoped(tags::INPUT_READ, 0), tags::INPUT_READ);
+        assert_eq!(tags::tenant_of(tags::INPUT_READ), 0);
+    }
+
+    #[test]
+    fn for_tenant_filters_and_normalizes() {
+        let log = vec![
+            fl(tags::scoped(tags::INPUT_READ, 1), 100.0, 0, 10),
+            fl(tags::scoped(tags::INPUT_READ, 2), 40.0, 0, 10),
+            fl(tags::scoped(tags::OUTPUT_WRITE, 1), 7.0, 10, 20),
+            fl(tags::INPUT_READ, 5.0, 0, 10), // unscoped
+        ];
+        let t1 = IoSummary::for_tenant(&log, 1, SimNs::from_nanos(20));
+        assert_eq!(t1.bytes_for(tags::INPUT_READ), 100.0);
+        assert_eq!(t1.bytes_for(tags::OUTPUT_WRITE), 7.0);
+        assert_eq!(t1.total_bytes, 107.0);
+        let t0 = IoSummary::for_tenant(&log, 0, SimNs::from_nanos(20));
+        assert_eq!(t0.total_bytes, 5.0);
     }
 }

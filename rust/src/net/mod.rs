@@ -4,6 +4,8 @@
 //! channel, the NICs, and the destination device write channel — so the
 //! bottleneck (the paper's "network quickly becomes the bottleneck")
 //! emerges from capacities instead of being scripted.
+//!
+//! See `ARCHITECTURE.md` (Layer 1).
 
 pub mod topology;
 

@@ -6,9 +6,11 @@ use crate::sim::{Engine, ResourceId, SimNs};
 use crate::storage::{Device, MediaSpec};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+/// Index of a server node in the cluster topology.
 pub struct NodeId(pub usize);
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+/// Index of a device (NIC channel, DRAM/PMEM/SSD/HDD) in the topology.
 pub struct DevId(pub usize);
 
 /// Which storage role a device plays on its node.
@@ -21,6 +23,7 @@ pub enum DeviceRole {
 }
 
 #[derive(Clone, Debug)]
+/// One server: its devices by role plus NIC channels.
 pub struct Node {
     pub name: String,
     pub nic_in: ResourceId,
@@ -30,6 +33,7 @@ pub struct Node {
     pub slots: usize,
 }
 
+/// The deployed cluster: nodes, devices, LAN/WAN shared links.
 pub struct Topology {
     pub nodes: Vec<Node>,
     pub devices: Vec<Device>,

@@ -7,6 +7,8 @@
 //! 3 500 PUT per second — requests beyond the rate queue, the fluid
 //! analog of 503-retry loops), and account-level transfer quotas that
 //! fail the job outright (Corral's observed 15 GB failure).
+//!
+//! See `ARCHITECTURE.md` (Layer 1).
 
 use std::collections::BTreeMap;
 
@@ -16,9 +18,11 @@ use crate::storage::Payload;
 
 /// AWS-published default request rates per prefix.
 pub const DEFAULT_GET_RPS: f64 = 5_500.0;
+/// AWS's published per-prefix PUT rate limit (requests/second).
 pub const DEFAULT_PUT_RPS: f64 = 3_500.0;
 
 #[derive(Clone, Debug)]
+/// Remote object store shape: WAN RTT, request rates, quotas.
 pub struct ObjStoreConfig {
     pub get_rps: f64,
     pub put_rps: f64,
@@ -57,6 +61,7 @@ pub struct ObjectStore {
 }
 
 #[derive(Clone, Debug, Default)]
+/// Request/byte counters for the object store.
 pub struct ObjStats {
     pub gets: u64,
     pub puts: u64,

@@ -1,7 +1,8 @@
 //! PJRT runtime: loads the AOT artifacts (HLO text) once at startup,
 //! compiles them on the CPU PJRT client, and executes combine batches on
 //! the request path. Python is never involved at runtime — this module
-//! plus `artifacts/` is the entire compute stack (DESIGN.md §3).
+//! plus `artifacts/` is the entire compute stack (ARCHITECTURE.md,
+//! Runtime & artifacts).
 //!
 //! Falls back to `oracle` when artifacts are absent so the library works
 //! pre-`make artifacts`; integration tests assert PJRT-vs-oracle

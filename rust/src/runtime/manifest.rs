@@ -8,12 +8,14 @@ use std::path::{Path, PathBuf};
 use crate::util::json::Json;
 
 #[derive(Clone, Debug)]
+/// Shape/dtype of one artifact parameter.
 pub struct ParamSpec {
     pub shape: Vec<usize>,
     pub dtype: String,
 }
 
 #[derive(Clone, Debug)]
+/// One AOT-lowered artifact: file, entry, batch geometry.
 pub struct ArtifactMeta {
     pub name: String,
     pub file: PathBuf,
@@ -24,6 +26,7 @@ pub struct ArtifactMeta {
 }
 
 #[derive(Clone, Debug)]
+/// The artifact manifest produced by `python/compile/aot.py`.
 pub struct Manifest {
     pub artifacts: BTreeMap<String, ArtifactMeta>,
     pub tokens_per_batch: usize,

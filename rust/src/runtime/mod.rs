@@ -1,6 +1,8 @@
 //! Runtime layer: PJRT client wrapping the `xla` crate — loads
 //! `artifacts/*.hlo.txt` (AOT-lowered by python/compile/aot.py), compiles
 //! once, executes combine batches from the L3 hot path.
+//!
+//! See `ARCHITECTURE.md` (Runtime & artifacts).
 
 pub mod engine;
 pub mod manifest;

@@ -4,21 +4,35 @@
 //!
 //! The MapReduce driver compiles every map/reduce task into a proc; the
 //! engine then yields deterministic completion times. This replaces the
-//! authors' physical testbed as the time axis (DESIGN.md §2).
+//! authors' physical testbed as the time axis (`ARCHITECTURE.md`,
+//! Layer 0 and the Two-plane execution model).
+//!
+//! Multi-tenancy: every proc carries a *class* (0 = unscoped; the
+//! `mapreduce::JobServer` assigns one class per tenant). Slot pools
+//! grant contended slots in weighted-fair order across classes
+//! (`util::fairq::FairQueue`, weights set via
+//! [`Engine::set_class_weight`]), so concurrent jobs' container waves
+//! interleave deterministically in proportion to their shares while an
+//! idle tenant's capacity backfills the busy ones.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+use crate::util::fairq::FairQueue;
 
 use super::clock::SimNs;
 use super::flow::{FlowId, FlowSim, ResourceId};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+/// Index of a proc (simulated task) in the engine.
 pub struct ProcId(pub usize);
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+/// Index of a slot pool (containers, vcores, concurrency tokens).
 pub struct PoolId(pub usize);
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+/// Index of a phase barrier.
 pub struct BarrierId(pub usize);
 
 /// One step in a proc's lifecycle.
@@ -43,6 +57,7 @@ pub enum Stage {
 }
 
 #[derive(Clone, Debug, PartialEq)]
+/// Lifecycle state of a proc.
 pub enum ProcState {
     Ready,
     Blocked,
@@ -57,12 +72,18 @@ struct Proc {
     started: SimNs,
     finished: SimNs,
     label: String,
+    /// Fair-queueing class (tenant); 0 for unscoped procs.
+    class: u32,
+    /// Pool whose slot was handed to this proc while it was blocked in
+    /// `Acquire` (release-side direct grant) — consumed on wake.
+    grant: Option<PoolId>,
 }
 
 struct Pool {
     capacity: usize,
     in_use: usize,
-    waiters: VecDeque<ProcId>,
+    /// Blocked acquirers, drained in weighted-fair order by class.
+    waiters: FairQueue<ProcId>,
 }
 
 struct Barrier {
@@ -81,6 +102,7 @@ pub struct FlowLog {
     pub end: SimNs,
 }
 
+/// The discrete-event engine: procs, pools, barriers, flows, timers.
 pub struct Engine {
     pub flows: FlowSim,
     procs: Vec<Proc>,
@@ -92,6 +114,8 @@ pub struct Engine {
     flow_owner: Vec<(FlowId, ProcId, SimNs)>,
     now: SimNs,
     pub flow_log: Vec<FlowLog>,
+    /// Per-class weights for contended slot grants (absent = 1).
+    class_weights: HashMap<u32, u64>,
 }
 
 impl Default for Engine {
@@ -113,7 +137,15 @@ impl Engine {
             flow_owner: Vec::new(),
             now: SimNs::ZERO,
             flow_log: Vec::new(),
+            class_weights: HashMap::new(),
         }
+    }
+
+    /// Set the fair-share weight of a proc class (tenant). Contended
+    /// slot grants across classes are proportional to these weights;
+    /// unset classes weigh 1.
+    pub fn set_class_weight(&mut self, class: u32, weight: u64) {
+        self.class_weights.insert(class, weight.max(1));
     }
 
     pub fn now(&self) -> SimNs {
@@ -125,7 +157,11 @@ impl Engine {
     }
 
     pub fn add_pool(&mut self, capacity: usize) -> PoolId {
-        self.pools.push(Pool { capacity, in_use: 0, waiters: VecDeque::new() });
+        self.pools.push(Pool {
+            capacity,
+            in_use: 0,
+            waiters: FairQueue::new(),
+        });
         PoolId(self.pools.len() - 1)
     }
 
@@ -140,6 +176,17 @@ impl Engine {
     }
 
     pub fn spawn(&mut self, label: &str, stages: Vec<Stage>) -> ProcId {
+        self.spawn_as(label, 0, stages)
+    }
+
+    /// Spawn a proc under a fair-queueing class (tenant). Class 0 is
+    /// the unscoped default used by [`Engine::spawn`].
+    pub fn spawn_as(
+        &mut self,
+        label: &str,
+        class: u32,
+        stages: Vec<Stage>,
+    ) -> ProcId {
         let id = ProcId(self.procs.len());
         self.procs.push(Proc {
             stages: stages.into(),
@@ -147,6 +194,8 @@ impl Engine {
             started: self.now,
             finished: SimNs::ZERO,
             label: label.to_string(),
+            class,
+            grant: None,
         });
         self.ready.push_back(id);
         id
@@ -170,6 +219,18 @@ impl Engine {
 
     pub fn barrier_opened_at(&self, id: BarrierId) -> Option<SimNs> {
         self.barriers[id.0].opened_at
+    }
+
+    /// First failure message among procs whose label starts with
+    /// `prefix` — job-scoped failure probe that avoids collecting and
+    /// cloning every failure on every finalized job of a co-run.
+    pub fn failure_with_prefix(&self, prefix: &str) -> Option<&str> {
+        self.procs.iter().find_map(|p| match &p.state {
+            ProcState::Failed(m) if p.label.starts_with(prefix) => {
+                Some(m.as_str())
+            }
+            _ => None,
+        })
     }
 
     /// Ids of procs that ended in `Failed`.
@@ -202,23 +263,51 @@ impl Engine {
             };
             match stage {
                 Stage::Acquire(p) => {
-                    let pool = &mut self.pools[p.0];
-                    if pool.in_use < pool.capacity {
-                        pool.in_use += 1;
+                    if self.procs[id.0].grant == Some(p) {
+                        // A releaser handed this proc its slot directly
+                        // (already counted in `in_use`).
+                        self.procs[id.0].grant = None;
                     } else {
-                        pool.waiters.push_back(id);
-                        // Re-queue the acquire so it retries on wake.
-                        self.procs[id.0].stages.push_front(Stage::Acquire(p));
-                        self.procs[id.0].state = ProcState::Blocked;
-                        return;
+                        let class = self.procs[id.0].class;
+                        let weights = &self.class_weights;
+                        let pool = &mut self.pools[p.0];
+                        // Grant immediately only when nobody is queued
+                        // — otherwise newly-ready procs would jump the
+                        // fair queue.
+                        if pool.in_use < pool.capacity
+                            && pool.waiters.is_empty()
+                        {
+                            pool.in_use += 1;
+                            let w = weights.get(&class).copied().unwrap_or(1);
+                            pool.waiters.charge(class, w);
+                        } else {
+                            pool.waiters.push(class, id);
+                            // Re-queue the acquire: consumed on wake via
+                            // the grant handshake above.
+                            self.procs[id.0]
+                                .stages
+                                .push_front(Stage::Acquire(p));
+                            self.procs[id.0].state = ProcState::Blocked;
+                            return;
+                        }
                     }
                 }
                 Stage::Release(p) => {
+                    let weights = &self.class_weights;
                     let pool = &mut self.pools[p.0];
                     assert!(pool.in_use > 0, "release on empty pool");
-                    pool.in_use -= 1;
-                    if let Some(w) = pool.waiters.pop_front() {
-                        self.wake(w);
+                    // Hand the slot to the weighted-fair next waiter
+                    // without letting it transit the free state (a
+                    // ready proc could otherwise steal it).
+                    let next = pool
+                        .waiters
+                        .pop(|c| weights.get(&c).copied().unwrap_or(1));
+                    match next {
+                        Some((_, w)) => {
+                            self.procs[w.0].grant = Some(p);
+                            self.wake(w);
+                        }
+                        None => pool.in_use -= 1,
                     }
                 }
                 Stage::Delay(d) => {
@@ -440,6 +529,57 @@ mod tests {
         let never = e.add_barrier(1); // nobody arrives
         e.spawn("stuck", vec![Stage::Await(never)]);
         assert!(e.run().is_err());
+    }
+
+    #[test]
+    fn weighted_classes_share_a_pool_three_to_one() {
+        // 8 procs per class × 10 ms on one slot. Class 1 (weight 3)
+        // drains ~3× as fast as class 2 (weight 1): its last proc
+        // finishes around 110 ms; class 2 occupies the full 160 ms.
+        let mut e = Engine::new();
+        e.set_class_weight(1, 3);
+        e.set_class_weight(2, 1);
+        let pool = e.add_pool(1);
+        let mut ids = vec![];
+        for class in [1u32, 2] {
+            for i in 0..8 {
+                ids.push((class, e.spawn_as(&format!("c{class}p{i}"), class, vec![
+                    Stage::Acquire(pool),
+                    Stage::Delay(SimNs::from_millis(10)),
+                    Stage::Release(pool),
+                ])));
+            }
+        }
+        let end = e.run().unwrap();
+        assert_eq!(end, SimNs::from_millis(160), "work conserved");
+        let last = |c: u32| {
+            ids.iter()
+                .filter(|(cc, _)| *cc == c)
+                .map(|(_, id)| e.finished_at(*id))
+                .max()
+                .unwrap()
+        };
+        let (l1, l2) = (last(1), last(2));
+        assert_eq!(l2, SimNs::from_millis(160));
+        assert!(l1 <= SimNs::from_millis(125),
+                "weight-3 class should finish early, got {l1}");
+    }
+
+    #[test]
+    fn idle_class_weight_costs_nothing() {
+        // Weights for absent classes must not reserve capacity: a lone
+        // class-0 stream through a weighted pool is still back-to-back.
+        let mut e = Engine::new();
+        e.set_class_weight(7, 1000);
+        let pool = e.add_pool(1);
+        for i in 0..3 {
+            e.spawn(&format!("p{i}"), vec![
+                Stage::Acquire(pool),
+                Stage::Delay(SimNs::from_millis(10)),
+                Stage::Release(pool),
+            ]);
+        }
+        assert_eq!(e.run().unwrap(), SimNs::from_millis(30));
     }
 
     #[test]

@@ -12,12 +12,15 @@
 use std::collections::HashMap;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+/// Index of a bandwidth resource (link/channel) in the flow sim.
 pub struct ResourceId(pub usize);
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+/// Index of an active flow.
 pub struct FlowId(pub u64);
 
 #[derive(Clone, Debug)]
+/// One capacity-limited bandwidth resource.
 pub struct Resource {
     pub name: String,
     pub capacity: f64, // bytes/sec (or ops/sec)
@@ -41,6 +44,7 @@ pub struct FlowRecord {
 }
 
 #[derive(Default)]
+/// Max–min fair-share fluid flow simulator.
 pub struct FlowSim {
     resources: Vec<Resource>,
     flows: HashMap<FlowId, Flow>,

@@ -1,5 +1,5 @@
 //! Deterministic discrete-event simulation: the virtual time axis that
-//! replaces the paper's physical testbed (see DESIGN.md §2).
+//! replaces the paper's physical testbed (see ARCHITECTURE.md, Layer 0).
 
 pub mod clock;
 pub mod engine;

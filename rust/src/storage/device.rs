@@ -11,6 +11,8 @@ use crate::sim::{Engine, ResourceId, SimNs, Stage};
 use super::media::{Access, Dir, MediaSpec};
 
 #[derive(Clone, Debug)]
+/// A storage device instance: media spec + capacity accounting +
+/// DES bandwidth channels.
 pub struct Device {
     pub spec: MediaSpec,
     pub read_chan: ResourceId,

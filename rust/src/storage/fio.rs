@@ -9,6 +9,7 @@ use super::device::Device;
 use super::media::{Access, Dir, MediaSpec};
 
 #[derive(Clone, Debug)]
+/// One fio-style measurement row (Table 2).
 pub struct FioResult {
     pub media: &'static str,
     pub access: Access,

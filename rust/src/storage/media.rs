@@ -1,7 +1,7 @@
 //! Storage media models, calibrated to the paper's **own Table 2**
 //! (FIO, 4 KiB blocks, 8 streams: IOPS / bandwidth / latency for PMEM in
 //! AppDirect mode vs. enterprise SSD). The substitution argument
-//! (DESIGN.md §2): every downstream result that depends on "PMEM is
+//! (ARCHITECTURE.md, Layer 1): every downstream result that depends on "PMEM is
 //! 10–100× faster than SSD" flows from the very numbers the authors
 //! measured on real Optane hardware.
 
@@ -16,6 +16,7 @@ pub enum Access {
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+/// Transfer direction of a storage operation.
 pub enum Dir {
     Read,
     Write,

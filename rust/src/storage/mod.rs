@@ -1,6 +1,8 @@
 //! Storage substrate: media models calibrated to the paper's Table 2,
 //! device instances wired into the DES, payload data plane, and the
 //! fio-style microbenchmark that regenerates Table 2.
+//!
+//! See `ARCHITECTURE.md` (Layer 1, Two-plane execution model).
 
 pub mod device;
 pub mod fio;

@@ -1,7 +1,7 @@
 //! The data plane's unit of storage: real bytes for small runs (so the
 //! whole stack moves actual data through actual code), or an exact byte
 //! *accounting* for multi-GB sweeps (same code path, no materialization).
-//! The two modes are cross-validated in tests (DESIGN.md §2).
+//! The two modes are cross-validated in tests (ARCHITECTURE.md, Layer 1).
 //!
 //! Real payloads are zero-copy `Arc`-backed views: `slice()` is an O(1)
 //! refcount bump, and `concat()` assembles a chunked view instead of
@@ -48,6 +48,8 @@ impl View {
 }
 
 #[derive(Clone, Debug)]
+/// Job data: either real bytes (zero-copy `Arc`-backed views) or an
+/// exact synthetic byte count — both flow through the same planes.
 pub enum Payload {
     /// One contiguous Arc-backed view.
     Real(View),

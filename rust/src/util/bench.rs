@@ -12,6 +12,7 @@ use super::json::Json;
 use super::stats::Percentiles;
 
 #[derive(Clone, Debug)]
+/// Timing summary of one benchmarked closure.
 pub struct BenchResult {
     pub name: String,
     pub iters: u64,
@@ -63,6 +64,7 @@ pub fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// Warmup + timed-iteration micro-bench harness.
 pub struct Bench {
     pub warmup_iters: u64,
     pub iters: u64,

@@ -7,6 +7,7 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 #[derive(Clone, Debug, PartialEq)]
+/// A parsed JSON value (offline serde stand-in).
 pub enum Json {
     Null,
     Bool(bool),

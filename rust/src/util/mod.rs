@@ -1,8 +1,10 @@
 //! Foundation utilities built in-repo (the offline crate set has no
-//! rand/serde/toml/proptest/criterion — see DESIGN.md §7).
+//! rand/serde/toml/proptest/criterion — see ARCHITECTURE.md, Offline
+//! constraint).
 
 pub mod bench;
 pub mod bytes;
+pub mod fairq;
 pub mod hash;
 pub mod json;
 pub mod pool;

@@ -9,6 +9,7 @@ use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Minimal fixed-size thread pool (offline rayon stand-in).
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<thread::JoinHandle<()>>,

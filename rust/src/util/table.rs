@@ -1,6 +1,7 @@
 //! ASCII table renderer for the bench harness — prints the same rows the
 //! paper's tables/figures report.
 
+/// Aligned text table printer for the paper's tables/figures.
 pub struct Table {
     title: String,
     headers: Vec<String>,

@@ -8,6 +8,7 @@
 use std::collections::BTreeMap;
 
 #[derive(Clone, Debug, PartialEq)]
+/// A parsed TOML scalar.
 pub enum Value {
     Str(String),
     Int(i64),

@@ -11,6 +11,8 @@ use crate::util::hash::token_hash;
 use crate::util::rng::{Rng, Zipf};
 
 #[derive(Clone, Debug)]
+/// Zipf-distributed synthetic text corpus shared by the text
+/// workloads; deterministic per (vocab, s, seed).
 pub struct Corpus {
     pub vocab: Vec<Vec<u8>>,
     pub hashes: Vec<i32>,

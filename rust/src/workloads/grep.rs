@@ -12,6 +12,8 @@ use crate::util::rng::Rng;
 
 use super::corpus::Corpus;
 
+/// Distributed grep: emit lines whose first token starts with a
+/// prefix (Figure 5) — low selectivity, shuffle-light.
 pub struct Grep {
     pub corpus: Corpus,
     scheme: CombineScheme,

@@ -1,6 +1,8 @@
 //! The paper's benchmark workloads: WordCount, Grep (Figures 4/5/6),
 //! the Scan / Aggregation / Join queries (Table 1), and the iterative
 //! PageRank used by the multi-stage stateful pipeline.
+//!
+//! See `ARCHITECTURE.md` (Layer 6) for the data-derivation contract.
 
 pub mod corpus;
 pub mod grep;

@@ -36,6 +36,8 @@ const DEG_SALT: u64 = 0xA5A5_5A5A_C0FF_EE00;
 const NBR_SALT: u64 = 0x9E37_79B9_7F4A_7C15;
 
 #[derive(Clone, Debug, Default)]
+/// Iterative PageRank over a synthetic-deterministic adjacency,
+/// format-compatible with kernel wordcount rows (12-byte records).
 pub struct PageRank;
 
 impl PageRank {

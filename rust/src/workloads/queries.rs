@@ -60,6 +60,7 @@ fn parse_rows(text: &[u8]) -> impl Iterator<Item = (u64, u32, u32)> + '_ {
 // Scan Query: SELECT id, value WHERE value < threshold.
 // ---------------------------------------------------------------------
 
+/// Table-scan query over synthetic records (Table 1 row "Scan").
 pub struct ScanQuery {
     pub categories: u32,
     /// Predicate selectivity (fraction of rows passing).
@@ -174,6 +175,8 @@ impl Workload for ScanQuery {
 // Aggregation Query: SELECT cat, AVG(value) GROUP BY cat.
 // ---------------------------------------------------------------------
 
+/// Group-by aggregation query through the combine kernel
+/// (Table 1 row "Aggregation").
 pub struct AggregationQuery {
     pub categories: u32,
 }
@@ -361,6 +364,7 @@ impl Workload for AggregationQuery {
 // Join Query: R ⋈ S on key — both tables shuffled in full, tagged.
 // ---------------------------------------------------------------------
 
+/// Two-table equi-join query (Table 1 row "Join").
 pub struct JoinQuery {
     pub categories: u32,
     /// Output rows per input row (join hit expansion).

@@ -14,6 +14,8 @@ use crate::util::rng::Rng;
 
 use super::corpus::Corpus;
 
+/// The paper's flagship workload: tokenize, hash, and count words
+/// of a Zipf-distributed corpus (Figures 4/6, Table 1).
 pub struct WordCount {
     pub corpus: Corpus,
     scheme: CombineScheme,

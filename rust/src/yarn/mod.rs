@@ -1,13 +1,16 @@
 //! YARN analog: ResourceManager + NodeManagers + a locality-aware
-//! container scheduler. The paper uses YARN to "determine the
-//! appropriate number of Mappers/Reducers per job" (§3.3) and to place
-//! them where OpenWhisk invokers run (§3.5 steps 3–4, 8).
+//! container scheduler with per-tenant weighted fair queues. The paper
+//! uses YARN to "determine the appropriate number of Mappers/Reducers
+//! per job" (§3.3) and to place them where OpenWhisk invokers run
+//! (§3.5 steps 3–4, 8); the `mapreduce::JobServer` additionally
+//! registers one queue per tenant so concurrent jobs share the cluster
+//! by capacity shares. See `ARCHITECTURE.md` (Layer 3).
 
 pub mod scheduler;
 
 use crate::net::NodeId;
 
-pub use scheduler::{Allocation, LocalityLevel, Scheduler};
+pub use scheduler::{Allocation, LocalityLevel, Scheduler, TenantQueue};
 
 /// Per-node capacity advertised by a NodeManager.
 #[derive(Clone, Debug)]
@@ -59,11 +62,26 @@ impl ResourceManager {
         (mappers, reducers)
     }
 
-    /// Allocate containers for a wave of requests.
+    /// Allocate containers for a wave of requests (default queue).
     pub fn allocate(&mut self, requests: &[ContainerRequest])
         -> Vec<Allocation>
     {
         self.scheduler.allocate(&self.nodes, requests)
+    }
+
+    /// Register (or re-weight) a tenant's fair queue; returns its id.
+    pub fn register_tenant(&mut self, name: &str, share: u64) -> usize {
+        self.scheduler.register_tenant(name, share)
+    }
+
+    /// Allocate a wave under a tenant's queue (per-tenant accounting;
+    /// the DES slot pools enforce the shares in virtual time).
+    pub fn allocate_for(
+        &mut self,
+        tenant: usize,
+        requests: &[ContainerRequest],
+    ) -> Vec<Allocation> {
+        self.scheduler.allocate_for(tenant, &self.nodes, requests)
     }
 }
 

@@ -1,7 +1,18 @@
-//! Locality-aware container scheduler (capacity-scheduler shape, one
-//! queue): grant node-local placements first, then fall back to any
-//! node with headroom, tracking per-node commitments so waves never
-//! over-commit vcores or memory.
+//! Locality-aware container scheduler (capacity-scheduler shape) with
+//! weighted fair queues: one queue per tenant, each with a capacity
+//! share. Placement grants node-local first, then any node with
+//! headroom, tracking per-node commitments so waves never over-commit
+//! vcores or memory; per-tenant grant/queue counters feed the
+//! `mapreduce::JobServer` reports.
+//!
+//! Division of labor (see `ARCHITECTURE.md`, Multi-tenancy): this
+//! scheduler owns the *placement plane* — which node each container
+//! lands on and how much each tenant has been granted — while the
+//! *time plane* enforcement of the same shares (who actually occupies
+//! a vcore slot at each virtual instant, with preemption-free
+//! backfill) happens in the DES slot pools, which drain waiters
+//! through the identical `util::fairq::FairQueue` discipline under the
+//! weights registered here.
 
 use std::collections::HashMap;
 
@@ -10,6 +21,7 @@ use crate::net::NodeId;
 use super::{ContainerRequest, NodeCapacity};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// How good a placement the scheduler found for a request.
 pub enum LocalityLevel {
     NodeLocal,
     OffNode,
@@ -20,30 +32,116 @@ pub enum LocalityLevel {
 }
 
 #[derive(Clone, Debug)]
+/// One granted (or queued) container placement.
 pub struct Allocation {
     pub request_idx: usize,
     pub node: NodeId,
     pub locality: LocalityLevel,
 }
 
-#[derive(Default)]
+/// One tenant's fair queue: its capacity share plus the placement
+/// counters accumulated by every wave allocated under it.
+#[derive(Clone, Debug)]
+pub struct TenantQueue {
+    pub name: String,
+    /// Relative capacity share (weights, not percentages).
+    pub share: u64,
+    /// Containers placed (node-local + off-node).
+    pub granted: u64,
+    pub node_local: u64,
+    pub off_node: u64,
+    /// Requests that found no headroom in their wave.
+    pub queued: u64,
+}
+
+impl TenantQueue {
+    fn new(name: &str, share: u64) -> TenantQueue {
+        TenantQueue {
+            name: name.to_string(),
+            share: share.max(1),
+            granted: 0,
+            node_local: 0,
+            off_node: 0,
+            queued: 0,
+        }
+    }
+}
+
 pub struct Scheduler {
     pub node_local: u64,
     pub off_node: u64,
     pub queued: u64,
+    /// Weighted fair queues, one per tenant. Index = tenant id; id 0 is
+    /// the always-present default queue single-job runs allocate under.
+    pub queues: Vec<TenantQueue>,
+}
+
+impl Default for Scheduler {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Scheduler {
     pub fn new() -> Scheduler {
-        Scheduler::default()
+        Scheduler {
+            node_local: 0,
+            off_node: 0,
+            queued: 0,
+            queues: vec![TenantQueue::new("default", 1)],
+        }
     }
 
-    /// One allocation wave. Requests are served in order; each takes the
-    /// best available placement. Requests that fit nowhere are marked
-    /// `Queued` and assigned their preferred node (execution will wait
-    /// on that node's slot pool).
+    /// Register (or re-weight) a tenant queue; returns its tenant id.
+    /// Id 0 is the default queue and cannot be taken by a named tenant.
+    pub fn register_tenant(&mut self, name: &str, share: u64) -> usize {
+        // Queue 0 is reserved for unscoped runs; named tenants live
+        // at indices ≥ 1 (index == engine class == flow-tag namespace).
+        if let Some(i) =
+            self.queues.iter().skip(1).position(|q| q.name == name)
+        {
+            self.queues[i + 1].share = share.max(1);
+            return i + 1;
+        }
+        self.queues.push(TenantQueue::new(name, share));
+        self.queues.len() - 1
+    }
+
+    /// Tenant id registered under `name`, if any. Skips the reserved
+    /// default queue 0, mirroring `register_tenant` — a tenant that
+    /// happens to be named "default" resolves to its own queue.
+    pub fn tenant_id(&self, name: &str) -> Option<usize> {
+        self.queues
+            .iter()
+            .skip(1)
+            .position(|q| q.name == name)
+            .map(|i| i + 1)
+    }
+
+    /// A tenant's registered share (1 for unknown tenants).
+    pub fn share_of(&self, tenant: usize) -> u64 {
+        self.queues.get(tenant).map_or(1, |q| q.share)
+    }
+
+    /// One allocation wave under the default queue (single-job path).
     pub fn allocate(
         &mut self,
+        nodes: &[NodeCapacity],
+        requests: &[ContainerRequest],
+    ) -> Vec<Allocation> {
+        self.allocate_for(0, nodes, requests)
+    }
+
+    /// One allocation wave for `tenant`'s queue. Requests are served in
+    /// order; each takes the best available placement. Requests that
+    /// fit nowhere are marked `Queued` and assigned their preferred
+    /// node — execution then waits on that node's slot pool, where the
+    /// engine's weighted fair queues interleave tenants' waves by the
+    /// shares registered here (preemption-free backfill: an idle
+    /// tenant's slots serve whoever is backlogged).
+    pub fn allocate_for(
+        &mut self,
+        tenant: usize,
         nodes: &[NodeCapacity],
         requests: &[ContainerRequest],
     ) -> Vec<Allocation> {
@@ -93,10 +191,25 @@ impl Scheduler {
                     .unwrap_or(node_ids[idx % node_ids.len()]);
                 (node, LocalityLevel::Queued)
             });
+            let tq = self
+                .queues
+                .get_mut(tenant)
+                .expect("unregistered tenant queue");
             match locality {
-                LocalityLevel::NodeLocal => self.node_local += 1,
-                LocalityLevel::OffNode => self.off_node += 1,
-                LocalityLevel::Queued => self.queued += 1,
+                LocalityLevel::NodeLocal => {
+                    self.node_local += 1;
+                    tq.node_local += 1;
+                    tq.granted += 1;
+                }
+                LocalityLevel::OffNode => {
+                    self.off_node += 1;
+                    tq.off_node += 1;
+                    tq.granted += 1;
+                }
+                LocalityLevel::Queued => {
+                    self.queued += 1;
+                    tq.queued += 1;
+                }
             }
             out.push(Allocation { request_idx: idx, node, locality });
         }
@@ -176,6 +289,38 @@ mod tests {
             assert!(u <= 2, "overcommitted: {u}");
         }
         assert_eq!(s.queued, 20 - 6);
+    }
+
+    #[test]
+    fn tenant_queues_track_shares_and_grants() {
+        let mut s = Scheduler::new();
+        let a = s.register_tenant("alice", 3);
+        let b = s.register_tenant("bob", 1);
+        assert_eq!((a, b), (1, 2));
+        assert_eq!(s.register_tenant("alice", 3), a, "idempotent");
+        assert_eq!(s.share_of(a), 3);
+        assert_eq!(s.tenant_id("bob"), Some(b));
+        assert_eq!(s.tenant_id("nobody"), None);
+        let ns = nodes(1, 2);
+        s.allocate_for(a, &ns, &[req(vec![NodeId(0)]), req(vec![])]);
+        s.allocate_for(b, &ns, &[req(vec![]), req(vec![]), req(vec![])]);
+        assert_eq!(s.queues[a].granted, 2);
+        assert_eq!(s.queues[a].node_local, 1);
+        // bob's wave found a full cluster drained by alice? No — waves
+        // are independent capacity snapshots; 2 of bob's 3 fit.
+        assert_eq!(s.queues[b].granted, 2);
+        assert_eq!(s.queues[b].queued, 1);
+        // Global counters aggregate the queues.
+        assert_eq!(s.node_local + s.off_node, 4);
+        assert_eq!(s.queued, 1);
+    }
+
+    #[test]
+    fn default_queue_serves_unscoped_allocations() {
+        let mut s = Scheduler::new();
+        s.allocate(&nodes(2, 4), &[req(vec![]), req(vec![])]);
+        assert_eq!(s.queues[0].granted, 2);
+        assert_eq!(s.queues[0].name, "default");
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Real-vs-synthetic data plane cross-validation: the same job run just
 //! below and just above the materialization cap must report nearly
-//! identical byte accounting and virtual times (DESIGN.md §2).
+//! identical byte accounting and virtual times (ARCHITECTURE.md,
+//! Two-plane execution model).
 
 use marvel::coordinator::{ClusterSpec, Marvel};
 use marvel::mapreduce::{SystemConfig, Workload};

@@ -1,0 +1,414 @@
+//! Multi-tenant JobServer acceptance pins.
+//!
+//! * A 4-tenant mixed-workload co-run (wordcount, grep, pagerank,
+//!   aggregation query) over ONE shared cluster produces per-tenant
+//!   outputs byte-identical to the same jobs run solo — at
+//!   `{map,reduce}_workers ∈ {1, 4, 8}` and under reversed admission
+//!   order — with nonzero cross-job warm-container reuse and nonzero
+//!   per-tenant `CacheStats` in every `JobResult`.
+//! * Two tenants with 3:1 shares over a saturated cluster finish in
+//!   share-proportional virtual time (and swapping the shares swaps
+//!   the finishing order — shares, not admission order, decide).
+//! * Warm-pool regression: on a shared cluster with prewarm off, job 2
+//!   records ZERO cold starts for containers job 1 already warmed.
+
+use marvel::coordinator::ClusterSpec;
+use marvel::mapreduce::{
+    output_key, run_job, stage_named_input, Cluster, JobServer,
+    ServerResult, SystemConfig, Workload,
+};
+use marvel::net::NodeId;
+use marvel::runtime::RtEngine;
+use marvel::sim::SimNs;
+use marvel::util::bytes::MIB;
+use marvel::workloads::{AggregationQuery, Corpus, Grep, PageRank,
+                        WordCount};
+
+const SEED: u64 = 31;
+const INPUT: u64 = 2 * MIB;
+
+fn cfg(map_workers: usize, reduce_workers: usize) -> SystemConfig {
+    let mut c = SystemConfig::marvel_igfs();
+    c.map_workers = map_workers;
+    c.reduce_workers = reduce_workers;
+    c
+}
+
+fn deploy(base: &SystemConfig) -> Cluster {
+    let mut cluster = ClusterSpec::default().deploy(base);
+    cluster.stores.hdfs.block_size = 256 * 1024;
+    cluster
+}
+
+/// Fetch a job's reducer outputs through the same chain the handoff
+/// uses: IGFS (any tier) first, then HDFS, then S3.
+fn fetch_outputs(
+    cluster: &mut Cluster,
+    job: &str,
+    n: usize,
+) -> Vec<Option<Vec<u8>>> {
+    (0..n)
+        .map(|j| {
+            let key = output_key(job, j);
+            if let Some((p, _)) =
+                cluster.stores.igfs.get(&cluster.topo, NodeId(0), &key, 0)
+            {
+                return p.gather();
+            }
+            if cluster.stores.hdfs.namenode.stat(&key).is_some() {
+                return cluster
+                    .stores
+                    .hdfs
+                    .read(&cluster.topo, NodeId(0), &key, 0)
+                    .ok()
+                    .and_then(|(p, _, _, _)| p.gather());
+            }
+            cluster.stores.s3.get(&key).and_then(|p| p.gather())
+        })
+        .collect()
+}
+
+/// Run one workload solo on a fresh cluster; return its outputs.
+fn solo_outputs(
+    wl: &dyn Workload,
+    base: &SystemConfig,
+    rt: &mut RtEngine,
+) -> (Vec<Option<Vec<u8>>>, SimNs) {
+    let mut cluster = deploy(base);
+    let input = stage_named_input(&mut cluster, base, wl, INPUT, SEED,
+                                  &format!("solo/{}/in", wl.name()))
+        .unwrap();
+    let r = run_job(&mut cluster, base, wl, &input, rt, SEED);
+    assert!(r.ok(), "solo {} failed: {:?}", wl.name(), r.failed);
+    let outs = fetch_outputs(&mut cluster, &r.job, r.reduce.tasks.max(32));
+    (outs, r.job_time)
+}
+
+struct Workloads {
+    wc: WordCount,
+    grep: Grep,
+    pr: PageRank,
+    agg: AggregationQuery,
+}
+
+impl Workloads {
+    fn new(rt: &RtEngine) -> Workloads {
+        let prefix = Corpus::new(2000, 1.07).prefix_of_rank(5, 2);
+        Workloads {
+            wc: WordCount::new(2000, 1.07, rt),
+            grep: Grep::new(2000, 1.07, &prefix, rt),
+            pr: PageRank::new(),
+            agg: AggregationQuery::new(rt),
+        }
+    }
+
+    fn all(&self) -> Vec<(&'static str, &dyn Workload)> {
+        vec![
+            ("t-wc", &self.wc),
+            ("t-grep", &self.grep),
+            ("t-pr", &self.pr),
+            ("t-agg", &self.agg),
+        ]
+    }
+}
+
+/// Co-run the four tenants' jobs (in the given admission order) on one
+/// shared cluster; return the server result plus each tenant's fetched
+/// outputs, keyed by tenant name.
+fn corun(
+    base: &SystemConfig,
+    rt: &mut RtEngine,
+    wls: &Workloads,
+    order: &[usize],
+) -> (ServerResult, Vec<(String, Vec<Option<Vec<u8>>>)>) {
+    let tenants = wls.all();
+    let mut cluster = deploy(base);
+    let mut inputs = Vec::new();
+    for &i in order {
+        let (name, wl) = &tenants[i];
+        let path = format!("{name}/in");
+        inputs.push(
+            stage_named_input(&mut cluster, base, *wl, INPUT, SEED, &path)
+                .unwrap(),
+        );
+    }
+    let mut server = JobServer::new();
+    for (name, _) in &tenants {
+        server = server.tenant(name, 1);
+    }
+    for (k, &i) in order.iter().enumerate() {
+        let (name, wl) = &tenants[i];
+        server = server.job(name, *wl, base.clone(), &inputs[k], SEED);
+    }
+    let res = server.run(&mut cluster, rt);
+    let mut outs = Vec::new();
+    for run in &res.jobs {
+        let jr = run.final_stage().unwrap();
+        let fetched =
+            fetch_outputs(&mut cluster, &jr.job, jr.reduce.tasks.max(32));
+        outs.push((run.tenant.clone(), fetched));
+    }
+    (res, outs)
+}
+
+#[test]
+fn four_tenant_mixed_corun_matches_solo_at_any_workers_and_order() {
+    let mut rt = RtEngine::load(None).unwrap();
+    let wls = Workloads::new(&rt);
+    let base1 = cfg(1, 1);
+    // Solo baselines at workers=1.
+    let solo: Vec<(String, Vec<Option<Vec<u8>>>)> = wls
+        .all()
+        .iter()
+        .map(|(name, wl)| {
+            (name.to_string(), solo_outputs(*wl, &base1, &mut rt).0)
+        })
+        .collect();
+
+    for workers in [1usize, 4, 8] {
+        let base = cfg(workers, workers);
+        for order in [vec![0, 1, 2, 3], vec![3, 2, 1, 0]] {
+            let (res, outs) = corun(&base, &mut rt, &wls, &order);
+            assert!(res.ok(), "co-run failed: {:?}",
+                    res.jobs.iter().flat_map(|r| &r.stages)
+                       .filter_map(|s| s.failed.clone())
+                       .collect::<Vec<_>>());
+            assert_eq!(res.jobs.len(), 4);
+            // Byte-identical per-tenant outputs vs solo.
+            for (tenant, fetched) in &outs {
+                let (_, want) = solo
+                    .iter()
+                    .find(|s| &s.0 == tenant)
+                    .expect("tenant has a solo baseline");
+                assert_eq!(want, fetched,
+                    "tenant {tenant} diverged at workers={workers}, \
+                     order={order:?}");
+            }
+            // Nonzero cross-job warm reuse: every later admission
+            // reuses containers earlier jobs (or prewarm) left warm.
+            assert!(res.jobs[1..].iter().any(|r| r.cross_job_warm > 0),
+                    "no cross-job warm reuse recorded");
+            // Per-tenant CacheStats present in every JobResult (IGFS
+            // shuffle) and in the tenant aggregates.
+            for run in &res.jobs {
+                let jr = run.final_stage().unwrap();
+                assert!(jr.igfs.hits_dram > 0, "{}: {:?}", jr.job,
+                        jr.igfs);
+            }
+            for rep in &res.tenants {
+                assert_eq!(rep.jobs, 1);
+                assert!(rep.igfs.hits_dram > 0, "{}", rep.name);
+                assert!(rep.completion > SimNs::ZERO);
+            }
+            // All four share one virtual clock.
+            let latest =
+                res.jobs.iter().map(|r| r.completion).max().unwrap();
+            assert_eq!(res.makespan, latest);
+        }
+    }
+}
+
+#[test]
+fn tenants_share_cache_capacity_and_evict_each_other() {
+    // Tight DRAM: the co-run overflows into the PMEM backing tier and
+    // tenants evict each other — yet outputs stay byte-identical.
+    let mut rt = RtEngine::load(None).unwrap();
+    let wls = Workloads::new(&rt);
+    let mut tight = cfg(2, 2);
+    tight.igfs_capacity = 256 * 1024;
+    let (res, outs) = corun(&tight, &mut rt, &wls, &[0, 1, 2, 3]);
+    assert!(res.ok());
+    let total_evictions: u64 =
+        res.tenants.iter().map(|t| t.igfs.evictions).sum();
+    assert!(total_evictions > 0, "256 KiB shared cache must evict");
+    assert!(res.tenants.iter().any(|t| t.igfs.hits_backing > 0),
+            "evicted entries served from backing tier");
+    let solo1 = cfg(1, 1);
+    for (tenant, fetched) in &outs {
+        let (_, wl) = wls
+            .all()
+            .into_iter()
+            .find(|t| t.0 == tenant.as_str())
+            .unwrap();
+        let (want, _) = solo_outputs(wl, &solo1, &mut rt);
+        assert_eq!(&want, fetched,
+                   "{tenant} diverged under cache pressure");
+    }
+}
+
+/// Saturated deployment: 1 node, 4 slots — 8 splits per job queue
+/// behind each other so shares govern the interleave.
+fn small_spec() -> ClusterSpec {
+    ClusterSpec { nodes: 1, slots_per_node: 4, ..Default::default() }
+}
+
+fn fairness_corun(
+    share_a: u64,
+    share_b: u64,
+    rt: &mut RtEngine,
+    wc: &WordCount,
+) -> (SimNs, SimNs, SimNs) {
+    let base = cfg(2, 2);
+    let mut cluster = small_spec().deploy(&base);
+    cluster.stores.hdfs.block_size = 256 * 1024;
+    let in_a = stage_named_input(&mut cluster, &base, wc, INPUT, SEED,
+                                 "a/in").unwrap();
+    let in_b = stage_named_input(&mut cluster, &base, wc, INPUT, SEED,
+                                 "b/in").unwrap();
+    let res = JobServer::new()
+        .tenant("a", share_a)
+        .tenant("b", share_b)
+        .job("a", wc, base.clone(), &in_a, SEED)
+        .job("b", wc, base.clone(), &in_b, SEED)
+        .run(&mut cluster, rt);
+    assert!(res.ok(), "{:?}", res.failed);
+    (
+        res.tenant("a").unwrap().completion,
+        res.tenant("b").unwrap().completion,
+        res.makespan,
+    )
+}
+
+#[test]
+fn three_to_one_shares_finish_share_proportionally() {
+    let mut rt = RtEngine::load(None).unwrap();
+    let wc = WordCount::new(2000, 1.07, &rt);
+    // Solo baseline on the same saturated deployment.
+    let base = cfg(2, 2);
+    let mut solo_cluster = small_spec().deploy(&base);
+    solo_cluster.stores.hdfs.block_size = 256 * 1024;
+    let solo_in = stage_named_input(&mut solo_cluster, &base, &wc, INPUT,
+                                    SEED, "a/in").unwrap();
+    let solo =
+        run_job(&mut solo_cluster, &base, &wc, &solo_in, &mut rt, SEED);
+    assert!(solo.ok(), "{:?}", solo.failed);
+    let t_solo = solo.job_time.as_secs_f64();
+    let solo_outs = fetch_outputs(&mut solo_cluster, &solo.job,
+                                  solo.reduce.tasks.max(32));
+
+    let (a31, b31, mk31) = fairness_corun(3, 1, &mut rt, &wc);
+    // The 3-share tenant finishes first; both pay for contention but
+    // the co-run stays work-conserving (makespan ≈ 2× solo, < 2.6×).
+    assert!(a31 < b31, "share 3 must finish before share 1: {a31} {b31}");
+    let (ra, rb) = (a31.as_secs_f64() / t_solo, b31.as_secs_f64() / t_solo);
+    assert!(ra > 1.0, "contention cannot make tenant a faster: {ra}");
+    assert!(ra < 1.8, "3-share tenant should be near 4/3× solo: {ra}");
+    assert!(rb > 1.4 && rb < 2.6,
+            "1-share tenant should be near 2× solo: {rb}");
+    assert!(mk31.as_secs_f64() < 2.6 * t_solo, "not work-conserving");
+
+    // Swapping the shares swaps the finishing order — shares decide,
+    // not admission order (a is still admitted first).
+    let (a13, b13, _) = fairness_corun(1, 3, &mut rt, &wc);
+    assert!(b13 < a13, "swapped shares must swap the order");
+
+    // Equal shares: near-equal completions on identical jobs.
+    let (a11, b11, mk11) = fairness_corun(1, 1, &mut rt, &wc);
+    let gap = if a11 > b11 { a11 - b11 } else { b11 - a11 };
+    assert!(gap.as_secs_f64() < 0.35 * mk11.as_secs_f64(),
+            "equal shares should finish close together: {a11} vs {b11}");
+
+    // Fairness is a time-plane property only: co-run outputs are still
+    // byte-identical to solo.
+    let base2 = cfg(2, 2);
+    let mut cluster = small_spec().deploy(&base2);
+    cluster.stores.hdfs.block_size = 256 * 1024;
+    let in_a = stage_named_input(&mut cluster, &base2, &wc, INPUT, SEED,
+                                 "a/in").unwrap();
+    let in_b = stage_named_input(&mut cluster, &base2, &wc, INPUT, SEED,
+                                 "b/in").unwrap();
+    let res = JobServer::new()
+        .tenant("a", 3)
+        .tenant("b", 1)
+        .job("a", &wc, base2.clone(), &in_a, SEED)
+        .job("b", &wc, base2.clone(), &in_b, SEED)
+        .run(&mut cluster, &mut rt);
+    assert!(res.ok());
+    for run in &res.jobs {
+        let jr = run.final_stage().unwrap();
+        let outs = fetch_outputs(&mut cluster, &jr.job,
+                                 jr.reduce.tasks.max(32));
+        assert_eq!(outs, solo_outs, "{} diverged from solo", run.tenant);
+    }
+}
+
+#[test]
+fn warm_pool_survives_across_jobs_on_a_shared_cluster() {
+    // Regression: Controller/Invoker pools used to be rebuilt per job
+    // (every run deployed a fresh cluster). On a shared cluster with
+    // prewarm disabled, job 1 pays the cold starts; job 2 must record
+    // ZERO cold starts, reusing only containers job 1 warmed.
+    let mut base = cfg(2, 2);
+    base.prewarm = false;
+    let mut cluster = ClusterSpec::default().deploy(&base);
+    cluster.stores.hdfs.block_size = 256 * 1024;
+    let mut m = marvel::coordinator::Marvel::new(
+        ClusterSpec::default(), SEED,
+    )
+    .unwrap();
+    let wc = WordCount::new(2000, 1.07, &m.rt);
+
+    let r1 = m.run_shared(&mut cluster, &base, &wc, INPUT, "job1");
+    assert!(r1.ok(), "{:?}", r1.failed);
+    assert!(r1.cold_starts > 0, "first job on a cold cluster");
+
+    let r2 = m.run_shared(&mut cluster, &base, &wc, INPUT, "job2");
+    assert!(r2.ok(), "{:?}", r2.failed);
+    assert_eq!(r2.cold_starts, 0,
+               "job 2 must reuse job 1's warm containers");
+    assert!(r2.warm_starts > 0, "and actually record the reuse");
+
+    // The same two jobs through the JobServer agree.
+    let mut cluster2 = ClusterSpec::default().deploy(&base);
+    cluster2.stores.hdfs.block_size = 256 * 1024;
+    let in1 = stage_named_input(&mut cluster2, &base, &wc, INPUT, SEED,
+                                "s1/in").unwrap();
+    let in2 = stage_named_input(&mut cluster2, &base, &wc, INPUT, SEED,
+                                "s2/in").unwrap();
+    let res = JobServer::new()
+        .job("s1", &wc, base.clone(), &in1, SEED)
+        .job("s2", &wc, base.clone(), &in2, SEED)
+        .run(&mut cluster2, &mut m.rt);
+    assert!(res.ok());
+    assert!(res.jobs[0].stages[0].cold_starts > 0);
+    assert_eq!(res.jobs[1].stages[0].cold_starts, 0);
+    // Plan-time invoke/complete alternation keeps at most a handful of
+    // containers idle at once, so the cross-job share is the warm
+    // stock at admission — nonzero, bounded by total warm starts.
+    assert!(res.jobs[1].cross_job_warm > 0);
+    assert!(res.jobs[1].cross_job_warm
+                <= res.jobs[1].stages[0].warm_starts);
+}
+
+#[test]
+fn job_prefix_keeps_tenants_disjoint() {
+    // Two tenants running the SAME workload on one cluster: key-prefix
+    // namespacing keeps their shuffle and output key sets disjoint.
+    let mut rt = RtEngine::load(None).unwrap();
+    let wc = WordCount::new(2000, 1.07, &rt);
+    let base = cfg(2, 2);
+    let mut cluster = deploy(&base);
+    let in_a = stage_named_input(&mut cluster, &base, &wc, INPUT, SEED,
+                                 "a/in").unwrap();
+    let in_b = stage_named_input(&mut cluster, &base, &wc, INPUT, SEED,
+                                 "b/in").unwrap();
+    let res = JobServer::new()
+        .job("a", &wc, base.clone(), &in_a, SEED)
+        .job("b", &wc, base.clone(), &in_b, SEED)
+        .run(&mut cluster, &mut rt);
+    assert!(res.ok());
+    let ja = &res.jobs[0].stages[0].job;
+    let jb = &res.jobs[1].stages[0].job;
+    assert_ne!(ja, jb);
+    assert!(ja.starts_with("a/") && jb.starts_with("b/"));
+    let oa = fetch_outputs(&mut cluster, ja, 32);
+    let ob = fetch_outputs(&mut cluster, jb, 32);
+    assert_eq!(oa, ob, "same workload+seed → same bytes, distinct keys");
+    // Scrubbing tenant a's namespace leaves b's outputs intact.
+    let removed = cluster.stores.clear_prefix(&format!("{ja}/"));
+    assert!(removed > 0);
+    assert_eq!(fetch_outputs(&mut cluster, jb, 32), ob);
+    assert!(fetch_outputs(&mut cluster, ja, 32)
+                .iter()
+                .all(|o| o.is_none()));
+}
