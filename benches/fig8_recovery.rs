@@ -1,0 +1,135 @@
+//! Figure 8 (repo extension): checkpoint-based recovery under a
+//! failure sweep — the paper's §4.3 future-work item quantified.
+//!
+//! One wordcount runs under increasing container-crash pressure in two
+//! modes: *stateful* (tasks checkpoint (progress, partial aggregate)
+//! into the IGFS state store and retries resume from the last
+//! checkpoint) vs the *stateless* baseline (a failed function loses
+//! "computation, state and data" and restarts from zero). Reported per
+//! crash probability: recomputed bytes, task attempts, virtual
+//! makespan, and checkpoint overhead. Outputs are byte-identical in
+//! every cell (asserted). Emits `BENCH_fig8_recovery.json` through the
+//! same `util::bench::write_report` flow `bench_diff.py` consumes.
+
+use std::path::Path;
+
+use marvel::coordinator::ClusterSpec;
+use marvel::mapreduce::{run_job, stage_input, SystemConfig};
+use marvel::runtime::RtEngine;
+use marvel::util::bench::{write_report, Bench, BenchResult};
+use marvel::util::bytes::MIB;
+use marvel::workloads::WordCount;
+
+const SEED: u64 = 42;
+const FAILURE_SEED: u64 = 7;
+const INPUT: u64 = 8 * MIB;
+
+fn cfg_for(stateful: bool, crash_prob: f64) -> SystemConfig {
+    let mut c = SystemConfig::marvel_igfs();
+    c.failures.crash_prob = crash_prob;
+    c.failures.max_failures_per_task = 2;
+    c.failures.seed = FAILURE_SEED;
+    c.recovery.max_attempts = 3;
+    c.recovery.interval_bytes = 64 * 1024;
+    c.recovery.stateful = stateful;
+    c
+}
+
+struct Cell {
+    recomputed: u64,
+    attempts: u64,
+    makespan_s: f64,
+    ckpt_overhead_s: f64,
+    output_bytes: u64,
+}
+
+fn run_cell(cfg: &SystemConfig) -> Cell {
+    let mut rt = RtEngine::load(None).expect("rt");
+    let mut cluster = ClusterSpec::default().deploy(cfg);
+    cluster.stores.hdfs.block_size = 256 * 1024; // 32 splits from 8 MiB
+    let wc = WordCount::new(10_000, 1.07, &rt);
+    let input =
+        stage_input(&mut cluster, cfg, &wc, INPUT, SEED).expect("stage");
+    let r = run_job(&mut cluster, cfg, &wc, &input, &mut rt, SEED);
+    assert!(r.ok(), "{:?}", r.failed);
+    Cell {
+        recomputed: r.recomputed_bytes,
+        attempts: r.task_attempts,
+        makespan_s: r.job_time.as_secs_f64(),
+        ckpt_overhead_s: r.checkpoint_overhead.as_secs_f64(),
+        output_bytes: r.output_bytes,
+    }
+}
+
+fn main() {
+    let bench = Bench::new(1, 3);
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+
+    let mut baseline_output = None;
+    for &prob in &[0.0f64, 0.3, 0.6, 0.9] {
+        let mut cells = Vec::new();
+        for stateful in [true, false] {
+            let mode = if stateful { "stateful" } else { "stateless" };
+            let cfg = cfg_for(stateful, prob);
+            let mut cell = None;
+            let r = bench.run(
+                &format!("wordcount 8 MiB, crash_prob={prob}, {mode}"),
+                || {
+                    let c = run_cell(&cfg);
+                    let out = c.output_bytes;
+                    cell = Some(c);
+                    out
+                },
+            );
+            println!("{}", r.summary());
+            let cell = cell.expect("bench ran");
+            // The recovery determinism contract, asserted per cell:
+            // failures and recovery mode never move output bytes.
+            match baseline_output {
+                None => baseline_output = Some(cell.output_bytes),
+                Some(b) => assert_eq!(
+                    cell.output_bytes, b,
+                    "outputs must be byte-count-identical at prob={prob}"
+                ),
+            }
+            println!(
+                "  {mode} p={prob}: {} attempts, {} B recomputed, \
+                 {:.3} virtual s ({:.6} s checkpoint overhead)",
+                cell.attempts, cell.recomputed, cell.makespan_s,
+                cell.ckpt_overhead_s,
+            );
+            let tag = format!("p{:02}_{mode}", (prob * 10.0) as u32);
+            metrics.push((format!("{tag}_recomputed_bytes"),
+                          cell.recomputed as f64));
+            metrics.push((format!("{tag}_task_attempts"),
+                          cell.attempts as f64));
+            metrics.push((format!("{tag}_virtual_makespan_s"),
+                          cell.makespan_s));
+            metrics.push((format!("{tag}_ckpt_overhead_s"),
+                          cell.ckpt_overhead_s));
+            cells.push(cell);
+            results.push(r);
+        }
+        // The fig8 shape: wherever crashes actually happen, stateful
+        // recovery recomputes no more than the stateless baseline.
+        if prob > 0.0 {
+            assert!(
+                cells[0].recomputed <= cells[1].recomputed,
+                "stateful recomputed {} > stateless {} at p={prob}",
+                cells[0].recomputed,
+                cells[1].recomputed
+            );
+        }
+    }
+
+    let refs: Vec<&BenchResult> = results.iter().collect();
+    let met: Vec<(&str, f64)> =
+        metrics.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let out = Path::new("BENCH_fig8_recovery.json");
+    match write_report(out, &refs, &met) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+    println!("fig8_recovery done");
+}

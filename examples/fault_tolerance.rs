@@ -14,6 +14,7 @@ fn main() {
     let cfg = RecoveryConfig {
         interval_bytes: 16 * MIB,
         max_attempts: 5,
+        ..Default::default()
     };
     let mut rng = Rng::new(99);
 
@@ -29,7 +30,7 @@ fn main() {
         for stateful in [true, false] {
             let mut store = StateStore::new();
             let r = run_with_failures(
-                &mut store, &cfg, "job", 0, split, &failures, stateful,
+                &mut store, &cfg, "job", 0, split, &failures, stateful, &[],
             );
             assert!(r.recovered, "must recover within attempt budget");
             t.row(&[
@@ -48,4 +49,31 @@ fn main() {
     t.print();
     println!("\nstateful recovery bounds recomputation to one checkpoint");
     println!("interval per failure; stateless recomputes the whole split.");
+
+    // The same policy, live: a FailurePlan armed on the real execution
+    // path. Containers crash mid-split, release their slots through
+    // the fair queue, and retries resume from IGFS checkpoints — the
+    // job's output bytes are identical to a failure-free run.
+    use marvel::coordinator::{ClusterSpec, Marvel};
+    use marvel::mapreduce::SystemConfig;
+    use marvel::workloads::WordCount;
+
+    let mut sys = SystemConfig::marvel_igfs();
+    sys.failures.crash_prob = 0.6;
+    sys.failures.seed = 7;
+    sys.recovery.interval_bytes = 256 * 1024;
+    let mut m = Marvel::new(ClusterSpec::default(), 42).expect("client");
+    let wc = WordCount::new(4000, 1.07, &m.rt);
+    let r = m.run(&sys, &wc, 4 * MIB);
+    assert!(r.ok(), "{:?}", r.failed);
+    println!(
+        "\nlive injection: {} tasks ran as {} attempts, {} recomputed, \
+         {} checkpoints ({} overhead), job time {}",
+        r.map.tasks + r.reduce.tasks,
+        r.task_attempts,
+        bytes::human(r.recomputed_bytes),
+        r.checkpoints,
+        r.checkpoint_overhead,
+        r.job_time,
+    );
 }

@@ -118,6 +118,40 @@ impl ExperimentConfig {
             system.reduce_workers =
                 v.as_i64().unwrap_or(0).max(0) as usize;
         }
+        // [recovery] — checkpoint/resume policy (active in the time
+        // plane only while [failures] is armed).
+        if let Some(v) = doc.get("recovery", "interval") {
+            if let Some(s) = v.as_str() {
+                system.recovery.interval_bytes =
+                    crate::util::bytes::parse_size(s)?;
+            } else if let Some(i) = v.as_i64() {
+                system.recovery.interval_bytes = i.max(1) as u64;
+            }
+        }
+        if let Some(v) = doc.get("recovery", "max_attempts") {
+            system.recovery.max_attempts =
+                v.as_i64().unwrap_or(3).max(1) as u32;
+        }
+        system.recovery.stateful =
+            doc.bool_or("recovery", "stateful", system.recovery.stateful);
+        // [failures] — deterministic fault injection. Outputs stay
+        // byte-identical to the failure-free run under any plan.
+        system.failures.crash_prob = doc
+            .f64_or("failures", "crash_prob", system.failures.crash_prob)
+            .clamp(0.0, 1.0);
+        if let Some(v) = doc.get("failures", "seed") {
+            system.failures.seed = v.as_i64().unwrap_or(0) as u64;
+        }
+        if let Some(v) = doc.get("failures", "max_per_task") {
+            system.failures.max_failures_per_task =
+                v.as_i64().unwrap_or(2).max(0) as u32;
+        }
+        if let Some(s) =
+            doc.get("failures", "lose_datanodes").and_then(|v| v.as_str())
+        {
+            system.failures.lose_datanodes =
+                crate::coordinator::FailurePlan::parse_datanode_list(s)?;
+        }
         let tenants =
             parse_tenant_spec(doc.str_or("server", "tenants", ""))?;
         let corun_workloads: Vec<String> = doc
@@ -223,6 +257,41 @@ workloads = "wordcount, grep"
         let empty = ExperimentConfig::parse("").unwrap();
         assert!(empty.tenants.is_empty());
         assert!(empty.corun_workloads.is_empty());
+    }
+
+    #[test]
+    fn failure_and_recovery_sections_parse() {
+        let cfg = ExperimentConfig::parse(
+            r#"
+[recovery]
+interval = "4MiB"
+max_attempts = 5
+stateful = false
+[failures]
+crash_prob = 0.4
+seed = 77
+max_per_task = 3
+lose_datanodes = "0, 2"
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.system.recovery.interval_bytes, 4 * 1024 * 1024);
+        assert_eq!(cfg.system.recovery.max_attempts, 5);
+        assert!(!cfg.system.recovery.stateful);
+        assert!(cfg.system.failures.enabled());
+        assert!((cfg.system.failures.crash_prob - 0.4).abs() < 1e-12);
+        // An explicit [failures] seed wins over the MARVEL_FAILURE_SEED
+        // env default (parse order: preset/env first, then the file).
+        assert_eq!(cfg.system.failures.seed, 77);
+        assert_eq!(cfg.system.failures.max_failures_per_task, 3);
+        assert_eq!(cfg.system.failures.lose_datanodes, vec![0, 2]);
+        assert!(ExperimentConfig::parse(
+            "[failures]\nlose_datanodes = \"zero\"\n"
+        )
+        .is_err());
+        // Absent sections leave the plan disabled.
+        let plain = ExperimentConfig::parse("").unwrap();
+        assert!(!plain.system.failures.enabled());
     }
 
     #[test]

@@ -9,4 +9,6 @@ pub mod recovery;
 
 pub use deploy::ClusterSpec;
 pub use marvel::{reduction, Marvel};
-pub use recovery::{run_with_failures, RecoveryConfig, TaskRecovery};
+pub use recovery::{
+    run_with_failures, AttemptSeg, FailurePlan, RecoveryConfig, TaskRecovery,
+};

@@ -1,11 +1,23 @@
 //! Checkpoint-based fault tolerance — the paper's §4.3 first
-//! future-work item, built on the IGFS state store: map tasks
+//! future-work item, built on the IGFS state store: map/reduce tasks
 //! checkpoint (progress, partial aggregate) as they consume their
 //! split; on container failure the retry restores the checkpoint and
-//! recomputes only the tail.
+//! recomputes only the tail, while the stateless baseline restarts
+//! from zero ("any function failure results in loss of computation,
+//! state and data").
+//!
+//! This module is the *policy layer* shared by the live execution path:
+//! `mapreduce::driver::plan_stage` samples fault events from a
+//! [`FailurePlan`], runs [`run_with_failures`] against the cluster's
+//! real [`StateStore`], and compiles the returned attempt
+//! [`AttemptSeg`]s into DES proc stages (slot re-acquisition through
+//! the fair queue, input-span replays, checkpoint delays, crash
+//! events). See `ARCHITECTURE.md` (Fault tolerance).
 
 use crate::igfs::StateStore;
 use crate::sim::SimNs;
+use crate::util::hash::fnv1a64;
+use crate::util::rng::Rng;
 
 /// Recovery policy for a job.
 #[derive(Clone, Debug)]
@@ -14,12 +26,134 @@ pub struct RecoveryConfig {
     pub interval_bytes: u64,
     /// Max re-execution attempts per task.
     pub max_attempts: u32,
+    /// Stateful (checkpoint/resume) vs stateless (restart-from-zero)
+    /// recovery — the fig8 comparison axis.
+    pub stateful: bool,
+    /// Virtual-time cost of writing one checkpoint (state write to
+    /// IGFS at DRAM speed + metadata round-trip). Charged only while a
+    /// failure plan is armed, so failure-free runs keep their legacy
+    /// timings.
+    pub per_checkpoint: SimNs,
 }
 
 impl Default for RecoveryConfig {
     fn default() -> Self {
-        RecoveryConfig { interval_bytes: 16 * 1024 * 1024, max_attempts: 3 }
+        RecoveryConfig {
+            interval_bytes: 16 * 1024 * 1024,
+            max_attempts: 3,
+            stateful: true,
+            per_checkpoint: SimNs::from_micros(50),
+        }
     }
+}
+
+/// Deterministic, seed-driven fault injection: which containers crash
+/// (and where in their split) and which DataNodes are lost. Disabled by
+/// default (`crash_prob == 0`, no DataNodes); the whole live path is
+/// byte-for-byte the legacy one while disabled.
+///
+/// Determinism contract: fault events derive only from
+/// `(seed, job, task kind, task index, work size)` — never from worker
+/// counts, admission order, or co-tenants — so with any plan a job's
+/// *outputs* stay byte-identical to its failure-free run; only virtual
+/// times and attempt counts move.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FailurePlan {
+    /// Seed driving all fault sampling (independent of the data seed;
+    /// CI sweeps it via `MARVEL_FAILURE_SEED`).
+    pub seed: u64,
+    /// Per-attempt probability that a task's container crashes.
+    pub crash_prob: f64,
+    /// Cap on injected crashes per task. Keep it below the recovery
+    /// policy's `max_attempts` to guarantee completion; at or above it
+    /// a fully-unlucky task exhausts its budget and the job errors.
+    pub max_failures_per_task: u32,
+    /// DataNode ids killed at plan time: their block replicas are lost
+    /// and reads fall back to surviving replicas (sole-replica blocks
+    /// surface as job errors, never as wrong answers).
+    pub lose_datanodes: Vec<usize>,
+}
+
+impl Default for FailurePlan {
+    fn default() -> Self {
+        FailurePlan {
+            seed: 42,
+            crash_prob: 0.0,
+            max_failures_per_task: 2,
+            lose_datanodes: Vec::new(),
+        }
+    }
+}
+
+impl FailurePlan {
+    /// An inert plan (the default for every `SystemConfig` preset).
+    pub fn disabled() -> FailurePlan {
+        FailurePlan::default()
+    }
+
+    /// Whether this plan injects anything at all.
+    pub fn enabled(&self) -> bool {
+        self.crash_prob > 0.0 || !self.lose_datanodes.is_empty()
+    }
+
+    /// Parse a comma-separated DataNode id list (`"0, 2"`) — the one
+    /// parser behind both the `--lose-datanodes` CLI flag and the
+    /// TOML `[failures] lose_datanodes` key, so the two surfaces
+    /// cannot drift.
+    pub fn parse_datanode_list(s: &str) -> Result<Vec<usize>, String> {
+        s.split(',')
+            .map(|p| p.trim())
+            .filter(|p| !p.is_empty())
+            .map(|p| {
+                p.parse::<usize>()
+                    .map_err(|_| format!("bad DataNode id {p:?}"))
+            })
+            .collect()
+    }
+
+    /// Sample the crash offsets for one task: element *k* is the
+    /// absolute progress offset (bytes of the split consumed) at which
+    /// attempt *k+1*'s container dies. Pure function of
+    /// `(seed, job, kind, task, work_bytes)`.
+    pub fn failures_for(
+        &self,
+        job: &str,
+        kind: &str,
+        task: u64,
+        work_bytes: u64,
+    ) -> Vec<u64> {
+        if self.crash_prob <= 0.0 || work_bytes == 0 {
+            return Vec::new();
+        }
+        let h = fnv1a64(job.as_bytes())
+            ^ fnv1a64(kind.as_bytes()).rotate_left(31);
+        let mut rng = Rng::new(
+            self.seed ^ h ^ task.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let mut out = Vec::new();
+        for _ in 0..self.max_failures_per_task {
+            if !rng.chance(self.crash_prob) {
+                break;
+            }
+            out.push(rng.below(work_bytes + 1));
+        }
+        out
+    }
+}
+
+/// One attempt of a task under failure injection: the progress span it
+/// covered, whether it crashed, and the checkpoints it wrote. The
+/// driver compiles each segment into a separate container invocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AttemptSeg {
+    /// Resume offset the attempt started from (0, or the last
+    /// checkpoint when stateful).
+    pub start: u64,
+    /// Progress reached: the crash offset, or the split end.
+    pub end: u64,
+    pub crashed: bool,
+    /// Checkpoints written during this attempt (stateful only).
+    pub checkpoints: u32,
 }
 
 /// Outcome of simulating one task with failure injection.
@@ -31,13 +165,29 @@ pub struct TaskRecovery {
     /// Bytes that had to be recomputed after failures.
     pub bytes_recomputed: u64,
     pub recovered: bool,
+    /// Per-attempt spans, in execution order.
+    pub segments: Vec<AttemptSeg>,
 }
 
-/// Simulate a map task of `split_bytes` that fails at the given
-/// progress points (bytes consumed at failure). With checkpointing,
-/// each retry resumes from the last checkpoint; without, it restarts
-/// from zero (the stateless baseline, where the paper notes "any
-/// function failure results in loss of computation, state and data").
+impl TaskRecovery {
+    /// Total checkpoints written across all attempts.
+    pub fn checkpoints(&self) -> u64 {
+        self.segments.iter().map(|s| s.checkpoints as u64).sum()
+    }
+}
+
+/// Simulate a map/reduce task of `split_bytes` that fails at the given
+/// progress points (bytes consumed at failure; point *k* kills attempt
+/// *k+1*). With checkpointing, each retry resumes from the last
+/// checkpoint; without, it restarts from zero. A failure point at or
+/// below the attempt's resume offset is a startup crash: the attempt
+/// dies before making progress (it is *not* silently consumed).
+/// Checkpoints are written into `store` under `(job, task)` with
+/// `partial` as the opaque partial-aggregate payload; any pre-existing
+/// record under that key is dropped first (it would be a leftover from
+/// an earlier execution of a reused task name, not a checkpoint of
+/// this one).
+#[allow(clippy::too_many_arguments)] // policy knobs, mirrored by the driver
 pub fn run_with_failures(
     store: &mut StateStore,
     cfg: &RecoveryConfig,
@@ -46,19 +196,25 @@ pub fn run_with_failures(
     split_bytes: u64,
     failures_at: &[u64],
     stateful: bool,
+    partial: &[u8],
 ) -> TaskRecovery {
+    store.remove(job, task);
+    let interval = cfg.interval_bytes.max(1);
+    let max_attempts = cfg.max_attempts.max(1);
     let mut attempts = 0u32;
     let mut processed = 0u64;
     let mut recomputed = 0u64;
+    let mut segments: Vec<AttemptSeg> = Vec::new();
     let mut fail_iter = failures_at.iter().copied();
     loop {
         attempts += 1;
-        if attempts > cfg.max_attempts {
+        if attempts > max_attempts {
             return TaskRecovery {
                 attempts: attempts - 1,
                 bytes_processed: processed,
                 bytes_recomputed: recomputed,
                 recovered: false,
+                segments,
             };
         }
         // Resume point.
@@ -67,39 +223,63 @@ pub fn run_with_failures(
         } else {
             0
         };
-        recomputed += start.min(split_bytes).saturating_sub(0).min(0); // no-op, clarity
         let fail_at = fail_iter.next();
+        if let Some(f) = fail_at {
+            if f <= start {
+                // Startup crash: the container dies at or before the
+                // resume offset, so this attempt does zero work.
+                segments.push(AttemptSeg {
+                    start,
+                    end: start,
+                    crashed: true,
+                    checkpoints: 0,
+                });
+                continue;
+            }
+        }
         let mut pos = start;
+        let mut ckpts = 0u32;
         loop {
-            let next_ckpt = (pos / cfg.interval_bytes + 1)
-                * cfg.interval_bytes;
+            let next_ckpt = (pos / interval + 1) * interval;
             let target = next_ckpt.min(split_bytes);
             if let Some(f) = fail_at {
                 if f > pos && f <= target {
-                    // Crash mid-interval: work up to f is lost beyond
-                    // the last checkpoint.
+                    // Crash mid-interval (or exactly at the boundary,
+                    // pre-empting that boundary's checkpoint): work
+                    // past the last checkpoint is lost — the whole
+                    // attempt, if stateless.
                     processed += f - pos;
-                    recomputed += if stateful {
-                        f - pos.min(f)
-                    } else {
-                        f
-                    };
+                    recomputed += if stateful { f - pos } else { f };
+                    segments.push(AttemptSeg {
+                        start,
+                        end: f,
+                        crashed: true,
+                        checkpoints: ckpts,
+                    });
                     break;
                 }
             }
             processed += target - pos;
             pos = target;
-            if stateful {
+            if stateful && pos > start {
                 store
-                    .checkpoint(job, task, attempts, pos, vec![])
+                    .checkpoint(job, task, attempts, pos, partial.to_vec())
                     .expect("checkpoint rejected");
+                ckpts += 1;
             }
             if pos >= split_bytes {
+                segments.push(AttemptSeg {
+                    start,
+                    end: pos,
+                    crashed: false,
+                    checkpoints: ckpts,
+                });
                 return TaskRecovery {
                     attempts,
                     bytes_processed: processed,
                     bytes_recomputed: recomputed,
                     recovered: true,
+                    segments,
                 };
             }
         }
@@ -122,49 +302,84 @@ mod tests {
     use super::*;
 
     fn cfg() -> RecoveryConfig {
-        RecoveryConfig { interval_bytes: 10, max_attempts: 5 }
+        RecoveryConfig {
+            interval_bytes: 10,
+            max_attempts: 5,
+            ..Default::default()
+        }
+    }
+
+    fn run(
+        s: &mut StateStore,
+        split: u64,
+        fails: &[u64],
+        stateful: bool,
+    ) -> TaskRecovery {
+        run_with_failures(s, &cfg(), "j", 0, split, fails, stateful, &[])
     }
 
     #[test]
     fn no_failures_single_attempt() {
         let mut s = StateStore::new();
-        let r = run_with_failures(&mut s, &cfg(), "j", 0, 100, &[], true);
+        let r = run(&mut s, 100, &[], true);
         assert!(r.recovered);
         assert_eq!(r.attempts, 1);
         assert_eq!(r.bytes_processed, 100);
         assert_eq!(r.bytes_recomputed, 0);
+        assert_eq!(r.segments.len(), 1);
+        assert_eq!(r.segments[0], AttemptSeg {
+            start: 0,
+            end: 100,
+            crashed: false,
+            checkpoints: 10,
+        });
     }
 
     #[test]
     fn stateful_resumes_from_checkpoint() {
         let mut s = StateStore::new();
         // Fail at byte 35: checkpoints at 10, 20, 30; retry resumes @30.
-        let r = run_with_failures(&mut s, &cfg(), "j", 0, 100, &[35], true);
+        let r = run(&mut s, 100, &[35], true);
         assert!(r.recovered);
         assert_eq!(r.attempts, 2);
         // 35 (first attempt) + 70 (resume from 30) = 105.
         assert_eq!(r.bytes_processed, 105);
         assert_eq!(r.bytes_recomputed, 5);
+        assert_eq!(r.segments[0], AttemptSeg {
+            start: 0,
+            end: 35,
+            crashed: true,
+            checkpoints: 3,
+        });
+        assert_eq!(r.segments[1].start, 30);
     }
 
     #[test]
     fn stateless_restarts_from_zero() {
         let mut s = StateStore::new();
-        let r = run_with_failures(&mut s, &cfg(), "j", 0, 100, &[35], false);
+        let r = run(&mut s, 100, &[35], false);
         assert!(r.recovered);
         assert_eq!(r.attempts, 2);
         // 35 lost entirely + full 100 again.
         assert_eq!(r.bytes_processed, 135);
         assert_eq!(r.bytes_recomputed, 35);
+        assert_eq!(r.segments[1], AttemptSeg {
+            start: 0,
+            end: 100,
+            crashed: false,
+            checkpoints: 0,
+        });
     }
 
     #[test]
     fn gives_up_after_max_attempts() {
         let mut s = StateStore::new();
         let fails = vec![5u64; 10];
-        let r = run_with_failures(&mut s, &cfg(), "j", 0, 100, &fails, true);
+        let r = run(&mut s, 100, &fails, true);
         assert!(!r.recovered);
         assert_eq!(r.attempts, 5);
+        assert_eq!(r.segments.len(), 5);
+        assert!(r.segments.iter().all(|seg| seg.crashed));
     }
 
     #[test]
@@ -172,12 +387,162 @@ mod tests {
         let mut s1 = StateStore::new();
         let mut s2 = StateStore::new();
         let fails = [55, 83];
-        let st = run_with_failures(&mut s1, &cfg(), "j", 0, 100, &fails, true);
-        let sl =
-            run_with_failures(&mut s2, &cfg(), "j", 1, 100, &fails, false);
+        let st = run(&mut s1, 100, &fails, true);
+        let sl = run(&mut s2, 100, &fails, false);
         assert!(st.bytes_processed < sl.bytes_processed,
                 "stateful {} vs stateless {}", st.bytes_processed,
                 sl.bytes_processed);
+    }
+
+    #[test]
+    fn failure_at_byte_zero_crashes_the_attempt() {
+        // Regression: a failure point at (or below) the resume offset
+        // used to be silently consumed — the attempt ran to completion
+        // and the scheduled crash never happened.
+        for stateful in [true, false] {
+            let mut s = StateStore::new();
+            let r = run(&mut s, 100, &[0], stateful);
+            assert!(r.recovered, "stateful={stateful}");
+            assert_eq!(r.attempts, 2, "stateful={stateful}");
+            assert_eq!(r.segments[0], AttemptSeg {
+                start: 0,
+                end: 0,
+                crashed: true,
+                checkpoints: 0,
+            });
+            assert_eq!(r.bytes_processed, 100);
+            assert_eq!(r.bytes_recomputed, 0);
+        }
+    }
+
+    #[test]
+    fn failure_below_resume_offset_crashes_the_retry() {
+        // Attempt 1 crashes at 15 (checkpoint at 10). Attempt 2's
+        // scheduled failure is at byte 8 — at/below its resume offset
+        // of 10 — and must crash it immediately, not vanish.
+        let mut s = StateStore::new();
+        let r = run(&mut s, 100, &[15, 8], true);
+        assert!(r.recovered);
+        assert_eq!(r.attempts, 3);
+        assert_eq!(r.segments[1], AttemptSeg {
+            start: 10,
+            end: 10,
+            crashed: true,
+            checkpoints: 0,
+        });
+        assert_eq!(r.segments[2].start, 10);
+        // 15 + 0 + 90 processed; 5 recomputed (15 → last ckpt 10).
+        assert_eq!(r.bytes_processed, 105);
+        assert_eq!(r.bytes_recomputed, 5);
+    }
+
+    #[test]
+    fn failure_at_exact_checkpoint_boundary() {
+        // Crash at byte 30 — exactly where the third checkpoint would
+        // be written. The crash pre-empts that checkpoint: the retry
+        // resumes from 20, not 30.
+        let mut s = StateStore::new();
+        let r = run(&mut s, 100, &[30], true);
+        assert!(r.recovered);
+        assert_eq!(r.attempts, 2);
+        assert_eq!(r.segments[0], AttemptSeg {
+            start: 0,
+            end: 30,
+            crashed: true,
+            checkpoints: 2,
+        });
+        assert_eq!(r.segments[1].start, 20);
+        assert_eq!(r.bytes_processed, 30 + 80);
+        assert_eq!(r.bytes_recomputed, 10);
+    }
+
+    #[test]
+    fn interval_larger_than_split_degenerates_to_stateless() {
+        // With interval_bytes > split_bytes no mid-split checkpoint
+        // exists: a stateful crash loses exactly as much as a
+        // stateless one.
+        let big = RecoveryConfig {
+            interval_bytes: 1000,
+            max_attempts: 5,
+            ..Default::default()
+        };
+        let mut s1 = StateStore::new();
+        let st = run_with_failures(&mut s1, &big, "j", 0, 100, &[60], true,
+                                   &[]);
+        let mut s2 = StateStore::new();
+        let sl = run_with_failures(&mut s2, &big, "j", 0, 100, &[60], false,
+                                   &[]);
+        assert!(st.recovered && sl.recovered);
+        assert_eq!(st.bytes_recomputed, 60);
+        assert_eq!(st.bytes_processed, sl.bytes_processed);
+        // The successful attempt still checkpoints its completion...
+        assert_eq!(st.segments[1].checkpoints, 1);
+        // ...and never mid-split.
+        assert_eq!(st.segments[0].checkpoints, 0);
+    }
+
+    #[test]
+    fn stale_state_from_a_previous_execution_is_dropped() {
+        // A reused (job, task) key must not resume from a phantom
+        // checkpoint of an earlier run.
+        let mut s = StateStore::new();
+        run(&mut s, 100, &[], true); // leaves progress=100 behind
+        let r = run(&mut s, 100, &[35], true);
+        assert_eq!(r.segments[0].start, 0, "fresh execution starts at 0");
+        assert_eq!(r.attempts, 2);
+    }
+
+    #[test]
+    fn empty_split_succeeds_without_checkpoints() {
+        let mut s = StateStore::new();
+        let r = run(&mut s, 0, &[], true);
+        assert!(r.recovered);
+        assert_eq!(r.attempts, 1);
+        assert_eq!(r.bytes_processed, 0);
+        assert_eq!(r.checkpoints(), 0);
+    }
+
+    #[test]
+    fn partial_payload_lands_in_the_store() {
+        let mut s = StateStore::new();
+        run_with_failures(&mut s, &cfg(), "j", 3, 25, &[], true, &[7, 7]);
+        let ts = s.peek("j", 3).expect("final checkpoint kept");
+        assert_eq!(ts.partial, vec![7, 7]);
+        assert_eq!(ts.progress, 25);
+    }
+
+    #[test]
+    fn plan_sampling_is_deterministic_and_bounded() {
+        let plan = FailurePlan {
+            seed: 7,
+            crash_prob: 1.0,
+            max_failures_per_task: 3,
+            lose_datanodes: vec![],
+        };
+        let a = plan.failures_for("job", "map", 4, 1000);
+        let b = plan.failures_for("job", "map", 4, 1000);
+        assert_eq!(a, b, "same coordinates, same schedule");
+        assert_eq!(a.len(), 3, "prob 1.0 fills the cap");
+        assert!(a.iter().all(|&f| f <= 1000));
+        // Distinct coordinates draw distinct streams.
+        assert_ne!(plan.failures_for("job", "red", 4, 1000), a);
+        assert_ne!(plan.failures_for("job", "map", 5, 1000), a);
+        // Disabled and zero-work tasks sample nothing.
+        assert!(FailurePlan::disabled()
+            .failures_for("job", "map", 0, 1000)
+            .is_empty());
+        assert!(!FailurePlan::disabled().enabled());
+        assert!(plan.failures_for("job", "map", 0, 0).is_empty());
+        assert!(plan.enabled());
+    }
+
+    #[test]
+    fn datanode_list_parses() {
+        assert_eq!(FailurePlan::parse_datanode_list("0, 2").unwrap(),
+                   vec![0, 2]);
+        assert_eq!(FailurePlan::parse_datanode_list("").unwrap(),
+                   Vec::<usize>::new());
+        assert!(FailurePlan::parse_datanode_list("zero").is_err());
     }
 
     #[test]

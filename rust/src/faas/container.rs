@@ -38,6 +38,10 @@ pub struct ContainerPool {
     warm: HashMap<String, usize>,
     pub cold_starts: u64,
     pub warm_starts: u64,
+    /// Containers that died mid-action (injected failures). A crashed
+    /// container never returns to the warm pool — its warm state is
+    /// lost with it, so a later acquire may go cold again.
+    pub crashes: u64,
 }
 
 impl ContainerPool {
@@ -47,6 +51,7 @@ impl ContainerPool {
             warm: HashMap::new(),
             cold_starts: 0,
             warm_starts: 0,
+            crashes: 0,
         }
     }
 
@@ -70,6 +75,13 @@ impl ContainerPool {
         if *warm < self.cfg.keep_warm {
             *warm += 1;
         }
+    }
+
+    /// The container running an action died (injected fault): it is
+    /// destroyed, not returned — the pool permanently loses the warm
+    /// state `release` would have preserved.
+    pub fn crash(&mut self, _runtime: &str) {
+        self.crashes += 1;
     }
 
     /// Pre-warm `n` containers (deployment-time provisioning).
@@ -104,6 +116,19 @@ mod tests {
         let (lat, cold) = p.acquire("img");
         assert!(!cold);
         assert_eq!(lat, SimNs::from_millis(5));
+    }
+
+    #[test]
+    fn crashed_container_is_not_returned_warm() {
+        let mut p = ContainerPool::new(ContainerConfig::default());
+        p.prewarm("img", 1);
+        let (_, cold) = p.acquire("img");
+        assert!(!cold);
+        p.crash("img"); // container died mid-action
+        assert_eq!(p.crashes, 1);
+        assert_eq!(p.warm_count("img"), 0, "warm state lost with it");
+        let (_, cold) = p.acquire("img");
+        assert!(cold, "retry pays a cold start");
     }
 
     #[test]

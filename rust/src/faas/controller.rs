@@ -75,6 +75,18 @@ impl Controller {
         self.invokers[node.0].finish(&spec.runtime);
     }
 
+    /// The container running an action crashed (injected fault): it is
+    /// destroyed instead of returning to the warm pool, so the node
+    /// permanently loses that warm slot and a retry may go cold.
+    pub fn crash(&mut self, spec: &ActionSpec, node: NodeId) {
+        self.invokers[node.0].containers.crash(&spec.runtime);
+    }
+
+    /// Containers that died mid-action across all invokers.
+    pub fn crashes(&self) -> u64 {
+        self.invokers.iter().map(|i| i.containers.crashes).sum()
+    }
+
     /// Pre-warm the Hadoop runtime across all invokers (deployment step
     /// of the Marvel stack).
     pub fn prewarm(&mut self, runtime: &str, per_node: usize) {
@@ -173,6 +185,20 @@ mod tests {
         c.invoke(&spec, NodeId(1));
         assert_eq!(c.cold_starts(), 2);
         assert_eq!(c.warm_starts(), 2);
+    }
+
+    #[test]
+    fn crashed_container_drains_the_warm_pool() {
+        let (_, mut c) = setup(1);
+        let spec = ActionSpec::map("wc", 1024);
+        c.prewarm(&spec.runtime, 1);
+        assert!(!c.invoke(&spec, NodeId(0)).cold);
+        c.crash(&spec, NodeId(0));
+        assert_eq!(c.crashes(), 1);
+        assert_eq!(c.warm_count(&spec.runtime), 0);
+        // The retry pays a cold start: the crashed container's warm
+        // state went with it.
+        assert!(c.invoke(&spec, NodeId(0)).cold);
     }
 
     #[test]

@@ -48,12 +48,22 @@ pub struct Lambda {
     pub cold_starts: u64,
     /// Invocations served by a reused (warm) execution environment.
     pub warm_starts: u64,
+    /// Execution environments that died mid-invocation (injected
+    /// faults) — never returned to the warm set.
+    pub crashes: u64,
 }
 
 impl Lambda {
     pub fn new(engine: &mut Engine, cfg: LambdaConfig) -> Lambda {
         let concurrency = engine.add_pool(cfg.max_concurrency);
-        Lambda { cfg, concurrency, warm: 0, cold_starts: 0, warm_starts: 0 }
+        Lambda {
+            cfg,
+            concurrency,
+            warm: 0,
+            cold_starts: 0,
+            warm_starts: 0,
+            crashes: 0,
+        }
     }
 
     /// Admission check a Corral job must pass before launching.
@@ -95,6 +105,12 @@ impl Lambda {
         if self.warm < self.cfg.max_concurrency {
             self.warm += 1;
         }
+    }
+
+    /// The execution environment died mid-invocation (injected fault):
+    /// nothing returns to the warm set — the retry may cold-start.
+    pub fn crash(&mut self) {
+        self.crashes += 1;
     }
 
     /// Memory-based split sizing: Corral sizes splits so a task's input

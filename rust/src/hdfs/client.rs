@@ -15,7 +15,7 @@ use crate::net::{DeviceRole, NodeId, Topology};
 use crate::sim::Stage;
 use crate::storage::{Access, Dir, Payload};
 
-use super::block::{split_into_blocks, BlockMeta, DEFAULT_BLOCK_SIZE};
+use super::block::{split_into_blocks, BlockId, BlockMeta, DEFAULT_BLOCK_SIZE};
 use super::datanode::DataNode;
 use super::namenode::NameNode;
 
@@ -48,9 +48,49 @@ impl Hdfs {
     }
 
     fn eligible(&self) -> Vec<NodeId> {
-        let mut v: Vec<NodeId> = self.datanodes.keys().copied().collect();
+        let mut v: Vec<NodeId> = self
+            .datanodes
+            .iter()
+            .filter(|(_, dn)| !dn.dead)
+            .map(|(n, _)| *n)
+            .collect();
         v.sort();
         v
+    }
+
+    /// Kill one DataNode (failure injection): its block replicas are
+    /// lost and it stops serving reads or taking writes. Reads of its
+    /// blocks fall back to surviving replicas; a block whose only
+    /// replica lived there is data loss and surfaces as a read error.
+    /// Idempotent. Returns how many block replicas were lost.
+    pub fn fail_datanode(&mut self, node: NodeId) -> usize {
+        self.datanodes.get_mut(&node).map_or(0, |dn| {
+            if dn.dead {
+                0
+            } else {
+                dn.fail()
+            }
+        })
+    }
+
+    /// Pick the replica of `block` to read from: the reader's own live
+    /// copy if it has one, else the first live replica in NameNode
+    /// order. `None` when every replica is dead — data loss.
+    fn live_replica(
+        &self,
+        locs: &[NodeId],
+        reader: NodeId,
+        block: BlockId,
+    ) -> Option<NodeId> {
+        let alive = |n: &NodeId| {
+            self.datanodes
+                .get(n)
+                .is_some_and(|dn| !dn.dead && dn.has(block))
+        };
+        if locs.contains(&reader) && alive(&reader) {
+            return Some(reader);
+        }
+        locs.iter().find(|n| alive(n)).copied()
     }
 
     /// Write a file from memory on `writer`. Returns the stages charging
@@ -140,15 +180,11 @@ impl Hdfs {
         let mut remote = 0u64;
         for b in &inode.blocks {
             let locs = self.namenode.locations(b.id);
-            let src = if locs.contains(&reader) {
-                reader
-            } else {
-                *locs.first().ok_or("block with no replicas")?
-            };
+            let src = self.live_replica(locs, reader, b.id).ok_or_else(
+                || format!("block {:?} of {path} lost: no live replica", b.id),
+            )?;
             let dn = &self.datanodes[&src];
-            let data = dn
-                .fetch(b.id)
-                .ok_or_else(|| format!("missing block {:?} on {src:?}", b.id))?;
+            let data = dn.fetch(b.id).expect("live replica holds the block");
             parts.push(data.clone());
             let dev = topo.device(dn.dev);
             let mut path_res = vec![dev.channel(Dir::Read)];
@@ -197,16 +233,14 @@ impl Hdfs {
                 continue;
             }
             let locs = self.namenode.locations(b.id);
-            let src = if locs.contains(&reader) {
-                reader
-            } else {
+            let src = self.live_replica(locs, reader, b.id).ok_or_else(
+                || format!("block {:?} of {path} lost: no live replica", b.id),
+            )?;
+            if src != reader {
                 all_local = false;
-                *locs.first().ok_or("block with no replicas")?
-            };
+            }
             let dn = &self.datanodes[&src];
-            let data = dn
-                .fetch(b.id)
-                .ok_or_else(|| format!("missing block {:?}", b.id))?;
+            let data = dn.fetch(b.id).expect("live replica holds the block");
             parts.push(data.slice(s - b.offset, e - s));
             let dev = topo.device(dn.dev);
             let mut path_res = vec![dev.channel(Dir::Read)];
@@ -330,6 +364,42 @@ mod tests {
             assert_eq!(dn.block_count(), 0);
         }
         assert!(!h.delete("/f"));
+    }
+
+    #[test]
+    fn datanode_loss_falls_back_to_surviving_replica() {
+        let (_, t, mut h) = setup(3, 2);
+        let data: Vec<u8> = (0..500u32).map(|i| (i % 251) as u8).collect();
+        h.put(&t, NodeId(0), "/f", Payload::real(data.clone()), 0)
+            .unwrap();
+        let lost = h.fail_datanode(NodeId(0));
+        assert!(lost > 0, "writer-local replicas lived on node 0");
+        assert_eq!(h.fail_datanode(NodeId(0)), 0, "idempotent");
+        // Reads survive through the second replica, byte-identical.
+        let (got, _, local, remote) = h.read(&t, NodeId(0), "/f", 0).unwrap();
+        assert_eq!(got.gather().unwrap(), data);
+        assert_eq!(local, 0, "local replica is gone");
+        assert_eq!(remote, 500);
+        let (got, _, all_local) =
+            h.read_range(&t, NodeId(0), "/f", 100, 50, 0).unwrap();
+        assert_eq!(got.gather().unwrap(), &data[100..150]);
+        assert!(!all_local);
+        // New writes avoid the dead node.
+        let st = h.put(&t, NodeId(1), "/g", Payload::synthetic(64), 0);
+        assert!(st.is_ok());
+        assert_eq!(h.datanodes[&NodeId(0)].block_count(), 0);
+    }
+
+    #[test]
+    fn sole_replica_loss_is_a_read_error() {
+        let (_, t, mut h) = setup(2, 1);
+        h.put(&t, NodeId(0), "/f", Payload::synthetic(10), 0).unwrap();
+        h.fail_datanode(NodeId(0));
+        let err = h.read(&t, NodeId(1), "/f", 0).unwrap_err();
+        assert!(err.contains("no live replica"), "{err}");
+        assert!(h
+            .read_range(&t, NodeId(1), "/f", 0, 10, 0)
+            .is_err());
     }
 
     #[test]

@@ -14,12 +14,24 @@ use super::block::BlockId;
 pub struct DataNode {
     pub node: NodeId,
     pub dev: DevId,
+    /// Killed by failure injection: serves no reads, takes no writes,
+    /// and its replicas are gone (clients fall back to survivors).
+    pub dead: bool,
     blocks: HashMap<BlockId, Payload>,
 }
 
 impl DataNode {
     pub fn new(node: NodeId, dev: DevId) -> DataNode {
-        DataNode { node, dev, blocks: HashMap::new() }
+        DataNode { node, dev, dead: false, blocks: HashMap::new() }
+    }
+
+    /// Kill this DataNode: every block replica it held is lost.
+    /// Returns how many blocks went with it.
+    pub fn fail(&mut self) -> usize {
+        self.dead = true;
+        let n = self.blocks.len();
+        self.blocks.clear();
+        n
     }
 
     pub fn store(&mut self, id: BlockId, data: Payload) {
@@ -63,5 +75,16 @@ mod tests {
         assert!(dn.drop_block(BlockId(1)).is_some());
         assert!(!dn.has(BlockId(1)));
         assert!(dn.fetch(BlockId(1)).is_none());
+    }
+
+    #[test]
+    fn failed_datanode_loses_everything() {
+        let mut dn = DataNode::new(NodeId(0), DevId(0));
+        dn.store(BlockId(1), Payload::synthetic(10));
+        dn.store(BlockId(2), Payload::synthetic(20));
+        assert_eq!(dn.fail(), 2);
+        assert!(dn.dead);
+        assert_eq!(dn.block_count(), 0);
+        assert!(!dn.has(BlockId(1)));
     }
 }

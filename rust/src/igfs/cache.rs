@@ -131,6 +131,16 @@ impl CacheNode {
     }
 
     /// Fetch; returns which tier served it (time plane differs).
+    ///
+    /// A backing-tier hit *promotes* the entry back into DRAM (with
+    /// normal LRU eviction to make room) — a hot key that was evicted
+    /// once must not stay PMEM-priced forever. The returned tier is
+    /// the tier that *served* this request (the promotion benefits the
+    /// next one), and `hits_backing` counts accordingly. Known
+    /// tradeoff of promote-always: a working set just over DRAM
+    /// capacity ping-pongs (each promotion demotes the other key), so
+    /// such sets pay backing price on every access — the PMEM tier
+    /// keeps that a constant-factor cost, not a miss.
     pub fn get(&mut self, key: &str) -> Option<(Payload, Tier)> {
         if let Some((v, stamp)) = self.entries.get_mut(key) {
             *stamp = self.clock + 1;
@@ -138,9 +148,21 @@ impl CacheNode {
             self.stats.hits_dram += 1;
             return Some((v.clone(), Tier::Dram));
         }
-        if let Some(v) = self.backing.get(key) {
+        if let Some(v) = self.backing.remove(key) {
             self.stats.hits_backing += 1;
-            return Some((v.clone(), Tier::Backing));
+            let len = v.len();
+            if len > self.capacity {
+                // Too big for DRAM ever: stays on the backing tier.
+                self.backing.insert(key.to_string(), v.clone());
+                return Some((v, Tier::Backing));
+            }
+            while self.used + len > self.capacity {
+                self.evict_one();
+            }
+            let stamp = self.tick();
+            self.used += len;
+            self.entries.insert(key.to_string(), (v.clone(), stamp));
+            return Some((v, Tier::Backing));
         }
         self.stats.misses += 1;
         None
@@ -204,10 +226,32 @@ mod tests {
         c.put("b", Payload::synthetic(30));
         c.get("a"); // a is now more recent than b
         c.put("c", Payload::synthetic(40)); // evicts b (LRU)
+        // b is served from backing — and promoted back into DRAM,
+        // which demotes a (now the LRU entry) to make room.
         assert_eq!(c.get("b").unwrap().1, Tier::Backing);
-        assert_eq!(c.get("a").unwrap().1, Tier::Dram);
-        assert_eq!(c.get("c").unwrap().1, Tier::Dram);
-        assert_eq!(c.stats.evictions, 1);
+        assert_eq!(c.get("b").unwrap().1, Tier::Dram);
+        assert_eq!(c.get("a").unwrap().1, Tier::Backing);
+        assert_eq!(c.stats.evictions, 3); // b, then a, then c (a returns)
+        assert!(c.used() <= c.capacity());
+    }
+
+    #[test]
+    fn backing_hit_promotes_to_dram() {
+        // Regression: a hot key evicted once used to stay PMEM-priced
+        // forever — `get` never moved a backing hit back into DRAM.
+        let mut c = CacheNode::new(100);
+        c.put("hot", Payload::synthetic(80));
+        c.put("filler", Payload::synthetic(80)); // demotes hot
+        assert_eq!(c.get("hot").unwrap().1, Tier::Backing);
+        assert_eq!(c.stats.hits_backing, 1, "serving tier counted");
+        // Promoted: every later hit is DRAM-priced again.
+        assert_eq!(c.get("hot").unwrap().1, Tier::Dram);
+        assert_eq!(c.get("hot").unwrap().1, Tier::Dram);
+        assert_eq!(c.stats.hits_backing, 1);
+        assert_eq!(c.stats.hits_dram, 2);
+        // Capacity invariant held throughout: filler was demoted.
+        assert!(c.used() <= c.capacity());
+        assert_eq!(c.get("filler").unwrap().1, Tier::Backing);
     }
 
     #[test]

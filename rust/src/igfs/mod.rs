@@ -193,8 +193,15 @@ mod tests {
         assert_eq!(s.hits_dram + s.hits_backing + s.misses, 0);
         let (_, _, tier) = g.get_tiered(&t, NodeId(0), "a", 0).unwrap();
         assert_eq!(tier, Tier::Backing);
+        // The backing hit promoted a into DRAM, demoting b — two 80 B
+        // values ping-pong through a 100 B cache, so each get serves
+        // from backing and promotes for the next round.
         let (_, _, tier) = g.get_tiered(&t, NodeId(0), "b", 0).unwrap();
-        assert_eq!(tier, Tier::Dram);
+        assert_eq!(tier, Tier::Backing);
+        let (_, _, tier) = g.get_tiered(&t, NodeId(0), "a", 0).unwrap();
+        assert_eq!(tier, Tier::Backing);
+        assert_eq!(g.stats().hits_dram, 0);
+        assert_eq!(g.stats().hits_backing, 3);
     }
 
     #[test]

@@ -94,6 +94,14 @@ impl StateStore {
         v
     }
 
+    /// Drop one task's state record — a fresh execution of a reused
+    /// task name must not resume from a phantom checkpoint, and a
+    /// long-lived server clears records once a task's retries are
+    /// resolved. Returns whether anything was removed.
+    pub fn remove(&mut self, job: &str, task: u32) -> bool {
+        self.entries.remove(&(job.to_string(), task)).is_some()
+    }
+
     /// Drop all state for a completed job.
     pub fn clear_job(&mut self, job: &str) -> usize {
         let before = self.entries.len();
@@ -150,6 +158,19 @@ mod tests {
         s.checkpoint("j", 0, 1, 100, vec![]).unwrap();
         assert!(s.checkpoint("j", 0, 1, 50, vec![]).is_err());
         s.checkpoint("j", 0, 1, 150, vec![]).unwrap();
+    }
+
+    #[test]
+    fn remove_is_task_scoped() {
+        let mut s = StateStore::new();
+        s.checkpoint("j", 0, 0, 1, vec![]).unwrap();
+        s.checkpoint("j", 1, 0, 2, vec![]).unwrap();
+        assert!(s.remove("j", 0));
+        assert!(!s.remove("j", 0));
+        assert!(s.restore("j", 0).is_none());
+        assert_eq!(s.restore("j", 1).unwrap().progress, 2);
+        // A removed key accepts a fresh attempt-0 checkpoint again.
+        s.checkpoint("j", 0, 0, 1, vec![]).unwrap();
     }
 
     #[test]

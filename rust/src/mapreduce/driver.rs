@@ -10,10 +10,20 @@
 //! DRAM hit → PMEM backing hit → HDFS → S3 fallback. Both the map and the
 //! reduce data planes fan out over scoped host-thread pools under the
 //! byte-identical determinism contract (see `pool_run`).
+//!
+//! Fault tolerance: with a `FailurePlan` armed in the `SystemConfig`,
+//! each task's time-plane proc is compiled from its sampled attempt
+//! schedule (`coordinator::recovery`) instead of a single invocation —
+//! crashed attempts release their slot through the fair queue and lose
+//! their container's warm state, stateful retries resume from the last
+//! IGFS checkpoint, stateless ones restart from zero, and an exhausted
+//! retry budget surfaces as a job error. Outputs stay byte-identical
+//! to the failure-free run; see `ARCHITECTURE.md` (Fault tolerance).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::coordinator::recovery::{self, TaskRecovery};
 use crate::faas::{ActionSpec, Controller, Lambda, HADOOP_RUNTIME};
 use crate::igfs::{CacheStats, Tier};
 use crate::metrics::{tags, IoSummary};
@@ -267,6 +277,162 @@ fn read_handoff(
     Ok((Payload::real(Vec::new()), Vec::new(), HandoffTier::Empty, true))
 }
 
+/// Replay input-read `stages` covering only `num` of `den` bytes: flow
+/// volumes scale proportionally — an attempt that crashed at byte *f*
+/// of its split only fetched ~*f* input bytes, and a stateful resume
+/// re-reads only the tail it recomputes. Per-request latency delays
+/// are unchanged; a zero-span (startup crash) reads nothing.
+fn scale_flows(stages: &[Stage], num: u64, den: u64) -> Vec<Stage> {
+    if num == 0 {
+        return Vec::new();
+    }
+    if den == 0 || num >= den {
+        return stages.to_vec();
+    }
+    let frac = num as f64 / den as f64;
+    stages
+        .iter()
+        .map(|s| match s {
+            Stage::Flow { bytes, path, tag } => Stage::Flow {
+                bytes: bytes * frac,
+                path: path.clone(),
+                tag: *tag,
+            },
+            other => other.clone(),
+        })
+        .collect()
+}
+
+/// Compile a task's failure-injected attempt schedule into time-plane
+/// stages. Every attempt is a fresh container invocation: it
+/// re-acquires a slot *through the fair queue* (a crashed attempt's
+/// Release hands the slot to whoever is next — possibly a co-tenant),
+/// replays the input span it covers, pays compute plus checkpoint
+/// latency, and a crashed attempt emits a [`Stage::Crash`] event and
+/// loses its container (warm state destroyed, so retries may
+/// cold-start). Returns the final attempt's slot (which the caller's
+/// success tail releases) and the total checkpoint overhead charged.
+#[allow(clippy::too_many_arguments)] // mirrors the task-compilation actors
+fn compile_attempts(
+    cluster: &mut Cluster,
+    cfg: &SystemConfig,
+    spec: &ActionSpec,
+    node: NodeId,
+    in_stages: &[Stage],
+    work: u64,
+    rate: f64,
+    tr: &TaskRecovery,
+    stages: &mut Vec<Stage>,
+) -> (PoolId, SimNs) {
+    let per_ckpt = cfg.recovery.per_checkpoint;
+    let mut overhead = SimNs::ZERO;
+    let mut slot = PoolId(0);
+    for (a, seg) in tr.segments.iter().enumerate() {
+        let (s, startup) = invoke_once(cluster, cfg, spec, node);
+        slot = s;
+        stages.push(Stage::Acquire(slot));
+        stages.push(Stage::Delay(startup));
+        let span = seg.end - seg.start;
+        stages.extend(scale_flows(in_stages, span, work));
+        if span > 0 && rate > 0.0 {
+            stages.push(Stage::Delay(SimNs::from_secs_f64(
+                span as f64 / rate,
+            )));
+        }
+        if seg.checkpoints > 0 {
+            let d = SimNs::from_nanos(
+                per_ckpt.as_nanos() * seg.checkpoints as u64,
+            );
+            overhead += d;
+            stages.push(Stage::Delay(d));
+        }
+        if seg.crashed {
+            let (n, at) = (a + 1, seg.end);
+            stages.push(Stage::Release(slot));
+            stages.push(Stage::Crash(format!(
+                "attempt {n} crashed at byte {at} of {work}"
+            )));
+            match cfg.platform {
+                Platform::OpenWhisk => cluster.controller.crash(spec, node),
+                Platform::Lambda => cluster.lambda.crash(),
+            }
+        }
+    }
+    (slot, overhead)
+}
+
+/// Stage-level recovery bookkeeping accumulated across map and reduce
+/// tasks (lands in the [`JobResult`] counters).
+#[derive(Default)]
+struct RecoveryTally {
+    task_attempts: u64,
+    recomputed_bytes: u64,
+    checkpoints: u64,
+    overhead: SimNs,
+    /// First task that exhausted its retry budget: the job is doomed,
+    /// and `plan_stage` must error before any further output bytes
+    /// land under the job's shared keys.
+    doomed: Option<String>,
+}
+
+/// One container invocation on the configured platform: the slot pool
+/// the task body must hold and the startup latency it pays. The single
+/// source of invocation accounting for the failure-free map/reduce
+/// branches and every injected attempt in [`compile_attempts`].
+fn invoke_once(
+    cluster: &mut Cluster,
+    cfg: &SystemConfig,
+    spec: &ActionSpec,
+    node: NodeId,
+) -> (PoolId, SimNs) {
+    match cfg.platform {
+        Platform::OpenWhisk => {
+            let inv = cluster.controller.invoke(spec, node);
+            (cluster.controller.slots_of(node), inv.startup)
+        }
+        Platform::Lambda => {
+            let (lat, _) = cluster.lambda.startup();
+            (cluster.lambda.concurrency, lat)
+        }
+    }
+}
+
+/// Sample one task's crash schedule from the armed plan, run the
+/// shared recovery policy against the cluster's real state store
+/// (checkpoints land under `("{job}/{kind}", idx)` and the record is
+/// dropped once the segments are extracted, so a long-lived server's
+/// state store stays bounded), and fold the outcome into the stage
+/// tally. The returned schedule feeds [`compile_attempts`].
+#[allow(clippy::too_many_arguments)] // one per task coordinate, like run_stage
+fn plan_task_recovery(
+    cluster: &mut Cluster,
+    cfg: &SystemConfig,
+    job: &str,
+    kind: &str,
+    idx: u64,
+    work: u64,
+    partial: &[u8],
+    tally: &mut RecoveryTally,
+) -> TaskRecovery {
+    let fails = cfg.failures.failures_for(job, kind, idx, work);
+    let state_job = format!("{job}/{kind}");
+    let tr = recovery::run_with_failures(
+        &mut cluster.stores.igfs.state,
+        &cfg.recovery,
+        &state_job,
+        idx as u32,
+        work,
+        &fails,
+        cfg.recovery.stateful,
+        partial,
+    );
+    cluster.stores.igfs.state.remove(&state_job, idx as u32);
+    tally.task_attempts += tr.attempts as u64;
+    tally.recomputed_bytes += tr.bytes_recomputed;
+    tally.checkpoints += tr.checkpoints();
+    tr
+}
+
 /// Resolve a data-plane worker count: explicit, or the host's available
 /// parallelism when `requested` is 0; never more workers than items.
 fn effective_workers(requested: usize, n_items: usize) -> usize {
@@ -405,8 +571,12 @@ pub fn run_job(
 /// Plan bookkeeping for one reducer between the gather and time planes.
 struct ReducePlan {
     node: NodeId,
-    slot: PoolId,
-    stages: Vec<Stage>,
+    /// Failure-free invocation, made at gather time (slot + startup);
+    /// `None` under an armed failure plan — the attempt schedule then
+    /// invokes per attempt at compile time.
+    invoked: Option<(PoolId, SimNs)>,
+    /// Shuffle-read stages, replayed per attempt on retries.
+    in_stages: Vec<Stage>,
 }
 
 /// Run one MapReduce stage to completion. `job` names the stage (it
@@ -459,6 +629,10 @@ pub struct PlannedStage {
     warm_starts: u64,
     rt_batches: u64,
     rt_compute_ns: u64,
+    task_attempts: u64,
+    recomputed_bytes: u64,
+    checkpoints: u64,
+    checkpoint_overhead: SimNs,
 }
 
 impl PlannedStage {
@@ -535,6 +709,10 @@ pub fn finalize_stage(
         rt_compute_ns: p.rt_compute_ns,
         igfs: p.igfs,
         handoff: p.handoff,
+        task_attempts: p.task_attempts,
+        recomputed_bytes: p.recomputed_bytes,
+        checkpoints: p.checkpoints,
+        checkpoint_overhead: p.checkpoint_overhead,
     })
 }
 
@@ -579,6 +757,27 @@ pub fn plan_stage(
     let warm0 =
         cluster.controller.warm_starts() + cluster.lambda.warm_starts;
     let mut handoff = HandoffStats::default();
+
+    // Failure injection (inert by default). DataNode losses land
+    // before split planning so stale NameNode locality hints and
+    // surviving-replica fallback both get exercised; container-crash
+    // schedules are sampled per task below. Recovery bookkeeping
+    // accumulates across both phases.
+    let inject = cfg.failures.enabled();
+    if inject {
+        for &n in &cfg.failures.lose_datanodes {
+            // A typo'd node id must not silently degrade the plan to a
+            // failure-free baseline run.
+            if n >= cluster.topo.n_nodes() {
+                return Err(format!(
+                    "failure plan names DataNode {n}, cluster has {}",
+                    cluster.topo.n_nodes()
+                ));
+            }
+            cluster.stores.hdfs.fail_datanode(NodeId(n));
+        }
+    }
+    let mut tally = RecoveryTally::default();
 
     // (1–3) Client → controller → YARN: size the job.
     let (path, (input_bytes, splits)) = match input {
@@ -714,58 +913,114 @@ pub fn plan_stage(
         map_splits_parallel(wl, &datas, n_reduces, cfg, rt, seed, workers);
     drop(datas); // split views released before the shuffle writes
 
-    // -- time plane, split order
+    // -- time plane, split order. With a failure plan armed, a task's
+    // single invocation becomes its sampled attempt schedule: the
+    // recovery policy (`coordinator::recovery`) runs against the real
+    // IGFS state store and `compile_attempts` turns its segments into
+    // stages. The data plane above already ran — failures move only
+    // virtual time and attempt counts, never bytes.
     for ((i, mo), in_stages) in
         map_outs.into_iter().enumerate().zip(in_stages_per_split)
     {
         let node = map_allocs[i].node;
         let split = &splits[i];
-        let (slot, startup) = match cfg.platform {
-            Platform::OpenWhisk => {
-                let inv = cluster.controller.invoke(&map_spec, node);
-                (cluster.controller.slots_of(node), inv.startup)
-            }
-            Platform::Lambda => {
-                let (lat, _) = cluster.lambda.startup();
-                (cluster.lambda.concurrency, lat)
-            }
-        };
         let mut stages = Vec::new();
         if let Some(gate) = after {
             // Chained submission: maps start only once the upstream
             // stage's reducers have all arrived.
             stages.push(Stage::Await(gate));
         }
-        stages.push(Stage::Acquire(slot));
-        stages.push(Stage::Delay(startup));
-        stages.extend(in_stages);
-        stages.push(Stage::Delay(SimNs::from_secs_f64(
-            split.len as f64 / wl.map_rate(),
-        )));
-        for (j, part) in mo.partitions.into_iter().enumerate() {
-            if part.is_empty() {
-                continue;
-            }
-            intermediate_bytes += part.len();
-            let key = interm_key(&job, i, j);
-            let st = cluster.stores.write_intermediate(
-                &mut cluster.engine,
-                &cluster.topo,
-                cfg.intermediate_store,
-                node,
-                &key,
-                part,
-            )?;
-            stages.extend(st);
-        }
-        stages.push(Stage::Release(slot));
-        stages.push(Stage::Arrive(maps_done));
-        cluster.engine.spawn_as(&format!("{job}/map{i}"), class, stages);
-        if cfg.platform == Platform::OpenWhisk {
-            cluster.controller.complete(&map_spec, node);
+        let rec = if inject {
+            Some(plan_task_recovery(
+                cluster,
+                cfg,
+                &job,
+                "map",
+                i as u64,
+                split.len,
+                &mo.total_bytes().to_le_bytes(),
+                &mut tally,
+            ))
         } else {
-            cluster.lambda.finish();
+            tally.task_attempts += 1;
+            None
+        };
+        let (slot, ok) = match &rec {
+            None => {
+                let (slot, startup) =
+                    invoke_once(cluster, cfg, &map_spec, node);
+                stages.push(Stage::Acquire(slot));
+                stages.push(Stage::Delay(startup));
+                stages.extend(in_stages);
+                stages.push(Stage::Delay(SimNs::from_secs_f64(
+                    split.len as f64 / wl.map_rate(),
+                )));
+                (slot, true)
+            }
+            Some(tr) => {
+                let (slot, ck) = compile_attempts(
+                    cluster,
+                    cfg,
+                    &map_spec,
+                    node,
+                    &in_stages,
+                    split.len,
+                    wl.map_rate(),
+                    tr,
+                    &mut stages,
+                );
+                tally.overhead += ck;
+                (slot, tr.recovered)
+            }
+        };
+        if ok {
+            for (j, part) in mo.partitions.into_iter().enumerate() {
+                if part.is_empty() {
+                    continue;
+                }
+                intermediate_bytes += part.len();
+                let key = interm_key(&job, i, j);
+                let st = cluster.stores.write_intermediate(
+                    &mut cluster.engine,
+                    &cluster.topo,
+                    cfg.intermediate_store,
+                    node,
+                    &key,
+                    part,
+                )?;
+                stages.extend(st);
+            }
+            stages.push(Stage::Release(slot));
+            stages.push(Stage::Arrive(maps_done));
+        } else {
+            // Retry budget exhausted: the task produced nothing. Still
+            // open the barrier (co-tenants must not deadlock) and
+            // record the failure on the proc; the job itself is doomed
+            // — plan_stage errors after this loop, before any reduce
+            // output could land under the job's shared keys.
+            stages.push(Stage::Arrive(maps_done));
+            let msg = format!(
+                "map{i}: retry budget exhausted after {} attempts",
+                cfg.recovery.max_attempts.max(1)
+            );
+            stages.push(Stage::Fail(msg.clone()));
+            tally.doomed.get_or_insert(msg);
         }
+        cluster.engine.spawn_as(&format!("{job}/map{i}"), class, stages);
+        if ok {
+            if cfg.platform == Platform::OpenWhisk {
+                cluster.controller.complete(&map_spec, node);
+            } else {
+                cluster.lambda.finish();
+            }
+        }
+    }
+    // A doomed map means the shuffle is incomplete: running the reduce
+    // phase anyway would persist plausible-but-wrong aggregates under
+    // the job's real output keys — which a chained stage planned
+    // before finalize could then consume. Fail the plan instead.
+    if let Some(msg) = tally.doomed.take() {
+        return Err(msg);
     }
 
     // (8–10) Reduce phase — the same three-sub-phase shape as map.
@@ -788,19 +1043,15 @@ pub fn plan_stage(
         Vec::with_capacity(n_reduces);
     for j in 0..n_reduces {
         let node = reduce_allocs[j].node;
-        let mut stages = vec![Stage::Await(maps_done)];
-        let (slot, startup) = match cfg.platform {
-            Platform::OpenWhisk => {
-                let inv = cluster.controller.invoke(&reduce_spec, node);
-                (cluster.controller.slots_of(node), inv.startup)
-            }
-            Platform::Lambda => {
-                let (lat, _) = cluster.lambda.startup();
-                (cluster.lambda.concurrency, lat)
-            }
+        // Failure-free runs invoke here (gather order), preserving the
+        // legacy warm-pool accounting; under injection each attempt
+        // invokes for itself in the time-plane loop below.
+        let invoked = if inject {
+            None
+        } else {
+            Some(invoke_once(cluster, cfg, &reduce_spec, node))
         };
-        stages.push(Stage::Acquire(slot));
-        stages.push(Stage::Delay(startup));
+        let mut in_stages = Vec::new();
         let mut inputs = Vec::new();
         for i in 0..n_maps {
             let key = interm_key(&job, i, j);
@@ -814,12 +1065,12 @@ pub fn plan_stage(
                 Some((d, st)) => {
                     reduce_in_bytes += d.len();
                     inputs.push(d);
-                    stages.extend(st);
+                    in_stages.extend(st);
                 }
                 None => {} // mapper emitted nothing for this partition
             }
         }
-        plans.push(ReducePlan { node, slot, stages });
+        plans.push(ReducePlan { node, invoked, in_stages });
         inputs_per_part.push(inputs);
     }
 
@@ -834,37 +1085,91 @@ pub fn plan_stage(
         r_workers,
     );
 
-    // -- time plane, partition order
+    // -- time plane, partition order (attempt schedules mirror map's).
     let mut output_bytes = 0u64;
     for (j, (plan, ro)) in
         plans.into_iter().zip(reduce_outs).enumerate()
     {
         let in_bytes: u64 =
             inputs_per_part[j].iter().map(|p| p.len()).sum();
-        let mut stages = plan.stages;
-        stages.push(Stage::Delay(SimNs::from_secs_f64(
-            in_bytes as f64 / wl.reduce_rate(),
-        )));
-        if !ro.output.is_empty() {
-            output_bytes += ro.output.len();
-            let st = cluster.stores.write_output(
-                &mut cluster.engine,
-                &cluster.topo,
-                cfg.output_store,
-                plan.node,
-                &output_key(&job, j),
-                ro.output,
-            )?;
-            stages.extend(st);
-        }
-        stages.push(Stage::Release(plan.slot));
-        stages.push(Stage::Arrive(job_done));
-        cluster.engine.spawn_as(&format!("{job}/red{j}"), class, stages);
-        if cfg.platform == Platform::OpenWhisk {
-            cluster.controller.complete(&reduce_spec, plan.node);
+        let mut stages = vec![Stage::Await(maps_done)];
+        let (slot, ok) = match plan.invoked {
+            Some((slot, startup)) => {
+                tally.task_attempts += 1;
+                stages.push(Stage::Acquire(slot));
+                stages.push(Stage::Delay(startup));
+                stages.extend(plan.in_stages);
+                stages.push(Stage::Delay(SimNs::from_secs_f64(
+                    in_bytes as f64 / wl.reduce_rate(),
+                )));
+                (slot, true)
+            }
+            None => {
+                let tr = plan_task_recovery(
+                    cluster,
+                    cfg,
+                    &job,
+                    "red",
+                    j as u64,
+                    in_bytes,
+                    &ro.output.len().to_le_bytes(),
+                    &mut tally,
+                );
+                let (slot, ck) = compile_attempts(
+                    cluster,
+                    cfg,
+                    &reduce_spec,
+                    plan.node,
+                    &plan.in_stages,
+                    in_bytes,
+                    wl.reduce_rate(),
+                    &tr,
+                    &mut stages,
+                );
+                tally.overhead += ck;
+                (slot, tr.recovered)
+            }
+        };
+        if ok {
+            if !ro.output.is_empty() {
+                output_bytes += ro.output.len();
+                let st = cluster.stores.write_output(
+                    &mut cluster.engine,
+                    &cluster.topo,
+                    cfg.output_store,
+                    plan.node,
+                    &output_key(&job, j),
+                    ro.output,
+                )?;
+                stages.extend(st);
+            }
+            stages.push(Stage::Release(slot));
+            stages.push(Stage::Arrive(job_done));
         } else {
-            cluster.lambda.finish();
+            stages.push(Stage::Arrive(job_done));
+            let msg = format!(
+                "red{j}: retry budget exhausted after {} attempts",
+                cfg.recovery.max_attempts.max(1)
+            );
+            stages.push(Stage::Fail(msg.clone()));
+            tally.doomed.get_or_insert(msg);
         }
+        cluster.engine.spawn_as(&format!("{job}/red{j}"), class, stages);
+        if ok {
+            if cfg.platform == Platform::OpenWhisk {
+                cluster.controller.complete(&reduce_spec, plan.node);
+            } else {
+                cluster.lambda.finish();
+            }
+        }
+    }
+    // Same protection as the map phase: a reducer out of attempts has
+    // no output, so the job's result set is incomplete — error at plan
+    // time so no chained stage can consume it as if it were whole.
+    // (Completed sibling reducers did write correct bytes; a pipeline
+    // re-run scrubs them via `clear_prefix` before re-executing.)
+    if let Some(msg) = tally.doomed.take() {
+        return Err(msg);
     }
 
     // Data plane complete; capture this stage's share of every
@@ -897,6 +1202,10 @@ pub fn plan_stage(
             - warm0,
         rt_batches: rt.stats.batches - rt_batches0,
         rt_compute_ns: rt.stats.pjrt_ns + rt.stats.oracle_ns - rt_ns0,
+        task_attempts: tally.task_attempts,
+        recomputed_bytes: tally.recomputed_bytes,
+        checkpoints: tally.checkpoints,
+        checkpoint_overhead: tally.overhead,
     })
 }
 
@@ -906,6 +1215,29 @@ mod tests {
     #[test]
     fn interm_key_stable() {
         assert_eq!(super::interm_key("j", 2, 3), "j/shuffle/m00002/p003");
+    }
+
+    #[test]
+    fn scale_flows_scales_volumes_not_latencies() {
+        use crate::sim::{SimNs, Stage};
+        let st = vec![
+            Stage::Delay(SimNs::from_micros(3)),
+            Stage::Flow { bytes: 1000.0, path: vec![], tag: 9 },
+        ];
+        let half = super::scale_flows(&st, 50, 100);
+        match (&half[0], &half[1]) {
+            (Stage::Delay(d), Stage::Flow { bytes, tag, .. }) => {
+                assert_eq!(*d, SimNs::from_micros(3));
+                assert!((bytes - 500.0).abs() < 1e-9);
+                assert_eq!(*tag, 9);
+            }
+            other => panic!("unexpected stages {other:?}"),
+        }
+        // Zero span reads nothing; full (or over-full) span replays
+        // verbatim; a zero-byte task replays verbatim too.
+        assert!(super::scale_flows(&st, 0, 100).is_empty());
+        assert_eq!(super::scale_flows(&st, 100, 100).len(), 2);
+        assert_eq!(super::scale_flows(&st, 7, 0).len(), 2);
     }
 
     #[test]

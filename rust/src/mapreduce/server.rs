@@ -120,6 +120,16 @@ pub struct TenantReport {
     pub cold_starts: u64,
     pub warm_starts: u64,
     pub cross_job_warm: u64,
+    /// Container attempts across the tenant's tasks (== tasks unless
+    /// failure injection forced re-executions).
+    pub task_attempts: u64,
+    /// Bytes of task work this tenant lost to injected crashes and
+    /// recomputed.
+    pub recomputed_bytes: u64,
+    /// Checkpoints the tenant's tasks wrote into the state store.
+    pub checkpoints: u64,
+    /// Virtual time the tenant's tasks spent writing them.
+    pub checkpoint_overhead: SimNs,
     /// IGFS cache activity attributed to this tenant's planning —
     /// including evictions it inflicted on co-tenants under pressure.
     pub igfs: CacheStats,
@@ -363,6 +373,10 @@ impl<'a> JobServer<'a> {
                     cold_starts: 0,
                     warm_starts: 0,
                     cross_job_warm: 0,
+                    task_attempts: 0,
+                    recomputed_bytes: 0,
+                    checkpoints: 0,
+                    checkpoint_overhead: SimNs::ZERO,
                     igfs: CacheStats::default(),
                 };
                 for run in jobs.iter().filter(|r| &r.tenant == name) {
@@ -372,6 +386,10 @@ impl<'a> JobServer<'a> {
                     for s in &run.stages {
                         rep.cold_starts += s.cold_starts;
                         rep.warm_starts += s.warm_starts;
+                        rep.task_attempts += s.task_attempts;
+                        rep.recomputed_bytes += s.recomputed_bytes;
+                        rep.checkpoints += s.checkpoints;
+                        rep.checkpoint_overhead += s.checkpoint_overhead;
                         rep.igfs.add(&s.igfs);
                     }
                 }

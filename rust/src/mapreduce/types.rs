@@ -7,6 +7,7 @@
 //! runtime uses compact binary — this drives the Table 1 intermediate
 //! expansion factors).
 
+use crate::coordinator::recovery::{FailurePlan, RecoveryConfig};
 use crate::igfs::CacheStats;
 use crate::net::DeviceRole;
 use crate::sim::SimNs;
@@ -92,6 +93,16 @@ pub struct SystemConfig {
     /// reduced by exactly one worker over inputs gathered in mapper
     /// order, so worker count is invisible in every output bit.
     pub reduce_workers: usize,
+    /// Checkpoint/recovery policy for map/reduce tasks. Active in the
+    /// time plane only while `failures` is armed; the stateless
+    /// baseline (`recovery.stateful == false`) restarts failed tasks
+    /// from byte zero.
+    pub recovery: RecoveryConfig,
+    /// Deterministic fault injection (container crashes, DataNode
+    /// loss). Disabled by default; with any plan, job *outputs* stay
+    /// byte-identical to the failure-free run — failures move only
+    /// virtual time and attempt counts.
+    pub failures: FailurePlan,
 }
 
 /// Parse one worker-count override value (the pure half of `from_env`,
@@ -103,19 +114,30 @@ fn parse_workers(val: Option<&str>) -> Option<usize> {
 
 impl SystemConfig {
     /// Apply environment overrides: `MARVEL_MAP_WORKERS` /
-    /// `MARVEL_REDUCE_WORKERS` force the data-plane worker counts.
-    /// Every preset constructor applies this, so CI's determinism
-    /// matrix can sweep worker counts across the whole test suite —
-    /// the byte-identical contract means outputs cannot change, only
-    /// wall-clock can. Explicit field assignment after construction
-    /// still wins (the pinned determinism tests rely on that).
+    /// `MARVEL_REDUCE_WORKERS` force the data-plane worker counts, and
+    /// `MARVEL_FAILURE_SEED` re-seeds the failure plan (inert until a
+    /// plan arms `crash_prob`/`lose_datanodes`, so the plain test
+    /// suite is unaffected; the recovery tests build their plans on
+    /// top of it, which is how CI sweeps fault schedules). Every
+    /// preset constructor applies this, so CI's determinism matrix can
+    /// sweep knobs across the whole test suite — the byte-identical
+    /// contract means outputs cannot change, only wall-clock can.
+    /// Explicit field assignment after construction still wins (the
+    /// pinned determinism tests rely on that).
     pub fn from_env(self) -> SystemConfig {
         let map = std::env::var("MARVEL_MAP_WORKERS").ok();
         let reduce = std::env::var("MARVEL_REDUCE_WORKERS").ok();
-        self.with_worker_overrides(
+        let fseed = std::env::var("MARVEL_FAILURE_SEED").ok();
+        let mut cfg = self.with_worker_overrides(
             parse_workers(map.as_deref()),
             parse_workers(reduce.as_deref()),
-        )
+        );
+        if let Some(seed) =
+            fseed.as_deref().and_then(|s| s.trim().parse::<u64>().ok())
+        {
+            cfg.failures.seed = seed;
+        }
+        cfg
     }
 
     /// Apply already-parsed worker overrides (`None` = leave as-is).
@@ -152,6 +174,10 @@ impl SystemConfig {
             materialize_cap: 32 * MIB,
             map_workers: 0,
             reduce_workers: 0,
+            // Corral has no state store to checkpoint into: failed
+            // functions restart from zero (the paper's observation).
+            recovery: RecoveryConfig { stateful: false, ..Default::default() },
+            failures: FailurePlan::disabled(),
         }
         .from_env()
     }
@@ -175,6 +201,8 @@ impl SystemConfig {
             materialize_cap: 32 * MIB,
             map_workers: 0,
             reduce_workers: 0,
+            recovery: RecoveryConfig::default(),
+            failures: FailurePlan::disabled(),
         }
         .from_env()
     }
@@ -236,6 +264,9 @@ impl SystemConfig {
             materialize_cap: 32 * MIB,
             map_workers: 0,
             reduce_workers: 0,
+            // Corral library on-prem: no checkpointing either.
+            recovery: RecoveryConfig { stateful: false, ..Default::default() },
+            failures: FailurePlan::disabled(),
         }
         .from_env()
     }
@@ -306,6 +337,18 @@ pub struct JobResult {
     /// How the job's input splits resolved when they came from an
     /// upstream pipeline stage (all-zero for path-staged inputs).
     pub handoff: HandoffStats,
+    /// Container attempts across all tasks (== tasks when no failures
+    /// were injected; each injected crash adds a re-execution).
+    pub task_attempts: u64,
+    /// Bytes of split/partition work lost to crashes and redone —
+    /// the fig8 stateful-vs-stateless comparison metric.
+    pub recomputed_bytes: u64,
+    /// Checkpoints written into the IGFS state store by this job's
+    /// tasks (stateful recovery under an armed failure plan).
+    pub checkpoints: u64,
+    /// Virtual time this job's tasks spent writing checkpoints — the
+    /// price of stateful recovery on the failure-free path.
+    pub checkpoint_overhead: SimNs,
 }
 
 impl JobResult {
@@ -330,6 +373,10 @@ impl JobResult {
             rt_compute_ns: 0,
             igfs: CacheStats::default(),
             handoff: HandoffStats::default(),
+            task_attempts: 0,
+            recomputed_bytes: 0,
+            checkpoints: 0,
+            checkpoint_overhead: SimNs::ZERO,
         }
     }
 
@@ -411,6 +458,26 @@ mod tests {
         a.add(&HandoffStats { dram: 10, ..Default::default() });
         assert_eq!(a.dram, 11);
         assert_eq!(a.resolved(), 11 + 2 + 3 + 4);
+    }
+
+    #[test]
+    fn recovery_defaults_match_platform_story() {
+        // Marvel checkpoints into the state store; Corral (Lambda and
+        // the on-prem library) restarts from zero. No preset arms
+        // failure injection by itself.
+        assert!(SystemConfig::marvel_igfs().recovery.stateful);
+        assert!(SystemConfig::marvel_hdfs().recovery.stateful);
+        assert!(!SystemConfig::corral_lambda().recovery.stateful);
+        assert!(!SystemConfig::onprem(DeviceRole::Ssd, false)
+            .recovery
+            .stateful);
+        for cfg in [
+            SystemConfig::marvel_igfs(),
+            SystemConfig::corral_lambda(),
+            SystemConfig::onprem(DeviceRole::Pmem, true),
+        ] {
+            assert!(!cfg.failures.enabled(), "{}", cfg.name);
+        }
     }
 
     #[test]

@@ -51,8 +51,14 @@ pub enum Stage {
     Arrive(BarrierId),
     /// Block until the barrier has received all its arrivals.
     Await(BarrierId),
-    /// Abort this proc (quota exceeded, injected fault). The engine keeps
-    /// running; the failure is recorded on the proc.
+    /// A non-fatal fault event: one container attempt of this proc
+    /// died (injected failure). The event is timestamped into the
+    /// engine's [`CrashEvent`] log and the proc *continues* with its
+    /// next stage — which is the retry attempt the driver compiled
+    /// behind it. Contrast [`Stage::Fail`], which terminates the proc.
+    Crash(String),
+    /// Abort this proc (quota exceeded, retry budget exhausted). The
+    /// engine keeps running; the failure is recorded on the proc.
     Fail(String),
 }
 
@@ -102,6 +108,15 @@ pub struct FlowLog {
     pub end: SimNs,
 }
 
+/// One injected container crash, timestamped on the virtual clock
+/// (recorded by [`Stage::Crash`]; the proc lives on to retry).
+#[derive(Clone, Debug)]
+pub struct CrashEvent {
+    pub at: SimNs,
+    pub proc_label: String,
+    pub what: String,
+}
+
 /// The discrete-event engine: procs, pools, barriers, flows, timers.
 pub struct Engine {
     pub flows: FlowSim,
@@ -114,6 +129,8 @@ pub struct Engine {
     flow_owner: Vec<(FlowId, ProcId, SimNs)>,
     now: SimNs,
     pub flow_log: Vec<FlowLog>,
+    /// Injected container crashes, in virtual-time order.
+    pub crash_log: Vec<CrashEvent>,
     /// Per-class weights for contended slot grants (absent = 1).
     class_weights: HashMap<u32, u64>,
 }
@@ -137,6 +154,7 @@ impl Engine {
             flow_owner: Vec::new(),
             now: SimNs::ZERO,
             flow_log: Vec::new(),
+            crash_log: Vec::new(),
             class_weights: HashMap::new(),
         }
     }
@@ -231,6 +249,16 @@ impl Engine {
             }
             _ => None,
         })
+    }
+
+    /// Injected crashes among procs whose label starts with `prefix` —
+    /// the job-scoped companion of [`Engine::failure_with_prefix`] for
+    /// non-fatal [`Stage::Crash`] events.
+    pub fn crashes_with_prefix(&self, prefix: &str) -> usize {
+        self.crash_log
+            .iter()
+            .filter(|c| c.proc_label.starts_with(prefix))
+            .count()
     }
 
     /// Ids of procs that ended in `Failed`.
@@ -341,6 +369,13 @@ impl Engine {
                         self.procs[id.0].state = ProcState::Blocked;
                         return;
                     }
+                }
+                Stage::Crash(what) => {
+                    self.crash_log.push(CrashEvent {
+                        at: self.now,
+                        proc_label: self.procs[id.0].label.clone(),
+                        what,
+                    });
                 }
                 Stage::Fail(msg) => {
                     self.procs[id.0].state = ProcState::Failed(msg);
@@ -521,6 +556,40 @@ mod tests {
         assert!(matches!(e.state(f), ProcState::Failed(m) if m == "quota"));
         assert_eq!(*e.state(g), ProcState::Finished);
         assert_eq!(e.failures().len(), 1);
+    }
+
+    #[test]
+    fn crash_is_logged_and_proc_retries() {
+        // A crashed attempt releases its slot through the fair queue
+        // and the same proc carries on with its retry stages; the
+        // crash is timestamped, the proc finishes normally.
+        let mut e = Engine::new();
+        let pool = e.add_pool(1);
+        let p = e.spawn("task", vec![
+            Stage::Acquire(pool),
+            Stage::Delay(SimNs::from_millis(4)),
+            Stage::Release(pool),
+            Stage::Crash("attempt 1 died".into()),
+            Stage::Acquire(pool),
+            Stage::Delay(SimNs::from_millis(6)),
+            Stage::Release(pool),
+        ]);
+        let other = e.spawn("other", vec![
+            Stage::Acquire(pool),
+            Stage::Delay(SimNs::from_millis(1)),
+            Stage::Release(pool),
+        ]);
+        let end = e.run().unwrap();
+        assert_eq!(*e.state(p), ProcState::Finished);
+        assert_eq!(*e.state(other), ProcState::Finished);
+        assert_eq!(e.crash_log.len(), 1);
+        assert_eq!(e.crash_log[0].at, SimNs::from_millis(4));
+        assert_eq!(e.crash_log[0].proc_label, "task");
+        assert_eq!(e.crashes_with_prefix("task"), 1);
+        assert_eq!(e.crashes_with_prefix("other"), 0);
+        assert_eq!(e.failures().len(), 0, "a crash is not a failure");
+        // The released slot served `other` between the attempts.
+        assert_eq!(end, SimNs::from_millis(11));
     }
 
     #[test]

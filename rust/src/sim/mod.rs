@@ -6,5 +6,7 @@ pub mod engine;
 pub mod flow;
 
 pub use clock::SimNs;
-pub use engine::{BarrierId, Engine, FlowLog, PoolId, ProcId, ProcState, Stage};
+pub use engine::{
+    BarrierId, CrashEvent, Engine, FlowLog, PoolId, ProcId, ProcState, Stage,
+};
 pub use flow::{FlowId, FlowSim, ResourceId};

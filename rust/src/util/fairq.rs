@@ -73,6 +73,19 @@ impl<T> FairQueue<T> {
     /// Dequeue the head of the backlogged class with the smallest
     /// virtual time (ties: smallest class id) and charge it one grant.
     /// `weight_of` maps a class to its share (0 is treated as 1).
+    ///
+    /// A class drained by this pop has its (now empty) queue pruned: a
+    /// long-lived server cycles through unboundedly many tenant
+    /// classes, and an empty `VecDeque` per ever-seen class is an
+    /// unbounded leak. The class's virtual-time *tag* is deliberately
+    /// kept — dropping it would shed the grant just charged, letting a
+    /// class that drains on every grant (the crash-retry
+    /// Release→Acquire shape) re-enter at the clock and outcompete or
+    /// even starve heavier backlogged classes. Stale tags are
+    /// reclaimed by the amortized sweep below once the clock passes
+    /// them, at which point they are indistinguishable from absent
+    /// ([`FairQueue::push`] catches a re-arriving class up to the
+    /// clock either way).
     pub fn pop(&mut self, weight_of: impl Fn(u32) -> u64) -> Option<(u32, T)> {
         let class = self
             .queues
@@ -83,6 +96,10 @@ impl<T> FairQueue<T> {
             .1;
         let item = self.queues.get_mut(&class)?.pop_front()?;
         self.charge(class, weight_of(class));
+        if self.queues.get(&class).is_some_and(|q| q.is_empty()) {
+            self.queues.remove(&class);
+        }
+        self.sweep_stale();
         Some((class, item))
     }
 
@@ -91,12 +108,31 @@ impl<T> FairQueue<T> {
     /// slot acquire), so backfilled service still counts against the
     /// class when contention later arrives. The per-grant charge is
     /// floored at 1 so a weight above [`SCALE`] still advances the
-    /// class's tag (otherwise it would monopolize the queue).
+    /// class's tag (otherwise it would monopolize the queue). Also
+    /// sweeps — a pool that never contends only ever calls `charge`,
+    /// and its per-class tags must not leak either.
     pub fn charge(&mut self, class: u32, weight: u64) {
         let v = self.vtime.entry(class).or_insert(self.vclock);
         let start = (*v).max(self.vclock);
         self.vclock = start;
         *v = start + (SCALE / weight.max(1)).max(1);
+        self.sweep_stale();
+    }
+
+    /// Amortized sweep of stale tags (drained classes, and classes
+    /// that only ever consumed uncontended grants): once the clock has
+    /// caught up to a queue-less class's tag it carries no
+    /// information, so it can go. Triggered only when the stale set
+    /// dominates the backlogged one, keeping pop/charge
+    /// O(backlogged classes) amortized under a moving clock. (A clock
+    /// that never advances — every class granted exactly once, ever —
+    /// keeps its tags; reclamation rides on classes being granted
+    /// repeatedly, which is what real pools do.)
+    fn sweep_stale(&mut self) {
+        if self.vtime.len() > 2 * self.queues.len() + 8 {
+            let (vclock, queues) = (self.vclock, &self.queues);
+            self.vtime.retain(|c, v| queues.contains_key(c) || *v > vclock);
+        }
     }
 }
 
@@ -218,6 +254,95 @@ mod tests {
             (0..3).map(|_| q.pop(weights(&w)).unwrap().0).collect();
         assert!(first3.contains(&2),
                 "light class starved by over-SCALE weight: {first3:?}");
+    }
+
+    #[test]
+    fn drained_classes_are_pruned() {
+        // Regression: a long-lived JobServer cycles through unbounded
+        // tenant classes; drained classes used to leave an empty
+        // VecDeque behind forever.
+        let mut q = FairQueue::new();
+        for class in 0..1000u32 {
+            q.push(class, class);
+        }
+        while q.pop(|_| 1).is_some() {}
+        assert!(q.is_empty());
+        assert_eq!(q.queues.len(), 0, "drained queues must be pruned");
+        // Tags outlive their queues just long enough to keep fairness
+        // exact; once later traffic advances the clock past them, the
+        // amortized sweep reclaims them too.
+        for i in 0..2000 {
+            q.push(1000, i);
+        }
+        while q.pop(|_| 1).is_some() {}
+        assert!(q.vtime.len() <= 9,
+                "stale tags not reclaimed: {}", q.vtime.len());
+        // Pruning does not change scheduling: a re-arriving class is
+        // caught up to the clock exactly as an idle class would be.
+        q.push(7, 1);
+        assert_eq!(q.pop(|_| 1), Some((7, 1)));
+    }
+
+    #[test]
+    fn drain_requeue_class_cannot_shed_its_charge() {
+        // A class whose queue drains on every grant (the crash-retry
+        // Release→Acquire shape) must keep its virtual-time charge:
+        // if draining dropped the tag, a low-id single-item cycler
+        // would re-enter at the clock and starve heavier backlogged
+        // classes outright.
+        let mut q = FairQueue::new();
+        let w = [(1u32, 1u64), (2, 3)];
+        for i in 0..30 {
+            q.push(2, i); // weight-3 class, steadily backlogged
+        }
+        q.push(1, 100); // weight-1 class, re-queued after every grant
+        let mut grants1 = 0;
+        for _ in 0..24 {
+            let (c, _) = q.pop(weights(&w)).unwrap();
+            if c == 1 {
+                grants1 += 1;
+                q.push(1, 100);
+            }
+        }
+        // 1:3 weights → the cycler gets ~1/4 of grants, not 1/2+.
+        assert!((4..=8).contains(&grants1),
+                "drain-requeue class took {grants1}/24 grants");
+    }
+
+    #[test]
+    fn uncontended_pool_tags_are_swept_from_charge() {
+        // A pool with spare capacity never queues — only charge()
+        // runs. One-shot tenant classes must still be reclaimed once
+        // the clock moves past them (a pop may never come).
+        let mut q: FairQueue<u32> = FairQueue::new();
+        for _ in 0..20 {
+            q.charge(1, 1); // a busy class advances the clock
+        }
+        for class in 100..200 {
+            q.charge(class, 1); // one-shot tenants, never seen again
+        }
+        for _ in 0..2 {
+            q.charge(1, 1); // the clock passes the stale tags
+        }
+        assert!(q.vtime.len() <= 9,
+                "charge-only tags leaked: {}", q.vtime.len());
+    }
+
+    #[test]
+    fn charge_only_tags_are_swept() {
+        // Classes that only ever consumed uncontended grants (charge
+        // without push) must not leak tags once the clock passes them.
+        let mut q: FairQueue<u32> = FairQueue::new();
+        for class in 0..100u32 {
+            q.charge(class, 1);
+        }
+        // A later backlogged stream advances the clock past the stale
+        // tags; the amortized sweep reclaims them.
+        for i in 0..200 {
+            q.push(1000, i);
+        }
+        while q.pop(|_| 1).is_some() {}
+        assert!(q.vtime.len() <= 9, "stale charge tags: {}", q.vtime.len());
     }
 
     #[test]

@@ -1,0 +1,273 @@
+//! End-to-end recovery determinism: with any armed `FailurePlan`, a
+//! job's *outputs* are byte-identical to the failure-free run — at any
+//! `{map,reduce}_workers` setting and under a multi-tenant co-run.
+//! Failures move only virtual time and attempt counts. Stateless
+//! recovery recomputes strictly more bytes than stateful; an exhausted
+//! retry budget surfaces as a job error, never a wrong answer; a lost
+//! DataNode is transparent with replication and a job error without.
+//!
+//! The crash schedules derive from `MARVEL_FAILURE_SEED` (default 42)
+//! via `SystemConfig::from_env`, which is how CI's determinism matrix
+//! sweeps fault schedules: the byte-identity assertions here must hold
+//! for *every* seed.
+
+use marvel::coordinator::ClusterSpec;
+use marvel::mapreduce::{
+    output_key, run_job, stage_input, stage_named_input, Cluster,
+    JobResult, JobServer, StoreKind, SystemConfig,
+};
+use marvel::net::NodeId;
+use marvel::runtime::RtEngine;
+use marvel::util::bytes::MIB;
+use marvel::workloads::WordCount;
+
+const SEED: u64 = 11;
+const INPUT: u64 = 4 * MIB;
+
+/// Arm `cfg` with container-crash injection that always stays inside
+/// the retry budget (max 2 crashes per task vs 3 attempts), over a
+/// tight checkpoint interval so resumes are meaningful.
+fn arm(cfg: &mut SystemConfig, crash_prob: f64) {
+    cfg.failures.crash_prob = crash_prob;
+    cfg.failures.max_failures_per_task = 2;
+    cfg.recovery.max_attempts = 3;
+    cfg.recovery.interval_bytes = 64 * 1024;
+}
+
+/// Every reducer's output bytes for `job`, read back through the
+/// configured output store.
+fn collect_outputs(
+    cluster: &mut Cluster,
+    cfg: &SystemConfig,
+    job: &str,
+    n_reduces: usize,
+) -> Vec<Option<Vec<u8>>> {
+    (0..n_reduces)
+        .map(|j| {
+            let key = output_key(job, j);
+            let p = match cfg.output_store {
+                StoreKind::Igfs => cluster
+                    .stores
+                    .igfs
+                    .get(&cluster.topo, NodeId(0), &key, 0)
+                    .map(|(p, _)| p),
+                StoreKind::Hdfs => cluster
+                    .stores
+                    .hdfs
+                    .read(&cluster.topo, NodeId(0), &key, 0)
+                    .ok()
+                    .map(|(p, _, _, _)| p),
+                StoreKind::S3 => cluster.stores.s3.get(&key),
+            };
+            p.map(|p| p.gather().expect("real output"))
+        })
+        .collect()
+}
+
+/// Run one wordcount over 16 real splits on `nodes` nodes; return the
+/// report plus every reducer's output bytes (empty when the job
+/// failed before planning reducers).
+fn run_wc(cfg: &SystemConfig, nodes: usize) -> (JobResult, Vec<Option<Vec<u8>>>) {
+    let mut cluster = ClusterSpec::with_nodes(nodes).deploy(cfg);
+    cluster.stores.hdfs.block_size = 256 * 1024;
+    let mut rt = RtEngine::load(None).unwrap();
+    let wc = WordCount::new(4000, 1.07, &rt);
+    let input = stage_input(&mut cluster, cfg, &wc, INPUT, SEED).unwrap();
+    let r = run_job(&mut cluster, cfg, &wc, &input, &mut rt, SEED);
+    let outs =
+        collect_outputs(&mut cluster, cfg, &wc.name().to_string(), r.reduce.tasks);
+    (r, outs)
+}
+
+#[test]
+fn injected_failures_keep_outputs_byte_identical() {
+    let base = SystemConfig::marvel_igfs();
+    let (r0, o0) = run_wc(&base, 1);
+    assert!(r0.ok(), "{:?}", r0.failed);
+    assert!(r0.map.tasks > 1, "need real splits");
+    assert_eq!(
+        r0.task_attempts,
+        (r0.map.tasks + r0.reduce.tasks) as u64,
+        "failure-free: one attempt per task"
+    );
+    assert_eq!(r0.recomputed_bytes, 0);
+    assert_eq!(r0.checkpoints, 0, "no plan armed, no checkpoint cost");
+    assert!(o0.iter().any(|o| o.as_ref().is_some_and(|b| !b.is_empty())));
+
+    for workers in [1usize, 4, 8] {
+        let mut cfg = SystemConfig::marvel_igfs();
+        cfg.map_workers = workers;
+        cfg.reduce_workers = workers;
+        arm(&mut cfg, 0.7);
+        let (r, o) = run_wc(&cfg, 1);
+        assert!(r.ok(), "workers={workers}: {:?}", r.failed);
+        assert_eq!(o, o0, "outputs diverged at workers={workers}");
+        assert_eq!(r.output_bytes, r0.output_bytes);
+        assert_eq!(r.intermediate_bytes, r0.intermediate_bytes);
+        assert_eq!(r.reduce.bytes_in, r0.reduce.bytes_in);
+        // Attempts/bookkeeping may move; bytes may not. Stateful
+        // checkpointing runs on every task once the plan is armed.
+        assert!(
+            r.task_attempts >= r0.task_attempts,
+            "attempts can only grow: {} vs {}",
+            r.task_attempts,
+            r0.task_attempts
+        );
+        assert!(r.checkpoints > 0, "armed stateful plan checkpoints");
+        assert!(r.checkpoint_overhead.as_nanos() > 0);
+    }
+}
+
+#[test]
+fn same_plan_same_schedule_same_times() {
+    // The whole injected run is deterministic: identical config →
+    // identical attempt counts, recomputed bytes, and virtual times.
+    let run = || {
+        let mut cfg = SystemConfig::marvel_igfs();
+        arm(&mut cfg, 0.7);
+        run_wc(&cfg, 1).0
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.task_attempts, b.task_attempts);
+    assert_eq!(a.recomputed_bytes, b.recomputed_bytes);
+    assert_eq!(a.job_time, b.job_time);
+}
+
+#[test]
+fn stateless_recovery_recomputes_strictly_more() {
+    // Fixed seed (explicit assignment wins over MARVEL_FAILURE_SEED):
+    // every task crashes exactly once mid-split; stateful resumes from
+    // a 32 KiB-interval checkpoint, stateless restarts from zero.
+    let mk = |stateful: bool| {
+        let mut cfg = SystemConfig::marvel_igfs();
+        cfg.failures.crash_prob = 1.0;
+        cfg.failures.max_failures_per_task = 1;
+        cfg.failures.seed = 1337;
+        cfg.recovery.max_attempts = 3;
+        cfg.recovery.interval_bytes = 32 * 1024;
+        cfg.recovery.stateful = stateful;
+        run_wc(&cfg, 1)
+    };
+    let (st, so) = mk(true);
+    let (sl, slo) = mk(false);
+    assert!(st.ok(), "{:?}", st.failed);
+    assert!(sl.ok(), "{:?}", sl.failed);
+    assert_eq!(so, slo, "recovery mode changes work, never bytes");
+    assert!(
+        st.recomputed_bytes < sl.recomputed_bytes,
+        "stateful {} must recompute less than stateless {}",
+        st.recomputed_bytes,
+        sl.recomputed_bytes
+    );
+    assert!(st.checkpoints > 0);
+    assert_eq!(sl.checkpoints, 0, "stateless writes no checkpoints");
+    assert_eq!(
+        st.task_attempts, sl.task_attempts,
+        "same crash schedule either way"
+    );
+}
+
+#[test]
+fn exhausted_retry_budget_is_a_job_error() {
+    let mut cfg = SystemConfig::marvel_igfs();
+    cfg.failures.crash_prob = 1.0;
+    cfg.failures.max_failures_per_task = 10; // >= max_attempts: doomed
+    cfg.failures.seed = 5;
+    cfg.recovery.max_attempts = 3;
+    cfg.recovery.interval_bytes = 64 * 1024;
+    let (r, _) = run_wc(&cfg, 1);
+    assert!(!r.ok(), "a task out of attempts must fail the job");
+    let msg = r.failed.unwrap();
+    assert!(
+        msg.contains("retry budget exhausted"),
+        "error names the budget: {msg}"
+    );
+}
+
+#[test]
+fn datanode_loss_is_transparent_with_replication() {
+    // Failure-free baseline at the same shape (4 nodes, 2 replicas).
+    let mut base = SystemConfig::marvel_igfs();
+    base.replication = 2;
+    let (r0, o0) = run_wc(&base, 4);
+    assert!(r0.ok(), "{:?}", r0.failed);
+
+    // Kill the writer-local DataNode (node 0 holds a replica of every
+    // input block): reads fall back to survivors, bytes unchanged.
+    let mut cfg = SystemConfig::marvel_igfs();
+    cfg.replication = 2;
+    cfg.failures.lose_datanodes = vec![0];
+    let (r, o) = run_wc(&cfg, 4);
+    assert!(r.ok(), "{:?}", r.failed);
+    assert_eq!(o, o0, "surviving replicas serve identical bytes");
+    assert_eq!(r.output_bytes, r0.output_bytes);
+
+    // Without replication the sole replica dies with the node: the
+    // job errors — it never fabricates an answer.
+    let mut lone = SystemConfig::marvel_igfs();
+    lone.replication = 1;
+    lone.failures.lose_datanodes = vec![0];
+    let (r, _) = run_wc(&lone, 4);
+    assert!(!r.ok(), "sole-replica loss must be a job error");
+    assert!(r.failed.unwrap().contains("no live replica"));
+
+    // A typo'd node id must error, not silently run failure-free.
+    let mut typo = SystemConfig::marvel_igfs();
+    typo.failures.lose_datanodes = vec![9];
+    let (r, _) = run_wc(&typo, 4);
+    assert!(!r.ok(), "unknown DataNode id must fail the plan");
+    assert!(r.failed.unwrap().contains("cluster has 4"));
+}
+
+#[test]
+fn corun_under_failures_matches_solo_outputs() {
+    // Solo, failure-free reference.
+    let (r0, o0) = run_wc(&SystemConfig::marvel_igfs(), 1);
+    assert!(r0.ok(), "{:?}", r0.failed);
+
+    // Two tenants co-run the same workload on one shared cluster with
+    // crash injection armed: per-tenant outputs must match solo.
+    let mut cfg = SystemConfig::marvel_igfs();
+    cfg.map_workers = 2;
+    cfg.reduce_workers = 2;
+    arm(&mut cfg, 0.6);
+    let mut cluster = ClusterSpec::default().deploy(&cfg);
+    cluster.stores.hdfs.block_size = 256 * 1024;
+    let mut rt = RtEngine::load(None).unwrap();
+    let wc = WordCount::new(4000, 1.07, &rt);
+    let in_a = stage_named_input(&mut cluster, &cfg, &wc, INPUT, SEED,
+                                 "alice/in")
+        .unwrap();
+    let in_b = stage_named_input(&mut cluster, &cfg, &wc, INPUT, SEED,
+                                 "bob/in")
+        .unwrap();
+    let res = JobServer::new()
+        .tenant("alice", 3)
+        .tenant("bob", 1)
+        .job("alice", &wc, cfg.clone(), &in_a, SEED)
+        .job("bob", &wc, cfg.clone(), &in_b, SEED)
+        .run(&mut cluster, &mut rt);
+    assert!(res.ok(), "{:?}", res.failed);
+    for run in &res.jobs {
+        let jr = run.final_stage().unwrap();
+        let outs =
+            collect_outputs(&mut cluster, &cfg, &jr.job, jr.reduce.tasks);
+        assert_eq!(outs, o0, "tenant {} diverged from solo", run.tenant);
+    }
+    // Attempt accounting rolls up per tenant.
+    let attempts: u64 =
+        res.tenants.iter().map(|t| t.task_attempts).sum();
+    let tasks: u64 = res
+        .jobs
+        .iter()
+        .flat_map(|j| &j.stages)
+        .map(|s| (s.map.tasks + s.reduce.tasks) as u64)
+        .sum();
+    assert!(attempts >= tasks);
+    // Checkpoint accounting rolls up per tenant too (armed stateful
+    // plan → every tenant's tasks checkpointed).
+    for t in &res.tenants {
+        assert!(t.checkpoints > 0, "tenant {} wrote no checkpoints", t.name);
+        assert!(t.checkpoint_overhead.as_nanos() > 0);
+    }
+}
