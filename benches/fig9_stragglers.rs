@@ -1,0 +1,177 @@
+//! Figure 9 (repo extension): heterogeneous node speeds + speculative
+//! execution — tail latency quantified.
+//!
+//! One wordcount runs on a 4-node cluster with one straggler node
+//! (staging node kept fast so task placement spreads), sweeping the
+//! straggler slowdown × speculation on/off. Reported per cell: virtual
+//! makespan, backups launched, races the backup won, and task
+//! attempts. Outputs are byte-count-identical in every cell (asserted
+//! — stragglers and speculation are time-plane-only knobs). Expected
+//! shape: without speculation the makespan tracks the slowdown almost
+//! linearly (the slow node's tasks are the critical path); with
+//! speculation most of the slowdown is recovered for bounded duplicate
+//! work (one backup per laggard). Emits `BENCH_fig9_stragglers.json`
+//! through the same `util::bench::write_report` flow `bench_diff.py`
+//! consumes.
+
+use std::path::Path;
+
+use marvel::coordinator::ClusterSpec;
+use marvel::mapreduce::{run_job, stage_named_input, SystemConfig};
+use marvel::net::StragglerProfile;
+use marvel::runtime::RtEngine;
+use marvel::util::bench::{write_report, Bench, BenchResult};
+use marvel::util::bytes::MIB;
+use marvel::workloads::WordCount;
+
+const SEED: u64 = 42;
+const INPUT: u64 = 8 * MIB;
+const NODES: usize = 4;
+const SLOTS: usize = 8;
+const PROB: f64 = 0.4;
+
+/// Straggler seed with node 0 (staging/locality) fast and exactly one
+/// slow node among the rest — deterministic scan over the pure
+/// `speed_of` function, so the bench shape is stable across runs.
+fn mixed_seed(slowdown: f64) -> u64 {
+    (0..50_000u64)
+        .find(|&s| {
+            let p = StragglerProfile { seed: s, prob: PROB, slowdown };
+            let sp = p.speeds(NODES);
+            sp[0] == 1.0
+                && sp[1..].iter().filter(|v| **v < 1.0).count() == 1
+        })
+        .expect("a mixed straggler draw exists")
+}
+
+fn cfg_for(slowdown: f64, speculation: bool) -> SystemConfig {
+    let mut c = SystemConfig::marvel_igfs();
+    c.map_workers = 2;
+    c.reduce_workers = 2;
+    if slowdown > 1.0 {
+        c.stragglers = StragglerProfile {
+            seed: mixed_seed(slowdown),
+            prob: PROB,
+            slowdown,
+        };
+    }
+    c.speculation.enabled = speculation;
+    c
+}
+
+struct Cell {
+    makespan_s: f64,
+    backups: u64,
+    wins: u64,
+    attempts: u64,
+    output_bytes: u64,
+}
+
+fn run_cell(cfg: &SystemConfig) -> Cell {
+    let mut rt = RtEngine::load(None).expect("rt");
+    let mut cluster = ClusterSpec {
+        nodes: NODES,
+        slots_per_node: SLOTS,
+        ..Default::default()
+    }
+    .deploy(cfg);
+    cluster.stores.hdfs.block_size = 256 * 1024; // 32 splits from 8 MiB
+    let wc = WordCount::new(10_000, 1.07, &rt);
+    let input =
+        stage_named_input(&mut cluster, cfg, &wc, INPUT, SEED, "wc/in")
+            .expect("stage");
+    let r = run_job(&mut cluster, cfg, &wc, &input, &mut rt, SEED);
+    assert!(r.ok(), "{:?}", r.failed);
+    Cell {
+        makespan_s: r.job_time.as_secs_f64(),
+        backups: r.spec_backups,
+        wins: r.spec_backup_wins,
+        attempts: r.task_attempts,
+        output_bytes: r.output_bytes,
+    }
+}
+
+fn main() {
+    let bench = Bench::new(1, 3);
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+
+    let mut baseline_output = None;
+    for &slowdown in &[1.0f64, 2.0, 4.0, 8.0] {
+        let mut cells = Vec::new();
+        for spec_on in [false, true] {
+            let mode = if spec_on { "spec-on" } else { "spec-off" };
+            let cfg = cfg_for(slowdown, spec_on);
+            let mut cell = None;
+            let r = bench.run(
+                &format!("wordcount 8 MiB, slowdown={slowdown}, {mode}"),
+                || {
+                    let c = run_cell(&cfg);
+                    let out = c.output_bytes;
+                    cell = Some(c);
+                    out
+                },
+            );
+            println!("{}", r.summary());
+            let cell = cell.expect("bench ran");
+            // The straggler determinism contract, asserted per cell:
+            // node speeds and speculation never move output bytes.
+            match baseline_output {
+                None => baseline_output = Some(cell.output_bytes),
+                Some(b) => assert_eq!(
+                    cell.output_bytes, b,
+                    "outputs must be byte-count-identical at \
+                     slowdown={slowdown}"
+                ),
+            }
+            println!(
+                "  {mode} x{slowdown}: {:.3} virtual s, {} backups \
+                 ({} won), {} attempts",
+                cell.makespan_s, cell.backups, cell.wins, cell.attempts,
+            );
+            let tag = format!("x{:02}_{mode}", slowdown as u32);
+            metrics.push((format!("{tag}_virtual_makespan_s"),
+                          cell.makespan_s));
+            metrics.push((format!("{tag}_spec_backups"),
+                          cell.backups as f64));
+            metrics.push((format!("{tag}_spec_backup_wins"),
+                          cell.wins as f64));
+            metrics.push((format!("{tag}_task_attempts"),
+                          cell.attempts as f64));
+            cells.push(cell);
+            results.push(r);
+        }
+        // The fig9 shape. Uniform cluster: nothing lags the median, so
+        // speculation must be a no-op. Pronounced stragglers: backups
+        // must launch and cut the makespan.
+        if slowdown <= 1.0 {
+            assert_eq!(cells[1].backups, 0,
+                       "uniform cluster must not speculate");
+            assert!(
+                (cells[1].makespan_s - cells[0].makespan_s).abs()
+                    < 1e-9 + 0.01 * cells[0].makespan_s,
+                "speculation-on must be a no-op on a uniform cluster"
+            );
+        } else if slowdown >= 4.0 {
+            assert!(cells[1].backups > 0,
+                    "stragglers at x{slowdown} must trigger backups");
+            assert!(
+                cells[1].makespan_s < cells[0].makespan_s,
+                "speculation must reduce makespan at x{slowdown}: \
+                 on={} off={}",
+                cells[1].makespan_s,
+                cells[0].makespan_s
+            );
+        }
+    }
+
+    let refs: Vec<&BenchResult> = results.iter().collect();
+    let met: Vec<(&str, f64)> =
+        metrics.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let out = Path::new("BENCH_fig9_stragglers.json");
+    match write_report(out, &refs, &met) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+    println!("fig9_stragglers done");
+}

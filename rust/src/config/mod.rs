@@ -152,6 +152,30 @@ impl ExperimentConfig {
             system.failures.lose_datanodes =
                 crate::coordinator::FailurePlan::parse_datanode_list(s)?;
         }
+        // [stragglers] — heterogeneous node speeds. Time plane only:
+        // outputs stay byte-identical under any profile.
+        system.stragglers.prob = doc
+            .f64_or("stragglers", "prob", system.stragglers.prob)
+            .clamp(0.0, 1.0);
+        system.stragglers.slowdown = doc
+            .f64_or("stragglers", "slowdown", system.stragglers.slowdown)
+            .max(1.0);
+        if let Some(v) = doc.get("stragglers", "seed") {
+            system.stragglers.seed = v.as_i64().unwrap_or(0) as u64;
+        }
+        // [speculation] — backup attempts racing projected laggards.
+        system.speculation.enabled = doc.bool_or(
+            "speculation",
+            "enabled",
+            system.speculation.enabled,
+        );
+        system.speculation.lag_factor = doc
+            .f64_or(
+                "speculation",
+                "lag_factor",
+                system.speculation.lag_factor,
+            )
+            .max(1.0);
         let tenants =
             parse_tenant_spec(doc.str_or("server", "tenants", ""))?;
         let corun_workloads: Vec<String> = doc
@@ -292,6 +316,43 @@ lose_datanodes = "0, 2"
         // Absent sections leave the plan disabled.
         let plain = ExperimentConfig::parse("").unwrap();
         assert!(!plain.system.failures.enabled());
+    }
+
+    #[test]
+    fn straggler_and_speculation_sections_parse() {
+        let cfg = ExperimentConfig::parse(
+            r#"
+[stragglers]
+prob = 0.25
+slowdown = 8.0
+seed = 21
+[speculation]
+enabled = true
+lag_factor = 2.0
+"#,
+        )
+        .unwrap();
+        assert!(cfg.system.stragglers.enabled());
+        assert!((cfg.system.stragglers.prob - 0.25).abs() < 1e-12);
+        assert!((cfg.system.stragglers.slowdown - 8.0).abs() < 1e-12);
+        // An explicit [stragglers] seed wins over MARVEL_STRAGGLER_SEED
+        // (parse order: preset/env first, then the file).
+        assert_eq!(cfg.system.stragglers.seed, 21);
+        assert!(cfg.system.speculation.enabled);
+        assert!((cfg.system.speculation.lag_factor - 2.0).abs() < 1e-12);
+        // Degenerate values are clamped to sane policy.
+        let clamped = ExperimentConfig::parse(
+            "[stragglers]\nprob = 7.0\nslowdown = 0.5\n\
+             [speculation]\nlag_factor = 0.2\n",
+        )
+        .unwrap();
+        assert!((clamped.system.stragglers.prob - 1.0).abs() < 1e-12);
+        assert!((clamped.system.stragglers.slowdown - 1.0).abs() < 1e-12);
+        assert!((clamped.system.speculation.lag_factor - 1.0).abs() < 1e-12);
+        // Absent sections leave both knobs inert.
+        let plain = ExperimentConfig::parse("").unwrap();
+        assert!(!plain.system.stragglers.enabled());
+        assert!(!plain.system.speculation.enabled);
     }
 
     #[test]

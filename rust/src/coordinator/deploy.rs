@@ -63,6 +63,10 @@ impl ClusterSpec {
             wan_gbps: self.wan_gbps,
             wan_rtt: self.objstore.request_rtt,
             with_hdd: true,
+            // Heterogeneous node speeds: a pure function of the
+            // profile's seed, so the same config always deploys the
+            // same straggler set (time plane only; bytes never move).
+            node_speeds: cfg.stragglers.speeds(self.nodes),
         }
         .build(&mut engine);
         let stores = Stores::new(
@@ -108,6 +112,23 @@ mod tests {
         assert_eq!(c.topo.n_nodes(), 4);
         assert_eq!(c.stores.hdfs.datanodes.len(), 4);
         assert_eq!(c.stores.igfs.caches.len(), 4);
+    }
+
+    #[test]
+    fn straggler_profile_reaches_the_topology() {
+        use crate::net::{NodeId, StragglerProfile};
+        let mut cfg = SystemConfig::marvel_igfs();
+        cfg.stragglers = StragglerProfile { seed: 5, prob: 1.0, slowdown: 4.0 };
+        let c = ClusterSpec::with_nodes(3).deploy(&cfg);
+        for i in 0..3 {
+            assert!((c.topo.speed_of(NodeId(i)) - 0.25).abs() < 1e-12);
+        }
+        // Disabled profile: uniform cluster, bit-for-bit legacy speeds.
+        let c = ClusterSpec::with_nodes(3)
+            .deploy(&SystemConfig::marvel_igfs());
+        for i in 0..3 {
+            assert_eq!(c.topo.speed_of(NodeId(i)), 1.0);
+        }
     }
 
     #[test]

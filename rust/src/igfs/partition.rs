@@ -48,8 +48,24 @@ impl PartitionMap {
             .collect()
     }
 
-    pub fn remove(&mut self, node: NodeId) {
+    /// Remove a member (cache-node loss / rebalance). Refuses to drop
+    /// the *last* member: rendezvous hashing over zero nodes has no
+    /// owner for any key, and `owner`/`owners` would panic on the next
+    /// lookup — losing the whole cache tier is cluster teardown, not a
+    /// rebalance, and must surface as an error the caller can report
+    /// instead of a latent panic (reachable via an all-nodes
+    /// `lose_datanodes` failure plan). Returns whether the node was a
+    /// member.
+    pub fn remove(&mut self, node: NodeId) -> Result<bool, String> {
+        if self.members == [node] {
+            return Err(format!(
+                "cannot remove {node:?}: it is the last partition-map \
+                 member — every key would be ownerless"
+            ));
+        }
+        let before = self.members.len();
         self.members.retain(|n| *n != node);
+        Ok(self.members.len() < before)
     }
 
     pub fn add(&mut self, node: NodeId) {
@@ -91,7 +107,7 @@ mod tests {
     fn membership_change_moves_few_keys() {
         let before = map(5);
         let mut after = before.clone();
-        after.remove(NodeId(4));
+        assert_eq!(after.remove(NodeId(4)), Ok(true));
         let mut moved = 0;
         for i in 0..1000 {
             let k = format!("key-{i}");
@@ -101,6 +117,28 @@ mod tests {
         }
         // Only keys owned by the removed node (≈1/5) should move.
         assert!(moved < 300, "moved {moved}");
+    }
+
+    #[test]
+    fn removing_the_last_member_is_refused() {
+        // Regression: `remove` could empty `members`, after which
+        // `owner()` panicked on `.unwrap()` — reachable through an
+        // all-nodes `lose_datanodes` plan. The last member now stays
+        // and the caller gets an error to report.
+        let mut m = map(2);
+        assert_eq!(m.remove(NodeId(0)), Ok(true));
+        assert_eq!(m.remove(NodeId(0)), Ok(false), "already gone");
+        let err = m.remove(NodeId(1)).unwrap_err();
+        assert!(err.contains("last partition-map member"), "{err}");
+        // The map is still total: every key has an owner, no panic.
+        assert_eq!(m.members(), &[NodeId(1)]);
+        for k in ["a", "b", "x/y/z"] {
+            assert_eq!(m.owner(k), NodeId(1));
+            assert_eq!(m.owners(k, 3), vec![NodeId(1)]);
+        }
+        // Removing a non-member of a singleton map is a no-op, not an
+        // error (the guard is about emptying, not about membership).
+        assert_eq!(m.remove(NodeId(9)), Ok(false));
     }
 
     #[test]

@@ -19,6 +19,13 @@
 //! IGFS checkpoint, stateless ones restart from zero, and an exhausted
 //! retry budget surfaces as a job error. Outputs stay byte-identical
 //! to the failure-free run; see `ARCHITECTURE.md` (Fault tolerance).
+//!
+//! Stragglers & speculation: nodes carry speed factors
+//! (`net::StragglerProfile` → `Topology::speed_of`), task procs spawn
+//! speed-scaled, and with `SystemConfig::speculation` enabled the
+//! planner backs up projected laggards with racing copies — first
+//! finisher wins, the loser is cancelled and its container returns
+//! warm. See `ARCHITECTURE.md` (Stragglers & speculation).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -29,13 +36,14 @@ use crate::igfs::{CacheStats, Tier};
 use crate::metrics::{tags, IoSummary};
 use crate::net::{NodeId, Topology};
 use crate::runtime::{RtEngine, RtStats};
-use crate::sim::{BarrierId, Engine, PoolId, SimNs, Stage};
+use crate::sim::{BarrierId, Engine, PoolId, ProcId, SimNs, Stage};
 use crate::storage::Payload;
 use crate::yarn::{ContainerRequest, ResourceManager};
 
 use super::shuffle::{interm_key, output_key, KeyHome, Stores};
 use super::types::{
-    HandoffStats, JobResult, PhaseStats, Platform, StoreKind, SystemConfig,
+    HandoffStats, JobResult, PhaseStats, Platform, SpeculationConfig,
+    StoreKind, SystemConfig,
 };
 use super::workload::{task_rng, MapOutput, ReduceOutput, Workload};
 
@@ -325,6 +333,11 @@ fn compile_attempts(
     stages: &mut Vec<Stage>,
 ) -> (PoolId, SimNs) {
     let per_ckpt = cfg.recovery.per_checkpoint;
+    // The reported overhead is *virtual time spent*: the engine
+    // stretches this proc's Delay stages by 1/node-speed, so the tally
+    // must stretch identically or a straggler's checkpoint cost would
+    // be under-reported.
+    let speed = cluster.topo.speed_of(node);
     let mut overhead = SimNs::ZERO;
     let mut slot = PoolId(0);
     for (a, seg) in tr.segments.iter().enumerate() {
@@ -343,7 +356,7 @@ fn compile_attempts(
             let d = SimNs::from_nanos(
                 per_ckpt.as_nanos() * seg.checkpoints as u64,
             );
-            overhead += d;
+            overhead += d.div_speed(speed);
             stages.push(Stage::Delay(d));
         }
         if seg.crashed {
@@ -361,6 +374,159 @@ fn compile_attempts(
     (slot, overhead)
 }
 
+/// Plan-time speculation decisions for one phase's tasks: which tasks
+/// get a backup attempt, on which node, and when backups launch.
+///
+/// A task is backed up when its *projected* duration (`work / rate /
+/// node speed` — the driver knows every node's speed factor, the DES
+/// analog of observing task progress) exceeds the configured lag
+/// factor × the phase median. Backups go to the fastest nodes,
+/// rotating across equally-fast hosts and avoiding the original's
+/// node when the cluster has more than one; they launch at the phase
+/// median — the instant Hadoop's speculative scheduler would notice
+/// the task running long past its peers.
+fn plan_backups(
+    topo: &Topology,
+    sc: &SpeculationConfig,
+    nodes: &[NodeId],
+    ests: &[f64],
+) -> (Vec<Option<NodeId>>, SimNs) {
+    let none = (vec![None; ests.len()], SimNs::ZERO);
+    if !sc.enabled || ests.is_empty() {
+        return none;
+    }
+    let mut sorted = ests.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let median = sorted[sorted.len() / 2];
+    if !median.is_finite() || median <= 0.0 {
+        return none;
+    }
+    let lag = if sc.lag_factor.is_finite() {
+        sc.lag_factor.max(1.0)
+    } else {
+        return none;
+    };
+    let mut by_speed: Vec<NodeId> =
+        (0..topo.n_nodes()).map(NodeId).collect();
+    by_speed.sort_by(|a, b| {
+        topo.speed_of(*b)
+            .total_cmp(&topo.speed_of(*a))
+            .then(a.0.cmp(&b.0))
+    });
+    let backups = ests
+        .iter()
+        .enumerate()
+        .map(|(i, est)| {
+            if *est <= lag * median {
+                return None;
+            }
+            // Fastest node that is NOT the original's host, rotating
+            // across equally-fast candidates for spread. Even when the
+            // original already sits on the unique fastest node (a
+            // skewed split, not a slow host), the backup goes to the
+            // best *other* host — racing on queueing alone against
+            // yourself is pointless. Only a single-node cluster falls
+            // back to sharing the original's host.
+            let others: Vec<NodeId> = by_speed
+                .iter()
+                .copied()
+                .filter(|n| *n != nodes[i])
+                .collect();
+            if others.is_empty() {
+                return Some(nodes[i]);
+            }
+            let top = topo.speed_of(others[0]);
+            let fast: Vec<NodeId> = others
+                .iter()
+                .copied()
+                .filter(|n| topo.speed_of(*n) >= top)
+                .collect();
+            Some(fast[i % fast.len()])
+        })
+        .collect();
+    (backups, SimNs::from_secs_f64(median))
+}
+
+/// Compile and spawn one speculative backup attempt: after the phase
+/// gate it idles until `launch` (the lag-detection instant), then
+/// re-acquires a slot on `node` *through the fair queue* under the
+/// same tenant class, replays the original's input volumes, pays the
+/// compute at its own node's speed, optionally stages its in-flight
+/// partial checkpoint under the task's speculative scratch key, replays
+/// the output-write volumes, and closes the race: `Cancel` the
+/// original, `Arrive` at the phase barrier. Returns the backup's proc
+/// id so the caller can append the mirror-image `Cancel` + `Arrive`
+/// tail to the original — first finisher wins, loser is reaped with
+/// its container returned warm.
+///
+/// Input/output replays reuse the original's stage volumes (the bytes
+/// are identical by construction); only the compute delay is
+/// re-derived, since the engine scales it by the backup node's speed.
+#[allow(clippy::too_many_arguments)] // one per racer coordinate
+fn compile_backup(
+    cluster: &mut Cluster,
+    cfg: &SystemConfig,
+    spec: &ActionSpec,
+    node: NodeId,
+    gate: Option<BarrierId>,
+    launch: SimNs,
+    replay: &[Stage],
+    work: u64,
+    rate: f64,
+    out_stages: &[Stage],
+    arrive: BarrierId,
+    cancel: ProcId,
+    label: &str,
+    scratch: Option<(String, Vec<u8>)>,
+) -> Result<ProcId, String> {
+    let class = cluster.tenant;
+    let mut stages = Vec::new();
+    if let Some(g) = gate {
+        stages.push(Stage::Await(g));
+    }
+    if launch > SimNs::ZERO {
+        stages.push(Stage::Delay(launch));
+    }
+    let (slot, startup) = invoke_once(cluster, cfg, spec, node);
+    stages.push(Stage::Acquire(slot));
+    stages.push(Stage::Delay(startup));
+    stages.extend(replay.iter().cloned());
+    if work > 0 && rate > 0.0 {
+        stages.push(Stage::Delay(SimNs::from_secs_f64(
+            work as f64 / rate,
+        )));
+    }
+    if let Some((key, partial)) = scratch {
+        // The backup's in-flight partial checkpoint, staged under the
+        // task's speculative scratch prefix. The caller scrubs that
+        // prefix with `Stores::clear_prefix` once the race is
+        // compiled, so a write-once backend (HDFS) can never collide
+        // with a survivor of a cancelled attempt on re-execution.
+        let st = cluster.stores.write_intermediate(
+            &mut cluster.engine,
+            &cluster.topo,
+            cfg.intermediate_store,
+            node,
+            &key,
+            Payload::real(partial),
+        )?;
+        stages.extend(st);
+        stages.push(Stage::Delay(cfg.recovery.per_checkpoint));
+    }
+    stages.extend(out_stages.iter().cloned());
+    stages.push(Stage::Release(slot));
+    stages.push(Stage::Cancel(cancel));
+    stages.push(Stage::Arrive(arrive));
+    let speed = cluster.topo.speed_of(node);
+    let pid = cluster.engine.spawn_scaled(label, class, speed, stages);
+    if cfg.platform == Platform::OpenWhisk {
+        cluster.controller.complete(spec, node);
+    } else {
+        cluster.lambda.finish();
+    }
+    Ok(pid)
+}
+
 /// Stage-level recovery bookkeeping accumulated across map and reduce
 /// tasks (lands in the [`JobResult`] counters).
 #[derive(Default)]
@@ -373,6 +539,27 @@ struct RecoveryTally {
     /// and `plan_stage` must error before any further output bytes
     /// land under the job's shared keys.
     doomed: Option<String>,
+}
+
+impl RecoveryTally {
+    /// Account a speculative backup's scratch checkpoint — written
+    /// only while a stateful failure plan is armed, mirroring the
+    /// stage `compile_backup` compiles. The overhead is *virtual time
+    /// spent*: the engine stretches the backup's Delay by
+    /// 1/node-speed, so the tally stretches identically.
+    fn tally_scratch_ckpt(
+        &mut self,
+        cluster: &Cluster,
+        cfg: &SystemConfig,
+        node: NodeId,
+    ) {
+        if !cfg.failures.enabled() || !cfg.recovery.stateful {
+            return;
+        }
+        let speed = cluster.topo.speed_of(node);
+        self.checkpoints += 1;
+        self.overhead += cfg.recovery.per_checkpoint.div_speed(speed);
+    }
 }
 
 /// One container invocation on the configured platform: the slot pool
@@ -549,11 +736,13 @@ pub fn run_job(
         Ok(r) => r,
         Err(e) => {
             let input_bytes = match cfg.input_store {
+                // Stat-free probe: sizing an error report must not
+                // count a phantom GET (same contract as
+                // `Stores::locate`).
                 StoreKind::S3 => cluster
                     .stores
                     .s3
-                    .get(input)
-                    .map(|p| p.len())
+                    .len_of(input)
                     .unwrap_or(0),
                 _ => cluster
                     .stores
@@ -633,6 +822,7 @@ pub struct PlannedStage {
     recomputed_bytes: u64,
     checkpoints: u64,
     checkpoint_overhead: SimNs,
+    spec_backups: u64,
 }
 
 impl PlannedStage {
@@ -662,6 +852,14 @@ pub fn finalize_stage(
     if let Some(msg) = cluster.engine.failure_with_prefix(&prefix) {
         return Err(format!("task failed: {msg}"));
     }
+    // Speculation census: every resolved race cancelled exactly one
+    // racer — a cancelled backup lost, a cancelled original means the
+    // backup won.
+    let cancelled = cluster.engine.cancelled_with_prefix(&prefix);
+    let spec_backup_wins = cancelled
+        .iter()
+        .filter(|l| !l.ends_with("/bak"))
+        .count() as u64;
     let maps_end = cluster
         .engine
         .barrier_opened_at(p.maps_done)
@@ -713,6 +911,8 @@ pub fn finalize_stage(
         recomputed_bytes: p.recomputed_bytes,
         checkpoints: p.checkpoints,
         checkpoint_overhead: p.checkpoint_overhead,
+        spec_backups: p.spec_backups,
+        spec_backup_wins,
     })
 }
 
@@ -919,11 +1119,41 @@ pub fn plan_stage(
     // IGFS state store and `compile_attempts` turns its segments into
     // stages. The data plane above already ran — failures move only
     // virtual time and attempt counts, never bytes.
+    //
+    // Speculation (when enabled): tasks projected to lag the phase
+    // median get a backup attempt racing the original — see
+    // `plan_backups` / `compile_backup`. Decisions derive only from
+    // split sizes and node speeds, never from data.
+    let map_rate = wl.map_rate();
+    let map_nodes: Vec<NodeId> =
+        (0..splits.len()).map(|i| map_allocs[i].node).collect();
+    let map_ests: Vec<f64> = splits
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            if map_rate > 0.0 {
+                s.len as f64 / map_rate / cluster.topo.speed_of(map_nodes[i])
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let (map_backups, map_launch) =
+        plan_backups(&cluster.topo, &cfg.speculation, &map_nodes, &map_ests);
+    let mut spec_backups = 0u64;
     for ((i, mo), in_stages) in
         map_outs.into_iter().enumerate().zip(in_stages_per_split)
     {
         let node = map_allocs[i].node;
         let split = &splits[i];
+        let partial = mo.total_bytes().to_le_bytes();
+        // Clone the input-read volumes only when a backup will replay
+        // them; the common path keeps its zero-clone shape.
+        let replay: Vec<Stage> = if map_backups[i].is_some() {
+            in_stages.clone()
+        } else {
+            Vec::new()
+        };
         let mut stages = Vec::new();
         if let Some(gate) = after {
             // Chained submission: maps start only once the upstream
@@ -938,7 +1168,7 @@ pub fn plan_stage(
                 "map",
                 i as u64,
                 split.len,
-                &mo.total_bytes().to_le_bytes(),
+                &partial,
                 &mut tally,
             ))
         } else {
@@ -973,6 +1203,7 @@ pub fn plan_stage(
                 (slot, tr.recovered)
             }
         };
+        let mut out_st: Vec<Stage> = Vec::new();
         if ok {
             for (j, part) in mo.partitions.into_iter().enumerate() {
                 if part.is_empty() {
@@ -988,10 +1219,20 @@ pub fn plan_stage(
                     &key,
                     part,
                 )?;
-                stages.extend(st);
+                out_st.extend(st);
             }
-            stages.push(Stage::Release(slot));
-            stages.push(Stage::Arrive(maps_done));
+            if map_backups[i].is_none() {
+                // No race: move the write stages in (clone only for
+                // the speculated minority, which replays them).
+                stages.append(&mut out_st);
+                stages.push(Stage::Release(slot));
+                stages.push(Stage::Arrive(maps_done));
+            } else {
+                stages.extend(out_st.iter().cloned());
+                stages.push(Stage::Release(slot));
+                // The Cancel + Arrive tail is appended below, once the
+                // backup's proc id exists — the race's closing move.
+            }
         } else {
             // Retry budget exhausted: the task produced nothing. Still
             // open the barrier (co-tenants must not deadlock) and
@@ -1006,13 +1247,55 @@ pub fn plan_stage(
             stages.push(Stage::Fail(msg.clone()));
             tally.doomed.get_or_insert(msg);
         }
-        cluster.engine.spawn_as(&format!("{job}/map{i}"), class, stages);
+        let speed = cluster.topo.speed_of(node);
+        let orig = cluster.engine.spawn_scaled(
+            &format!("{job}/map{i}"),
+            class,
+            speed,
+            stages,
+        );
         if ok {
             if cfg.platform == Platform::OpenWhisk {
                 cluster.controller.complete(&map_spec, node);
             } else {
                 cluster.lambda.finish();
             }
+        }
+        if let (Some(bnode), true) = (map_backups[i], ok) {
+            let scratch_prefix = format!("{job}/spec/map{i}/");
+            let scratch = if inject && cfg.recovery.stateful {
+                Some((format!("{scratch_prefix}ckpt"), partial.to_vec()))
+            } else {
+                None
+            };
+            let bak = compile_backup(
+                cluster,
+                cfg,
+                &map_spec,
+                bnode,
+                after,
+                map_launch,
+                &replay,
+                split.len,
+                wl.map_rate(),
+                &out_st,
+                maps_done,
+                orig,
+                &format!("{job}/map{i}/bak"),
+                scratch,
+            )?;
+            cluster.engine.append_stages(
+                orig,
+                vec![Stage::Cancel(bak), Stage::Arrive(maps_done)],
+            );
+            // Scrub the task's speculative scratch keys: whichever
+            // racer loses, its partial checkpoint is garbage, and a
+            // re-planned stage must never collide with it on a
+            // write-once backend.
+            cluster.stores.clear_prefix(&scratch_prefix);
+            tally.tally_scratch_ckpt(cluster, cfg, bnode);
+            tally.task_attempts += 1;
+            spec_backups += 1;
         }
     }
     // A doomed map means the shuffle is incomplete: running the reduce
@@ -1085,13 +1368,37 @@ pub fn plan_stage(
         r_workers,
     );
 
-    // -- time plane, partition order (attempt schedules mirror map's).
+    // -- time plane, partition order (attempt schedules mirror map's;
+    // speculation, when enabled, races laggard reducers exactly like
+    // laggard maps — gated on the same `maps_done` barrier).
+    let reduce_rate = wl.reduce_rate();
+    let red_nodes: Vec<NodeId> = plans.iter().map(|p| p.node).collect();
+    let red_ests: Vec<f64> = inputs_per_part
+        .iter()
+        .enumerate()
+        .map(|(j, inputs)| {
+            let b: u64 = inputs.iter().map(|p| p.len()).sum();
+            if reduce_rate > 0.0 {
+                b as f64 / reduce_rate / cluster.topo.speed_of(red_nodes[j])
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let (red_backups, red_launch) =
+        plan_backups(&cluster.topo, &cfg.speculation, &red_nodes, &red_ests);
     let mut output_bytes = 0u64;
     for (j, (plan, ro)) in
         plans.into_iter().zip(reduce_outs).enumerate()
     {
         let in_bytes: u64 =
             inputs_per_part[j].iter().map(|p| p.len()).sum();
+        let partial = ro.output.len().to_le_bytes();
+        let replay: Vec<Stage> = if red_backups[j].is_some() {
+            plan.in_stages.clone()
+        } else {
+            Vec::new()
+        };
         let mut stages = vec![Stage::Await(maps_done)];
         let (slot, ok) = match plan.invoked {
             Some((slot, startup)) => {
@@ -1112,7 +1419,7 @@ pub fn plan_stage(
                     "red",
                     j as u64,
                     in_bytes,
-                    &ro.output.len().to_le_bytes(),
+                    &partial,
                     &mut tally,
                 );
                 let (slot, ck) = compile_attempts(
@@ -1130,6 +1437,7 @@ pub fn plan_stage(
                 (slot, tr.recovered)
             }
         };
+        let mut out_st: Vec<Stage> = Vec::new();
         if ok {
             if !ro.output.is_empty() {
                 output_bytes += ro.output.len();
@@ -1141,10 +1449,16 @@ pub fn plan_stage(
                     &output_key(&job, j),
                     ro.output,
                 )?;
-                stages.extend(st);
+                out_st.extend(st);
             }
-            stages.push(Stage::Release(slot));
-            stages.push(Stage::Arrive(job_done));
+            if red_backups[j].is_none() {
+                stages.append(&mut out_st);
+                stages.push(Stage::Release(slot));
+                stages.push(Stage::Arrive(job_done));
+            } else {
+                stages.extend(out_st.iter().cloned());
+                stages.push(Stage::Release(slot));
+            }
         } else {
             stages.push(Stage::Arrive(job_done));
             let msg = format!(
@@ -1154,13 +1468,51 @@ pub fn plan_stage(
             stages.push(Stage::Fail(msg.clone()));
             tally.doomed.get_or_insert(msg);
         }
-        cluster.engine.spawn_as(&format!("{job}/red{j}"), class, stages);
+        let speed = cluster.topo.speed_of(plan.node);
+        let orig = cluster.engine.spawn_scaled(
+            &format!("{job}/red{j}"),
+            class,
+            speed,
+            stages,
+        );
         if ok {
             if cfg.platform == Platform::OpenWhisk {
                 cluster.controller.complete(&reduce_spec, plan.node);
             } else {
                 cluster.lambda.finish();
             }
+        }
+        if let (Some(bnode), true) = (red_backups[j], ok) {
+            let scratch_prefix = format!("{job}/spec/red{j}/");
+            let scratch = if inject && cfg.recovery.stateful {
+                Some((format!("{scratch_prefix}ckpt"), partial.to_vec()))
+            } else {
+                None
+            };
+            let bak = compile_backup(
+                cluster,
+                cfg,
+                &reduce_spec,
+                bnode,
+                Some(maps_done),
+                red_launch,
+                &replay,
+                in_bytes,
+                wl.reduce_rate(),
+                &out_st,
+                job_done,
+                orig,
+                &format!("{job}/red{j}/bak"),
+                scratch,
+            )?;
+            cluster.engine.append_stages(
+                orig,
+                vec![Stage::Cancel(bak), Stage::Arrive(job_done)],
+            );
+            cluster.stores.clear_prefix(&scratch_prefix);
+            tally.tally_scratch_ckpt(cluster, cfg, bnode);
+            tally.task_attempts += 1;
+            spec_backups += 1;
         }
     }
     // Same protection as the map phase: a reducer out of attempts has
@@ -1206,6 +1558,7 @@ pub fn plan_stage(
         recomputed_bytes: tally.recomputed_bytes,
         checkpoints: tally.checkpoints,
         checkpoint_overhead: tally.overhead,
+        spec_backups,
     })
 }
 
@@ -1238,6 +1591,44 @@ mod tests {
         assert!(super::scale_flows(&st, 0, 100).is_empty());
         assert_eq!(super::scale_flows(&st, 100, 100).len(), 2);
         assert_eq!(super::scale_flows(&st, 7, 0).len(), 2);
+    }
+
+    #[test]
+    fn plan_backups_targets_laggards_on_fast_nodes() {
+        use crate::net::{NodeId, TopologyBuilder};
+        use crate::sim::Engine;
+        let mut e = Engine::new();
+        let topo = TopologyBuilder {
+            nodes: 4,
+            node_speeds: vec![1.0, 0.25, 1.0, 1.0],
+            ..Default::default()
+        }
+        .build(&mut e);
+        let sc = crate::mapreduce::SpeculationConfig::on();
+        // Equal work everywhere; node 1 is a 4× straggler, so only its
+        // task projects past 1.5× the median.
+        let nodes = vec![NodeId(0), NodeId(1), NodeId(2), NodeId(3)];
+        let ests = vec![1.0, 4.0, 1.0, 1.0];
+        let (backups, launch) =
+            super::plan_backups(&topo, &sc, &nodes, &ests);
+        assert_eq!(backups.iter().filter(|b| b.is_some()).count(), 1);
+        let bnode = backups[1].expect("straggler task backed up");
+        assert_ne!(bnode, NodeId(1), "backup avoids the slow node");
+        assert_eq!(topo.speed_of(bnode), 1.0, "backup goes to a fast node");
+        assert_eq!(launch, crate::sim::SimNs::from_secs_f64(1.0),
+                   "backups launch at the phase median");
+        // Disabled policy or uniform projections: no backups.
+        let off = crate::mapreduce::SpeculationConfig::disabled();
+        let (none, _) = super::plan_backups(&topo, &off, &nodes, &ests);
+        assert!(none.iter().all(|b| b.is_none()));
+        let (none, _) = super::plan_backups(
+            &topo, &sc, &nodes, &[2.0, 2.0, 2.0, 2.0],
+        );
+        assert!(none.iter().all(|b| b.is_none()));
+        // Zero-work phases never speculate.
+        let (none, _) =
+            super::plan_backups(&topo, &sc, &nodes, &[0.0; 4]);
+        assert!(none.iter().all(|b| b.is_none()));
     }
 
     #[test]

@@ -24,6 +24,6 @@ pub use server::{
 pub use shuffle::{interm_key, output_key, KeyHome, Stores};
 pub use types::{
     CombinerMode, HandoffStats, JobResult, PhaseStats, Platform, SerFormat,
-    StoreKind, SystemConfig,
+    SpeculationConfig, StoreKind, SystemConfig,
 };
 pub use workload::{task_rng, MapOutput, ReduceOutput, Workload};

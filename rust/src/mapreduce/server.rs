@@ -130,6 +130,11 @@ pub struct TenantReport {
     pub checkpoints: u64,
     /// Virtual time the tenant's tasks spent writing them.
     pub checkpoint_overhead: SimNs,
+    /// Speculative backup attempts launched for the tenant's tasks
+    /// (charged to its own fair-share class).
+    pub spec_backups: u64,
+    /// Races those backups won (the original was cancelled).
+    pub spec_backup_wins: u64,
     /// IGFS cache activity attributed to this tenant's planning —
     /// including evictions it inflicted on co-tenants under pressure.
     pub igfs: CacheStats,
@@ -377,6 +382,8 @@ impl<'a> JobServer<'a> {
                     recomputed_bytes: 0,
                     checkpoints: 0,
                     checkpoint_overhead: SimNs::ZERO,
+                    spec_backups: 0,
+                    spec_backup_wins: 0,
                     igfs: CacheStats::default(),
                 };
                 for run in jobs.iter().filter(|r| &r.tenant == name) {
@@ -390,6 +397,8 @@ impl<'a> JobServer<'a> {
                         rep.recomputed_bytes += s.recomputed_bytes;
                         rep.checkpoints += s.checkpoints;
                         rep.checkpoint_overhead += s.checkpoint_overhead;
+                        rep.spec_backups += s.spec_backups;
+                        rep.spec_backup_wins += s.spec_backup_wins;
                         rep.igfs.add(&s.igfs);
                     }
                 }

@@ -76,7 +76,10 @@ impl Stores {
         if let Some(inode) = self.hdfs.namenode.stat(key) {
             return Some((inode.len, KeyHome::Hdfs));
         }
-        self.s3.get(key).map(|p| (p.len(), KeyHome::S3))
+        // Stat-free probe: `ObjectStore::get` would count a GET plus
+        // the object's bytes against the store stats — a planning
+        // probe must not (regression: `locate_disturbs_no_statistics`).
+        self.s3.len_of(key).map(|len| (len, KeyHome::S3))
     }
 
     /// Delete every key under `prefix` from all three stores (and the
@@ -380,6 +383,38 @@ mod tests {
         assert_eq!(s.locate("h/k"), Some((22, KeyHome::Hdfs)));
         assert_eq!(s.locate("s/k"), Some((33, KeyHome::S3)));
         assert_eq!(s.locate("absent"), None);
+    }
+
+    #[test]
+    fn locate_disturbs_no_statistics() {
+        // Regression (mirrors igfs::cache's
+        // len_of_probes_both_tiers_without_stats): locate's "disturbs
+        // no statistics" contract used to be violated on the S3 leg —
+        // `ObjectStore::get` counted a GET plus the object's bytes for
+        // every planning probe.
+        let (mut e, t, mut s) = setup();
+        s.write_intermediate(&mut e, &t, StoreKind::Igfs, NodeId(0), "g/k",
+                             Payload::real(vec![1; 11]))
+            .unwrap();
+        s.write_intermediate(&mut e, &t, StoreKind::S3, NodeId(0), "s/k",
+                             Payload::real(vec![1; 33]))
+            .unwrap();
+        let igfs0 = s.igfs.stats();
+        let (gets0, out0) = (s.s3.stats.gets, s.s3.stats.bytes_out);
+        for _ in 0..3 {
+            assert_eq!(s.locate("g/k"), Some((11, KeyHome::Igfs)));
+            assert_eq!(s.locate("s/k"), Some((33, KeyHome::S3)));
+            assert_eq!(s.locate("absent"), None);
+        }
+        assert_eq!(s.s3.stats.gets, gets0, "locate must not count GETs");
+        assert_eq!(s.s3.stats.bytes_out, out0, "nor byte traffic");
+        let d = s.igfs.stats().delta_since(&igfs0);
+        assert_eq!(d.hits_dram + d.hits_backing + d.misses, 0);
+        // The stat-free probe agrees with a real get's length.
+        assert_eq!(s.s3.len_of("s/k"), Some(33));
+        assert_eq!(s.s3.len_of("absent"), None);
+        assert_eq!(s.s3.get("s/k").unwrap().len(), 33);
+        assert_eq!(s.s3.stats.gets, gets0 + 1, "real gets still count");
     }
 
     #[test]

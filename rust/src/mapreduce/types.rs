@@ -9,9 +9,51 @@
 
 use crate::coordinator::recovery::{FailurePlan, RecoveryConfig};
 use crate::igfs::CacheStats;
-use crate::net::DeviceRole;
+use crate::net::{DeviceRole, StragglerProfile};
 use crate::sim::SimNs;
 use crate::util::bytes::{GIB, MIB};
+
+/// Speculative-execution policy (Hadoop-style backup attempts): when a
+/// task's plan-time projected duration exceeds `lag_factor` × the
+/// stage median, a backup copy is compiled on the fastest other node.
+/// The backup launches once the median task would have finished,
+/// re-acquires a slot through the same weighted fair queue (charged to
+/// the same tenant class), and races the original — the first finisher
+/// cancels the loser (`sim::Stage::Cancel`), whose container returns
+/// warm. Off by default: the compiled plan is then bit-for-bit the
+/// legacy one.
+///
+/// Determinism contract: speculation moves only virtual time and
+/// attempt counts — outputs are byte-identical to the speculation-off
+/// run at any worker count, straggler seed, and under co-runs, because
+/// the data plane runs once at plan time and both racers replay the
+/// same byte volumes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpeculationConfig {
+    /// Master switch; off keeps the compiled plan bit-for-bit legacy.
+    pub enabled: bool,
+    /// Back a task up when its projected duration exceeds this
+    /// multiple of the stage median (values below 1 behave as 1).
+    pub lag_factor: f64,
+}
+
+impl Default for SpeculationConfig {
+    fn default() -> Self {
+        SpeculationConfig { enabled: false, lag_factor: 1.5 }
+    }
+}
+
+impl SpeculationConfig {
+    /// Speculation off (the default for every preset).
+    pub fn disabled() -> SpeculationConfig {
+        SpeculationConfig::default()
+    }
+
+    /// Speculation on with the default lag threshold.
+    pub fn on() -> SpeculationConfig {
+        SpeculationConfig { enabled: true, ..Default::default() }
+    }
+}
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 /// Which FaaS substrate runs the functions.
@@ -103,6 +145,13 @@ pub struct SystemConfig {
     /// byte-identical to the failure-free run — failures move only
     /// virtual time and attempt counts.
     pub failures: FailurePlan,
+    /// Heterogeneous node speeds (stragglers). Disabled by default;
+    /// arming it slows the sampled nodes' compute and devices in the
+    /// time plane only — outputs never move.
+    pub stragglers: StragglerProfile,
+    /// Speculative backup attempts racing projected laggards. Off by
+    /// default; like `stragglers`, a time-plane-only knob.
+    pub speculation: SpeculationConfig,
 }
 
 /// Parse one worker-count override value (the pure half of `from_env`,
@@ -128,6 +177,7 @@ impl SystemConfig {
         let map = std::env::var("MARVEL_MAP_WORKERS").ok();
         let reduce = std::env::var("MARVEL_REDUCE_WORKERS").ok();
         let fseed = std::env::var("MARVEL_FAILURE_SEED").ok();
+        let sseed = std::env::var("MARVEL_STRAGGLER_SEED").ok();
         let mut cfg = self.with_worker_overrides(
             parse_workers(map.as_deref()),
             parse_workers(reduce.as_deref()),
@@ -136,6 +186,15 @@ impl SystemConfig {
             fseed.as_deref().and_then(|s| s.trim().parse::<u64>().ok())
         {
             cfg.failures.seed = seed;
+        }
+        // Like the failure seed: inert until a profile arms `prob`,
+        // so the plain suite is unaffected; the straggler tests build
+        // their profiles on top of it, which is how CI sweeps
+        // straggler draws through the determinism matrix.
+        if let Some(seed) =
+            sseed.as_deref().and_then(|s| s.trim().parse::<u64>().ok())
+        {
+            cfg.stragglers.seed = seed;
         }
         cfg
     }
@@ -178,6 +237,8 @@ impl SystemConfig {
             // functions restart from zero (the paper's observation).
             recovery: RecoveryConfig { stateful: false, ..Default::default() },
             failures: FailurePlan::disabled(),
+            stragglers: StragglerProfile::disabled(),
+            speculation: SpeculationConfig::disabled(),
         }
         .from_env()
     }
@@ -203,6 +264,8 @@ impl SystemConfig {
             reduce_workers: 0,
             recovery: RecoveryConfig::default(),
             failures: FailurePlan::disabled(),
+            stragglers: StragglerProfile::disabled(),
+            speculation: SpeculationConfig::disabled(),
         }
         .from_env()
     }
@@ -267,6 +330,8 @@ impl SystemConfig {
             // Corral library on-prem: no checkpointing either.
             recovery: RecoveryConfig { stateful: false, ..Default::default() },
             failures: FailurePlan::disabled(),
+            stragglers: StragglerProfile::disabled(),
+            speculation: SpeculationConfig::disabled(),
         }
         .from_env()
     }
@@ -343,12 +408,21 @@ pub struct JobResult {
     /// Bytes of split/partition work lost to crashes and redone —
     /// the fig8 stateful-vs-stateless comparison metric.
     pub recomputed_bytes: u64,
-    /// Checkpoints written into the IGFS state store by this job's
-    /// tasks (stateful recovery under an armed failure plan).
+    /// Checkpoints written by this job's tasks under an armed stateful
+    /// failure plan: IGFS state-store checkpoints plus speculative
+    /// backups' scratch checkpoints.
     pub checkpoints: u64,
     /// Virtual time this job's tasks spent writing checkpoints — the
     /// price of stateful recovery on the failure-free path.
     pub checkpoint_overhead: SimNs,
+    /// Speculative backup attempts launched for this job's tasks
+    /// (0 unless `SystemConfig::speculation` is enabled and some task
+    /// projected past the lag threshold).
+    pub spec_backups: u64,
+    /// Races the backup won (the original was cancelled). The rest of
+    /// the backups lost and were cancelled themselves — either way
+    /// exactly one copy of each speculated task completed.
+    pub spec_backup_wins: u64,
 }
 
 impl JobResult {
@@ -377,6 +451,8 @@ impl JobResult {
             recomputed_bytes: 0,
             checkpoints: 0,
             checkpoint_overhead: SimNs::ZERO,
+            spec_backups: 0,
+            spec_backup_wins: 0,
         }
     }
 
@@ -478,6 +554,25 @@ mod tests {
         ] {
             assert!(!cfg.failures.enabled(), "{}", cfg.name);
         }
+    }
+
+    #[test]
+    fn straggler_and_speculation_defaults_are_inert() {
+        for cfg in [
+            SystemConfig::corral_lambda(),
+            SystemConfig::marvel_hdfs(),
+            SystemConfig::marvel_igfs(),
+            SystemConfig::onprem(DeviceRole::Ssd, false),
+        ] {
+            assert!(!cfg.stragglers.enabled(), "{}", cfg.name);
+            assert!(!cfg.speculation.enabled, "{}", cfg.name);
+        }
+        assert!(SpeculationConfig::on().enabled);
+        // Explicit field assignment after construction wins over the
+        // MARVEL_STRAGGLER_SEED env default, like the failure seed.
+        let mut c = SystemConfig::marvel_igfs();
+        c.stragglers.seed = 99;
+        assert_eq!(c.stragglers.seed, 99);
     }
 
     #[test]

@@ -9,4 +9,6 @@
 
 pub mod topology;
 
-pub use topology::{DevId, DeviceRole, NodeId, Topology, TopologyBuilder};
+pub use topology::{
+    DevId, DeviceRole, NodeId, StragglerProfile, Topology, TopologyBuilder,
+};

@@ -1,9 +1,14 @@
-//! Node / NIC / device wiring for the simulated cluster.
+//! Node / NIC / device wiring for the simulated cluster, including the
+//! heterogeneous-node-speed (straggler) model: each node carries a
+//! speed factor that scales its compute delays (via
+//! `sim::Engine::spawn_scaled`) and its storage devices' channel
+//! capacities/latencies (via `storage::MediaSpec::scaled`).
 
 use std::collections::BTreeMap;
 
 use crate::sim::{Engine, ResourceId, SimNs};
 use crate::storage::{Device, MediaSpec};
+use crate::util::rng::Rng;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 /// Index of a server node in the cluster topology.
@@ -22,6 +27,75 @@ pub enum DeviceRole {
     Dram,
 }
 
+/// Seed-driven heterogeneous node speeds — the straggler model. Real
+/// FaaS fleets are not uniform: a fraction of hosts run slow (thermal
+/// throttling, noisy neighbors, degraded media), and tail latency is
+/// set by them. Disabled by default (`prob == 0.0`): every node runs
+/// at speed 1.0 and the deployed cluster is bit-for-bit the legacy
+/// uniform one.
+///
+/// Determinism contract: a node's speed factor is a pure function of
+/// `(seed, node index)` — never of job data, worker counts, admission
+/// order, or co-tenants — so arming a profile moves only virtual time.
+/// Outputs stay byte-identical because the data plane never consults
+/// node speeds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StragglerProfile {
+    /// Seed driving the per-node straggler draw (independent of the
+    /// data seed; CI sweeps it via `MARVEL_STRAGGLER_SEED`).
+    pub seed: u64,
+    /// Per-node probability of being a straggler.
+    pub prob: f64,
+    /// Slowdown factor (≥ 1) for straggler nodes: every fixed-latency
+    /// stage of a task hosted there stretches by it (compute, startup,
+    /// access latencies, request RTTs — a slow host is slow at
+    /// everything it executes), and the node's storage devices serve
+    /// at `1/slowdown` of their healthy channel bandwidth. Link
+    /// *capacities* (NIC, WAN) stay uniform.
+    pub slowdown: f64,
+}
+
+impl Default for StragglerProfile {
+    fn default() -> Self {
+        StragglerProfile { seed: 17, prob: 0.0, slowdown: 4.0 }
+    }
+}
+
+impl StragglerProfile {
+    /// An inert profile (the default for every `SystemConfig` preset).
+    pub fn disabled() -> StragglerProfile {
+        StragglerProfile::default()
+    }
+
+    /// Whether this profile can slow any node at all.
+    pub fn enabled(&self) -> bool {
+        self.prob > 0.0 && self.slowdown > 1.0
+    }
+
+    /// Speed factor of one node: 1.0 for healthy nodes, `1/slowdown`
+    /// for stragglers. Pure function of `(seed, node)`.
+    pub fn speed_of(&self, node: usize) -> f64 {
+        if !self.enabled() {
+            return 1.0;
+        }
+        let mut rng = Rng::new(
+            self.seed
+                ^ (node as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        if rng.chance(self.prob) {
+            1.0 / self.slowdown.max(1.0)
+        } else {
+            1.0
+        }
+    }
+
+    /// Speed factors for a cluster of `n` nodes (feeds
+    /// [`TopologyBuilder::node_speeds`]).
+    pub fn speeds(&self, n: usize) -> Vec<f64> {
+        (0..n).map(|i| self.speed_of(i)).collect()
+    }
+}
+
 #[derive(Clone, Debug)]
 /// One server: its devices by role plus NIC channels.
 pub struct Node {
@@ -31,6 +105,10 @@ pub struct Node {
     pub devices: BTreeMap<DeviceRole, DevId>,
     /// Container slots this node can host (invoker capacity).
     pub slots: usize,
+    /// Compute/device speed factor (1.0 = healthy; a 0.25-speed node
+    /// is a 4× straggler). The driver spawns this node's task procs
+    /// with it and the builder scales the node's device media by it.
+    pub speed: f64,
 }
 
 /// The deployed cluster: nodes, devices, LAN/WAN shared links.
@@ -60,6 +138,11 @@ impl Topology {
 
     pub fn device_of(&self, node: NodeId, role: DeviceRole) -> Option<DevId> {
         self.node(node).devices.get(&role).copied()
+    }
+
+    /// Speed factor of a node (1.0 = healthy, `< 1` = straggler).
+    pub fn speed_of(&self, id: NodeId) -> f64 {
+        self.node(id).speed
     }
 
     pub fn n_nodes(&self) -> usize {
@@ -100,6 +183,11 @@ pub struct TopologyBuilder {
     pub wan_gbps: f64,
     pub wan_rtt: SimNs,
     pub with_hdd: bool,
+    /// Per-node speed factors (index = node id; missing entries and
+    /// non-positive values mean 1.0). Typically produced by
+    /// [`StragglerProfile::speeds`]. NICs and the WAN stay uniform —
+    /// the model is heterogeneous *compute and storage*, not links.
+    pub node_speeds: Vec<f64>,
 }
 
 impl Default for TopologyBuilder {
@@ -116,6 +204,7 @@ impl Default for TopologyBuilder {
             wan_gbps: 5.0,
             wan_rtt: SimNs::from_millis(20),
             with_hdd: false,
+            node_speeds: Vec::new(),
         }
     }
 }
@@ -129,6 +218,12 @@ impl TopologyBuilder {
         let mut membus = Vec::with_capacity(self.nodes);
         for i in 0..self.nodes {
             let name = format!("node{i}");
+            let speed = self
+                .node_speeds
+                .get(i)
+                .copied()
+                .filter(|s| s.is_finite() && *s > 0.0)
+                .unwrap_or(1.0);
             let nic_in = engine
                 .add_resource(&format!("{name}.nic.in"), gbps(self.nic_gbps));
             let nic_out = engine
@@ -145,7 +240,9 @@ impl TopologyBuilder {
                 let dev = Device::new(
                     engine,
                     &format!("{name}.{:?}", role).to_lowercase(),
-                    spec,
+                    // A straggler node's media serve proportionally
+                    // slower (scaled channel capacity + latency).
+                    spec.scaled(speed),
                 );
                 devices.push(dev);
                 map.insert(role, DevId(devices.len() - 1));
@@ -166,6 +263,7 @@ impl TopologyBuilder {
                 nic_out,
                 devices: map,
                 slots: self.slots_per_node,
+                speed,
             });
         }
         let wan_up = engine.add_resource("wan.up", gbps(self.wan_gbps));
@@ -225,6 +323,91 @@ mod tests {
         }]);
         let end = e.run().unwrap();
         assert!((end.as_secs_f64() - 1.0).abs() < 0.01, "{end}");
+    }
+
+    #[test]
+    fn default_nodes_run_at_full_speed() {
+        let (_, t) = topo(3);
+        for i in 0..3 {
+            assert_eq!(t.speed_of(NodeId(i)), 1.0);
+        }
+    }
+
+    #[test]
+    fn straggler_profile_is_deterministic_and_inert_by_default() {
+        let off = StragglerProfile::disabled();
+        assert!(!off.enabled());
+        assert_eq!(off.speeds(8), vec![1.0; 8]);
+        let p = StragglerProfile { seed: 3, prob: 0.5, slowdown: 4.0 };
+        assert!(p.enabled());
+        assert_eq!(p.speeds(16), p.speeds(16), "pure function of seed");
+        for s in p.speeds(64) {
+            assert!(s == 1.0 || (s - 0.25).abs() < 1e-12, "{s}");
+        }
+        // Probability 1 slows every node; slowdown 1 slows none.
+        let all = StragglerProfile { seed: 1, prob: 1.0, slowdown: 2.0 };
+        assert!(all.speeds(4).iter().all(|s| (*s - 0.5).abs() < 1e-12));
+        let none = StragglerProfile { seed: 1, prob: 1.0, slowdown: 1.0 };
+        assert!(!none.enabled());
+        assert_eq!(none.speeds(4), vec![1.0; 4]);
+        // Different seeds draw different straggler sets (for some n).
+        let a = StragglerProfile { seed: 1, prob: 0.5, slowdown: 4.0 };
+        let b = StragglerProfile { seed: 2, prob: 0.5, slowdown: 4.0 };
+        assert!(
+            (0..64).any(|i| a.speed_of(i) != b.speed_of(i)),
+            "seed must matter"
+        );
+    }
+
+    #[test]
+    fn straggler_node_devices_are_slower() {
+        use crate::storage::{Access, Dir};
+        let mut e = Engine::new();
+        let t = TopologyBuilder {
+            nodes: 2,
+            node_speeds: vec![1.0, 0.25],
+            ..Default::default()
+        }
+        .build(&mut e);
+        assert_eq!(t.speed_of(NodeId(0)), 1.0);
+        assert_eq!(t.speed_of(NodeId(1)), 0.25);
+        let healthy = t.device(t.device_of(NodeId(0), DeviceRole::Pmem)
+            .unwrap());
+        let slow = t.device(t.device_of(NodeId(1), DeviceRole::Pmem)
+            .unwrap());
+        let hb = healthy.spec.class(Access::Seq, Dir::Read).bandwidth;
+        let sb = slow.spec.class(Access::Seq, Dir::Read).bandwidth;
+        assert!((hb / sb - 4.0).abs() < 1e-9, "{hb} vs {sb}");
+        // Latencies are NOT device-scaled (the engine's per-proc speed
+        // scaling stretches a straggler task's fixed latencies exactly
+        // once — scaling both would double-count).
+        assert_eq!(
+            slow.latency(Access::Seq, Dir::Read),
+            healthy.latency(Access::Seq, Dir::Read)
+        );
+        // Same transfer through each node's PMEM write channel: the
+        // straggler's takes 4× as long (channel capacity).
+        let time = |node: usize| {
+            let mut e = Engine::new();
+            let t = TopologyBuilder {
+                nodes: 2,
+                node_speeds: vec![1.0, 0.25],
+                ..Default::default()
+            }
+            .build(&mut e);
+            let dev = t.device(
+                t.device_of(NodeId(node), DeviceRole::Pmem).unwrap(),
+            );
+            e.spawn("w", dev.io_stages(
+                10 * crate::util::bytes::GIB,
+                Access::Seq,
+                Dir::Write,
+                0,
+            ));
+            e.run().unwrap().as_secs_f64()
+        };
+        let (fast, slow) = (time(0), time(1));
+        assert!((slow / fast - 4.0).abs() < 0.01, "{fast} vs {slow}");
     }
 
     #[test]

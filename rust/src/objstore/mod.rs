@@ -101,6 +101,15 @@ impl ObjectStore {
         v
     }
 
+    /// Stat-free length probe: the stored object's size, if present.
+    /// Unlike [`ObjectStore::get`], this records neither a GET nor any
+    /// byte traffic — planners (`mapreduce::Stores::locate`) size work
+    /// without disturbing the stats a later data-plane `get` will
+    /// record. Mirrors `igfs::CacheNode::len_of`.
+    pub fn len_of(&self, key: &str) -> Option<u64> {
+        self.objects.get(key).map(|p| p.len())
+    }
+
     pub fn delete(&mut self, key: &str) -> bool {
         self.objects.remove(key).is_some()
     }

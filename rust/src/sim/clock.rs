@@ -43,6 +43,20 @@ impl SimNs {
     pub fn saturating_sub(self, rhs: SimNs) -> SimNs {
         SimNs(self.0.saturating_sub(rhs.0))
     }
+
+    /// Stretch a duration by `1/speed` — the straggler node-speed
+    /// scaling. The single definition shared by the engine's per-proc
+    /// Delay stretching and the driver's overhead tallies, so reported
+    /// virtual time can never drift from simulated virtual time.
+    /// Identity at speed 1.0 and for degenerate factors, keeping
+    /// healthy paths bit-exact.
+    pub fn div_speed(self, speed: f64) -> SimNs {
+        if !speed.is_finite() || speed <= 0.0 || speed == 1.0 {
+            self
+        } else {
+            SimNs::from_secs_f64(self.as_secs_f64() / speed)
+        }
+    }
 }
 
 impl Add for SimNs {
@@ -101,6 +115,17 @@ mod tests {
         let mut t = SimNs(1);
         t += SimNs(2);
         assert_eq!(t, SimNs(3));
+    }
+
+    #[test]
+    fn div_speed_stretches_and_is_identity_at_one() {
+        let d = SimNs::from_millis(10);
+        assert_eq!(d.div_speed(0.25), SimNs::from_millis(40));
+        assert_eq!(d.div_speed(1.0), d);
+        // Degenerate factors fall back to identity.
+        assert_eq!(d.div_speed(0.0), d);
+        assert_eq!(d.div_speed(f64::NAN), d);
+        assert_eq!(d.div_speed(-2.0), d);
     }
 
     #[test]

@@ -60,6 +60,15 @@ pub enum Stage {
     /// Abort this proc (quota exceeded, retry budget exhausted). The
     /// engine keeps running; the failure is recorded on the proc.
     Fail(String),
+    /// Abort *another* proc if it has not yet completed: its remaining
+    /// stages are dropped, every slot it holds goes back through the
+    /// fair queue (the container returns warm), and it is marked
+    /// [`ProcState::Cancelled`] at the current virtual time. The
+    /// speculative-execution race compiles to this — original and
+    /// backup each end with a `Cancel` of the other, so the first
+    /// finisher wins and the loser is reaped. No-op on a proc that
+    /// already finished, failed, or was cancelled.
+    Cancel(ProcId),
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -69,6 +78,10 @@ pub enum ProcState {
     Blocked,
     Finished,
     Failed(String),
+    /// Reaped by a [`Stage::Cancel`] — the losing side of a
+    /// speculative race. Terminal, like `Finished`, but countable so
+    /// reports can census speculation outcomes.
+    Cancelled,
 }
 
 #[derive(Debug)]
@@ -80,9 +93,16 @@ struct Proc {
     label: String,
     /// Fair-queueing class (tenant); 0 for unscoped procs.
     class: u32,
+    /// Node speed factor (1.0 = healthy): every fixed-latency stage
+    /// this proc executes is stretched by `1/speed` — the straggler
+    /// model's compute half (the topology scales the device half).
+    speed: f64,
     /// Pool whose slot was handed to this proc while it was blocked in
     /// `Acquire` (release-side direct grant) — consumed on wake.
     grant: Option<PoolId>,
+    /// Slots currently held (acquired, not yet released) — what a
+    /// `Cancel` must hand back so the loser's container returns warm.
+    held: Vec<PoolId>,
 }
 
 struct Pool {
@@ -205,6 +225,23 @@ impl Engine {
         class: u32,
         stages: Vec<Stage>,
     ) -> ProcId {
+        self.spawn_scaled(label, class, 1.0, stages)
+    }
+
+    /// [`Engine::spawn_as`] with a node speed factor: every
+    /// fixed-latency stage of this proc runs `1/speed` slower — how a
+    /// straggler node's compute heterogeneity reaches the time plane
+    /// (its devices are slowed by the topology's scaled channel
+    /// capacities instead). Non-finite or non-positive speeds fall
+    /// back to 1.0.
+    pub fn spawn_scaled(
+        &mut self,
+        label: &str,
+        class: u32,
+        speed: f64,
+        stages: Vec<Stage>,
+    ) -> ProcId {
+        let speed = if speed.is_finite() && speed > 0.0 { speed } else { 1.0 };
         let id = ProcId(self.procs.len());
         self.procs.push(Proc {
             stages: stages.into(),
@@ -213,10 +250,20 @@ impl Engine {
             finished: SimNs::ZERO,
             label: label.to_string(),
             class,
+            speed,
             grant: None,
+            held: Vec::new(),
         });
         self.ready.push_back(id);
         id
+    }
+
+    /// Append stages to an already-spawned proc. Plan-time composition
+    /// only: the driver closes a speculative race by appending the
+    /// original's `Cancel`-the-backup tail once the backup's [`ProcId`]
+    /// exists.
+    pub fn append_stages(&mut self, id: ProcId, extra: Vec<Stage>) {
+        self.procs[id.0].stages.extend(extra);
     }
 
     pub fn state(&self, id: ProcId) -> &ProcState {
@@ -273,9 +320,85 @@ impl Engine {
             .collect()
     }
 
+    /// Labels of procs reaped by [`Stage::Cancel`] whose label starts
+    /// with `prefix` — the per-job speculation-loser census.
+    pub fn cancelled_with_prefix(&self, prefix: &str) -> Vec<&str> {
+        self.procs
+            .iter()
+            .filter(|p| {
+                p.state == ProcState::Cancelled
+                    && p.label.starts_with(prefix)
+            })
+            .map(|p| p.label.as_str())
+            .collect()
+    }
+
     fn wake(&mut self, id: ProcId) {
-        self.procs[id.0].state = ProcState::Ready;
-        self.ready.push_back(id);
+        // Only a blocked proc can wake: a cancelled proc's pending
+        // timer or in-flight flow completion must not resurrect it.
+        if self.procs[id.0].state == ProcState::Blocked {
+            self.procs[id.0].state = ProcState::Ready;
+            self.ready.push_back(id);
+        }
+    }
+
+    /// Return one slot of `p`: hand it to the weighted-fair next *live*
+    /// waiter (cancelled waiters are skipped — they take no slot), or
+    /// free it. Shared by [`Stage::Release`] and [`Engine::cancel`].
+    fn do_release(&mut self, p: PoolId) {
+        loop {
+            let weights = &self.class_weights;
+            let pool = &mut self.pools[p.0];
+            assert!(pool.in_use > 0, "release on empty pool");
+            // Hand the slot to the weighted-fair next waiter without
+            // letting it transit the free state (a ready proc could
+            // otherwise steal it).
+            let next = pool
+                .waiters
+                .pop(|c| weights.get(&c).copied().unwrap_or(1));
+            match next {
+                Some((_, w)) => {
+                    // A waiter cancelled while queued is skipped; its
+                    // class keeps the grant charge it was popped with
+                    // (deterministic, and the distortion is one grant
+                    // per cancelled waiter at most).
+                    if self.procs[w.0].state == ProcState::Blocked {
+                        self.procs[w.0].grant = Some(p);
+                        self.wake(w);
+                        return;
+                    }
+                }
+                None => {
+                    pool.in_use -= 1;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Abort `id` unless it already completed: drop its remaining
+    /// stages, release every slot it holds (and any un-consumed direct
+    /// grant), and mark it [`ProcState::Cancelled`] now. An in-flight
+    /// flow of the cancelled proc drains harmlessly — its completion
+    /// wakes nobody.
+    fn cancel(&mut self, id: ProcId) {
+        if !matches!(
+            self.procs[id.0].state,
+            ProcState::Ready | ProcState::Blocked
+        ) {
+            return;
+        }
+        self.procs[id.0].stages.clear();
+        self.procs[id.0].state = ProcState::Cancelled;
+        self.procs[id.0].finished = self.now;
+        let held = std::mem::take(&mut self.procs[id.0].held);
+        let grant = self.procs[id.0].grant.take();
+        for p in held {
+            self.do_release(p);
+        }
+        if let Some(p) = grant {
+            self.do_release(p);
+        }
     }
 
     /// Execute stages of `id` until it blocks or finishes.
@@ -295,6 +418,7 @@ impl Engine {
                         // A releaser handed this proc its slot directly
                         // (already counted in `in_use`).
                         self.procs[id.0].grant = None;
+                        self.procs[id.0].held.push(p);
                     } else {
                         let class = self.procs[id.0].class;
                         let weights = &self.class_weights;
@@ -308,6 +432,7 @@ impl Engine {
                             pool.in_use += 1;
                             let w = weights.get(&class).copied().unwrap_or(1);
                             pool.waiters.charge(class, w);
+                            self.procs[id.0].held.push(p);
                         } else {
                             pool.waiters.push(class, id);
                             // Re-queue the acquire: consumed on wake via
@@ -321,24 +446,18 @@ impl Engine {
                     }
                 }
                 Stage::Release(p) => {
-                    let weights = &self.class_weights;
-                    let pool = &mut self.pools[p.0];
-                    assert!(pool.in_use > 0, "release on empty pool");
-                    // Hand the slot to the weighted-fair next waiter
-                    // without letting it transit the free state (a
-                    // ready proc could otherwise steal it).
-                    let next = pool
-                        .waiters
-                        .pop(|c| weights.get(&c).copied().unwrap_or(1));
-                    match next {
-                        Some((_, w)) => {
-                            self.procs[w.0].grant = Some(p);
-                            self.wake(w);
-                        }
-                        None => pool.in_use -= 1,
+                    let held = &mut self.procs[id.0].held;
+                    if let Some(pos) = held.iter().rposition(|x| *x == p) {
+                        held.swap_remove(pos);
                     }
+                    self.do_release(p);
                 }
                 Stage::Delay(d) => {
+                    // Straggler scaling: a 0.25-speed node takes 4× as
+                    // long for every fixed-latency stage it executes.
+                    // Flows are not scaled here — the topology already
+                    // scales a slow node's device channel capacities.
+                    let d = d.div_speed(self.procs[id.0].speed);
                     self.timer_seq += 1;
                     self.timers
                         .push(Reverse((self.now + d, self.timer_seq, id)));
@@ -381,6 +500,13 @@ impl Engine {
                     self.procs[id.0].state = ProcState::Failed(msg);
                     self.procs[id.0].finished = self.now;
                     return;
+                }
+                Stage::Cancel(target) => {
+                    self.cancel(target);
+                    if self.procs[id.0].state == ProcState::Cancelled {
+                        // Degenerate self-cancel: nothing further runs.
+                        return;
+                    }
                 }
             }
         }
@@ -649,6 +775,135 @@ mod tests {
             ]);
         }
         assert_eq!(e.run().unwrap(), SimNs::from_millis(30));
+    }
+
+    #[test]
+    fn speed_factor_stretches_delays_only() {
+        // A 0.25-speed straggler takes 4× as long per Delay; a flow is
+        // untouched (device/NIC capacities carry that half).
+        let mut e = Engine::new();
+        let link = e.add_resource("l", 100.0);
+        let slow = e.spawn_scaled("slow", 0, 0.25, vec![
+            Stage::Delay(SimNs::from_millis(10)),
+        ]);
+        let flow = e.spawn_scaled("flow", 0, 0.25, vec![Stage::Flow {
+            bytes: 100.0,
+            path: vec![link],
+            tag: 0,
+        }]);
+        e.run().unwrap();
+        assert_eq!(e.finished_at(slow), SimNs::from_millis(40));
+        assert!(
+            (e.finished_at(flow).as_secs_f64() - 1.0).abs() < 1e-6,
+            "flows are not proc-scaled"
+        );
+        // Degenerate speeds fall back to 1.0.
+        let mut e = Engine::new();
+        let p = e.spawn_scaled("z", 0, 0.0, vec![
+            Stage::Delay(SimNs::from_millis(3)),
+        ]);
+        e.run().unwrap();
+        assert_eq!(e.finished_at(p), SimNs::from_millis(3));
+    }
+
+    #[test]
+    fn cancel_race_first_finisher_wins() {
+        // The speculative-race compile shape: each racer ends with a
+        // Cancel of the other; the first to finish reaps the loser.
+        let mut e = Engine::new();
+        let done = e.add_barrier(1);
+        let orig = e.spawn("task", vec![
+            Stage::Delay(SimNs::from_millis(40)),
+        ]);
+        let bak = e.spawn("task/bak", vec![
+            Stage::Delay(SimNs::from_millis(5)),
+            Stage::Cancel(orig),
+            Stage::Arrive(done),
+        ]);
+        e.append_stages(orig, vec![Stage::Cancel(bak), Stage::Arrive(done)]);
+        let end = e.run().unwrap();
+        assert_eq!(end, SimNs::from_millis(5), "backup won the race");
+        assert_eq!(*e.state(bak), ProcState::Finished);
+        assert_eq!(*e.state(orig), ProcState::Cancelled);
+        assert_eq!(e.finished_at(orig), SimNs::from_millis(5));
+        assert_eq!(e.barrier_opened_at(done), Some(SimNs::from_millis(5)));
+        assert_eq!(e.cancelled_with_prefix("task").len(), 1);
+        assert_eq!(e.cancelled_with_prefix("task/bak").len(), 0);
+        assert!(e.failures().is_empty(), "cancelled is not failed");
+    }
+
+    #[test]
+    fn cancel_releases_held_slot_to_the_fair_queue() {
+        // B holds the only slot; cancelling it mid-Delay frees the
+        // slot for C immediately (the container went back).
+        let mut e = Engine::new();
+        let pool = e.add_pool(1);
+        let b = e.spawn("b", vec![
+            Stage::Acquire(pool),
+            Stage::Delay(SimNs::from_millis(100)),
+            Stage::Release(pool),
+        ]);
+        e.spawn("a", vec![
+            Stage::Delay(SimNs::from_millis(1)),
+            Stage::Cancel(b),
+        ]);
+        let c = e.spawn("c", vec![
+            Stage::Acquire(pool),
+            Stage::Delay(SimNs::from_millis(5)),
+            Stage::Release(pool),
+        ]);
+        let end = e.run().unwrap();
+        // C was queued behind B; B's cancel at 1 ms hands it the slot.
+        assert_eq!(e.finished_at(c), SimNs::from_millis(6));
+        assert_eq!(*e.state(b), ProcState::Cancelled);
+        // B's stale 100 ms timer must not stretch the run.
+        assert_eq!(end, SimNs::from_millis(6));
+    }
+
+    #[test]
+    fn cancel_of_queued_waiter_is_skipped_on_release() {
+        // B waits in the fair queue and is cancelled while queued: the
+        // next release must skip it and serve C (no slot leak, no
+        // zombie grant).
+        let mut e = Engine::new();
+        let pool = e.add_pool(1);
+        let h = e.spawn("h", vec![
+            Stage::Acquire(pool),
+            Stage::Delay(SimNs::from_millis(10)),
+            Stage::Release(pool),
+        ]);
+        let b = e.spawn("b", vec![
+            Stage::Acquire(pool),
+            Stage::Delay(SimNs::from_millis(50)),
+            Stage::Release(pool),
+        ]);
+        let c = e.spawn("c", vec![
+            Stage::Acquire(pool),
+            Stage::Delay(SimNs::from_millis(5)),
+            Stage::Release(pool),
+        ]);
+        e.spawn("a", vec![
+            Stage::Delay(SimNs::from_millis(1)),
+            Stage::Cancel(b),
+        ]);
+        let end = e.run().unwrap();
+        assert_eq!(*e.state(b), ProcState::Cancelled);
+        assert_eq!(*e.state(h), ProcState::Finished);
+        assert_eq!(e.finished_at(c), SimNs::from_millis(15));
+        assert_eq!(end, SimNs::from_millis(15));
+    }
+
+    #[test]
+    fn cancel_of_completed_proc_is_a_noop() {
+        let mut e = Engine::new();
+        let fast = e.spawn("fast", vec![Stage::Delay(SimNs::from_millis(1))]);
+        e.spawn("late", vec![
+            Stage::Delay(SimNs::from_millis(5)),
+            Stage::Cancel(fast),
+        ]);
+        e.run().unwrap();
+        assert_eq!(*e.state(fast), ProcState::Finished);
+        assert!(e.cancelled_with_prefix("").is_empty());
     }
 
     #[test]

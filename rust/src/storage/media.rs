@@ -43,6 +43,30 @@ pub struct MediaSpec {
 }
 
 impl MediaSpec {
+    /// Scale this medium's *bandwidths* by a node speed factor (the
+    /// straggler model): the device's DES channels deploy at
+    /// `speed` × their healthy capacity, slowing every flow through
+    /// them — local or remote. Access latencies are deliberately NOT
+    /// scaled here: a task's fixed-latency stages are stretched once,
+    /// by the engine's per-proc speed scaling (`Engine::spawn_scaled`)
+    /// — scaling both would double-count the slowdown on local device
+    /// access. `scaled(1.0)` is the identity, so uniform clusters keep
+    /// bit-for-bit legacy device timings.
+    pub fn scaled(mut self, speed: f64) -> MediaSpec {
+        if !speed.is_finite() || speed <= 0.0 || speed == 1.0 {
+            return self;
+        }
+        for c in [
+            &mut self.seq_read,
+            &mut self.seq_write,
+            &mut self.rand_read,
+            &mut self.rand_write,
+        ] {
+            c.bandwidth *= speed;
+        }
+        self
+    }
+
     pub fn class(&self, access: Access, dir: Dir) -> OpClass {
         match (access, dir) {
             (Access::Seq, Dir::Read) => self.seq_read,
@@ -189,6 +213,32 @@ mod tests {
                 assert!(pc.latency < sc.latency);
             }
         }
+    }
+
+    #[test]
+    fn scaled_media_slow_down_proportionally() {
+        let p = MediaSpec::pmem(GIB);
+        let s = p.clone().scaled(0.25);
+        for access in [Access::Seq, Access::Rand] {
+            for dir in [Dir::Read, Dir::Write] {
+                let (pc, sc) = (p.class(access, dir), s.class(access, dir));
+                assert!((pc.bandwidth / sc.bandwidth - 4.0).abs() < 1e-9);
+                // Latencies are untouched: the engine's per-proc speed
+                // scaling stretches them exactly once.
+                assert_eq!(sc.latency, pc.latency);
+            }
+        }
+        // Identity and degenerate factors leave the spec untouched.
+        let id = p.clone().scaled(1.0);
+        assert_eq!(
+            id.class(Access::Seq, Dir::Read).bandwidth,
+            p.class(Access::Seq, Dir::Read).bandwidth
+        );
+        let bad = p.clone().scaled(0.0);
+        assert_eq!(
+            bad.class(Access::Seq, Dir::Read).bandwidth,
+            p.class(Access::Seq, Dir::Read).bandwidth
+        );
     }
 
     #[test]

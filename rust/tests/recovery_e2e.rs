@@ -220,6 +220,34 @@ fn datanode_loss_is_transparent_with_replication() {
 }
 
 #[test]
+fn all_datanodes_lost_is_a_clean_job_error() {
+    // Losing EVERY node must surface as a job error ("no live
+    // replica"), never a panic. This is the end-to-end companion of
+    // the PartitionMap last-member guard: with the whole cluster in
+    // the failure plan, no layer may end up asking an empty membership
+    // set for an owner.
+    for nodes in [1usize, 4] {
+        let mut cfg = SystemConfig::marvel_igfs();
+        cfg.replication = 2;
+        cfg.failures.lose_datanodes = (0..nodes).collect();
+        let (r, _) = run_wc(&cfg, nodes);
+        assert!(!r.ok(), "{nodes} nodes all lost must fail the job");
+        assert!(
+            r.failed.as_ref().unwrap().contains("no live replica"),
+            "error names the data loss: {:?}",
+            r.failed
+        );
+    }
+    // The partition map itself refuses to go empty: the cache tier
+    // keeps a total owner function even under the same plan.
+    let mut cluster =
+        ClusterSpec::with_nodes(2).deploy(&SystemConfig::marvel_igfs());
+    assert_eq!(cluster.stores.igfs.partitions.remove(NodeId(0)), Ok(true));
+    assert!(cluster.stores.igfs.partitions.remove(NodeId(1)).is_err());
+    assert_eq!(cluster.stores.igfs.owner("any/key"), NodeId(1));
+}
+
+#[test]
 fn corun_under_failures_matches_solo_outputs() {
     // Solo, failure-free reference.
     let (r0, o0) = run_wc(&SystemConfig::marvel_igfs(), 1);
