@@ -1,0 +1,185 @@
+//! Figure 10 (repo extension): degraded-mode I/O — network fault
+//! injection × graceful storage-tier degradation.
+//!
+//! One wordcount runs on a 4-node cluster while a seed-driven
+//! `NetFaultPlan` degrades links (slowdown or blackout windows) and —
+//! for nonzero fault probabilities — blacks out cache node 1 between
+//! the map and reduce phases. The sweep is fault probability ×
+//! degraded-tiers {off, on}. Reported per cell: whether the job
+//! completed, virtual makespan, flow-deadline expiries (each one a
+//! reaped + retried transfer), and reads served from a lower tier.
+//!
+//! Expected shape — the graceful-degradation contract: with
+//! `degraded_tiers` ON every cell completes with byte-identical
+//! output (blackout gathers fall down to the HDFS write-through
+//! copies and pay the slower tier in virtual time); with it OFF the
+//! blackout cells FAIL outright (the manifest reports the sole cache
+//! copy lost). Cold starts are forced so task flows land inside the
+//! fault-window band instead of racing ahead of it. Emits
+//! `BENCH_fig10_netfaults.json` via `util::bench::write_report` for
+//! `bench_diff.py`.
+
+use std::path::Path;
+
+use marvel::coordinator::ClusterSpec;
+use marvel::mapreduce::{run_job, stage_named_input, SystemConfig};
+use marvel::net::NetFaultPlan;
+use marvel::runtime::RtEngine;
+use marvel::sim::SimNs;
+use marvel::util::bench::{write_report, Bench, BenchResult};
+use marvel::util::bytes::MIB;
+use marvel::workloads::WordCount;
+
+const SEED: u64 = 42;
+const NETFAULT_SEED: u64 = 29;
+const INPUT: u64 = 8 * MIB;
+const NODES: usize = 4;
+const SLOTS: usize = 8;
+
+fn cfg_for(prob: f64, degraded: bool) -> SystemConfig {
+    let mut c = SystemConfig::marvel_igfs();
+    c.map_workers = 2;
+    c.reduce_workers = 2;
+    // Cold starts push task flows into the fault-window band — a
+    // prewarmed 8 MiB job races ahead of the earliest window.
+    c.prewarm = false;
+    c.netfaults = NetFaultPlan {
+        seed: NETFAULT_SEED,
+        prob,
+        slowdown: 8.0,
+        flow_timeout: SimNs::from_millis(250),
+        degraded_tiers: degraded,
+        // A fault scenario = degraded links + one cache node dark.
+        lose_cachenodes: if prob > 0.0 { vec![1] } else { vec![] },
+    };
+    c
+}
+
+struct Cell {
+    completed: bool,
+    makespan_s: f64,
+    flow_timeouts: u64,
+    degraded_reads: u64,
+    output_bytes: u64,
+}
+
+fn run_cell(cfg: &SystemConfig) -> Cell {
+    let mut rt = RtEngine::load(None).expect("rt");
+    // Deploy + stage over a healthy network, then install the fault
+    // windows: faults strike mid-run, not mid-staging.
+    let mut quiet = cfg.clone();
+    quiet.netfaults = NetFaultPlan::disabled();
+    let mut cluster = ClusterSpec {
+        nodes: NODES,
+        slots_per_node: SLOTS,
+        ..Default::default()
+    }
+    .deploy(&quiet);
+    cluster.stores.hdfs.block_size = 256 * 1024; // 32 splits from 8 MiB
+    let wc = WordCount::new(10_000, 1.07, &rt);
+    let input =
+        stage_named_input(&mut cluster, cfg, &wc, INPUT, SEED, "wc/in")
+            .expect("stage");
+    cfg.netfaults.install(&cluster.topo, &mut cluster.engine);
+    let r = run_job(&mut cluster, cfg, &wc, &input, &mut rt, SEED);
+    Cell {
+        completed: r.ok(),
+        makespan_s: if r.ok() { r.job_time.as_secs_f64() } else { 0.0 },
+        flow_timeouts: r.flow_timeouts,
+        degraded_reads: r.degraded_reads,
+        output_bytes: r.output_bytes,
+    }
+}
+
+fn main() {
+    let bench = Bench::new(1, 3);
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+
+    let mut baseline_output = None;
+    let mut baseline_makespan = None;
+    for &prob in &[0.0f64, 0.3, 0.6, 1.0] {
+        for degraded in [false, true] {
+            let mode = if degraded { "deg-on" } else { "deg-off" };
+            let cfg = cfg_for(prob, degraded);
+            let mut cell = None;
+            let r = bench.run(
+                &format!("wordcount 8 MiB, fault-prob={prob}, {mode}"),
+                || {
+                    let c = run_cell(&cfg);
+                    let out = c.output_bytes;
+                    cell = Some(c);
+                    out
+                },
+            );
+            println!("{}", r.summary());
+            let cell = cell.expect("bench ran");
+            println!(
+                "  {mode} p={prob}: completed={}, {:.3} virtual s, \
+                 {} flow timeouts, {} degraded reads",
+                cell.completed, cell.makespan_s, cell.flow_timeouts,
+                cell.degraded_reads,
+            );
+
+            // The fig10 contract, asserted per cell.
+            if prob == 0.0 {
+                assert!(cell.completed, "fault-free cell must complete");
+                assert_eq!(cell.flow_timeouts, 0, "no plan, no deadlines");
+                assert_eq!(cell.degraded_reads, 0);
+                baseline_makespan.get_or_insert(cell.makespan_s);
+            } else if degraded {
+                assert!(
+                    cell.completed,
+                    "graceful degradation must ride out the blackout \
+                     at p={prob}"
+                );
+                assert!(
+                    cell.degraded_reads > 0,
+                    "blackout gathers must fall down the tiers at \
+                     p={prob}"
+                );
+                assert!(
+                    cell.makespan_s
+                        > baseline_makespan.expect("baseline ran"),
+                    "degraded tiers are not free at p={prob}"
+                );
+            } else {
+                assert!(
+                    !cell.completed,
+                    "blackout without degradation must fail at p={prob}"
+                );
+            }
+            // Byte determinism across every completing cell.
+            if cell.completed {
+                match baseline_output {
+                    None => baseline_output = Some(cell.output_bytes),
+                    Some(b) => assert_eq!(
+                        cell.output_bytes, b,
+                        "fault plan moved bytes at p={prob} {mode}"
+                    ),
+                }
+            }
+
+            let tag = format!("p{:03}_{mode}", (prob * 100.0) as u32);
+            metrics.push((format!("{tag}_completed"),
+                          if cell.completed { 1.0 } else { 0.0 }));
+            metrics.push((format!("{tag}_virtual_makespan_s"),
+                          cell.makespan_s));
+            metrics.push((format!("{tag}_flow_timeouts"),
+                          cell.flow_timeouts as f64));
+            metrics.push((format!("{tag}_degraded_reads"),
+                          cell.degraded_reads as f64));
+            results.push(r);
+        }
+    }
+
+    let refs: Vec<&BenchResult> = results.iter().collect();
+    let met: Vec<(&str, f64)> =
+        metrics.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let out = Path::new("BENCH_fig10_netfaults.json");
+    match write_report(out, &refs, &met) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+    println!("fig10_netfaults done");
+}

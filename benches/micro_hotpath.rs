@@ -220,6 +220,7 @@ fn main() {
                 bytes: 1e6,
                 path: vec![link],
                 tag: i,
+                timeout: None,
             }]);
         }
         e.run().unwrap()

@@ -211,6 +211,42 @@ fn load_experiment(args: &Args) -> Result<ExperimentConfig, String> {
         cfg.system.speculation.lag_factor =
             f.parse::<f64>().map_err(|_| "bad --lag-factor")?.max(1.0);
     }
+    // Network fault / degraded-mode I/O overrides (see `marvel help`).
+    // Time plane + counters only: outputs never move under any of these.
+    if let Some(p) = args.get("link-fault-prob") {
+        cfg.system.netfaults.prob = p
+            .parse::<f64>()
+            .map_err(|_| "bad --link-fault-prob")?
+            .clamp(0.0, 1.0);
+    }
+    if let Some(s) = args.get("link-slowdown") {
+        cfg.system.netfaults.slowdown =
+            s.parse::<f64>().map_err(|_| "bad --link-slowdown")?.max(1.0);
+    }
+    if let Some(s) = args.get("netfault-seed") {
+        cfg.system.netfaults.seed =
+            s.parse().map_err(|_| "bad --netfault-seed")?;
+    }
+    if let Some(ms) = args.get("flow-timeout-ms") {
+        cfg.system.netfaults.flow_timeout = crate::sim::SimNs::from_millis(
+            ms.parse::<u64>().map_err(|_| "bad --flow-timeout-ms")?.max(1),
+        );
+    }
+    if let Some(s) = args.get("lose-cachenodes") {
+        cfg.system.netfaults.lose_cachenodes =
+            crate::coordinator::FailurePlan::parse_datanode_list(s)
+                .map_err(|e| format!("--lose-cachenodes: {e}"))?;
+    }
+    match args.get("degraded-tiers") {
+        None => {}
+        Some("on") => cfg.system.netfaults.degraded_tiers = true,
+        Some("off") => cfg.system.netfaults.degraded_tiers = false,
+        Some(other) => {
+            return Err(format!(
+                "--degraded-tiers must be on|off, got {other:?}"
+            ))
+        }
+    }
     Ok(cfg)
 }
 
@@ -464,6 +500,15 @@ times and attempt counts move):
   --straggler-seed 17     straggler-draw seed (MARVEL_STRAGGLER_SEED)
   --speculation on        race projected laggards with backup attempts
   --lag-factor 1.5        back up tasks projected past N x the median
+
+degraded-mode I/O (run/corun; outputs stay byte-identical, only times
+and timeout/degradation counters move):
+  --link-fault-prob 0.5   per-link probability of a fault window
+  --link-slowdown 8.0     faulted link serves at 1/N capacity
+  --netfault-seed 29      link-fault-draw seed (MARVEL_NETFAULT_SEED)
+  --flow-timeout-ms 250   flow deadline while faults are armed
+  --lose-cachenodes 1,2   black out cache nodes between map and reduce
+  --degraded-tiers on     degrade reads IGFS->HDFS->S3 | off = hard fail
 ";
 
 /// CLI entrypoint; returns process exit code.
@@ -606,6 +651,40 @@ mod tests {
         );
         assert_eq!(
             main_with_args(&sv(&["run", "--slowdown", "x"])),
+            1
+        );
+    }
+
+    #[test]
+    fn run_with_netfaults_and_degradation_succeeds() {
+        // Byte-identity under netfaults + blackout is pinned by
+        // rust/tests/netfaults_e2e.rs; here: the CLI wires the plan
+        // through and the degraded job still completes.
+        assert_eq!(
+            main_with_args(&sv(&[
+                "run",
+                "--workload", "wordcount",
+                "--input", "1MiB",
+                "--nodes", "4",
+                "--link-fault-prob", "0.5",
+                "--link-slowdown", "8.0",
+                "--netfault-seed", "11",
+                "--flow-timeout-ms", "250",
+                "--lose-cachenodes", "1",
+                "--degraded-tiers", "on",
+            ])),
+            0
+        );
+        assert_eq!(
+            main_with_args(&sv(&["run", "--degraded-tiers", "maybe"])),
+            1
+        );
+        assert_eq!(
+            main_with_args(&sv(&["run", "--link-fault-prob", "x"])),
+            1
+        );
+        assert_eq!(
+            main_with_args(&sv(&["run", "--lose-cachenodes", "one"])),
             1
         );
     }

@@ -19,6 +19,7 @@
 use crate::coordinator::ClusterSpec;
 use crate::mapreduce::SystemConfig;
 use crate::net::DeviceRole;
+use crate::sim::SimNs;
 use crate::util::bytes::GIB;
 use crate::util::toml_mini::Doc;
 
@@ -162,6 +163,34 @@ impl ExperimentConfig {
             .max(1.0);
         if let Some(v) = doc.get("stragglers", "seed") {
             system.stragglers.seed = v.as_i64().unwrap_or(0) as u64;
+        }
+        // [netfaults] — seed-driven link fault windows, flow deadlines,
+        // and the degraded-mode I/O knobs that ride with them. Time
+        // plane + counters only: outputs stay byte-identical.
+        system.netfaults.prob = doc
+            .f64_or("netfaults", "link_fault_prob", system.netfaults.prob)
+            .clamp(0.0, 1.0);
+        system.netfaults.slowdown = doc
+            .f64_or("netfaults", "link_slowdown", system.netfaults.slowdown)
+            .max(1.0);
+        if let Some(v) = doc.get("netfaults", "seed") {
+            system.netfaults.seed = v.as_i64().unwrap_or(0) as u64;
+        }
+        if let Some(v) = doc.get("netfaults", "flow_timeout_ms") {
+            system.netfaults.flow_timeout =
+                SimNs::from_millis(v.as_i64().unwrap_or(250).max(1) as u64);
+        }
+        system.netfaults.degraded_tiers = doc.bool_or(
+            "netfaults",
+            "degraded_tiers",
+            system.netfaults.degraded_tiers,
+        );
+        if let Some(s) = doc
+            .get("netfaults", "lose_cachenodes")
+            .and_then(|v| v.as_str())
+        {
+            system.netfaults.lose_cachenodes =
+                crate::coordinator::FailurePlan::parse_datanode_list(s)?;
         }
         // [speculation] — backup attempts racing projected laggards.
         system.speculation.enabled = doc.bool_or(
@@ -353,6 +382,47 @@ lag_factor = 2.0
         let plain = ExperimentConfig::parse("").unwrap();
         assert!(!plain.system.stragglers.enabled());
         assert!(!plain.system.speculation.enabled);
+    }
+
+    #[test]
+    fn netfault_section_parses() {
+        let cfg = ExperimentConfig::parse(
+            r#"
+[netfaults]
+link_fault_prob = 0.5
+link_slowdown = 16.0
+seed = 99
+flow_timeout_ms = 400
+degraded_tiers = false
+lose_cachenodes = "1, 2"
+"#,
+        )
+        .unwrap();
+        let nf = &cfg.system.netfaults;
+        assert!(nf.enabled());
+        assert!((nf.prob - 0.5).abs() < 1e-12);
+        assert!((nf.slowdown - 16.0).abs() < 1e-12);
+        // An explicit [netfaults] seed wins over MARVEL_NETFAULT_SEED
+        // (parse order: preset/env first, then the file).
+        assert_eq!(nf.seed, 99);
+        assert_eq!(nf.flow_timeout, SimNs::from_millis(400));
+        assert!(!nf.degraded_tiers);
+        assert!(nf.blackout_armed());
+        assert_eq!(nf.lose_cachenodes, vec![1, 2]);
+        assert!(ExperimentConfig::parse(
+            "[netfaults]\nlose_cachenodes = \"one\"\n"
+        )
+        .is_err());
+        // Degenerate values clamp; an absent section stays inert.
+        let clamped = ExperimentConfig::parse(
+            "[netfaults]\nlink_fault_prob = 9.0\nlink_slowdown = 0.1\n",
+        )
+        .unwrap();
+        assert!((clamped.system.netfaults.prob - 1.0).abs() < 1e-12);
+        assert!((clamped.system.netfaults.slowdown - 1.0).abs() < 1e-12);
+        let plain = ExperimentConfig::parse("").unwrap();
+        assert!(!plain.system.netfaults.enabled());
+        assert!(!plain.system.netfaults.blackout_armed());
     }
 
     #[test]

@@ -69,6 +69,11 @@ impl ClusterSpec {
             node_speeds: cfg.stragglers.speeds(self.nodes),
         }
         .build(&mut engine);
+        // Link fault windows: a pure function of the plan's seed and
+        // the topology's link order, installed once per deploy. Inert
+        // plans install nothing — the flow simulator is bit-for-bit
+        // the legacy uniform one.
+        cfg.netfaults.install(&topo, &mut engine);
         let stores = Stores::new(
             Hdfs::new(&topo, cfg.hdfs_role, cfg.replication),
             Igfs::new(&topo, cfg.igfs_capacity.max(1)),
@@ -129,6 +134,20 @@ mod tests {
         for i in 0..3 {
             assert_eq!(c.topo.speed_of(NodeId(i)), 1.0);
         }
+    }
+
+    #[test]
+    fn netfault_plan_reaches_the_flow_sim() {
+        use crate::net::NetFaultPlan;
+        let mut cfg = SystemConfig::marvel_igfs();
+        cfg.netfaults = NetFaultPlan { prob: 1.0, ..NetFaultPlan::default() };
+        let c = ClusterSpec::with_nodes(2).deploy(&cfg);
+        // prob=1: every NIC pair + both WAN pipes carry a window.
+        assert_eq!(c.engine.flows.capacity_windows().len(), 2 * 2 + 2);
+        // Disabled plan: no windows, legacy flow sim.
+        let c = ClusterSpec::with_nodes(2)
+            .deploy(&SystemConfig::marvel_igfs());
+        assert!(c.engine.flows.capacity_windows().is_empty());
     }
 
     #[test]

@@ -34,6 +34,15 @@ pub struct RecoveryConfig {
     /// failure plan is armed, so failure-free runs keep their legacy
     /// timings.
     pub per_checkpoint: SimNs,
+    /// Base of the capped exponential backoff a retry waits before
+    /// re-acquiring its slot: attempt *n*'s retry sleeps
+    /// `base × 2^(n-1)`, capped at [`RecoveryConfig::backoff_cap`].
+    /// ZERO (the default) disables backoff entirely — retries requeue
+    /// immediately, exactly the pre-backoff schedule, so existing
+    /// pinned recovery timings do not move.
+    pub backoff_base: SimNs,
+    /// Upper bound on any single backoff delay.
+    pub backoff_cap: SimNs,
 }
 
 impl Default for RecoveryConfig {
@@ -43,7 +52,25 @@ impl Default for RecoveryConfig {
             max_attempts: 3,
             stateful: true,
             per_checkpoint: SimNs::from_micros(50),
+            backoff_base: SimNs::ZERO,
+            backoff_cap: SimNs::from_secs_f64(2.0),
         }
+    }
+}
+
+impl RecoveryConfig {
+    /// Backoff slept before the retry that *follows* failed attempt
+    /// `n` (1-based): `base × 2^(n-1)`, saturating, capped. ZERO base
+    /// → ZERO always.
+    pub fn backoff_for(&self, n: u32) -> SimNs {
+        if self.backoff_base == SimNs::ZERO || n == 0 {
+            return SimNs::ZERO;
+        }
+        let shift = (n - 1).min(20);
+        SimNs::from_nanos(
+            self.backoff_base.as_nanos().saturating_mul(1u64 << shift),
+        )
+        .min(self.backoff_cap)
     }
 }
 
@@ -543,6 +570,24 @@ mod tests {
         assert_eq!(FailurePlan::parse_datanode_list("").unwrap(),
                    Vec::<usize>::new());
         assert!(FailurePlan::parse_datanode_list("zero").is_err());
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_and_caps() {
+        let rc = RecoveryConfig {
+            backoff_base: SimNs::from_millis(100),
+            backoff_cap: SimNs::from_millis(450),
+            ..Default::default()
+        };
+        assert_eq!(rc.backoff_for(0), SimNs::ZERO);
+        assert_eq!(rc.backoff_for(1), SimNs::from_millis(100));
+        assert_eq!(rc.backoff_for(2), SimNs::from_millis(200));
+        assert_eq!(rc.backoff_for(3), SimNs::from_millis(400));
+        assert_eq!(rc.backoff_for(4), SimNs::from_millis(450), "capped");
+        assert_eq!(rc.backoff_for(63), SimNs::from_millis(450), "no overflow");
+        // Default: backoff disabled — legacy retry schedule exactly.
+        let off = RecoveryConfig::default();
+        assert_eq!(off.backoff_for(5), SimNs::ZERO);
     }
 
     #[test]

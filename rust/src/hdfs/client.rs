@@ -139,6 +139,7 @@ impl Hdfs {
                 bytes: len as f64,
                 path: path_res,
                 tag,
+                timeout: None,
             });
             metas.push(meta);
         }
@@ -199,6 +200,7 @@ impl Hdfs {
                 bytes: dev.effective_bytes(b.len, Access::Seq, Dir::Read),
                 path: path_res,
                 tag,
+                timeout: None,
             });
         }
         Ok((Payload::concat(&parts), stages, local, remote))
@@ -252,6 +254,7 @@ impl Hdfs {
                 bytes: dev.effective_bytes(e - s, Access::Seq, Dir::Read),
                 path: path_res,
                 tag,
+                timeout: None,
             });
         }
         Ok((Payload::concat(&parts), stages, all_local))

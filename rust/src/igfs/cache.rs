@@ -26,6 +26,10 @@ pub struct CacheStats {
     pub misses: u64,
     pub evictions: u64,
     pub bytes_evicted: u64,
+    /// Reads that the cache could not serve (node blacked out or entry
+    /// dropped) and a lower storage tier (HDFS/S3) served instead —
+    /// degraded-mode I/O, not an error.
+    pub degraded_reads: u64,
 }
 
 impl CacheStats {
@@ -37,6 +41,7 @@ impl CacheStats {
         self.misses += other.misses;
         self.evictions += other.evictions;
         self.bytes_evicted += other.bytes_evicted;
+        self.degraded_reads += other.degraded_reads;
     }
 
     /// Counters accumulated since `base` was captured (per-job / per-
@@ -50,6 +55,9 @@ impl CacheStats {
             bytes_evicted: self
                 .bytes_evicted
                 .saturating_sub(base.bytes_evicted),
+            degraded_reads: self
+                .degraded_reads
+                .saturating_sub(base.degraded_reads),
         }
     }
 }
@@ -190,6 +198,19 @@ impl CacheNode {
         }
         found |= self.backing.remove(key).is_some();
         found
+    }
+
+    /// Blackout: drop everything in both tiers (DRAM and PMEM backing
+    /// both live on the failed node). Returns bytes dropped. Stats
+    /// survive — the node's history is still real even if its data
+    /// isn't.
+    pub fn clear(&mut self) -> u64 {
+        let dram: u64 = self.entries.values().map(|(v, _)| v.len()).sum();
+        let back: u64 = self.backing.values().map(|v| v.len()).sum();
+        self.entries.clear();
+        self.backing.clear();
+        self.used = 0;
+        dram + back
     }
 
     pub fn keys(&self) -> Vec<String> {

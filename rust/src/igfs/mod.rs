@@ -74,7 +74,7 @@ impl Igfs {
         path.push(dram.channel(Dir::Write));
         vec![
             Stage::Delay(dram.latency(Access::Seq, Dir::Write)),
-            Stage::Flow { bytes: bytes as f64, path, tag },
+            Stage::Flow { bytes: bytes as f64, path, tag, timeout: None },
         ]
     }
 
@@ -118,6 +118,7 @@ impl Igfs {
                 bytes: dev.effective_bytes(value.len(), Access::Seq, Dir::Read),
                 path,
                 tag,
+                timeout: None,
             },
         ];
         Some((value, stages, tier))
@@ -144,13 +145,34 @@ impl Igfs {
     pub fn stats(&self) -> CacheStats {
         let mut s = CacheStats::default();
         for c in self.caches.values() {
-            s.hits_dram += c.stats.hits_dram;
-            s.hits_backing += c.stats.hits_backing;
-            s.misses += c.stats.misses;
-            s.evictions += c.stats.evictions;
-            s.bytes_evicted += c.stats.bytes_evicted;
+            s.add(&c.stats);
         }
         s
+    }
+
+    /// Cache-node blackout: drop the node's DRAM *and* PMEM contents
+    /// and remove it from the rendezvous partition map so later puts
+    /// land on live nodes. Idempotent — failing a node twice (or a
+    /// node that was never a member) drops nothing the second time.
+    /// Returns bytes dropped, or `Err` when the blackout would empty
+    /// the partition map (losing the whole cache tier is cluster
+    /// teardown, not degradation).
+    pub fn fail_cache_node(&mut self, node: NodeId) -> Result<u64, String> {
+        let was_member = self.partitions.remove(node)?;
+        if !was_member {
+            return Ok(0);
+        }
+        Ok(self.caches.get_mut(&node).map_or(0, |c| c.clear()))
+    }
+
+    /// Record a degraded read: the cache tier could not serve `key`
+    /// (blackout victim) and a lower tier (HDFS/S3) did. Attributed to
+    /// the key's *current* owner so per-job stat deltas see it.
+    pub fn note_degraded(&mut self, key: &str) {
+        let owner = self.owner(key);
+        if let Some(c) = self.caches.get_mut(&owner) {
+            c.stats.degraded_reads += 1;
+        }
     }
 }
 
@@ -237,6 +259,38 @@ mod tests {
         e.spawn("g", st);
         e.run().unwrap();
         assert_eq!(g.stats().hits_backing, 1);
+    }
+
+    #[test]
+    fn fail_cache_node_is_idempotent_and_reroutes_new_keys() {
+        let (_, t, mut g) = setup(3, GIB);
+        // Spread keys so the victim certainly owns some.
+        for i in 0..60 {
+            g.put(&t, NodeId(0), &format!("k{i}"), Payload::synthetic(10), 0);
+        }
+        let victim = NodeId(1);
+        let before = g.total_used();
+        let dropped = g.fail_cache_node(victim).unwrap();
+        assert!(dropped > 0, "victim owned nothing?");
+        assert_eq!(g.total_used(), before - dropped);
+        // Idempotent: a second blackout drops nothing more.
+        assert_eq!(g.fail_cache_node(victim).unwrap(), 0);
+        assert_eq!(g.total_used(), before - dropped);
+        // New puts land only on live nodes.
+        for i in 0..60 {
+            let key = format!("post/{i}");
+            assert_ne!(g.owner(&key), victim);
+            g.put(&t, NodeId(0), &key, Payload::synthetic(10), 0);
+        }
+        assert_eq!(g.caches[&victim].used(), 0);
+        // A victim-owned key now misses (callers degrade to HDFS/S3
+        // and note_degraded attributes it to the live owner).
+        g.note_degraded("k0");
+        assert_eq!(g.stats().degraded_reads, 1);
+        // Failing every remaining node is refused, not a panic.
+        g.fail_cache_node(NodeId(0)).unwrap();
+        let err = g.fail_cache_node(NodeId(2)).unwrap_err();
+        assert!(err.contains("last partition-map member"), "{err}");
     }
 
     #[test]

@@ -34,7 +34,7 @@ use crate::coordinator::recovery::{self, TaskRecovery};
 use crate::faas::{ActionSpec, Controller, Lambda, HADOOP_RUNTIME};
 use crate::igfs::{CacheStats, Tier};
 use crate::metrics::{tags, IoSummary};
-use crate::net::{NodeId, Topology};
+use crate::net::{NodeId, Topology, MAX_FLOW_RETRIES};
 use crate::runtime::{RtEngine, RtStats};
 use crate::sim::{BarrierId, Engine, PoolId, ProcId, SimNs, Stage};
 use crate::storage::Payload;
@@ -301,14 +301,38 @@ fn scale_flows(stages: &[Stage], num: u64, den: u64) -> Vec<Stage> {
     stages
         .iter()
         .map(|s| match s {
-            Stage::Flow { bytes, path, tag } => Stage::Flow {
+            Stage::Flow { bytes, path, tag, timeout } => Stage::Flow {
                 bytes: bytes * frac,
                 path: path.clone(),
                 tag: *tag,
+                timeout: *timeout,
             },
             other => other.clone(),
         })
         .collect()
+}
+
+/// Arm a flow deadline on every transfer stage of a task proc. Only
+/// called with a live fault plan — legacy runs keep their
+/// `timeout: None` stages bit-for-bit.
+fn arm_flow_timeouts(stages: &mut [Stage], deadline: SimNs) {
+    for s in stages.iter_mut() {
+        if let Stage::Flow { timeout, .. } = s {
+            *timeout = Some(deadline);
+        }
+    }
+}
+
+/// Base delay for a timed-out flow's backoff ladder: the recovery
+/// policy's knob when set, else one deadline — the retry cadence then
+/// tracks the timeout itself, which rides out any fault window well
+/// within `MAX_FLOW_RETRIES` attempts.
+fn flow_backoff_base(cfg: &SystemConfig) -> SimNs {
+    if cfg.recovery.backoff_base > SimNs::ZERO {
+        cfg.recovery.backoff_base
+    } else {
+        cfg.netfaults.flow_timeout
+    }
 }
 
 /// Compile a task's failure-injected attempt schedule into time-plane
@@ -368,6 +392,13 @@ fn compile_attempts(
             match cfg.platform {
                 Platform::OpenWhisk => cluster.controller.crash(spec, node),
                 Platform::Lambda => cluster.lambda.crash(),
+            }
+            // Capped exponential backoff before the next attempt
+            // re-enters the fair queue (inert with the ZERO default —
+            // legacy recovery timings are pinned).
+            let wait = cfg.recovery.backoff_for((a + 1) as u32);
+            if wait > SimNs::ZERO {
+                stages.push(Stage::Delay(wait));
             }
         }
     }
@@ -913,6 +944,10 @@ pub fn finalize_stage(
         checkpoint_overhead: p.checkpoint_overhead,
         spec_backups: p.spec_backups,
         spec_backup_wins,
+        // Engine-level flow deadline expiries are transport retries,
+        // not task attempts — reported separately from task_attempts.
+        flow_timeouts: cluster.engine.timeouts_with_prefix(&prefix) as u64,
+        degraded_reads: p.igfs.degraded_reads,
     })
 }
 
@@ -964,6 +999,15 @@ pub fn plan_stage(
     // schedules are sampled per task below. Recovery bookkeeping
     // accumulates across both phases.
     let inject = cfg.failures.enabled();
+    // Degraded-mode I/O (inert by default). A blackout plan arms
+    // write-through — IGFS intermediates also persist beneath the
+    // cache, so a mid-job cache loss has tiers to degrade *to* — and,
+    // when the plan allows it, tier-degraded reads. Flow deadlines arm
+    // per task proc below whenever the fault plan is live.
+    let faulty = cfg.netfaults.enabled();
+    cluster.stores.write_through = cfg.netfaults.blackout_armed();
+    cluster.stores.degraded =
+        cfg.netfaults.blackout_armed() && cfg.netfaults.degraded_tiers;
     if inject {
         for &n in &cfg.failures.lose_datanodes {
             // A typo'd node id must not silently degrade the plan to a
@@ -1247,6 +1291,9 @@ pub fn plan_stage(
             stages.push(Stage::Fail(msg.clone()));
             tally.doomed.get_or_insert(msg);
         }
+        if faulty {
+            arm_flow_timeouts(&mut stages, cfg.netfaults.flow_timeout);
+        }
         let speed = cluster.topo.speed_of(node);
         let orig = cluster.engine.spawn_scaled(
             &format!("{job}/map{i}"),
@@ -1254,6 +1301,14 @@ pub fn plan_stage(
             speed,
             stages,
         );
+        if faulty {
+            cluster.engine.set_flow_retry(
+                orig,
+                flow_backoff_base(cfg),
+                cfg.recovery.backoff_cap,
+                MAX_FLOW_RETRIES,
+            );
+        }
         if ok {
             if cfg.platform == Platform::OpenWhisk {
                 cluster.controller.complete(&map_spec, node);
@@ -1304,6 +1359,25 @@ pub fn plan_stage(
     // before finalize could then consume. Fail the plan instead.
     if let Some(msg) = tally.doomed.take() {
         return Err(msg);
+    }
+
+    // Cache-node blackout (inert by default): between the phases —
+    // after every intermediate landed, before any reducer gathers —
+    // the named nodes lose both cache tiers and leave the partition
+    // map, so their keys reroute and their bytes are gone from the
+    // cache. Gathers then degrade down the storage chain (or fail the
+    // job, when degradation is off). Idempotent per node, so repeated
+    // plans over one shared cluster re-apply harmlessly.
+    if cfg.netfaults.blackout_armed() {
+        for &n in &cfg.netfaults.lose_cachenodes {
+            if n >= cluster.topo.n_nodes() {
+                return Err(format!(
+                    "netfault plan names cache node {n}, cluster has {}",
+                    cluster.topo.n_nodes()
+                ));
+            }
+            cluster.stores.igfs.fail_cache_node(NodeId(n))?;
+        }
     }
 
     // (8–10) Reduce phase — the same three-sub-phase shape as map.
@@ -1468,6 +1542,9 @@ pub fn plan_stage(
             stages.push(Stage::Fail(msg.clone()));
             tally.doomed.get_or_insert(msg);
         }
+        if faulty {
+            arm_flow_timeouts(&mut stages, cfg.netfaults.flow_timeout);
+        }
         let speed = cluster.topo.speed_of(plan.node);
         let orig = cluster.engine.spawn_scaled(
             &format!("{job}/red{j}"),
@@ -1475,6 +1552,14 @@ pub fn plan_stage(
             speed,
             stages,
         );
+        if faulty {
+            cluster.engine.set_flow_retry(
+                orig,
+                flow_backoff_base(cfg),
+                cfg.recovery.backoff_cap,
+                MAX_FLOW_RETRIES,
+            );
+        }
         if ok {
             if cfg.platform == Platform::OpenWhisk {
                 cluster.controller.complete(&reduce_spec, plan.node);
@@ -1575,7 +1660,7 @@ mod tests {
         use crate::sim::{SimNs, Stage};
         let st = vec![
             Stage::Delay(SimNs::from_micros(3)),
-            Stage::Flow { bytes: 1000.0, path: vec![], tag: 9 },
+            Stage::Flow { bytes: 1000.0, path: vec![], tag: 9, timeout: None },
         ];
         let half = super::scale_flows(&st, 50, 100);
         match (&half[0], &half[1]) {

@@ -135,6 +135,11 @@ pub struct TenantReport {
     pub spec_backups: u64,
     /// Races those backups won (the original was cancelled).
     pub spec_backup_wins: u64,
+    /// Flow deadlines this tenant's tasks blew through (each one a
+    /// transport-level retry, not a task attempt).
+    pub flow_timeouts: u64,
+    /// Reads a lower storage tier served after a cache blackout.
+    pub degraded_reads: u64,
     /// IGFS cache activity attributed to this tenant's planning —
     /// including evictions it inflicted on co-tenants under pressure.
     pub igfs: CacheStats,
@@ -384,6 +389,8 @@ impl<'a> JobServer<'a> {
                     checkpoint_overhead: SimNs::ZERO,
                     spec_backups: 0,
                     spec_backup_wins: 0,
+                    flow_timeouts: 0,
+                    degraded_reads: 0,
                     igfs: CacheStats::default(),
                 };
                 for run in jobs.iter().filter(|r| &r.tenant == name) {
@@ -399,6 +406,8 @@ impl<'a> JobServer<'a> {
                         rep.checkpoint_overhead += s.checkpoint_overhead;
                         rep.spec_backups += s.spec_backups;
                         rep.spec_backup_wins += s.spec_backup_wins;
+                        rep.flow_timeouts += s.flow_timeouts;
+                        rep.degraded_reads += s.degraded_reads;
                         rep.igfs.add(&s.igfs);
                     }
                 }

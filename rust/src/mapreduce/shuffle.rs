@@ -33,11 +33,28 @@ pub struct Stores {
     pub s3: ObjectStore,
     /// Tenant class stamped on emitted flow tags (0 = unscoped).
     pub tag_ns: u32,
+    /// Degraded-mode reads: a committed IGFS key the cache cannot
+    /// serve (cache-node blackout) falls down the tiers — HDFS → S3 →
+    /// checkpoint recompute — priced per serving tier and counted in
+    /// `CacheStats::degraded_reads`, instead of erroring. Armed by the
+    /// driver while a blackout plan with `degraded_tiers` is active;
+    /// off (the default), such a read is the legacy "lost" error.
+    pub degraded: bool,
+    /// Write-through: IGFS intermediates also persist to HDFS (the
+    /// paper's §4.3 "Ignite over PMEM" cache-over-store design) and a
+    /// checkpoint copy is kept, so a blackout has somewhere to degrade
+    /// *to*. Armed with a blackout plan; off keeps the legacy flow
+    /// schedule bit-for-bit.
+    pub write_through: bool,
     /// Integrity manifest: committed length per intermediate key.
     /// A read that comes back with a different length (or nothing at
     /// all for a committed key) is corruption and surfaces as `Err` —
     /// never as a silent miss.
     interm_len: HashMap<String, u64>,
+    /// Checkpoint copies of written-through intermediates (zero-copy
+    /// views) — the recompute source of last resort when *every*
+    /// storage tier lost a sole-copy key.
+    scratch: HashMap<String, Payload>,
 }
 
 /// Key for one mapper's output for one partition.
@@ -61,7 +78,16 @@ pub enum KeyHome {
 
 impl Stores {
     pub fn new(hdfs: Hdfs, igfs: Igfs, s3: ObjectStore) -> Stores {
-        Stores { hdfs, igfs, s3, tag_ns: 0, interm_len: HashMap::new() }
+        Stores {
+            hdfs,
+            igfs,
+            s3,
+            tag_ns: 0,
+            degraded: false,
+            write_through: false,
+            interm_len: HashMap::new(),
+            scratch: HashMap::new(),
+        }
     }
 
     /// Probe the handoff resolution chain (IGFS tiers → HDFS → S3) for
@@ -119,6 +145,7 @@ impl Stores {
             }
         }
         self.interm_len.retain(|k, _| !k.starts_with(prefix));
+        self.scratch.retain(|k, _| !k.starts_with(prefix));
         n
     }
 
@@ -142,8 +169,61 @@ impl Stores {
                 Ok(st)
             }
             StoreKind::Hdfs => self.hdfs.put(topo, node, key, data, tag),
-            StoreKind::Igfs => Ok(self.igfs.put(topo, node, key, data, tag)),
+            StoreKind::Igfs => {
+                let mut st =
+                    self.igfs.put(topo, node, key, data.clone(), tag);
+                if self.write_through {
+                    // Cache-over-store: persist the partition beneath
+                    // the cache and keep a checkpoint view, so a later
+                    // cache blackout has tiers to degrade to.
+                    st.extend(self.hdfs.put(
+                        topo,
+                        node,
+                        key,
+                        data.clone(),
+                        tag,
+                    )?);
+                    self.scratch.insert(key.to_string(), data);
+                }
+                Ok(st)
+            }
         }
+    }
+
+    /// Degraded-mode fallback for a committed IGFS key the cache lost:
+    /// HDFS → S3 → checkpoint recompute, in tier order. Each serving
+    /// tier is priced with its own stages; the recompute leg restores
+    /// the partition into the (surviving) cache so later readers hit
+    /// it again. `None` means no tier holds the bytes — the caller's
+    /// manifest check turns that into the "lost" error.
+    fn degraded_read(
+        &mut self,
+        engine: &mut Engine,
+        topo: &Topology,
+        node: NodeId,
+        key: &str,
+        tag: u32,
+    ) -> Option<(Payload, Vec<Stage>)> {
+        if self.hdfs.namenode.stat(key).is_some() {
+            // Blocks may be gone too (cache blackout composed with a
+            // DataNode failure) — fall through rather than erroring.
+            if let Ok((data, st, _, _)) = self.hdfs.read(topo, node, key, tag)
+            {
+                self.igfs.note_degraded(key);
+                return Some((data, st));
+            }
+        }
+        if let Some(data) = self.s3.get(key) {
+            let st = self.s3.get_stages(engine, topo, node, data.len(), tag);
+            self.igfs.note_degraded(key);
+            return Some((data, st));
+        }
+        if let Some(data) = self.scratch.get(key).cloned() {
+            let st = self.igfs.put(topo, node, key, data.clone(), tag);
+            self.igfs.note_degraded(key);
+            return Some((data, st));
+        }
+        None
     }
 
     /// Read an intermediate partition to `node`.
@@ -186,7 +266,16 @@ impl Stores {
             // IGFS demotes evicted entries to the backing tier instead
             // of dropping them, so a cache miss can only mean the key
             // was never stored (or lost — the manifest check below).
-            StoreKind::Igfs => self.igfs.get(topo, node, key, tag),
+            StoreKind::Igfs => {
+                let mut got = self.igfs.get(topo, node, key, tag);
+                if got.is_none()
+                    && self.degraded
+                    && self.interm_len.contains_key(key)
+                {
+                    got = self.degraded_read(engine, topo, node, key, tag);
+                }
+                got
+            }
         };
         // Integrity manifest: a committed key must come back with
         // exactly the committed length, whatever the backend.
@@ -443,6 +532,65 @@ mod tests {
         }
         // Other prefixes untouched.
         assert!(s.locate("job/s02/keep").is_some());
+    }
+
+    #[test]
+    fn degraded_reads_fall_down_the_tiers() {
+        // Write-through armed: the IGFS intermediate also lands in
+        // HDFS and a checkpoint copy is kept. After a cache blackout
+        // the read degrades HDFS → checkpoint instead of erroring,
+        // counting each degraded serve.
+        let (mut e, t, mut s) = setup();
+        s.write_through = true;
+        s.degraded = true;
+        let key = "job/shuffle/m00000/p000";
+        s.write_intermediate(&mut e, &t, StoreKind::Igfs, NodeId(0), key,
+                             Payload::real(vec![3; 48]))
+            .unwrap();
+        assert!(s.hdfs.namenode.stat(key).is_some(), "write-through copy");
+        // Blackout: the cache copy is gone from both tiers.
+        assert!(s.igfs.remove(key));
+        let (data, st) = s
+            .read_intermediate(&mut e, &t, StoreKind::Igfs, NodeId(1), key)
+            .unwrap()
+            .expect("degraded read serves from HDFS");
+        assert_eq!(data.len(), 48);
+        assert_eq!(data.gather().unwrap()[0], 3);
+        assert!(!st.is_empty(), "degraded serve is priced");
+        assert_eq!(s.igfs.stats().degraded_reads, 1);
+        // HDFS gone too: sole-copy key recomputes from the checkpoint
+        // and is restored into the surviving cache.
+        assert!(s.hdfs.delete(key));
+        let (data, _) = s
+            .read_intermediate(&mut e, &t, StoreKind::Igfs, NodeId(1), key)
+            .unwrap()
+            .expect("checkpoint recompute serves");
+        assert_eq!(data.len(), 48);
+        assert_eq!(s.igfs.stats().degraded_reads, 2);
+        // Restored: the next read is a plain cache hit, not degraded.
+        assert!(s
+            .read_intermediate(&mut e, &t, StoreKind::Igfs, NodeId(1), key)
+            .unwrap()
+            .is_some());
+        assert_eq!(s.igfs.stats().degraded_reads, 2);
+    }
+
+    #[test]
+    fn degraded_read_errors_only_when_no_tier_holds_the_bytes() {
+        // Degraded mode without write-through: the cache held the sole
+        // copy, so once it is gone no tier can serve — still an error,
+        // graceful degradation never invents bytes.
+        let (mut e, t, mut s) = setup();
+        s.degraded = true;
+        let key = "job/shuffle/sole";
+        s.write_intermediate(&mut e, &t, StoreKind::Igfs, NodeId(0), key,
+                             Payload::real(vec![5; 32]))
+            .unwrap();
+        assert!(s.igfs.remove(key));
+        let r = s.read_intermediate(&mut e, &t, StoreKind::Igfs, NodeId(0),
+                                    key);
+        assert!(r.is_err());
+        assert!(r.unwrap_err().contains("lost"));
     }
 
     #[test]

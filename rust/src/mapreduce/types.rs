@@ -9,7 +9,7 @@
 
 use crate::coordinator::recovery::{FailurePlan, RecoveryConfig};
 use crate::igfs::CacheStats;
-use crate::net::{DeviceRole, StragglerProfile};
+use crate::net::{DeviceRole, NetFaultPlan, StragglerProfile};
 use crate::sim::SimNs;
 use crate::util::bytes::{GIB, MIB};
 
@@ -152,6 +152,12 @@ pub struct SystemConfig {
     /// Speculative backup attempts racing projected laggards. Off by
     /// default; like `stragglers`, a time-plane-only knob.
     pub speculation: SpeculationConfig,
+    /// Network fault injection + degraded-mode I/O (link fault
+    /// windows, flow deadlines with backoff retries, cache-node
+    /// blackouts). Disabled by default; arming it moves only virtual
+    /// time and the `flow_timeouts`/`degraded_reads` counters —
+    /// outputs stay byte-identical.
+    pub netfaults: NetFaultPlan,
 }
 
 /// Parse one worker-count override value (the pure half of `from_env`,
@@ -178,6 +184,7 @@ impl SystemConfig {
         let reduce = std::env::var("MARVEL_REDUCE_WORKERS").ok();
         let fseed = std::env::var("MARVEL_FAILURE_SEED").ok();
         let sseed = std::env::var("MARVEL_STRAGGLER_SEED").ok();
+        let nseed = std::env::var("MARVEL_NETFAULT_SEED").ok();
         let mut cfg = self.with_worker_overrides(
             parse_workers(map.as_deref()),
             parse_workers(reduce.as_deref()),
@@ -195,6 +202,14 @@ impl SystemConfig {
             sseed.as_deref().and_then(|s| s.trim().parse::<u64>().ok())
         {
             cfg.stragglers.seed = seed;
+        }
+        // Third fault axis, same pattern: inert until a plan arms
+        // `prob`, so only the netfault tests (and CI's seed column)
+        // feel it.
+        if let Some(seed) =
+            nseed.as_deref().and_then(|s| s.trim().parse::<u64>().ok())
+        {
+            cfg.netfaults.seed = seed;
         }
         cfg
     }
@@ -239,6 +254,7 @@ impl SystemConfig {
             failures: FailurePlan::disabled(),
             stragglers: StragglerProfile::disabled(),
             speculation: SpeculationConfig::disabled(),
+            netfaults: NetFaultPlan::disabled(),
         }
         .from_env()
     }
@@ -266,6 +282,7 @@ impl SystemConfig {
             failures: FailurePlan::disabled(),
             stragglers: StragglerProfile::disabled(),
             speculation: SpeculationConfig::disabled(),
+            netfaults: NetFaultPlan::disabled(),
         }
         .from_env()
     }
@@ -332,6 +349,7 @@ impl SystemConfig {
             failures: FailurePlan::disabled(),
             stragglers: StragglerProfile::disabled(),
             speculation: SpeculationConfig::disabled(),
+            netfaults: NetFaultPlan::disabled(),
         }
         .from_env()
     }
@@ -423,6 +441,13 @@ pub struct JobResult {
     /// the backups lost and were cancelled themselves — either way
     /// exactly one copy of each speculated task completed.
     pub spec_backup_wins: u64,
+    /// Flow deadlines this job's tasks blew (each one reaped the
+    /// stalled transfer and retried it with backoff — not counted in
+    /// `task_attempts`, which tracks container invocations).
+    pub flow_timeouts: u64,
+    /// Reads the cache tier could not serve (cache-node blackout) and
+    /// a lower storage tier (HDFS/S3) served instead of erroring.
+    pub degraded_reads: u64,
 }
 
 impl JobResult {
@@ -453,6 +478,8 @@ impl JobResult {
             checkpoint_overhead: SimNs::ZERO,
             spec_backups: 0,
             spec_backup_wins: 0,
+            flow_timeouts: 0,
+            degraded_reads: 0,
         }
     }
 
@@ -566,6 +593,8 @@ mod tests {
         ] {
             assert!(!cfg.stragglers.enabled(), "{}", cfg.name);
             assert!(!cfg.speculation.enabled, "{}", cfg.name);
+            assert!(!cfg.netfaults.enabled(), "{}", cfg.name);
+            assert!(!cfg.netfaults.blackout_armed(), "{}", cfg.name);
         }
         assert!(SpeculationConfig::on().enabled);
         // Explicit field assignment after construction wins over the

@@ -7,8 +7,10 @@
 //!
 //! See `ARCHITECTURE.md` (Layer 1).
 
+pub mod netfault;
 pub mod topology;
 
+pub use netfault::{NetFaultPlan, MAX_FLOW_RETRIES};
 pub use topology::{
     DevId, DeviceRole, NodeId, StragglerProfile, Topology, TopologyBuilder,
 };

@@ -1,0 +1,216 @@
+//! Seed-driven network fault injection — the I/O half of the fault
+//! story. A [`NetFaultPlan`] draws, per link (each node's NIC in/out
+//! channel plus the WAN up/down pipes), an optional *fault window*
+//! `[t0, t1)`: during it the link serves at a fraction of its healthy
+//! capacity (a congested/flapping link) or at zero (a blackout). The
+//! windows install into [`crate::sim::flow::FlowSim`] as time-varying
+//! capacity, so every flow crossing a faulted link re-rates
+//! deterministically at the window edges.
+//!
+//! Determinism contract (same as [`super::StragglerProfile`]): a
+//! link's window is a pure function of `(seed, link index)` — never of
+//! job data, worker counts, or co-tenants — so arming a plan moves
+//! only virtual time and attempt/degradation counters. Outputs stay
+//! byte-identical because the data plane never consults link state.
+//!
+//! See `ARCHITECTURE.md` ("Degraded-mode I/O").
+
+use crate::sim::{Engine, ResourceId, SimNs};
+use crate::util::rng::Rng;
+
+use super::Topology;
+
+/// Retry budget for a timed-out flow before the attempt fails over to
+/// checkpoint recovery: 8 × the default 250 ms deadline rides out the
+/// longest window a plan can draw (~1.5 s) even with zero backoff.
+pub const MAX_FLOW_RETRIES: u32 = 8;
+
+/// Seed-driven link fault windows plus the degraded-mode I/O knobs
+/// that ride with them. Disabled by default (`prob == 0.0`): no
+/// windows install, no flow deadlines arm, and the deployed cluster
+/// is bit-for-bit the legacy fault-free one.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetFaultPlan {
+    /// Seed driving the per-link window draw (independent of the data
+    /// seed; CI sweeps it via `MARVEL_NETFAULT_SEED`).
+    pub seed: u64,
+    /// Per-link probability of carrying a fault window.
+    pub prob: f64,
+    /// Capacity divisor for non-blackout windows: a faulted link
+    /// serves at `1/slowdown` of its healthy rate. (~30 % of faulted
+    /// links draw a full blackout instead.)
+    pub slowdown: f64,
+    /// Deadline armed on every task transfer while the plan is
+    /// enabled. A flow still in the air past it is reaped and retried
+    /// with backoff; an exhausted budget fails the attempt like a
+    /// container crash.
+    pub flow_timeout: SimNs,
+    /// Whether reads may degrade down the storage tiers (IGFS → HDFS
+    /// → S3) when the cache can't serve. Off = a blackout victim's
+    /// read is a hard error (the ablation leg of fig10).
+    pub degraded_tiers: bool,
+    /// Cache nodes blacked out between the map and reduce phases
+    /// (DRAM + PMEM contents dropped, node leaves the partition map).
+    pub lose_cachenodes: Vec<usize>,
+}
+
+impl Default for NetFaultPlan {
+    fn default() -> Self {
+        NetFaultPlan {
+            seed: 29,
+            prob: 0.0,
+            slowdown: 8.0,
+            flow_timeout: SimNs::from_millis(250),
+            degraded_tiers: true,
+            lose_cachenodes: Vec::new(),
+        }
+    }
+}
+
+impl NetFaultPlan {
+    /// An inert plan (the default for every `SystemConfig` preset).
+    pub fn disabled() -> NetFaultPlan {
+        NetFaultPlan::default()
+    }
+
+    /// Whether the plan can fault any link at all (and hence whether
+    /// flow deadlines arm).
+    pub fn enabled(&self) -> bool {
+        self.prob > 0.0
+    }
+
+    /// Whether a cache-node blackout is armed — the driver only
+    /// write-through-replicates intermediates to HDFS when it is, so
+    /// blackout-free runs keep their exact legacy flow schedule.
+    pub fn blackout_armed(&self) -> bool {
+        !self.lose_cachenodes.is_empty()
+    }
+
+    /// The fault window for link index `i`: `Some((t0, t1, factor))`
+    /// in seconds with `factor ∈ [0, 1)` (0 = blackout), or `None`
+    /// for a healthy link. Pure function of `(seed, i)`.
+    pub fn window_of(&self, i: usize) -> Option<(f64, f64, f64)> {
+        if !self.enabled() {
+            return None;
+        }
+        let mut rng = Rng::new(
+            self.seed
+                ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        if !rng.chance(self.prob) {
+            return None;
+        }
+        // Windows sit inside the first simulated seconds — where the
+        // benchmark jobs live — and last long enough to starve a
+        // deadline but not the whole run.
+        let t0 = 0.05 + 0.80 * rng.f64();
+        let len = 0.15 + 0.50 * rng.f64();
+        let factor = if rng.chance(0.30) {
+            0.0
+        } else {
+            1.0 / self.slowdown.max(1.0)
+        };
+        Some((t0, t0 + len, factor))
+    }
+
+    /// The faultable links of a deployed topology, in the index order
+    /// `window_of` is keyed by: each node's NIC in/out pair, then the
+    /// WAN up/down pipes. Memory buses and storage device channels
+    /// never fault — this models the *network*, the storage tiers get
+    /// their own blackout path ([`crate::igfs::Igfs::fail_cache_node`]).
+    pub fn links(topo: &Topology) -> Vec<ResourceId> {
+        let mut links = Vec::with_capacity(2 * topo.n_nodes() + 2);
+        for n in &topo.nodes {
+            links.push(n.nic_in);
+            links.push(n.nic_out);
+        }
+        links.push(topo.wan_up);
+        links.push(topo.wan_down);
+        links
+    }
+
+    /// Draw and install this plan's windows into the engine's flow
+    /// simulator. Returns how many links got a window. Idempotent per
+    /// deploy — `ClusterSpec::deploy` calls it exactly once.
+    pub fn install(&self, topo: &Topology, engine: &mut Engine) -> usize {
+        if !self.enabled() {
+            return 0;
+        }
+        let mut installed = 0;
+        for (i, link) in Self::links(topo).into_iter().enumerate() {
+            if let Some((t0, t1, factor)) = self.window_of(i) {
+                engine.flows.add_capacity_window(link, t0, t1, factor);
+                installed += 1;
+            }
+        }
+        installed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::TopologyBuilder;
+
+    #[test]
+    fn disabled_plan_is_inert() {
+        let plan = NetFaultPlan::disabled();
+        assert!(!plan.enabled());
+        assert!(!plan.blackout_armed());
+        assert_eq!(plan.window_of(0), None);
+        let mut e = Engine::new();
+        let t = TopologyBuilder { nodes: 3, ..Default::default() }
+            .build(&mut e);
+        assert_eq!(plan.install(&t, &mut e), 0);
+        assert!(e.flows.capacity_windows().is_empty());
+    }
+
+    #[test]
+    fn windows_are_deterministic_and_well_formed() {
+        let plan = NetFaultPlan {
+            prob: 0.7,
+            ..NetFaultPlan::default()
+        };
+        let mut faulted = 0;
+        let mut blackouts = 0;
+        for i in 0..200 {
+            let a = plan.window_of(i);
+            assert_eq!(a, plan.window_of(i), "pure fn of (seed, i)");
+            if let Some((t0, t1, f)) = a {
+                faulted += 1;
+                assert!(t0 >= 0.05 && t1 > t0 && t1 < 2.0, "{t0}..{t1}");
+                assert!((0.0..1.0).contains(&f), "factor {f}");
+                if f == 0.0 {
+                    blackouts += 1;
+                } else {
+                    assert!((f - 1.0 / plan.slowdown).abs() < 1e-12);
+                }
+            }
+        }
+        // ~70 % of links fault, ~30 % of those black out.
+        assert!((100..180).contains(&faulted), "{faulted}");
+        assert!(blackouts > 10, "{blackouts}");
+        // A different seed draws a different plan.
+        let other = NetFaultPlan { seed: 30, ..plan.clone() };
+        assert!(
+            (0..200).any(|i| plan.window_of(i) != other.window_of(i)),
+            "seed must matter"
+        );
+    }
+
+    #[test]
+    fn install_covers_nics_and_wan_only() {
+        let mut e = Engine::new();
+        let t = TopologyBuilder { nodes: 2, ..Default::default() }
+            .build(&mut e);
+        let links = NetFaultPlan::links(&t);
+        assert_eq!(links.len(), 2 * 2 + 2);
+        for m in &t.membus {
+            assert!(!links.contains(m), "membus never faults");
+        }
+        let plan = NetFaultPlan { prob: 1.0, ..NetFaultPlan::default() };
+        let n = plan.install(&t, &mut e);
+        assert_eq!(n, links.len(), "prob=1 faults every link");
+        assert_eq!(e.flows.capacity_windows().len(), n);
+    }
+}

@@ -320,6 +320,7 @@ mod tests {
             bytes: 1.25e9,
             path: t.lan_path(NodeId(0), NodeId(1)),
             tag: 0,
+            timeout: None,
         }]);
         let end = e.run().unwrap();
         assert!((end.as_secs_f64() - 1.0).abs() < 0.01, "{end}");
@@ -417,6 +418,7 @@ mod tests {
             bytes: 1.25e9,
             path: t.wan_put_path(NodeId(0)),
             tag: 0,
+            timeout: None,
         }]);
         let end = e.run().unwrap();
         // 1.25 GB at 5 Gb/s = 2 s.

@@ -147,8 +147,8 @@ impl ObjectStore {
         vec![
             Stage::Delay(self.rtt),
             // One token through the GET rate limiter (queues under load).
-            Stage::Flow { bytes: 1.0, path: vec![self.get_rate], tag },
-            Stage::Flow { bytes: bytes as f64, path, tag },
+            Stage::Flow { bytes: 1.0, path: vec![self.get_rate], tag, timeout: None },
+            Stage::Flow { bytes: bytes as f64, path, tag, timeout: None },
         ]
     }
 
@@ -160,8 +160,8 @@ impl ObjectStore {
         path.extend(topo.wan_put_path(node));
         vec![
             Stage::Delay(self.rtt),
-            Stage::Flow { bytes: 1.0, path: vec![self.put_rate], tag },
-            Stage::Flow { bytes: bytes as f64, path, tag },
+            Stage::Flow { bytes: 1.0, path: vec![self.put_rate], tag, timeout: None },
+            Stage::Flow { bytes: bytes as f64, path, tag, timeout: None },
         ]
     }
 }

@@ -45,8 +45,19 @@ pub enum Stage {
     Release(PoolId),
     /// Fixed latency: cold start, per-request overhead, storage op latency.
     Delay(SimNs),
-    /// Move `bytes` through `path` under max–min fair sharing.
-    Flow { bytes: f64, path: Vec<ResourceId>, tag: u32 },
+    /// Move `bytes` through `path` under max–min fair sharing. With a
+    /// `timeout`, a transfer still in flight that long after it started
+    /// fails the attempt like a crash: the engine reaps the flow from
+    /// the fair-share set (no leaked link capacity) and either replays
+    /// it after a capped-exponential backoff (when the proc carries a
+    /// [`Engine::set_flow_retry`] policy — re-acquiring its slot
+    /// through the fair queue) or fails the proc outright.
+    Flow {
+        bytes: f64,
+        path: Vec<ResourceId>,
+        tag: u32,
+        timeout: Option<SimNs>,
+    },
     /// Signal one arrival at a barrier.
     Arrive(BarrierId),
     /// Block until the barrier has received all its arrivals.
@@ -84,6 +95,26 @@ pub enum ProcState {
     Cancelled,
 }
 
+/// Per-proc flow-deadline retry policy: capped exponential backoff
+/// between replays, mirroring `RecoveryConfig`'s attempt machinery.
+#[derive(Clone, Debug)]
+struct FlowRetry {
+    base: SimNs,
+    cap: SimNs,
+    max: u32,
+    used: u32,
+}
+
+impl FlowRetry {
+    /// Backoff before retry number `n` (1-based): `base × 2^(n-1)`,
+    /// saturating, never above `cap`.
+    fn backoff(&self, n: u32) -> SimNs {
+        let shift = (n.saturating_sub(1)).min(20);
+        let ns = self.base.as_nanos().saturating_mul(1u64 << shift);
+        SimNs(ns).min(self.cap)
+    }
+}
+
 #[derive(Debug)]
 struct Proc {
     stages: VecDeque<Stage>,
@@ -103,6 +134,8 @@ struct Proc {
     /// Slots currently held (acquired, not yet released) — what a
     /// `Cancel` must hand back so the loser's container returns warm.
     held: Vec<PoolId>,
+    /// Flow-deadline retry policy; None fails the proc on first timeout.
+    retry: Option<FlowRetry>,
 }
 
 struct Pool {
@@ -146,11 +179,15 @@ pub struct Engine {
     ready: VecDeque<ProcId>,
     timers: BinaryHeap<Reverse<(SimNs, u64, ProcId)>>,
     timer_seq: u64,
-    flow_owner: Vec<(FlowId, ProcId, SimNs)>,
+    /// Active transfers: flow, owning proc, start instant, deadline.
+    flow_owner: Vec<(FlowId, ProcId, SimNs, Option<SimNs>)>,
     now: SimNs,
     pub flow_log: Vec<FlowLog>,
     /// Injected container crashes, in virtual-time order.
     pub crash_log: Vec<CrashEvent>,
+    /// Flow-deadline expiries (reaped transfers), in virtual-time
+    /// order — the degraded-network analog of `crash_log`.
+    pub timeout_log: Vec<CrashEvent>,
     /// Per-class weights for contended slot grants (absent = 1).
     class_weights: HashMap<u32, u64>,
 }
@@ -175,8 +212,26 @@ impl Engine {
             now: SimNs::ZERO,
             flow_log: Vec::new(),
             crash_log: Vec::new(),
+            timeout_log: Vec::new(),
             class_weights: HashMap::new(),
         }
+    }
+
+    /// Arm a flow-deadline retry policy on `id`: up to `max` replays
+    /// with capped exponential backoff (`base × 2^(n-1)`, ≤ `cap`)
+    /// between them. Each replay releases the proc's held slot, backs
+    /// off, and re-acquires through the weighted-fair queue — the same
+    /// path a crashed attempt takes. Without a policy, the first
+    /// expired deadline fails the proc.
+    pub fn set_flow_retry(
+        &mut self,
+        id: ProcId,
+        base: SimNs,
+        cap: SimNs,
+        max: u32,
+    ) {
+        self.procs[id.0].retry =
+            Some(FlowRetry { base, cap, max, used: 0 });
     }
 
     /// Set the fair-share weight of a proc class (tenant). Contended
@@ -253,6 +308,7 @@ impl Engine {
             speed,
             grant: None,
             held: Vec::new(),
+            retry: None,
         });
         self.ready.push_back(id);
         id
@@ -303,6 +359,16 @@ impl Engine {
     /// non-fatal [`Stage::Crash`] events.
     pub fn crashes_with_prefix(&self, prefix: &str) -> usize {
         self.crash_log
+            .iter()
+            .filter(|c| c.proc_label.starts_with(prefix))
+            .count()
+    }
+
+    /// Flow-deadline expiries among procs whose label starts with
+    /// `prefix` — the per-job census of transfers reaped by a timeout
+    /// (each retried or, with the budget spent, failed).
+    pub fn timeouts_with_prefix(&self, prefix: &str) -> usize {
+        self.timeout_log
             .iter()
             .filter(|c| c.proc_label.starts_with(prefix))
             .count()
@@ -464,9 +530,13 @@ impl Engine {
                     self.procs[id.0].state = ProcState::Blocked;
                     return;
                 }
-                Stage::Flow { bytes, path, tag } => {
+                Stage::Flow { bytes, path, tag, timeout } => {
                     let fid = self.flows.start(bytes, path, tag);
-                    self.flow_owner.push((fid, id, self.now));
+                    // A fresh deadline per attempt; retries re-arm it.
+                    let deadline =
+                        timeout.filter(|t| *t > SimNs::ZERO)
+                            .map(|t| self.now + t);
+                    self.flow_owner.push((fid, id, self.now, deadline));
                     self.procs[id.0].state = ProcState::Blocked;
                     return;
                 }
@@ -528,7 +598,8 @@ impl Engine {
                 return Ok(self.now);
             }
 
-            // Next event: earliest of timer pop and flow completion.
+            // Next event: earliest of timer pop, flow completion (or
+            // capacity-window edge), and flow deadline.
             let t_timer = self.timers.peek().map(|Reverse((t, _, _))| *t);
             // Ceil to whole ns: guarantees the step is non-zero so a
             // sub-ns residue cannot spin the loop (flows overshoot by at
@@ -537,11 +608,18 @@ impl Engine {
                 .flows
                 .time_to_next_completion()
                 .map(|dt| self.now + SimNs::from_secs_f64_ceil(dt));
-            let next = match (t_timer, t_flow) {
-                (Some(a), Some(b)) => a.min(b),
-                (Some(a), None) => a,
-                (None, Some(b)) => b,
-                (None, None) => {
+            let t_dead = self
+                .flow_owner
+                .iter()
+                .filter_map(|(_, _, _, d)| *d)
+                .min();
+            let next = match [t_timer, t_flow, t_dead]
+                .into_iter()
+                .flatten()
+                .min()
+            {
+                Some(t) => t,
+                None => {
                     let stuck: Vec<&str> = self
                         .procs
                         .iter()
@@ -564,9 +642,10 @@ impl Engine {
                 let pos = self
                     .flow_owner
                     .iter()
-                    .position(|(f, _, _)| *f == rec.id)
+                    .position(|(f, _, _, _)| *f == rec.id)
                     .expect("flow without owner");
-                let (_, owner, started) = self.flow_owner.swap_remove(pos);
+                let (_, owner, started, _) =
+                    self.flow_owner.swap_remove(pos);
                 self.flow_log.push(FlowLog {
                     tag: rec.tag,
                     bytes: rec.bytes,
@@ -582,6 +661,96 @@ impl Engine {
                 }
                 self.timers.pop();
                 self.wake(id);
+            }
+            self.expire_flow_deadlines();
+        }
+    }
+
+    /// Reap every flow whose deadline has passed (completions at the
+    /// same instant were already drained — a transfer finishing exactly
+    /// on its deadline survives). The flow leaves the fair-share set so
+    /// survivors re-rate; the owner retries under its backoff policy or
+    /// fails. Deterministic: expiries are processed in flow-id order.
+    fn expire_flow_deadlines(&mut self) {
+        let mut expired: Vec<(FlowId, ProcId, SimNs, SimNs)> = self
+            .flow_owner
+            .iter()
+            .filter_map(|(f, p, s, d)| {
+                d.filter(|d| *d <= self.now).map(|d| (*f, *p, *s, d))
+            })
+            .collect();
+        expired.sort_by_key(|(f, _, _, _)| *f);
+        for (fid, owner, started, deadline) in expired {
+            let pos = self
+                .flow_owner
+                .iter()
+                .position(|(f, _, _, _)| *f == fid)
+                .expect("expired flow without owner");
+            self.flow_owner.swap_remove(pos);
+            let spec = self.flows.spec_of(fid);
+            self.flows.remove(fid);
+            if self.procs[owner.0].state != ProcState::Blocked {
+                // Cancelled mid-flight: the reap already freed the
+                // link capacity; nobody retries.
+                continue;
+            }
+            let stalled = self.now.saturating_sub(started);
+            self.timeout_log.push(CrashEvent {
+                at: self.now,
+                proc_label: self.procs[owner.0].label.clone(),
+                what: format!("flow stalled {stalled}, deadline hit"),
+            });
+            let budget = self.procs[owner.0].retry.clone();
+            match (budget, spec) {
+                (Some(r), Some((bytes, path, tag))) if r.used < r.max => {
+                    let n = r.used + 1;
+                    let backoff = r.backoff(n);
+                    self.procs[owner.0].retry.as_mut().unwrap().used = n;
+                    // Replay the whole transfer (progress restarts at
+                    // the last durable point, which the flow volume
+                    // already models) with a fresh deadline. The slot
+                    // is surrendered during the backoff and re-won
+                    // through the weighted-fair queue.
+                    let timeout = deadline.saturating_sub(started);
+                    let slot = self.procs[owner.0].held.last().copied();
+                    let stages = &mut self.procs[owner.0].stages;
+                    stages.push_front(Stage::Flow {
+                        bytes,
+                        path,
+                        tag,
+                        timeout: Some(timeout),
+                    });
+                    match slot {
+                        Some(p) => {
+                            stages.push_front(Stage::Acquire(p));
+                            stages.push_front(Stage::Delay(backoff));
+                            stages.push_front(Stage::Release(p));
+                        }
+                        None => stages.push_front(Stage::Delay(backoff)),
+                    }
+                    self.wake(owner);
+                }
+                _ => {
+                    // Budget spent (or the flow vanished): fail like
+                    // Stage::Fail, but hand every held slot back so a
+                    // co-tenant can never deadlock on a leaked
+                    // container.
+                    let msg = format!(
+                        "flow timeout: transfer stalled {stalled} and \
+                         the retry budget is exhausted"
+                    );
+                    self.procs[owner.0].state = ProcState::Failed(msg);
+                    self.procs[owner.0].finished = self.now;
+                    let held =
+                        std::mem::take(&mut self.procs[owner.0].held);
+                    let grant = self.procs[owner.0].grant.take();
+                    for p in held {
+                        self.do_release(p);
+                    }
+                    if let Some(p) = grant {
+                        self.do_release(p);
+                    }
+                }
             }
         }
     }
@@ -642,6 +811,7 @@ mod tests {
                 bytes: 500.0,
                 path: vec![link],
                 tag: i,
+                timeout: None,
             }]);
         }
         let end = e.run().unwrap();
@@ -790,6 +960,7 @@ mod tests {
             bytes: 100.0,
             path: vec![link],
             tag: 0,
+            timeout: None,
         }]);
         e.run().unwrap();
         assert_eq!(e.finished_at(slow), SimNs::from_millis(40));
@@ -907,6 +1078,113 @@ mod tests {
     }
 
     #[test]
+    fn flow_timeout_without_policy_fails_the_proc() {
+        // 1000 B over a blacked-out link with a 2 s deadline and no
+        // retry policy: the proc fails at 2 s, the flow is reaped (no
+        // leaked capacity — a second flow then runs at full rate once
+        // the window lifts), and the stall is logged.
+        let mut e = Engine::new();
+        let link = e.add_resource("l", 100.0);
+        e.flows.add_capacity_window(link, 0.0, 60.0, 0.0);
+        let p = e.spawn("doomed", vec![Stage::Flow {
+            bytes: 1000.0,
+            path: vec![link],
+            tag: 0,
+            timeout: Some(SimNs::from_secs_f64(2.0)),
+        }]);
+        e.spawn("later", vec![
+            Stage::Delay(SimNs::from_secs_f64(60.0)),
+            Stage::Flow {
+                bytes: 1000.0,
+                path: vec![link],
+                tag: 1,
+                timeout: None,
+            },
+        ]);
+        let end = e.run().unwrap();
+        assert!(matches!(e.state(p), ProcState::Failed(m)
+                         if m.contains("flow timeout")));
+        assert_eq!(e.finished_at(p), SimNs::from_secs_f64(2.0));
+        assert_eq!(e.timeouts_with_prefix("doomed"), 1);
+        assert_eq!(e.timeouts_with_prefix("later"), 0);
+        // later: starts at 60 s, 1000 B at full 100 B/s → 70 s.
+        assert!((end.as_secs_f64() - 70.0).abs() < 1e-6, "{end}");
+    }
+
+    #[test]
+    fn flow_timeout_retries_with_backoff_through_a_blackout() {
+        // Link blacked out over [0, 3): the first attempt stalls and
+        // times out at 1 s, backs off 0.5 s, retries at 1.5 s, times
+        // out at 2.5 s, backs off 1 s (exponential), retries at 3.5 s
+        // — after the window — and the 100 B transfer completes at
+        // 4.5 s. The slot is released and re-acquired per retry.
+        let mut e = Engine::new();
+        let link = e.add_resource("l", 100.0);
+        e.flows.add_capacity_window(link, 0.0, 3.0, 0.0);
+        let pool = e.add_pool(1);
+        let p = e.spawn("t", vec![
+            Stage::Acquire(pool),
+            Stage::Flow {
+                bytes: 100.0,
+                path: vec![link],
+                tag: 7,
+                timeout: Some(SimNs::from_secs_f64(1.0)),
+            },
+            Stage::Release(pool),
+        ]);
+        e.set_flow_retry(
+            p,
+            SimNs::from_millis(500),
+            SimNs::from_secs_f64(8.0),
+            5,
+        );
+        let end = e.run().unwrap();
+        assert_eq!(*e.state(p), ProcState::Finished);
+        assert_eq!(e.timeouts_with_prefix("t"), 2);
+        assert!((end.as_secs_f64() - 4.5).abs() < 1e-6, "{end}");
+        // Exactly one completed transfer in the log, full volume.
+        assert_eq!(e.flow_log.len(), 1);
+        assert!((e.flow_log[0].bytes - 100.0).abs() < 1e-9);
+        // Backoff growth is capped.
+        let r = FlowRetry {
+            base: SimNs::from_millis(500),
+            cap: SimNs::from_secs_f64(2.0),
+            max: 10,
+            used: 0,
+        };
+        assert_eq!(r.backoff(1), SimNs::from_millis(500));
+        assert_eq!(r.backoff(2), SimNs::from_secs_f64(1.0));
+        assert_eq!(r.backoff(3), SimNs::from_secs_f64(2.0));
+        assert_eq!(r.backoff(9), SimNs::from_secs_f64(2.0), "capped");
+    }
+
+    #[test]
+    fn timed_out_flow_returns_capacity_to_survivors() {
+        // Two flows share a link; one has a deadline it cannot make
+        // (no retry policy). After it is reaped the survivor must run
+        // at full capacity: 1000 B total, 2×50 B/s for 1 s, then
+        // 950 B at 100 B/s → done at 10.5 s.
+        let mut e = Engine::new();
+        let link = e.add_resource("l", 100.0);
+        e.spawn("dead", vec![Stage::Flow {
+            bytes: 1e9,
+            path: vec![link],
+            tag: 0,
+            timeout: Some(SimNs::from_secs_f64(1.0)),
+        }]);
+        let b = e.spawn("ok", vec![Stage::Flow {
+            bytes: 1000.0,
+            path: vec![link],
+            tag: 1,
+            timeout: None,
+        }]);
+        let end = e.run().unwrap();
+        assert_eq!(*e.state(b), ProcState::Finished);
+        assert!((end.as_secs_f64() - 10.5).abs() < 1e-6, "{end}");
+        assert_eq!(e.failures().len(), 1);
+    }
+
+    #[test]
     fn determinism() {
         let build = || {
             let mut e = Engine::new();
@@ -916,7 +1194,7 @@ mod tests {
             for i in 0..3u32 {
                 e.spawn(&format!("t{i}"), vec![
                     Stage::Acquire(pool),
-                    Stage::Flow { bytes: 100.0 * (i + 1) as f64, path: vec![link], tag: i },
+                    Stage::Flow { bytes: 100.0 * (i + 1) as f64, path: vec![link], tag: i, timeout: None },
                     Stage::Release(pool),
                     Stage::Arrive(bar),
                 ]);

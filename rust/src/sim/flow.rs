@@ -8,6 +8,14 @@
 //! constrained resource, freeze the fair share of every unfrozen flow
 //! through it, remove its capacity, repeat. This is the classic fluid
 //! model used by flow-level datacenter simulators.
+//!
+//! Degraded-mode I/O: a resource's capacity can vary over virtual time
+//! through [`CapacityWindow`]s — a fault window `[t0, t1)` scales the
+//! nominal capacity by a factor (0 = full blackout). Shared flows
+//! re-rate deterministically at window edges because
+//! [`FlowSim::time_to_next_completion`] never lets the engine step
+//! across an edge, and [`FlowSim::remove`] lets the engine reap a
+//! timed-out flow so a blackout victim does not leak link capacity.
 
 use std::collections::HashMap;
 
@@ -43,6 +51,20 @@ pub struct FlowRecord {
     pub tag: u32,
 }
 
+/// A time-varying capacity fault: over virtual seconds `[t0, t1)`,
+/// `resource` serves at `factor` × its nominal capacity. `factor == 0`
+/// is a full blackout — flows through the resource starve until the
+/// window closes (or their owner reaps them on a deadline).
+/// Overlapping windows on one resource take the *worst* (minimum)
+/// factor: concurrent faults do not partially cancel each other.
+#[derive(Clone, Debug)]
+pub struct CapacityWindow {
+    pub resource: ResourceId,
+    pub t0: f64,
+    pub t1: f64,
+    pub factor: f64,
+}
+
 #[derive(Default)]
 /// Max–min fair-share fluid flow simulator.
 pub struct FlowSim {
@@ -50,6 +72,11 @@ pub struct FlowSim {
     flows: HashMap<FlowId, Flow>,
     next_id: u64,
     dirty: bool,
+    /// Scheduled capacity faults, consulted at the current clock.
+    windows: Vec<CapacityWindow>,
+    /// Virtual seconds elapsed, advanced in lockstep with the engine
+    /// via [`FlowSim::advance`] — what decides which windows are open.
+    now: f64,
 }
 
 const EPS: f64 = 1e-6;
@@ -71,6 +98,83 @@ impl FlowSim {
 
     pub fn active_flows(&self) -> usize {
         self.flows.len()
+    }
+
+    /// Schedule a capacity fault window. Windows may be added at any
+    /// time before or during a run; rates re-derive at the next event.
+    pub fn add_capacity_window(
+        &mut self,
+        resource: ResourceId,
+        t0: f64,
+        t1: f64,
+        factor: f64,
+    ) {
+        assert!(resource.0 < self.resources.len(), "unknown {resource:?}");
+        assert!(t1 > t0, "empty fault window [{t0}, {t1})");
+        assert!(
+            (0.0..=1.0).contains(&factor),
+            "fault factor {factor} outside [0, 1]"
+        );
+        self.windows.push(CapacityWindow { resource, t0, t1, factor });
+        self.dirty = true;
+    }
+
+    /// Scheduled fault windows (inspection/reporting hook).
+    pub fn capacity_windows(&self) -> &[CapacityWindow] {
+        &self.windows
+    }
+
+    /// Effective capacity of resource `i` at the current clock: the
+    /// nominal capacity scaled by the worst open fault window. The
+    /// half-ns slack keeps the integer-ns engine clock (which lands on
+    /// window edges via `from_secs_f64_ceil`) on the correct side of
+    /// each edge despite f64 accumulation.
+    fn effective_capacity(&self, i: usize) -> f64 {
+        let mut factor = 1.0f64;
+        for w in &self.windows {
+            if w.resource.0 == i
+                && self.now >= w.t0 - 0.5e-9
+                && self.now < w.t1 - 0.5e-9
+            {
+                factor = factor.min(w.factor);
+            }
+        }
+        self.resources[i].capacity * factor
+    }
+
+    /// Seconds until the next window edge strictly ahead of the clock,
+    /// if any. The engine must re-rate there: a flow's constant-rate
+    /// extrapolation is only valid between edges.
+    fn time_to_next_edge(&self) -> Option<f64> {
+        let mut t = f64::INFINITY;
+        for w in &self.windows {
+            for e in [w.t0, w.t1] {
+                let dt = e - self.now;
+                if dt > 1e-9 {
+                    t = t.min(dt);
+                }
+            }
+        }
+        t.is_finite().then_some(t)
+    }
+
+    /// Reap an active flow (deadline enforcement): its claim on every
+    /// path resource is released and survivors re-rate at the next
+    /// event. Returns false if the flow already completed.
+    pub fn remove(&mut self, id: FlowId) -> bool {
+        let removed = self.flows.remove(&id).is_some();
+        if removed {
+            self.dirty = true;
+        }
+        removed
+    }
+
+    /// Total bytes, path, and tag of an active flow — what a retry
+    /// must re-issue after reaping it. None once completed/removed.
+    pub fn spec_of(&self, id: FlowId) -> Option<(f64, Vec<ResourceId>, u32)> {
+        self.flows
+            .get(&id)
+            .map(|f| (f.total, f.path.clone(), f.tag))
     }
 
     /// Start a flow of `bytes` through `path`. Zero-byte flows are legal
@@ -96,8 +200,9 @@ impl FlowSim {
             return;
         }
         self.dirty = false;
-        let mut residual: Vec<f64> =
-            self.resources.iter().map(|r| r.capacity).collect();
+        let mut residual: Vec<f64> = (0..self.resources.len())
+            .map(|i| self.effective_capacity(i))
+            .collect();
         let mut unfrozen: Vec<FlowId> = self.flows.keys().copied().collect();
         unfrozen.sort_unstable(); // determinism
         for f in self.flows.values_mut() {
@@ -142,7 +247,10 @@ impl FlowSim {
         }
     }
 
-    /// Seconds until the next flow completes, if any flow is active.
+    /// Seconds until the next flow event: a completion at current
+    /// rates, or a capacity-window edge where rates change. The engine
+    /// must not step further than this in one advance — a blacked-out
+    /// flow's zero rate is only valid until its window closes.
     pub fn time_to_next_completion(&mut self) -> Option<f64> {
         if self.flows.is_empty() {
             return None;
@@ -157,11 +265,16 @@ impl FlowSim {
                 t = t.min(f.remaining / f.rate);
             }
         }
+        if let Some(edge) = self.time_to_next_edge() {
+            t = t.min(edge);
+        }
         if t.is_finite() {
             Some(t)
         } else {
-            // All active flows fully starved — should be impossible while
-            // every resource has positive capacity.
+            // All active flows fully starved with no window edge ahead
+            // — impossible while every resource has positive capacity
+            // and fault windows are finite; the engine treats it as a
+            // deadlock unless a flow deadline is pending.
             None
         }
     }
@@ -169,6 +282,18 @@ impl FlowSim {
     /// Advance all flows by `dt` seconds; return flows that completed.
     pub fn advance(&mut self, dt: f64) -> Vec<FlowRecord> {
         self.recompute();
+        let was = self.now;
+        self.now += dt;
+        // Rates derive from the clock: crossing (or landing on) any
+        // window edge invalidates them for the next interval.
+        if self
+            .windows
+            .iter()
+            .any(|w| [w.t0, w.t1].iter().any(|e| *e > was - 0.5e-9
+                && *e <= self.now + 0.5e-9))
+        {
+            self.dirty = true;
+        }
         let mut done = Vec::new();
         for (id, f) in self.flows.iter_mut() {
             f.remaining -= f.rate * dt;
@@ -287,5 +412,69 @@ mod tests {
         }
         assert!(through_r1 <= 37.0 + 1e-6, "r1 oversubscribed {through_r1}");
         assert!(through_r2 <= 53.0 + 1e-6, "r2 oversubscribed {through_r2}");
+    }
+
+    #[test]
+    fn slowdown_window_stretches_the_transfer() {
+        // 1000 B over 100 B/s, but [2, 6) serves at 1/4 capacity:
+        // 2 s × 100 + 4 s × 25 = 300 B by t=6, then 700/100 = 7 s more.
+        let mut s = FlowSim::new();
+        let r = s.add_resource("link", 100.0);
+        s.add_capacity_window(r, 2.0, 6.0, 0.25);
+        let f = s.start(1000.0, vec![r], 0);
+        assert!((s.rate_of(f).unwrap() - 100.0).abs() < 1e-9);
+        // First event is the window opening, not a completion.
+        let t = s.time_to_next_completion().unwrap();
+        assert!((t - 2.0).abs() < 1e-9, "edge at 2s, got {t}");
+        assert!(s.advance(t).is_empty());
+        assert!((s.rate_of(f).unwrap() - 25.0).abs() < 1e-9);
+        let t = s.time_to_next_completion().unwrap();
+        assert!((t - 4.0).abs() < 1e-9, "next edge at 6s, got {t}");
+        assert!(s.advance(t).is_empty());
+        assert!((s.rate_of(f).unwrap() - 100.0).abs() < 1e-9);
+        let t = s.time_to_next_completion().unwrap();
+        assert!((t - 7.0).abs() < 1e-6, "remaining 700 B, got {t}");
+        assert_eq!(s.advance(t).len(), 1);
+    }
+
+    #[test]
+    fn blackout_starves_then_resumes_at_the_edge() {
+        let mut s = FlowSim::new();
+        let r = s.add_resource("link", 100.0);
+        s.add_capacity_window(r, 0.0, 3.0, 0.0);
+        let f = s.start(100.0, vec![r], 0);
+        assert_eq!(s.rate_of(f).unwrap(), 0.0, "blacked out");
+        // A starved flow must not report None while an edge is ahead.
+        let t = s.time_to_next_completion().unwrap();
+        assert!((t - 3.0).abs() < 1e-9, "wait for the window edge");
+        assert!(s.advance(t).is_empty());
+        assert!((s.rate_of(f).unwrap() - 100.0).abs() < 1e-9);
+        let t = s.time_to_next_completion().unwrap();
+        assert!((t - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn overlapping_windows_take_the_worst_factor() {
+        let mut s = FlowSim::new();
+        let r = s.add_resource("link", 100.0);
+        s.add_capacity_window(r, 0.0, 10.0, 0.5);
+        s.add_capacity_window(r, 0.0, 4.0, 0.0);
+        let f = s.start(1000.0, vec![r], 0);
+        assert_eq!(s.rate_of(f).unwrap(), 0.0, "blackout wins");
+    }
+
+    #[test]
+    fn removed_flow_returns_its_share_to_survivors() {
+        let mut s = FlowSim::new();
+        let r = s.add_resource("link", 100.0);
+        let a = s.start(1000.0, vec![r], 0);
+        let b = s.start(1000.0, vec![r], 1);
+        assert!((s.rate_of(a).unwrap() - 50.0).abs() < 1e-9);
+        assert!(s.spec_of(a).is_some());
+        assert!(s.remove(a), "active flow reaped");
+        assert!(!s.remove(a), "double-reap is a no-op");
+        assert!(s.spec_of(a).is_none());
+        assert!((s.rate_of(b).unwrap() - 100.0).abs() < 1e-9);
+        assert_eq!(s.active_flows(), 1);
     }
 }

@@ -59,6 +59,7 @@ impl Device {
                 bytes: self.effective_bytes(bytes, access, dir),
                 path: vec![self.channel(dir)],
                 tag,
+                timeout: None,
             },
         ]
     }

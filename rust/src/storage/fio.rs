@@ -43,6 +43,7 @@ pub fn run_job(
             bytes: d.effective_bytes(bytes, access, dir),
             path: vec![d.channel(dir)],
             tag: s,
+            timeout: None,
         });
         e.spawn(&format!("fio-{s}"), stages);
     }

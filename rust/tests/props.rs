@@ -186,7 +186,7 @@ fn prop_engine_time_monotone_and_conserving() {
             total_bytes += b;
             e.spawn(&format!("f{i}"), vec![
                 Stage::Delay(SimNs::from_micros(g.u64_up_to(50))),
-                Stage::Flow { bytes: b, path: vec![link], tag: 0 },
+                Stage::Flow { bytes: b, path: vec![link], tag: 0, timeout: None },
             ]);
         }
         let end = e.run().map_err(|x| x)?;
@@ -327,6 +327,118 @@ fn prop_speculation_never_changes_output_bytes() {
                 run.tenant
             );
         }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_degraded_mode_never_changes_output_bytes() {
+    // Random netfault seed × straggler seed × crash plan, all armed at
+    // once: link fault windows, flow-deadline retries, a cache-node
+    // blackout degrading gathers down the tiers, heterogeneous node
+    // speeds, speculation, and crash recovery may move virtual time and
+    // retry counts — but never a single output byte.
+    use marvel::coordinator::ClusterSpec;
+    use marvel::mapreduce::{
+        output_key, run_job, stage_named_input, Cluster, SystemConfig,
+    };
+    use marvel::net::{NetFaultPlan, StragglerProfile};
+    use marvel::runtime::RtEngine;
+    use marvel::workloads::WordCount;
+
+    fn deploy(cfg: &SystemConfig) -> Cluster {
+        let mut cluster = ClusterSpec {
+            nodes: 4,
+            slots_per_node: 8,
+            ..Default::default()
+        }
+        .deploy(cfg);
+        cluster.stores.hdfs.block_size = 256 * 1024;
+        cluster
+    }
+
+    fn outputs(
+        cluster: &mut Cluster,
+        job: &str,
+        n: usize,
+    ) -> Vec<Option<Vec<u8>>> {
+        (0..n)
+            .map(|j| {
+                cluster
+                    .stores
+                    .igfs
+                    .get(&cluster.topo, NodeId(0), &output_key(job, j), 0)
+                    .and_then(|(p, _)| p.gather())
+            })
+            .collect()
+    }
+
+    check("degraded-mode-bytes", 4, |g| {
+        let nseed = g.rng.next_u64();
+        let sseed = g.rng.next_u64();
+        let dseed = g.rng.next_u64();
+        let workers = *g.pick(&[1usize, 4, 8]);
+        let input = 4 * 1024 * 1024u64; // 16 splits at 256 KiB blocks
+        let mut rt = RtEngine::load(None)?;
+        let wc = WordCount::new(1500, 1.07, &rt);
+
+        let arm = |faults: bool| {
+            let mut c = SystemConfig::marvel_igfs();
+            c.map_workers = if faults { workers } else { 1 };
+            c.reduce_workers = c.map_workers;
+            if faults {
+                c.netfaults = NetFaultPlan {
+                    seed: nseed,
+                    prob: 0.7,
+                    slowdown: 8.0,
+                    flow_timeout: SimNs::from_millis(250),
+                    degraded_tiers: true,
+                    lose_cachenodes: vec![1],
+                };
+                c.stragglers = StragglerProfile {
+                    seed: sseed,
+                    prob: 0.5,
+                    slowdown: 4.0,
+                };
+                c.speculation.enabled = true;
+                c.failures.crash_prob = 0.5;
+                c.failures.max_failures_per_task = 2;
+                c.failures.seed = sseed ^ 0xF00D;
+                c.recovery.max_attempts = 3;
+                c.recovery.interval_bytes = 64 * 1024;
+                c.recovery.backoff_base = SimNs::from_millis(50);
+            }
+            c
+        };
+
+        let solo = |cfg: &SystemConfig, rt: &mut RtEngine| {
+            let mut cluster = deploy(cfg);
+            let input_path = stage_named_input(
+                &mut cluster, cfg, &wc, input, dseed, "d/in",
+            )?;
+            let r = run_job(&mut cluster, cfg, &wc, &input_path, rt, dseed);
+            if let Some(e) = &r.failed {
+                return Err(format!("job failed: {e}"));
+            }
+            Ok((outputs(&mut cluster, &r.job, r.reduce.tasks), r))
+        };
+
+        let (o0, r0) = solo(&arm(false), &mut rt)?;
+        let (of, rf) = solo(&arm(true), &mut rt)?;
+        prop_assert!(
+            of == o0,
+            "degraded mode changed bytes (nseed={nseed:#x} \
+             sseed={sseed:#x} workers={workers})"
+        );
+        prop_assert!(rf.output_bytes == r0.output_bytes);
+        prop_assert!(rf.degraded_reads > 0,
+                     "blackout of node 1 must degrade some gathers");
+        // Deadline expiries are transport retries, not attempts: the
+        // attempt ledger stays crash + backup accounting only.
+        prop_assert!(
+            rf.task_attempts
+                >= (rf.map.tasks + rf.reduce.tasks) as u64
+        );
         Ok(())
     });
 }
