@@ -1,0 +1,177 @@
+//! Figure 11 (repo extension): open-loop serving — arrival-rate sweep
+//! to the saturation knee.
+//!
+//! An `OpenLoopServer` drives Poisson wordcount arrivals over one
+//! shared 4-node cluster. The admission estimator banks
+//! `max_inflight = 2` virtual servers at an `est_service = 2 s`
+//! charge, so offered load crosses the service capacity of 1 job/s
+//! mid-sweep: rates 0.25 and 0.5 run under the knee, 1.0 sits on it,
+//! and 2.0/4.0 drive the server into saturation. Reported per cell:
+//! offered/admitted/rejected, sojourn p50/p99/p999, queue-wait p99,
+//! and virtual makespan.
+//!
+//! Expected shape: below the knee every arrival admits and p99 sojourn
+//! hugs the bare job time; past the knee queue waits stretch the p99
+//! tail and — once the backlog overflows `queue_cap` — admission
+//! control starts rejecting, capping the tail at the cost of goodput.
+//! The top rate must show both a fatter p99 than the bottom rate and
+//! nonzero rejections. Emits `BENCH_fig11_openloop.json` via
+//! `util::bench::write_report` for `bench_diff.py`.
+
+use std::path::Path;
+
+use marvel::coordinator::ClusterSpec;
+use marvel::mapreduce::{
+    ArrivalConfig, ArrivalModel, OpenLoopServer, SystemConfig, TenantClass,
+};
+use marvel::runtime::RtEngine;
+use marvel::sim::SimNs;
+use marvel::util::bench::{write_report, Bench, BenchResult};
+use marvel::util::bytes::MIB;
+use marvel::workloads::WordCount;
+
+const ARRIVAL_SEED: u64 = 42;
+const INPUT: u64 = MIB;
+const NODES: usize = 4;
+const SLOTS: usize = 8;
+
+fn cfg_for(rate: f64) -> SystemConfig {
+    let mut c = SystemConfig::marvel_igfs();
+    c.map_workers = 2;
+    c.reduce_workers = 2;
+    c.arrivals = ArrivalConfig {
+        model: ArrivalModel::Poisson { rate },
+        seed: ARRIVAL_SEED,
+        horizon: SimNs::from_secs_f64(120.0),
+        max_jobs: 16,
+        classes: vec![
+            TenantClass::new("an", 3, 3),
+            TenantClass::new("batch", 1, 1),
+        ],
+        max_inflight: 2,
+        queue_cap: 4,
+        est_service: SimNs::from_secs_f64(2.0),
+    };
+    c
+}
+
+struct Cell {
+    offered: u64,
+    admitted: u64,
+    rejected: u64,
+    sojourn_p50_ms: f64,
+    sojourn_p99_ms: f64,
+    sojourn_p999_ms: f64,
+    queue_wait_p99_ms: f64,
+    makespan_s: f64,
+}
+
+fn run_cell(cfg: &SystemConfig) -> Cell {
+    let mut rt = RtEngine::load(None).expect("rt");
+    let mut cluster = ClusterSpec {
+        nodes: NODES,
+        slots_per_node: SLOTS,
+        ..Default::default()
+    }
+    .deploy(cfg);
+    cluster.stores.hdfs.block_size = 256 * 1024; // 4 splits from 1 MiB
+    let wc = WordCount::new(10_000, 1.07, &rt);
+    let res = OpenLoopServer::new(&wc, cfg.clone(), INPUT)
+        .serve(&mut cluster, &mut rt);
+    assert!(res.ok(), "serve failed: {:?}", res.failed);
+    assert!(res.jobs.iter().all(|j| j.ok()), "an admitted job failed");
+    let ol = res.open_loop.expect("open-loop report");
+    assert_eq!(ol.offered, ol.admitted + ol.rejected);
+    Cell {
+        offered: ol.offered,
+        admitted: ol.admitted,
+        rejected: ol.rejected,
+        sojourn_p50_ms: ol.sojourn_ms.p50,
+        sojourn_p99_ms: ol.sojourn_ms.p99,
+        sojourn_p999_ms: ol.sojourn_ms.p999,
+        queue_wait_p99_ms: ol.queue_wait_ms.p99,
+        makespan_s: res.makespan.as_secs_f64(),
+    }
+}
+
+fn main() {
+    let bench = Bench::new(1, 3);
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+
+    let mut bottom: Option<Cell> = None;
+    let mut top: Option<Cell> = None;
+    for &rate in &[0.25f64, 0.5, 1.0, 2.0, 4.0] {
+        let cfg = cfg_for(rate);
+        let mut cell = None;
+        let r = bench.run(
+            &format!("open-loop wordcount, rate={rate} jobs/s"),
+            || {
+                let c = run_cell(&cfg);
+                let adm = c.admitted;
+                cell = Some(c);
+                adm
+            },
+        );
+        println!("{}", r.summary());
+        let cell = cell.expect("bench ran");
+        println!(
+            "  rate={rate}: {}/{} admitted ({} rejected), sojourn \
+             p50={:.0} ms p99={:.0} ms, queue p99={:.0} ms",
+            cell.admitted, cell.offered, cell.rejected,
+            cell.sojourn_p50_ms, cell.sojourn_p99_ms,
+            cell.queue_wait_p99_ms,
+        );
+
+        let tag = format!("rate{:03}", (rate * 100.0) as u32);
+        metrics.push((format!("{tag}_offered"), cell.offered as f64));
+        metrics.push((format!("{tag}_admitted"), cell.admitted as f64));
+        metrics.push((format!("{tag}_rejected"), cell.rejected as f64));
+        metrics.push((format!("{tag}_sojourn_p50_ms"), cell.sojourn_p50_ms));
+        metrics.push((format!("{tag}_sojourn_p99_ms"), cell.sojourn_p99_ms));
+        metrics
+            .push((format!("{tag}_sojourn_p999_ms"), cell.sojourn_p999_ms));
+        metrics.push((
+            format!("{tag}_queue_wait_p99_ms"),
+            cell.queue_wait_p99_ms,
+        ));
+        metrics.push((format!("{tag}_virtual_makespan_s"), cell.makespan_s));
+        results.push(r);
+        if bottom.is_none() {
+            bottom = Some(cell);
+        } else {
+            top = Some(cell);
+        }
+    }
+
+    // The fig11 contract: past the knee (service capacity =
+    // max_inflight / est_service = 1 job/s) the tail fattens and
+    // admission control engages.
+    let bottom = bottom.expect("sweep ran");
+    let top = top.expect("sweep ran");
+    assert!(
+        top.sojourn_p99_ms > bottom.sojourn_p99_ms,
+        "p99 sojourn must rise past the knee: {:.0} ms at the bottom \
+         rate vs {:.0} ms at the top",
+        bottom.sojourn_p99_ms,
+        top.sojourn_p99_ms
+    );
+    assert!(
+        top.rejected > 0,
+        "the top rate must overflow queue_cap and reject"
+    );
+    assert!(
+        top.rejected > bottom.rejected,
+        "rejections must engage with offered load"
+    );
+
+    let refs: Vec<&BenchResult> = results.iter().collect();
+    let met: Vec<(&str, f64)> =
+        metrics.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let out = Path::new("BENCH_fig11_openloop.json");
+    match write_report(out, &refs, &met) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+    println!("fig11_openloop done");
+}

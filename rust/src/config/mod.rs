@@ -17,7 +17,7 @@
 //! See `ARCHITECTURE.md` for what each knob configures.
 
 use crate::coordinator::ClusterSpec;
-use crate::mapreduce::SystemConfig;
+use crate::mapreduce::{ArrivalModel, SystemConfig, TenantClass};
 use crate::net::DeviceRole;
 use crate::sim::SimNs;
 use crate::util::bytes::GIB;
@@ -64,6 +64,47 @@ pub fn parse_tenant_spec(spec: &str) -> Result<Vec<(String, u64)>, String> {
         out.push((name.to_string(), share.max(1)));
     }
     Ok(out)
+}
+
+/// Parse a `name:share:mix` tenant-class roster for the open-loop
+/// arrival mix (share and mix both default to 1).
+pub fn parse_class_spec(spec: &str) -> Result<Vec<TenantClass>, String> {
+    let mut out: Vec<TenantClass> = Vec::new();
+    for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+        let mut it = part.trim().splitn(3, ':');
+        let name = it.next().unwrap_or("").trim();
+        if name.is_empty() {
+            return Err(format!("empty class name in {spec:?}"));
+        }
+        let mut num = |what: &str| -> Result<u64, String> {
+            match it.next() {
+                None => Ok(1),
+                Some(s) => s
+                    .trim()
+                    .parse::<u64>()
+                    .map_err(|_| format!("bad {what} in {part:?}")),
+            }
+        };
+        let share = num("share")?;
+        let mix = num("mix")?;
+        if out.iter().any(|c| c.name == name) {
+            return Err(format!("duplicate class {name:?}"));
+        }
+        out.push(TenantClass::new(name, share, mix));
+    }
+    Ok(out)
+}
+
+/// Parse a comma-separated list of trace offsets in milliseconds.
+fn parse_trace_ms(spec: &str) -> Result<Vec<u64>, String> {
+    spec.split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(|p| {
+            p.trim()
+                .parse::<u64>()
+                .map_err(|_| format!("bad trace offset {p:?}"))
+        })
+        .collect()
 }
 
 /// Resolve a system-config preset by name.
@@ -205,6 +246,81 @@ impl ExperimentConfig {
                 system.speculation.lag_factor,
             )
             .max(1.0);
+        // [arrivals] — open-loop arrival plane (`marvel serve`).
+        // Inert unless a model is armed (positive rate / non-empty
+        // trace). An explicit seed here wins over MARVEL_ARRIVAL_SEED
+        // (parse order: preset/env first, then the file).
+        let rate = doc.f64_or("arrivals", "rate", 0.0).max(0.0);
+        system.arrivals.model = match doc.str_or("arrivals", "model", "poisson")
+        {
+            "poisson" => ArrivalModel::Poisson { rate },
+            "ramp" => ArrivalModel::Ramp {
+                rate,
+                rate_end: doc.f64_or("arrivals", "rate_end", rate).max(0.0),
+            },
+            "trace" => ArrivalModel::Trace(parse_trace_ms(
+                doc.str_or("arrivals", "trace_ms", ""),
+            )?),
+            other => {
+                return Err(format!("unknown arrival model {other:?}"))
+            }
+        };
+        if let Some(v) = doc.get("arrivals", "seed") {
+            system.arrivals.seed = v.as_i64().unwrap_or(0) as u64;
+        }
+        if let Some(v) = doc.get("arrivals", "horizon_s") {
+            system.arrivals.horizon = SimNs::from_secs_f64(
+                v.as_f64().unwrap_or(3600.0).max(0.0),
+            );
+        }
+        if let Some(v) = doc.get("arrivals", "max_jobs") {
+            system.arrivals.max_jobs =
+                v.as_i64().unwrap_or(256).max(1) as usize;
+        }
+        system.arrivals.classes =
+            parse_class_spec(doc.str_or("arrivals", "classes", ""))?;
+        if let Some(v) = doc.get("arrivals", "max_inflight") {
+            system.arrivals.max_inflight =
+                v.as_i64().unwrap_or(0).max(0) as usize;
+        }
+        if let Some(v) = doc.get("arrivals", "queue_cap") {
+            system.arrivals.queue_cap =
+                v.as_i64().unwrap_or(16).max(0) as usize;
+        }
+        if let Some(v) = doc.get("arrivals", "est_service_ms") {
+            system.arrivals.est_service = SimNs::from_millis(
+                v.as_i64().unwrap_or(2000).max(1) as u64,
+            );
+        }
+        // [autoscale] — elastic warm-pool policy the serve loop drives.
+        system.autoscale.enabled =
+            doc.bool_or("autoscale", "enabled", system.autoscale.enabled);
+        system.autoscale.warm_per_rate = doc
+            .f64_or("autoscale", "warm_per_rate", system.autoscale.warm_per_rate)
+            .max(0.0);
+        system.autoscale.up_threshold = doc
+            .f64_or("autoscale", "up_threshold", system.autoscale.up_threshold)
+            .max(1.0);
+        system.autoscale.down_threshold = doc
+            .f64_or(
+                "autoscale",
+                "down_threshold",
+                system.autoscale.down_threshold,
+            )
+            .clamp(0.0, 1.0);
+        if let Some(v) = doc.get("autoscale", "min_warm") {
+            system.autoscale.min_warm =
+                v.as_i64().unwrap_or(0).max(0) as usize;
+        }
+        if let Some(v) = doc.get("autoscale", "max_warm") {
+            system.autoscale.max_warm =
+                v.as_i64().unwrap_or(256).max(1) as usize;
+        }
+        if let Some(v) = doc.get("autoscale", "window_s") {
+            system.autoscale.window = SimNs::from_secs_f64(
+                v.as_f64().unwrap_or(30.0).max(0.001),
+            );
+        }
         let tenants =
             parse_tenant_spec(doc.str_or("server", "tenants", ""))?;
         let corun_workloads: Vec<String> = doc
@@ -423,6 +539,111 @@ lose_cachenodes = "1, 2"
         let plain = ExperimentConfig::parse("").unwrap();
         assert!(!plain.system.netfaults.enabled());
         assert!(!plain.system.netfaults.blackout_armed());
+    }
+
+    #[test]
+    fn arrivals_and_autoscale_sections_parse() {
+        let cfg = ExperimentConfig::parse(
+            r#"
+[arrivals]
+model = "ramp"
+rate = 0.5
+rate_end = 4.0
+seed = 13
+horizon_s = 120.0
+max_jobs = 40
+classes = "an:3:2,batch:1"
+max_inflight = 6
+queue_cap = 3
+est_service_ms = 1500
+
+[autoscale]
+enabled = true
+warm_per_rate = 4.0
+up_threshold = 1.5
+down_threshold = 0.25
+min_warm = 2
+max_warm = 24
+window_s = 15
+"#,
+        )
+        .unwrap();
+        let arr = &cfg.system.arrivals;
+        assert!(arr.enabled());
+        match arr.model {
+            crate::mapreduce::ArrivalModel::Ramp { rate, rate_end } => {
+                assert!((rate - 0.5).abs() < 1e-12);
+                assert!((rate_end - 4.0).abs() < 1e-12);
+            }
+            ref m => panic!("expected ramp, got {m:?}"),
+        }
+        // An explicit [arrivals] seed wins over MARVEL_ARRIVAL_SEED
+        // (parse order: preset/env first, then the file).
+        assert_eq!(arr.seed, 13);
+        assert_eq!(arr.horizon, SimNs::from_secs_f64(120.0));
+        assert_eq!(arr.max_jobs, 40);
+        assert_eq!(arr.classes.len(), 2);
+        assert_eq!(arr.classes[0].name, "an");
+        assert_eq!(arr.classes[0].share, 3);
+        assert_eq!(arr.classes[0].mix, 2);
+        // Omitted mix defaults to 1.
+        assert_eq!(arr.classes[1].name, "batch");
+        assert_eq!(arr.classes[1].share, 1);
+        assert_eq!(arr.classes[1].mix, 1);
+        assert_eq!(arr.max_inflight, 6);
+        assert_eq!(arr.queue_cap, 3);
+        assert_eq!(arr.est_service, SimNs::from_millis(1500));
+        let auto = &cfg.system.autoscale;
+        assert!(auto.enabled);
+        assert!((auto.warm_per_rate - 4.0).abs() < 1e-12);
+        assert!((auto.up_threshold - 1.5).abs() < 1e-12);
+        assert!((auto.down_threshold - 0.25).abs() < 1e-12);
+        assert_eq!(auto.min_warm, 2);
+        assert_eq!(auto.max_warm, 24);
+        assert_eq!(auto.window, SimNs::from_secs_f64(15.0));
+
+        // Trace replay: offsets in ms, verbatim.
+        let traced = ExperimentConfig::parse(
+            "[arrivals]\nmodel = \"trace\"\ntrace_ms = \"0, 250, 900\"\n",
+        )
+        .unwrap();
+        match traced.system.arrivals.model {
+            crate::mapreduce::ArrivalModel::Trace(ref ms) => {
+                assert_eq!(ms, &vec![0, 250, 900]);
+            }
+            ref m => panic!("expected trace, got {m:?}"),
+        }
+        assert!(traced.system.arrivals.enabled());
+
+        // Malformed specs surface as errors, not silent defaults.
+        assert!(ExperimentConfig::parse("[arrivals]\nmodel = \"burst\"\n")
+            .is_err());
+        assert!(ExperimentConfig::parse(
+            "[arrivals]\nmodel = \"trace\"\ntrace_ms = \"0, soon\"\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::parse(
+            "[arrivals]\nclasses = \"an:3,an:1\"\n"
+        )
+        .is_err());
+        assert!(
+            ExperimentConfig::parse("[arrivals]\nclasses = \":2\"\n").is_err()
+        );
+        assert!(ExperimentConfig::parse(
+            "[arrivals]\nclasses = \"an:lots\"\n"
+        )
+        .is_err());
+
+        // Degenerate values clamp; absent sections stay inert.
+        let clamped = ExperimentConfig::parse(
+            "[autoscale]\nup_threshold = 0.2\ndown_threshold = 7.0\n",
+        )
+        .unwrap();
+        assert!((clamped.system.autoscale.up_threshold - 1.0).abs() < 1e-12);
+        assert!((clamped.system.autoscale.down_threshold - 1.0).abs() < 1e-12);
+        let plain = ExperimentConfig::parse("").unwrap();
+        assert!(!plain.system.arrivals.enabled());
+        assert!(!plain.system.autoscale.enabled);
     }
 
     #[test]

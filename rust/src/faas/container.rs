@@ -93,6 +93,20 @@ impl ContainerPool {
     pub fn warm_count(&self, runtime: &str) -> usize {
         self.warm.get(runtime).copied().unwrap_or(0)
     }
+
+    /// Evict up to `n` idle warm containers for `runtime` (the
+    /// autoscaler's scale-down path: an over-provisioned pool drains so
+    /// idle containers stop holding memory). Returns how many were
+    /// actually evicted — never more than are warm, and containers
+    /// currently running actions are untouched.
+    pub fn drain(&mut self, runtime: &str, n: usize) -> usize {
+        let Some(warm) = self.warm.get_mut(runtime) else {
+            return 0;
+        };
+        let k = n.min(*warm);
+        *warm -= k;
+        k
+    }
 }
 
 #[cfg(test)]
@@ -149,6 +163,20 @@ mod tests {
         assert!(cold_b);
         let (_, cold_a) = p.acquire("a");
         assert!(!cold_a);
+    }
+
+    #[test]
+    fn drain_evicts_only_idle_warm_stock() {
+        let mut p = ContainerPool::new(ContainerConfig::default());
+        p.prewarm("img", 4);
+        assert_eq!(p.drain("img", 3), 3);
+        assert_eq!(p.warm_count("img"), 1);
+        // Draining past the stock (or an unknown runtime) is bounded.
+        assert_eq!(p.drain("img", 10), 1);
+        assert_eq!(p.drain("other", 5), 0);
+        // The next acquire after a full drain goes cold again.
+        let (_, cold) = p.acquire("img");
+        assert!(cold);
     }
 
     #[test]

@@ -11,6 +11,46 @@ use super::action::{ActionSpec, Invocation};
 use super::container::ContainerConfig;
 use super::invoker::Invoker;
 
+/// Elastic warm-pool sizing policy: the controller tracks the observed
+/// arrival rate and grows/shrinks the warm stock toward
+/// `rate × warm_per_rate`, with hysteresis so the pool neither flaps on
+/// noise nor drains the instant load dips. Disabled by default — the
+/// closed-loop paths keep their static `prewarm` provisioning.
+#[derive(Clone, Debug)]
+pub struct AutoscaleConfig {
+    /// Master switch; `false` leaves the warm pool entirely static.
+    pub enabled: bool,
+    /// Warm containers to hold per observed job arrival per second
+    /// (each admitted job fans out into several container waves).
+    pub warm_per_rate: f64,
+    /// Scale up only when the desired stock exceeds the current target
+    /// by this factor (e.g. 1.25 = 25% headroom before growing).
+    pub up_threshold: f64,
+    /// Scale down only when the desired stock falls below the current
+    /// target by this factor (e.g. 0.5 = halve before shrinking).
+    pub down_threshold: f64,
+    /// Floor on the warm target once the autoscaler is live.
+    pub min_warm: usize,
+    /// Ceiling on the warm target (bounded by node count × keep_warm).
+    pub max_warm: usize,
+    /// Trailing window over which the serve loop observes arrival rate.
+    pub window: SimNs,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            enabled: false,
+            warm_per_rate: 8.0,
+            up_threshold: 1.25,
+            down_threshold: 0.5,
+            min_warm: 0,
+            max_warm: 256,
+            window: SimNs::from_secs_f64(30.0),
+        }
+    }
+}
+
 /// The OpenWhisk controller/load-balancer: routes invocations to
 /// per-node invokers; pools survive across jobs on a shared cluster.
 pub struct Controller {
@@ -18,6 +58,12 @@ pub struct Controller {
     /// Controller-side per-invocation overhead (auth, routing, queueing).
     pub dispatch_overhead: SimNs,
     rr: usize,
+    /// Current autoscaler warm target (0 until the first scale-up).
+    warm_target: usize,
+    /// Scale-up decisions the autoscaler has taken.
+    pub scale_ups: u64,
+    /// Scale-down decisions the autoscaler has taken.
+    pub scale_downs: u64,
 }
 
 impl Controller {
@@ -35,6 +81,9 @@ impl Controller {
             invokers,
             dispatch_overhead: SimNs::from_millis(2),
             rr: 0,
+            warm_target: 0,
+            scale_ups: 0,
+            scale_downs: 0,
         }
     }
 
@@ -115,6 +164,61 @@ impl Controller {
 
     pub fn slots_of(&self, node: NodeId) -> crate::sim::PoolId {
         self.invokers[node.0].slots
+    }
+
+    /// Current autoscaler warm target (0 until the first scale-up).
+    pub fn warm_target(&self) -> usize {
+        self.warm_target
+    }
+
+    /// One elastic warm-pool step against the observed arrival rate
+    /// (jobs per second over the policy's trailing window). Desired
+    /// stock is `rate × warm_per_rate`, clamped to `[min, max]`; the
+    /// target only moves when desired clears the hysteresis band, so
+    /// the pool neither flaps on noise nor drains on a momentary dip.
+    /// Growing prewarms round-robin across invokers; shrinking drains
+    /// idle stock (running containers are never reclaimed). All
+    /// arithmetic is a pure function of the inputs — deterministic for
+    /// a deterministic arrival schedule.
+    pub fn autoscale(
+        &mut self,
+        runtime: &str,
+        rate_per_s: f64,
+        cfg: &AutoscaleConfig,
+    ) {
+        if !cfg.enabled || self.invokers.is_empty() {
+            return;
+        }
+        let desired = ((rate_per_s * cfg.warm_per_rate).ceil() as usize)
+            .clamp(cfg.min_warm, cfg.max_warm);
+        let target = self.warm_target as f64;
+        if (desired as f64) > target * cfg.up_threshold
+            && desired > self.warm_target
+        {
+            self.warm_target = desired;
+            self.scale_ups += 1;
+        } else if (desired as f64) < target * cfg.down_threshold {
+            self.warm_target = desired;
+            self.scale_downs += 1;
+        } else {
+            return;
+        }
+        // Converge the idle stock toward the new target.
+        let cur = self.warm_count(runtime);
+        let n = self.invokers.len();
+        if self.warm_target > cur {
+            for k in 0..self.warm_target - cur {
+                self.invokers[k % n].containers.prewarm(runtime, 1);
+            }
+        } else {
+            let mut need = cur - self.warm_target;
+            for inv in &mut self.invokers {
+                if need == 0 {
+                    break;
+                }
+                need -= inv.drain(runtime, need);
+            }
+        }
     }
 }
 
@@ -199,6 +303,66 @@ mod tests {
         // The retry pays a cold start: the crashed container's warm
         // state went with it.
         assert!(c.invoke(&spec, NodeId(0)).cold);
+    }
+
+    #[test]
+    fn autoscale_grows_and_shrinks_with_hysteresis() {
+        let (_, mut c) = setup(4);
+        let cfg = AutoscaleConfig {
+            enabled: true,
+            warm_per_rate: 4.0,
+            up_threshold: 1.25,
+            down_threshold: 0.5,
+            min_warm: 0,
+            max_warm: 64,
+            ..Default::default()
+        };
+        let rt = "marvel-hadoop:latest";
+        // First observed load: target 0 → any demand scales up.
+        c.autoscale(rt, 2.0, &cfg); // desired 8
+        assert_eq!(c.warm_target(), 8);
+        assert_eq!(c.scale_ups, 1);
+        assert_eq!(c.warm_count(rt), 8);
+        // Within the hysteresis band: desired 9 < 8 * 1.25 → no move.
+        c.autoscale(rt, 2.2, &cfg);
+        assert_eq!(c.warm_target(), 8);
+        assert_eq!(c.scale_ups, 1);
+        // Past the band: desired 16 > 10 → grow.
+        c.autoscale(rt, 4.0, &cfg);
+        assert_eq!(c.warm_target(), 16);
+        assert_eq!(c.warm_count(rt), 16);
+        // Mild dip (desired 12 >= 16 * 0.5): hold, don't flap.
+        c.autoscale(rt, 3.0, &cfg);
+        assert_eq!(c.warm_target(), 16);
+        assert_eq!(c.scale_downs, 0);
+        // Deep dip: desired 4 < 8 → drain idle stock.
+        c.autoscale(rt, 1.0, &cfg);
+        assert_eq!(c.warm_target(), 4);
+        assert_eq!(c.scale_downs, 1);
+        assert_eq!(c.warm_count(rt), 4);
+        // Disabled policy never touches the pool.
+        let off = AutoscaleConfig::default();
+        c.autoscale(rt, 100.0, &off);
+        assert_eq!(c.warm_target(), 4);
+    }
+
+    #[test]
+    fn autoscale_respects_bounds() {
+        let (_, mut c) = setup(2);
+        let cfg = AutoscaleConfig {
+            enabled: true,
+            warm_per_rate: 10.0,
+            min_warm: 2,
+            max_warm: 12,
+            ..Default::default()
+        };
+        let rt = "marvel-hadoop:latest";
+        c.autoscale(rt, 1000.0, &cfg);
+        assert_eq!(c.warm_target(), 12, "capped at max_warm");
+        // Zero rate clamps to the floor, not to zero.
+        c.autoscale(rt, 0.0, &cfg);
+        assert_eq!(c.warm_target(), 2);
+        assert_eq!(c.warm_count(rt), 2);
     }
 
     #[test]

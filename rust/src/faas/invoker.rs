@@ -37,6 +37,17 @@ impl Invoker {
     pub fn finish(&mut self, runtime: &str) {
         self.containers.release(runtime);
     }
+
+    /// Idle warm stock this node holds for `runtime`.
+    pub fn warm_count(&self, runtime: &str) -> usize {
+        self.containers.warm_count(runtime)
+    }
+
+    /// Evict up to `n` idle warm containers (autoscaler scale-down);
+    /// returns how many actually went.
+    pub fn drain(&mut self, runtime: &str, n: usize) -> usize {
+        self.containers.drain(runtime, n)
+    }
 }
 
 #[cfg(test)]

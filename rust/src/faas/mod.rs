@@ -2,7 +2,9 @@
 //! per-node invokers, warm/cold container pools) and the AWS Lambda
 //! model under the Corral baseline.
 //!
-//! See `ARCHITECTURE.md` (Layer 2) for the warm-pool sharing model.
+//! See `ARCHITECTURE.md` (Layer 2) for the warm-pool sharing model and
+//! "Open-loop serving & autoscaling" for how [`Controller::autoscale`]
+//! tracks an arrival rate with an [`AutoscaleConfig`] policy.
 
 pub mod action;
 pub mod container;
@@ -12,6 +14,6 @@ pub mod lambda;
 
 pub use action::{ActionKind, ActionSpec, Invocation, HADOOP_RUNTIME};
 pub use container::{ContainerConfig, ContainerPool};
-pub use controller::Controller;
+pub use controller::{AutoscaleConfig, Controller};
 pub use invoker::Invoker;
 pub use lambda::{Lambda, LambdaConfig};

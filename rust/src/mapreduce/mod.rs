@@ -3,7 +3,10 @@
 //! runs the real data plane, and simulates the time plane, the
 //! stateful multi-stage pipeline chaining jobs over cached state, and
 //! the multi-tenant [`JobServer`] co-running N jobs over one shared
-//! cluster. See `ARCHITECTURE.md` (Layer 5) for the execution model.
+//! cluster — closed loop as a fixed batch, or open loop through
+//! [`OpenLoopServer`] with seed-driven arrivals, admission control,
+//! and elastic warm-pool autoscaling. See `ARCHITECTURE.md` (Layer 5,
+//! and "Open-loop serving & autoscaling") for the execution model.
 
 pub mod driver;
 pub mod pipeline;
@@ -19,7 +22,9 @@ pub use driver::{
 };
 pub use pipeline::{JobPipeline, PipelineResult, PipelineStage};
 pub use server::{
-    ChainStage, JobRun, JobServer, ServerResult, Submission, TenantReport,
+    AdmissionDecision, Arrival, ArrivalConfig, ArrivalModel, ChainStage,
+    ClassReport, JobRun, JobServer, OpenLoopReport, OpenLoopServer,
+    ServerResult, Submission, TenantClass, TenantReport,
 };
 pub use shuffle::{interm_key, output_key, KeyHome, Stores};
 pub use types::{

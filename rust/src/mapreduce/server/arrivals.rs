@@ -1,0 +1,336 @@
+//! Seed-driven deterministic arrival models for the open-loop
+//! [`JobServer`](super::JobServer) service plane.
+//!
+//! A closed-loop co-run admits a fixed batch up front; production FaaS
+//! traffic instead *arrives* — tenants appear, submit, and depart over
+//! simulated hours. This module turns an [`ArrivalConfig`] into a
+//! concrete [`Arrival`] schedule: interarrival gaps drawn from a
+//! Poisson process, a linear ramp, or a replayed trace, with each
+//! arrival assigned to a tenant class by a weighted mix draw and given
+//! a fresh tenant-instance identity plus its own data-plane seed.
+//!
+//! Everything here is a pure function of `(config, seed)` through
+//! [`crate::util::rng::Rng`]: the schedule — times, tenant names,
+//! classes, and per-arrival seeds — is byte-identical across runs,
+//! platforms, and `{map,reduce}_workers` settings. That is the root of
+//! the open-loop determinism contract (`ARCHITECTURE.md`, Open-loop
+//! serving & autoscaling).
+
+use crate::sim::SimNs;
+use crate::util::rng::Rng;
+
+/// How interarrival gaps are drawn.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArrivalModel {
+    /// Memoryless arrivals at a constant `rate` (jobs per virtual
+    /// second). `rate <= 0` disables the open-loop plane.
+    Poisson {
+        /// Mean arrival rate in jobs per virtual second.
+        rate: f64,
+    },
+    /// Incremental ramp: the instantaneous rate moves linearly from
+    /// `rate` at t=0 to `rate_end` at the horizon — the sweep shape
+    /// that walks a server into (or out of) saturation within one run.
+    Ramp {
+        /// Rate at the start of the horizon (jobs per second).
+        rate: f64,
+        /// Rate at the end of the horizon (jobs per second).
+        rate_end: f64,
+    },
+    /// Replay explicit arrival offsets (milliseconds since serve
+    /// start). Offsets are used as given — not resorted — so a trace
+    /// captured elsewhere replays verbatim.
+    Trace(Vec<u64>),
+}
+
+/// One tenant class in the arrival mix: arrivals of this class get the
+/// class's fair-share weight and count toward its admission totals.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantClass {
+    /// Class name; tenant instances are named `{name}-{serial:03}`.
+    pub name: String,
+    /// Fair-share weight each instance runs under (yarn queue weight
+    /// == engine class weight), floored at 1.
+    pub share: u64,
+    /// Relative arrival frequency of this class in the mix draw,
+    /// floored at 1.
+    pub mix: u64,
+}
+
+impl TenantClass {
+    /// A class with equal share and mix weight 1.
+    pub fn new(name: &str, share: u64, mix: u64) -> TenantClass {
+        TenantClass {
+            name: name.to_string(),
+            share: share.max(1),
+            mix: mix.max(1),
+        }
+    }
+}
+
+/// Open-loop arrival plane configuration (`[arrivals]` in TOML).
+/// Disabled by default — `marvel serve` or an explicit config arms it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrivalConfig {
+    /// Interarrival model; `Poisson { rate: 0.0 }` means disabled.
+    pub model: ArrivalModel,
+    /// Schedule seed. Like the failure/straggler/netfault seeds it is
+    /// inert until a serve loop arms it; `MARVEL_ARRIVAL_SEED`
+    /// overrides the default via `SystemConfig::from_env`, and an
+    /// explicit `[arrivals] seed` in a config file wins over both.
+    pub seed: u64,
+    /// Serve horizon: arrivals stop once the clock passes it.
+    pub horizon: SimNs,
+    /// Hard cap on offered jobs (backstop for high-rate sweeps).
+    pub max_jobs: usize,
+    /// Tenant-class mix; empty means one default class `t` with share
+    /// and mix 1.
+    pub classes: Vec<TenantClass>,
+    /// In-flight job budget for admission control. 0 = auto-size from
+    /// the cluster's aggregate invoker slots at serve time.
+    pub max_inflight: usize,
+    /// Waiting-room depth beyond the in-flight budget; an arrival that
+    /// would push the backlog past this is rejected at admission.
+    pub queue_cap: usize,
+    /// Service-time estimate the admission estimator charges per job
+    /// (virtual). Deliberately a config constant, never a measured
+    /// time: admission decisions must not depend on worker counts.
+    pub est_service: SimNs,
+}
+
+impl Default for ArrivalConfig {
+    fn default() -> Self {
+        ArrivalConfig {
+            model: ArrivalModel::Poisson { rate: 0.0 },
+            seed: 0xA221_7A1_5EED, // overridden by MARVEL_ARRIVAL_SEED
+            horizon: SimNs::from_secs_f64(3600.0),
+            max_jobs: 256,
+            classes: Vec::new(),
+            max_inflight: 0,
+            queue_cap: 16,
+            est_service: SimNs::from_secs_f64(2.0),
+        }
+    }
+}
+
+impl ArrivalConfig {
+    /// Whether the open-loop plane is armed (a positive rate or a
+    /// non-empty trace).
+    pub fn enabled(&self) -> bool {
+        match &self.model {
+            ArrivalModel::Poisson { rate } => *rate > 0.0,
+            ArrivalModel::Ramp { rate, rate_end } => {
+                *rate > 0.0 || *rate_end > 0.0
+            }
+            ArrivalModel::Trace(t) => !t.is_empty(),
+        }
+    }
+
+    /// Generate the arrival schedule — a pure function of this config
+    /// and its seed. Arrival times are offsets from serve start.
+    pub fn schedule(&self) -> Vec<Arrival> {
+        let mut rng = Rng::new(self.seed);
+        let default_class = [TenantClass::new("t", 1, 1)];
+        let classes: &[TenantClass] = if self.classes.is_empty() {
+            &default_class
+        } else {
+            &self.classes
+        };
+        let mix_total: u64 = classes.iter().map(|c| c.mix).sum();
+        let mut serials = vec![0u64; classes.len()];
+        let mut out = Vec::new();
+
+        let mut push = |at: SimNs, rng: &mut Rng, out: &mut Vec<Arrival>,
+                        serials: &mut [u64]| {
+            // Weighted class draw, then a fresh instance identity and
+            // an independent data-plane seed for the submission.
+            let mut x = rng.below(mix_total);
+            let mut ci = classes.len() - 1;
+            for (i, c) in classes.iter().enumerate() {
+                if x < c.mix {
+                    ci = i;
+                    break;
+                }
+                x -= c.mix;
+            }
+            let c = &classes[ci];
+            serials[ci] += 1;
+            out.push(Arrival {
+                at,
+                tenant: format!("{}-{:03}", c.name, serials[ci]),
+                class: c.name.clone(),
+                share: c.share,
+                seed: rng.next_u64(),
+            });
+        };
+
+        match &self.model {
+            ArrivalModel::Trace(offsets) => {
+                for &ms in offsets.iter().take(self.max_jobs) {
+                    let at = SimNs::from_millis(ms);
+                    if at > self.horizon {
+                        break;
+                    }
+                    push(at, &mut rng, &mut out, &mut serials);
+                }
+            }
+            model => {
+                let mut t = SimNs::ZERO;
+                while out.len() < self.max_jobs {
+                    let rate = match model {
+                        ArrivalModel::Poisson { rate } => *rate,
+                        ArrivalModel::Ramp { rate, rate_end } => {
+                            let f = if self.horizon > SimNs::ZERO {
+                                (t.as_secs_f64()
+                                    / self.horizon.as_secs_f64())
+                                .min(1.0)
+                            } else {
+                                1.0
+                            };
+                            rate + (rate_end - rate) * f
+                        }
+                        ArrivalModel::Trace(_) => unreachable!(),
+                    };
+                    if rate <= 0.0 {
+                        break;
+                    }
+                    let gap = rng.exp(1.0 / rate);
+                    t += SimNs::from_secs_f64(gap);
+                    if t > self.horizon {
+                        break;
+                    }
+                    push(t, &mut rng, &mut out, &mut serials);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One offered submission on the open-loop schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Arrival {
+    /// Offset from serve start on the virtual clock.
+    pub at: SimNs,
+    /// Fresh tenant-instance identity (`{class}-{serial:03}`) — each
+    /// arrival is its own tenant; it departs when its job completes.
+    pub tenant: String,
+    /// Tenant-class name the instance was drawn from.
+    pub class: String,
+    /// Fair-share weight the instance runs under.
+    pub share: u64,
+    /// Data-plane seed for the submission (same seed solo reproduces
+    /// the same bytes).
+    pub seed: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn poisson(rate: f64) -> ArrivalConfig {
+        ArrivalConfig {
+            model: ArrivalModel::Poisson { rate },
+            seed: 7,
+            horizon: SimNs::from_secs_f64(100.0),
+            max_jobs: 10_000,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn disabled_by_default() {
+        let cfg = ArrivalConfig::default();
+        assert!(!cfg.enabled());
+        assert!(cfg.schedule().is_empty());
+    }
+
+    #[test]
+    fn schedule_is_a_pure_function_of_the_seed() {
+        let cfg = poisson(2.0);
+        let a = cfg.schedule();
+        let b = cfg.schedule();
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        let other = ArrivalConfig { seed: 8, ..poisson(2.0) };
+        assert_ne!(a, other.schedule(), "seed must matter");
+    }
+
+    #[test]
+    fn poisson_rate_is_roughly_honored() {
+        // 100 s at 2 jobs/s → ~200 arrivals; Poisson sd ≈ 14, so a
+        // ±35% band is loose enough to never flake on a fixed seed.
+        let n = poisson(2.0).schedule().len();
+        assert!((130..=270).contains(&n), "{n} arrivals at rate 2");
+    }
+
+    #[test]
+    fn arrivals_are_time_ordered_and_capped() {
+        let mut cfg = poisson(5.0);
+        cfg.max_jobs = 37;
+        let sched = cfg.schedule();
+        assert_eq!(sched.len(), 37);
+        for w in sched.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        assert!(sched.iter().all(|a| a.at <= cfg.horizon));
+    }
+
+    #[test]
+    fn ramp_accelerates_toward_the_horizon() {
+        let cfg = ArrivalConfig {
+            model: ArrivalModel::Ramp { rate: 0.5, rate_end: 8.0 },
+            seed: 11,
+            horizon: SimNs::from_secs_f64(100.0),
+            max_jobs: 10_000,
+            ..Default::default()
+        };
+        let sched = cfg.schedule();
+        let mid = SimNs::from_secs_f64(50.0);
+        let first_half = sched.iter().filter(|a| a.at <= mid).count();
+        let second_half = sched.len() - first_half;
+        assert!(
+            2 * second_half > 3 * first_half,
+            "ramp should backload: {first_half} vs {second_half}"
+        );
+    }
+
+    #[test]
+    fn trace_replays_verbatim() {
+        let cfg = ArrivalConfig {
+            model: ArrivalModel::Trace(vec![10, 250, 4000]),
+            ..Default::default()
+        };
+        assert!(cfg.enabled());
+        let sched = cfg.schedule();
+        assert_eq!(sched.len(), 3);
+        assert_eq!(sched[0].at, SimNs::from_millis(10));
+        assert_eq!(sched[2].at, SimNs::from_millis(4000));
+    }
+
+    #[test]
+    fn class_mix_and_instance_identities() {
+        let cfg = ArrivalConfig {
+            classes: vec![
+                TenantClass::new("analytics", 3, 3),
+                TenantClass::new("batch", 1, 1),
+            ],
+            ..poisson(4.0)
+        };
+        let sched = cfg.schedule();
+        let an = sched.iter().filter(|a| a.class == "analytics").count();
+        let ba = sched.len() - an;
+        assert!(an > ba, "3:1 mix skews to analytics: {an} vs {ba}");
+        // Instance names are unique per arrival (fresh tenants), and
+        // every analytics instance carries the class share.
+        let mut names: Vec<&str> =
+            sched.iter().map(|a| a.tenant.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), sched.len());
+        assert!(sched
+            .iter()
+            .filter(|a| a.class == "analytics")
+            .all(|a| a.share == 3 && a.tenant.starts_with("analytics-")));
+    }
+}

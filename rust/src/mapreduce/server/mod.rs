@@ -31,6 +31,22 @@
 //! any admission order. The data planes run eagerly at admission
 //! (fanned out through `pool_run`); only virtual *times* depend on
 //! shares and co-location. Pinned by `rust/tests/multi_tenant.rs`.
+//!
+//! Beyond the closed-loop batch above, the server also runs *open
+//! loop*: [`arrivals`] generates seed-driven arrival schedules
+//! (Poisson / ramp / trace replay over tenant classes) and
+//! [`open_loop::OpenLoopServer`] drives admission control, weighted-
+//! fair job queueing, and elastic warm-pool autoscaling off them,
+//! reporting p50/p99/p999 sojourn in [`ServerResult::open_loop`]. See
+//! `ARCHITECTURE.md` (Open-loop serving & autoscaling).
+
+pub mod arrivals;
+pub mod open_loop;
+
+pub use arrivals::{Arrival, ArrivalConfig, ArrivalModel, TenantClass};
+pub use open_loop::{
+    AdmissionDecision, ClassReport, OpenLoopReport, OpenLoopServer,
+};
 
 use crate::faas::HADOOP_RUNTIME;
 use crate::igfs::CacheStats;
@@ -157,6 +173,10 @@ pub struct ServerResult {
     /// Engine-level failure (deadlock); per-job failures live in the
     /// individual [`JobResult`]s.
     pub failed: Option<String>,
+    /// Open-loop serving report (admission log, tail percentiles,
+    /// autoscaler activity). `None` for closed-loop co-runs; populated
+    /// by [`OpenLoopServer::serve`].
+    pub open_loop: Option<OpenLoopReport>,
 }
 
 impl ServerResult {
@@ -420,6 +440,7 @@ impl<'a> JobServer<'a> {
             tenants,
             makespan: engine_end.saturating_sub(t0),
             failed,
+            open_loop: None,
         }
     }
 }

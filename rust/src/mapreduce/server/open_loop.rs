@@ -1,0 +1,592 @@
+//! Open-loop serving: the arrival-driven face of the
+//! [`JobServer`](super::JobServer) substrate.
+//!
+//! Where the closed-loop [`JobServer`](super::JobServer) co-runs a
+//! fixed batch, [`OpenLoopServer`] drives the same shared [`Cluster`]
+//! from an [`ArrivalConfig`] schedule: tenant instances arrive over
+//! simulated hours, pass admission control, queue for an in-flight job
+//! token in weighted-fair order, execute, and depart. Per-job sojourn
+//! and queue-wait samples feed [`crate::util::stats`] percentile
+//! summaries (p50/p99/p999) surfaced in
+//! [`ServerResult::open_loop`](super::ServerResult::open_loop), and the
+//! [`crate::faas::Controller`] autoscaler grows/shrinks the warm pool
+//! against the observed arrival rate as the schedule unfolds.
+//!
+//! Admission is decided by a *plan-time estimator* — a bank of
+//! `max_inflight` virtual servers with a configured service-time
+//! constant, fronted by a weighted-fair waiting room
+//! ([`crate::util::fairq::FairQueue`]) capped at `queue_cap`. Decisions
+//! therefore depend only on `(schedule, config)`, never on measured
+//! engine times: the admission/rejection sequence is identical at any
+//! `{map,reduce}_workers` setting, which is half of the open-loop
+//! determinism contract (the other half — byte-identical per-tenant
+//! outputs — holds because rejected arrivals are never planned and
+//! admitted ones keep their per-arrival data seed). A rejected arrival
+//! is handed back via [`FairQueue::take_back`], which must leave no
+//! stale vtime tag or drained-class entry behind; `ARCHITECTURE.md`
+//! (Open-loop serving & autoscaling) walks the full pipeline.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::faas::HADOOP_RUNTIME;
+use crate::igfs::CacheStats;
+use crate::net::NodeId;
+use crate::runtime::RtEngine;
+use crate::sim::{SimNs, Stage};
+use crate::util::fairq::FairQueue;
+use crate::util::stats::{PercentileSummary, Percentiles};
+
+use super::super::driver::{
+    finalize_stage, plan_stage, stage_named_input, Cluster, PlannedStage,
+    StageInput,
+};
+use super::super::types::{JobResult, SystemConfig};
+use super::super::workload::Workload;
+use super::arrivals::{Arrival, ArrivalConfig};
+use super::{JobRun, ServerResult, TenantReport};
+
+/// One admission-control verdict, in arrival order. The sequence of
+/// these is part of the determinism contract: same seeds ⇒ the same
+/// log at any worker-count setting (pinned by
+/// `rust/tests/openloop_e2e.rs`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdmissionDecision {
+    /// Arrival offset from serve start.
+    pub at: SimNs,
+    /// Tenant instance that arrived.
+    pub tenant: String,
+    /// Tenant class the instance belongs to.
+    pub class: String,
+    /// `true` = admitted (immediately or queued); `false` = rejected.
+    pub admitted: bool,
+}
+
+/// Per-tenant-class slice of the open-loop report.
+#[derive(Clone, Debug)]
+pub struct ClassReport {
+    /// Tenant-class name.
+    pub name: String,
+    /// Arrivals offered by this class.
+    pub offered: u64,
+    /// Arrivals admitted (immediately or queued).
+    pub admitted: u64,
+    /// Arrivals bounced by admission control.
+    pub rejected: u64,
+    /// Sojourn (arrival → last reducer done) percentiles, ms.
+    pub sojourn_ms: PercentileSummary,
+}
+
+/// The open-loop serving report carried in
+/// [`ServerResult::open_loop`](super::ServerResult::open_loop).
+#[derive(Clone, Debug)]
+pub struct OpenLoopReport {
+    /// Arrivals the schedule offered.
+    pub offered: u64,
+    /// Arrivals admitted (immediately or queued).
+    pub admitted: u64,
+    /// Arrivals bounced by admission control.
+    pub rejected: u64,
+    /// In-flight job budget admission ran against (after auto-sizing).
+    pub max_inflight: usize,
+    /// Schedule seed the serve ran with.
+    pub arrival_seed: u64,
+    /// Sojourn (arrival → last reducer done) percentiles, ms.
+    pub sojourn_ms: PercentileSummary,
+    /// Admission-to-start (arrival → job-token grant) percentiles, ms.
+    pub queue_wait_ms: PercentileSummary,
+    /// Per-class breakdown, in first-arrival order.
+    pub classes: Vec<ClassReport>,
+    /// The full admission log, in arrival order.
+    pub decisions: Vec<AdmissionDecision>,
+    /// Autoscaler scale-up decisions taken during the serve.
+    pub scale_ups: u64,
+    /// Autoscaler scale-down decisions taken during the serve.
+    pub scale_downs: u64,
+    /// Container cold starts across admitted jobs.
+    pub cold_starts: u64,
+    /// Container warm (pool-reuse) starts across admitted jobs.
+    pub warm_starts: u64,
+}
+
+/// Long-lived arrival-driven service over one shared [`Cluster`]:
+/// builds the schedule, admits, autoscales, runs one shared time
+/// plane, and reports tail latency.
+///
+/// ```text
+/// OpenLoopServer::new(&wc, cfg, 2 * MIB)
+///     .serve(&mut cluster, &mut rt)
+/// ```
+pub struct OpenLoopServer<'a> {
+    wl: &'a dyn Workload,
+    cfg: SystemConfig,
+    input_bytes: u64,
+}
+
+impl<'a> OpenLoopServer<'a> {
+    /// A serve loop running `wl` for every admitted arrival over a
+    /// shared staged input of `input_bytes` (arrival plane and
+    /// autoscale policy come from `cfg.arrivals` / `cfg.autoscale`).
+    pub fn new(
+        wl: &'a dyn Workload,
+        cfg: SystemConfig,
+        input_bytes: u64,
+    ) -> OpenLoopServer<'a> {
+        OpenLoopServer { wl, cfg, input_bytes }
+    }
+
+    /// Serve the whole arrival schedule and report.
+    ///
+    /// Phase 0: generate the schedule and decide every admission with
+    /// the plan-time estimator. Phase 1 (arrival order, serial): each
+    /// admitted submission autoscales the warm pool, plans its data
+    /// plane eagerly, and spawns an admitter proc that delays to its
+    /// arrival instant, queues weighted-fair for a job token, opens the
+    /// job's gate, and holds the token to completion. Phase 2: one
+    /// `engine.run()`. Phase 3: finalize + percentile summaries.
+    pub fn serve(
+        &self,
+        cluster: &mut Cluster,
+        rt: &mut RtEngine,
+    ) -> ServerResult {
+        let arr = &self.cfg.arrivals;
+        let schedule = arr.schedule();
+
+        // In-flight budget: explicit, or auto-sized from the cluster's
+        // aggregate invoker slots (a job wave holds several slots at
+        // once, so budget a quarter of them as concurrent jobs).
+        let total_slots: usize = (0..cluster.controller.n_invokers())
+            .map(|i| {
+                cluster
+                    .engine
+                    .pool_capacity(cluster.controller.slots_of(NodeId(i)))
+            })
+            .sum();
+        let max_inflight = if arr.max_inflight == 0 {
+            (total_slots / 4).max(1)
+        } else {
+            arr.max_inflight
+        };
+
+        // Phase 0 — admission, from the schedule alone.
+        let (decisions, admitted_idx) =
+            decide_admissions(&schedule, arr, max_inflight);
+
+        // One shared read-only input for every admitted submission.
+        let input_name = format!("openloop/{}/in", self.wl.name());
+        let input = match stage_named_input(
+            cluster,
+            &self.cfg,
+            self.wl,
+            self.input_bytes,
+            arr.seed,
+            &input_name,
+        ) {
+            Ok(p) => p,
+            Err(e) => {
+                return ServerResult {
+                    jobs: Vec::new(),
+                    tenants: Vec::new(),
+                    makespan: SimNs::ZERO,
+                    failed: Some(format!("input staging failed: {e}")),
+                    open_loop: None,
+                }
+            }
+        };
+
+        let t0 = cluster.engine.now();
+        let job_tokens = cluster.engine.add_pool(max_inflight);
+        let window_s = self.cfg.autoscale.window.as_secs_f64().max(1e-9);
+
+        // Phase 1 — plan admitted submissions in arrival order.
+        struct PlannedArrival {
+            arrival: Arrival,
+            gate: crate::sim::BarrierId,
+            warm_at_admission: u64,
+            stage: Result<PlannedStage, JobResult>,
+        }
+        let mut planned: Vec<PlannedArrival> =
+            Vec::with_capacity(admitted_idx.len());
+        let mut stage_ns = 0u32;
+        for &i in &admitted_idx {
+            let a = &schedule[i];
+            // Elastic warm pool: observed offered rate over the
+            // trailing window (pure function of the schedule).
+            let in_window = schedule[..=i]
+                .iter()
+                .rev()
+                .take_while(|b| {
+                    b.at + self.cfg.autoscale.window >= a.at
+                })
+                .count();
+            cluster.controller.autoscale(
+                HADOOP_RUNTIME,
+                in_window as f64 / window_s,
+                &self.cfg.autoscale,
+            );
+            let warm_at_admission =
+                cluster.controller.warm_count(HADOOP_RUNTIME) as u64;
+
+            let class =
+                cluster.rm.register_tenant(&a.tenant, a.share) as u32;
+            cluster.engine.set_class_weight(class, a.share);
+            stage_ns += 1;
+            cluster.set_scope(class, stage_ns);
+            let job = format!("{}/j{i:03}-{}", a.tenant, self.wl.name());
+            let gate = cluster.engine.add_barrier(1);
+            let stage = match plan_stage(
+                cluster,
+                &self.cfg,
+                self.wl,
+                &job,
+                StageInput::Path(input.clone()),
+                Some(gate),
+                rt,
+                a.seed,
+            ) {
+                Ok(p) => {
+                    // The admitter: delays to its arrival instant,
+                    // queues (weighted-fair by tenant class) for a job
+                    // token, opens the gate the job's maps await, and
+                    // holds the token until the job completes — so the
+                    // backlog drains at `max_inflight` concurrency
+                    // without ever deadlocking the fair queue.
+                    cluster.engine.spawn_as(
+                        &format!("{job}/admit"),
+                        class,
+                        vec![
+                            Stage::Delay(a.at),
+                            Stage::Acquire(job_tokens),
+                            Stage::Arrive(gate),
+                            Stage::Await(p.job_done),
+                            Stage::Release(job_tokens),
+                        ],
+                    );
+                    Ok(p)
+                }
+                Err(e) => Err(JobResult::failed(&job, &self.cfg.name, 0, e)),
+            };
+            planned.push(PlannedArrival {
+                arrival: a.clone(),
+                gate,
+                warm_at_admission,
+                stage,
+            });
+        }
+        cluster.set_scope(0, 0);
+
+        // Phase 2 — one shared time plane.
+        let (engine_end, failed) = match cluster.engine.run() {
+            Ok(end) => (end, None),
+            Err(e) => (cluster.engine.now(), Some(e)),
+        };
+
+        // Phase 3 — finalize, sample, aggregate.
+        let mut jobs: Vec<JobRun> = Vec::with_capacity(planned.len());
+        let mut tenants: Vec<TenantReport> =
+            Vec::with_capacity(planned.len());
+        let mut sojourn = Percentiles::new();
+        let mut queue_wait = Percentiles::new();
+        let mut by_class: Vec<(String, Percentiles)> = Vec::new();
+        let (mut cold, mut warm) = (0u64, 0u64);
+        for pa in planned {
+            let arrived = t0 + pa.arrival.at;
+            let started = cluster
+                .engine
+                .barrier_opened_at(pa.gate)
+                .unwrap_or(engine_end);
+            let (jr, done) = match pa.stage {
+                Ok(p) => {
+                    let done = cluster
+                        .engine
+                        .barrier_opened_at(p.job_done)
+                        .unwrap_or(engine_end);
+                    let job = p.job.clone();
+                    let cfg = p.cfg_name().to_string();
+                    let jr = match finalize_stage(cluster, p, engine_end) {
+                        Ok(jr) => jr,
+                        Err(e) => JobResult::failed(&job, &cfg, 0, e),
+                    };
+                    (jr, done)
+                }
+                Err(jr) => (jr, engine_end),
+            };
+            let soj_ms =
+                done.saturating_sub(arrived).as_secs_f64() * 1e3;
+            sojourn.push(soj_ms);
+            queue_wait
+                .push(started.saturating_sub(arrived).as_secs_f64() * 1e3);
+            match by_class
+                .iter_mut()
+                .find(|(n, _)| *n == pa.arrival.class)
+            {
+                Some((_, p)) => p.push(soj_ms),
+                None => {
+                    let mut p = Percentiles::new();
+                    p.push(soj_ms);
+                    by_class.push((pa.arrival.class.clone(), p));
+                }
+            }
+            cold += jr.cold_starts;
+            warm += jr.warm_starts;
+            let cross_job_warm =
+                jr.warm_starts.min(pa.warm_at_admission);
+            tenants.push(tenant_report(&pa.arrival, &jr, done, cross_job_warm));
+            jobs.push(JobRun {
+                tenant: pa.arrival.tenant,
+                stages: vec![jr],
+                completion: done,
+                cross_job_warm,
+            });
+        }
+
+        let classes = class_reports(&schedule, &decisions, by_class);
+        let report = OpenLoopReport {
+            offered: schedule.len() as u64,
+            admitted: admitted_idx.len() as u64,
+            rejected: (schedule.len() - admitted_idx.len()) as u64,
+            max_inflight,
+            arrival_seed: arr.seed,
+            sojourn_ms: sojourn.summary(),
+            queue_wait_ms: queue_wait.summary(),
+            classes,
+            decisions,
+            scale_ups: cluster.controller.scale_ups,
+            scale_downs: cluster.controller.scale_downs,
+            cold_starts: cold,
+            warm_starts: warm,
+        };
+        ServerResult {
+            jobs,
+            tenants,
+            makespan: engine_end.saturating_sub(t0),
+            failed,
+            open_loop: Some(report),
+        }
+    }
+}
+
+/// Decide every admission from the schedule alone: a bank of
+/// `max_inflight` virtual servers (service time = `est_service`) with
+/// a weighted-fair waiting room capped at `queue_cap`. Returns the
+/// decision log plus the indices of admitted arrivals.
+fn decide_admissions(
+    schedule: &[Arrival],
+    arr: &ArrivalConfig,
+    max_inflight: usize,
+) -> (Vec<AdmissionDecision>, Vec<usize>) {
+    // Estimator class ids, in first-appearance order; weight = share.
+    let mut classes: Vec<(String, u64)> = Vec::new();
+    let est = arr.est_service.0.max(1);
+    let mut servers: BinaryHeap<Reverse<u64>> =
+        (0..max_inflight).map(|_| Reverse(0u64)).collect();
+    let mut waiting: FairQueue<usize> = FairQueue::new();
+    let mut backlog = 0usize;
+    let mut decisions = Vec::with_capacity(schedule.len());
+    let mut admitted_idx = Vec::new();
+    for (i, a) in schedule.iter().enumerate() {
+        let cid = match classes.iter().position(|(n, _)| n == &a.class) {
+            Some(i) => i as u32,
+            None => {
+                classes.push((a.class.clone(), a.share));
+                (classes.len() - 1) as u32
+            }
+        };
+        let now = a.at.0;
+        // Servers freeing before this arrival pick up waiters in
+        // weighted-fair order.
+        while backlog > 0 {
+            let Some(&Reverse(free)) = servers.peek() else { break };
+            if free > now {
+                break;
+            }
+            servers.pop();
+            let shares = &classes;
+            waiting
+                .pop(|c| shares.get(c as usize).map_or(1, |(_, s)| *s))
+                .expect("backlog count tracks the fair queue");
+            backlog -= 1;
+            servers.push(Reverse(free + est));
+        }
+        let idle = backlog == 0
+            && servers.peek().is_some_and(|&Reverse(f)| f <= now);
+        let admitted = if idle {
+            servers.pop();
+            servers.push(Reverse(now + est));
+            true
+        } else if backlog < arr.queue_cap {
+            waiting.push(cid, i);
+            backlog += 1;
+            true
+        } else {
+            // Saturated: the submission is handed straight back. The
+            // push/take_back pair must leave zero residue in the fair
+            // queue (no stale vtime tag, no drained-class entry) —
+            // the regression `util::fairq` pins.
+            waiting.push(cid, i);
+            let bounced = waiting.take_back(cid);
+            debug_assert_eq!(bounced, Some(i));
+            false
+        };
+        if admitted {
+            admitted_idx.push(i);
+        }
+        decisions.push(AdmissionDecision {
+            at: a.at,
+            tenant: a.tenant.clone(),
+            class: a.class.clone(),
+            admitted,
+        });
+    }
+    (decisions, admitted_idx)
+}
+
+fn tenant_report(
+    a: &Arrival,
+    jr: &JobResult,
+    done: SimNs,
+    cross_job_warm: u64,
+) -> TenantReport {
+    let mut igfs = CacheStats::default();
+    igfs.add(&jr.igfs);
+    TenantReport {
+        name: a.tenant.clone(),
+        share: a.share,
+        jobs: 1,
+        completion: done,
+        cold_starts: jr.cold_starts,
+        warm_starts: jr.warm_starts,
+        cross_job_warm,
+        task_attempts: jr.task_attempts,
+        recomputed_bytes: jr.recomputed_bytes,
+        checkpoints: jr.checkpoints,
+        checkpoint_overhead: jr.checkpoint_overhead,
+        spec_backups: jr.spec_backups,
+        spec_backup_wins: jr.spec_backup_wins,
+        flow_timeouts: jr.flow_timeouts,
+        degraded_reads: jr.degraded_reads,
+        igfs,
+    }
+}
+
+fn class_reports(
+    schedule: &[Arrival],
+    decisions: &[AdmissionDecision],
+    mut by_class: Vec<(String, Percentiles)>,
+) -> Vec<ClassReport> {
+    let mut out: Vec<ClassReport> = Vec::new();
+    for (a, d) in schedule.iter().zip(decisions) {
+        let rep = match out.iter_mut().find(|r| r.name == a.class) {
+            Some(r) => r,
+            None => {
+                out.push(ClassReport {
+                    name: a.class.clone(),
+                    offered: 0,
+                    admitted: 0,
+                    rejected: 0,
+                    sojourn_ms: PercentileSummary::default(),
+                });
+                out.last_mut().unwrap()
+            }
+        };
+        rep.offered += 1;
+        if d.admitted {
+            rep.admitted += 1;
+        } else {
+            rep.rejected += 1;
+        }
+    }
+    for rep in &mut out {
+        if let Some((_, p)) =
+            by_class.iter_mut().find(|(n, _)| *n == rep.name)
+        {
+            rep.sojourn_ms = p.summary();
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::arrivals::{ArrivalModel, TenantClass};
+    use super::*;
+    use crate::coordinator::ClusterSpec;
+    use crate::util::bytes::MIB;
+    use crate::workloads::WordCount;
+
+    fn arrivals(rate: f64) -> ArrivalConfig {
+        ArrivalConfig {
+            model: ArrivalModel::Poisson { rate },
+            seed: 42,
+            horizon: SimNs::from_secs_f64(60.0),
+            max_jobs: 12,
+            classes: vec![
+                TenantClass::new("an", 3, 3),
+                TenantClass::new("batch", 1, 1),
+            ],
+            max_inflight: 2,
+            queue_cap: 2,
+            est_service: SimNs::from_secs_f64(2.0),
+        }
+    }
+
+    #[test]
+    fn estimator_rejects_only_past_the_backlog_cap() {
+        // 6 simultaneous arrivals, 2 servers + 2 queue slots → the
+        // first 4 admitted, the last 2 rejected, in arrival order.
+        let arr = ArrivalConfig {
+            model: ArrivalModel::Trace(vec![5, 5, 5, 5, 5, 5]),
+            max_inflight: 2,
+            queue_cap: 2,
+            ..Default::default()
+        };
+        let sched = arr.schedule();
+        let (dec, adm) = decide_admissions(&sched, &arr, 2);
+        assert_eq!(adm, vec![0, 1, 2, 3]);
+        assert_eq!(
+            dec.iter().map(|d| d.admitted).collect::<Vec<_>>(),
+            vec![true, true, true, true, false, false]
+        );
+        // Widely spaced arrivals all admit (servers free in between).
+        let arr2 = ArrivalConfig {
+            model: ArrivalModel::Trace(vec![0, 10_000, 20_000]),
+            max_inflight: 1,
+            queue_cap: 0,
+            est_service: SimNs::from_secs_f64(2.0),
+            ..Default::default()
+        };
+        let sched2 = arr2.schedule();
+        let (_, adm2) = decide_admissions(&sched2, &arr2, 1);
+        assert_eq!(adm2.len(), 3);
+    }
+
+    #[test]
+    fn serve_smoke_reports_open_loop() {
+        let mut cfg = SystemConfig::marvel_igfs();
+        cfg.map_workers = 2;
+        cfg.reduce_workers = 2;
+        cfg.arrivals = arrivals(1.0);
+        let mut cluster = ClusterSpec::default().deploy(&cfg);
+        cluster.stores.hdfs.block_size = 256 * 1024;
+        let mut rt = RtEngine::load(None).unwrap();
+        let wc = WordCount::new(800, 1.07, &rt);
+        let res =
+            OpenLoopServer::new(&wc, cfg, MIB).serve(&mut cluster, &mut rt);
+        assert!(res.ok(), "{:?}", res.failed);
+        let ol = res.open_loop.as_ref().expect("open-loop report");
+        assert!(ol.offered > 0);
+        assert_eq!(ol.offered, ol.admitted + ol.rejected);
+        assert_eq!(ol.decisions.len(), ol.offered as usize);
+        assert_eq!(res.jobs.len(), ol.admitted as usize);
+        assert_eq!(res.tenants.len(), ol.admitted as usize);
+        // Every admitted job produced bytes and a positive sojourn.
+        assert!(res.jobs.iter().all(|j| j.ok()));
+        assert!(ol.sojourn_ms.p50 > 0.0);
+        assert!(ol.sojourn_ms.p99 >= ol.sojourn_ms.p50);
+        assert!(ol.sojourn_ms.p999 >= ol.sojourn_ms.p99);
+        // Class mix reached the report.
+        assert!(!ol.classes.is_empty());
+        let offered: u64 = ol.classes.iter().map(|c| c.offered).sum();
+        assert_eq!(offered, ol.offered);
+    }
+}

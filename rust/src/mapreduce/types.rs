@@ -8,10 +8,13 @@
 //! expansion factors).
 
 use crate::coordinator::recovery::{FailurePlan, RecoveryConfig};
+use crate::faas::AutoscaleConfig;
 use crate::igfs::CacheStats;
 use crate::net::{DeviceRole, NetFaultPlan, StragglerProfile};
 use crate::sim::SimNs;
 use crate::util::bytes::{GIB, MIB};
+
+use super::server::arrivals::ArrivalConfig;
 
 /// Speculative-execution policy (Hadoop-style backup attempts): when a
 /// task's plan-time projected duration exceeds `lag_factor` × the
@@ -158,6 +161,14 @@ pub struct SystemConfig {
     /// time and the `flow_timeouts`/`degraded_reads` counters —
     /// outputs stay byte-identical.
     pub netfaults: NetFaultPlan,
+    /// Open-loop arrival plane (`marvel serve`): seed-driven arrival
+    /// model, tenant-class mix, and admission-control budget. Disabled
+    /// by default — closed-loop runs never consult it.
+    pub arrivals: ArrivalConfig,
+    /// Elastic warm-pool autoscaling policy the open-loop serve loop
+    /// drives against observed arrival rate. Disabled by default (the
+    /// static `prewarm` flag keeps its closed-loop meaning).
+    pub autoscale: AutoscaleConfig,
 }
 
 /// Parse one worker-count override value (the pure half of `from_env`,
@@ -185,6 +196,7 @@ impl SystemConfig {
         let fseed = std::env::var("MARVEL_FAILURE_SEED").ok();
         let sseed = std::env::var("MARVEL_STRAGGLER_SEED").ok();
         let nseed = std::env::var("MARVEL_NETFAULT_SEED").ok();
+        let aseed = std::env::var("MARVEL_ARRIVAL_SEED").ok();
         let mut cfg = self.with_worker_overrides(
             parse_workers(map.as_deref()),
             parse_workers(reduce.as_deref()),
@@ -210,6 +222,16 @@ impl SystemConfig {
             nseed.as_deref().and_then(|s| s.trim().parse::<u64>().ok())
         {
             cfg.netfaults.seed = seed;
+        }
+        // Fourth seeded axis, same pattern: inert until a serve loop
+        // arms the arrival model, so only the open-loop tests (and
+        // CI's MARVEL_ARRIVAL_SEED column) feel it. An explicit
+        // `[arrivals] seed` in a config file still wins (parsed after
+        // the preset constructs).
+        if let Some(seed) =
+            aseed.as_deref().and_then(|s| s.trim().parse::<u64>().ok())
+        {
+            cfg.arrivals.seed = seed;
         }
         cfg
     }
@@ -255,6 +277,8 @@ impl SystemConfig {
             stragglers: StragglerProfile::disabled(),
             speculation: SpeculationConfig::disabled(),
             netfaults: NetFaultPlan::disabled(),
+            arrivals: ArrivalConfig::default(),
+            autoscale: AutoscaleConfig::default(),
         }
         .from_env()
     }
@@ -283,6 +307,8 @@ impl SystemConfig {
             stragglers: StragglerProfile::disabled(),
             speculation: SpeculationConfig::disabled(),
             netfaults: NetFaultPlan::disabled(),
+            arrivals: ArrivalConfig::default(),
+            autoscale: AutoscaleConfig::default(),
         }
         .from_env()
     }
@@ -350,6 +376,8 @@ impl SystemConfig {
             stragglers: StragglerProfile::disabled(),
             speculation: SpeculationConfig::disabled(),
             netfaults: NetFaultPlan::disabled(),
+            arrivals: ArrivalConfig::default(),
+            autoscale: AutoscaleConfig::default(),
         }
         .from_env()
     }
@@ -595,6 +623,10 @@ mod tests {
             assert!(!cfg.speculation.enabled, "{}", cfg.name);
             assert!(!cfg.netfaults.enabled(), "{}", cfg.name);
             assert!(!cfg.netfaults.blackout_armed(), "{}", cfg.name);
+            // The open-loop plane and its autoscaler are equally inert
+            // by default — closed-loop runs never consult them.
+            assert!(!cfg.arrivals.enabled(), "{}", cfg.name);
+            assert!(!cfg.autoscale.enabled, "{}", cfg.name);
         }
         assert!(SpeculationConfig::on().enabled);
         // Explicit field assignment after construction wins over the

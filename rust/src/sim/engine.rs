@@ -342,6 +342,20 @@ impl Engine {
         self.barriers[id.0].opened_at
     }
 
+    /// Total slot capacity of a pool — what admission control sizes its
+    /// in-flight job budget against (the open-loop server defaults its
+    /// token pool to the cluster's aggregate invoker slots).
+    pub fn pool_capacity(&self, id: PoolId) -> usize {
+        self.pools[id.0].capacity
+    }
+
+    /// Slots of `id` not currently held. Planning-time snapshot: during
+    /// a run, waiters may be granted the instant a slot frees.
+    pub fn pool_available(&self, id: PoolId) -> usize {
+        let p = &self.pools[id.0];
+        p.capacity.saturating_sub(p.in_use)
+    }
+
     /// First failure message among procs whose label starts with
     /// `prefix` — job-scoped failure probe that avoids collecting and
     /// cloning every failure on every finalized job of a co-run.
@@ -770,6 +784,18 @@ mod tests {
         let end = e.run().unwrap();
         assert_eq!(end, SimNs::from_millis(12));
         assert_eq!(*e.state(p), ProcState::Finished);
+    }
+
+    #[test]
+    fn pool_capacity_accessors() {
+        let mut e = Engine::new();
+        let pool = e.add_pool(3);
+        assert_eq!(e.pool_capacity(pool), 3);
+        assert_eq!(e.pool_available(pool), 3);
+        e.spawn("holder", vec![Stage::Acquire(pool)]);
+        e.run().unwrap();
+        assert_eq!(e.pool_capacity(pool), 3, "capacity is static");
+        assert_eq!(e.pool_available(pool), 2, "one slot held");
     }
 
     #[test]

@@ -103,6 +103,29 @@ impl<T> FairQueue<T> {
         Some((class, item))
     }
 
+    /// Hand the most recently pushed item of `class` back to the
+    /// caller *without* charging any virtual service — the admission
+    /// path for a saturated pool, which must bounce a submission it
+    /// just queued. Undoing the push must not leave residue: if the
+    /// bounce drains the class, its queue entry is pruned like a
+    /// drained pop's would be, and its virtual-time tag is dropped
+    /// *iff* it is information-free (at or behind the clock, where
+    /// [`FairQueue::push`] would recreate it identically). A tag ahead
+    /// of the clock records real granted service and is kept — shedding
+    /// it would let a reject-looping class outcompete honest ones
+    /// (same reasoning as the drain-requeue rule on [`FairQueue::pop`]).
+    pub fn take_back(&mut self, class: u32) -> Option<T> {
+        let q = self.queues.get_mut(&class)?;
+        let item = q.pop_back()?;
+        if q.is_empty() {
+            self.queues.remove(&class);
+            if self.vtime.get(&class).is_some_and(|v| *v <= self.vclock) {
+                self.vtime.remove(&class);
+            }
+        }
+        Some(item)
+    }
+
     /// Charge `class` one grant of virtual service without dequeueing —
     /// used when a grant bypasses the queue entirely (an uncontended
     /// slot acquire), so backfilled service still counts against the
@@ -343,6 +366,63 @@ mod tests {
         }
         while q.pop(|_| 1).is_some() {}
         assert!(q.vtime.len() <= 9, "stale charge tags: {}", q.vtime.len());
+    }
+
+    #[test]
+    fn take_back_leaves_no_residue() {
+        // Regression (alongside drained_classes_are_pruned): a
+        // saturated admission pool queues a submission and immediately
+        // bounces it. The bounce must not leave an empty queue entry or
+        // a stale vtime tag behind — a long-lived server rejecting
+        // one-shot tenant classes would otherwise leak both maps.
+        let mut q = FairQueue::new();
+        for class in 0..1000u32 {
+            q.push(class, class);
+            assert_eq!(q.take_back(class), Some(class));
+        }
+        assert!(q.is_empty());
+        assert_eq!(q.queues.len(), 0, "bounced queues must be pruned");
+        assert_eq!(q.vtime.len(), 0, "bounced never-served tags must go");
+        // Bouncing a class that was never pushed is a no-op.
+        assert_eq!(q.take_back(7), None);
+    }
+
+    #[test]
+    fn take_back_undoes_the_push_not_the_service() {
+        // A class with real granted service keeps its charge through a
+        // bounce: push → take_back must not reset its tag to the clock.
+        let mut q = FairQueue::new();
+        let w = [(1u32, 1u64), (2, 3)];
+        for i in 0..30 {
+            q.push(2, i);
+        }
+        // Class 1 is granted once (charged SCALE), then reject-loops.
+        q.push(1, 100);
+        assert_eq!(q.pop(weights(&w)).unwrap().0, 1);
+        let mut grants1 = 0;
+        for _ in 0..24 {
+            q.push(1, 100);
+            let (c, _) = q.pop(weights(&w)).unwrap();
+            if c == 1 {
+                grants1 += 1;
+            } else {
+                // Not served this round: bounce the queued item, as the
+                // admission path does on a saturated pool.
+                assert_eq!(q.take_back(1), Some(100));
+            }
+        }
+        // 1:3 weights → the reject-looper still gets ~1/4 of grants;
+        // if take_back shed the charge it would win every other grant.
+        assert!((4..=9).contains(&grants1),
+                "reject-loop class took {grants1}/24 grants");
+        // FIFO order within the class survives a partial take_back.
+        let mut q2: FairQueue<u32> = FairQueue::new();
+        q2.push(5, 1);
+        q2.push(5, 2);
+        q2.push(5, 3);
+        assert_eq!(q2.take_back(5), Some(3), "take_back is LIFO (undo)");
+        assert_eq!(q2.pop(|_| 1), Some((5, 1)));
+        assert_eq!(q2.pop(|_| 1), Some((5, 2)));
     }
 
     #[test]

@@ -88,6 +88,9 @@ impl Percentiles {
     pub fn p99(&mut self) -> f64 {
         self.quantile(0.99)
     }
+    pub fn p999(&mut self) -> f64 {
+        self.quantile(0.999)
+    }
     pub fn mean(&self) -> f64 {
         if self.xs.is_empty() {
             0.0
@@ -95,6 +98,35 @@ impl Percentiles {
             self.xs.iter().sum::<f64>() / self.xs.len() as f64
         }
     }
+
+    /// Freeze the tail summary the open-loop report carries per metric.
+    pub fn summary(&mut self) -> PercentileSummary {
+        PercentileSummary {
+            n: self.len() as u64,
+            mean: self.mean(),
+            p50: self.p50(),
+            p99: self.p99(),
+            p999: self.p999(),
+        }
+    }
+}
+
+/// Immutable snapshot of a [`Percentiles`] set: sample count, mean and
+/// the p50/p99/p999 tail — the unit of latency reporting in
+/// `ServerResult::open_loop`. An empty set snapshots to all zeros.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PercentileSummary {
+    /// Number of samples summarized.
+    pub n: u64,
+    /// Arithmetic mean of the samples.
+    pub mean: f64,
+    /// Median (nearest-rank).
+    pub p50: f64,
+    /// 99th percentile (nearest-rank).
+    pub p99: f64,
+    /// 99.9th percentile (nearest-rank) — on small N this degrades to
+    /// the maximum sample, never an interpolated phantom.
+    pub p999: f64,
 }
 
 #[cfg(test)]
@@ -131,5 +163,67 @@ mod tests {
         assert_eq!(p.p50(), 0.0);
         let s = OnlineStats::new();
         assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn empty_summary_is_all_zeros() {
+        let mut p = Percentiles::new();
+        let s = p.summary();
+        assert_eq!(s, PercentileSummary::default());
+        assert_eq!(s.n, 0);
+        assert_eq!(s.p999, 0.0);
+    }
+
+    #[test]
+    fn single_sample_dominates_every_quantile() {
+        let mut p = Percentiles::new();
+        p.push(42.0);
+        assert_eq!(p.quantile(0.0), 42.0);
+        assert_eq!(p.p50(), 42.0);
+        assert_eq!(p.p99(), 42.0);
+        assert_eq!(p.p999(), 42.0);
+        let s = p.summary();
+        assert_eq!(s.n, 1);
+        assert_eq!(s.mean, 42.0);
+    }
+
+    #[test]
+    fn p999_on_small_n_is_the_max_not_a_phantom() {
+        // Nearest-rank with N < 1000: ceil(N * 0.999) == N, so p999 is
+        // the largest observed sample — never interpolated past it.
+        for n in [2usize, 10, 100, 999] {
+            let mut p = Percentiles::new();
+            for i in 1..=n {
+                p.push(i as f64);
+            }
+            assert_eq!(p.p999(), n as f64, "N={n}");
+            assert!(p.p99() <= p.p999(), "monotone tail at N={n}");
+        }
+        // At N=1000 the rank finally separates from the max.
+        let mut p = Percentiles::new();
+        for i in 1..=1000 {
+            p.push(i as f64);
+        }
+        assert_eq!(p.p999(), 999.0);
+        assert_eq!(p.quantile(1.0), 1000.0);
+    }
+
+    #[test]
+    fn duplicate_heavy_samples() {
+        // 990 copies of 1.0 and 10 copies of 100.0: the median and p99
+        // sit in the duplicate mass, only the extreme tail escapes it.
+        let mut p = Percentiles::new();
+        for _ in 0..990 {
+            p.push(1.0);
+        }
+        for _ in 0..10 {
+            p.push(100.0);
+        }
+        assert_eq!(p.p50(), 1.0);
+        assert_eq!(p.p99(), 1.0); // rank 990 is still inside the mass
+        assert_eq!(p.p999(), 100.0);
+        let s = p.summary();
+        assert_eq!(s.n, 1000);
+        assert!((s.mean - (990.0 + 1000.0) / 1000.0).abs() < 1e-9);
     }
 }

@@ -1,0 +1,214 @@
+//! Open-loop serving acceptance pins: seed-driven arrivals, admission
+//! control, weighted-fair queueing for in-flight job tokens, and
+//! elastic warm-pool autoscaling.
+//!
+//! * Same seeds ⇒ an identical admission/rejection log AND
+//!   byte-identical per-tenant outputs at `{map,reduce}_workers ∈
+//!   {1, 4, 8}` — the open-loop determinism contract. Admission is a
+//!   plan-time estimator over `(schedule, config)` alone, so worker
+//!   counts cannot perturb it; outputs come from the eager data plane,
+//!   which is worker-count invariant by construction.
+//! * A saturating burst engages rejections (offered = admitted +
+//!   rejected), and the admitted backlog drains through the weighted
+//!   fair queue without deadlock — every admitted job completes.
+//! * With `prewarm = false` and autoscaling armed, the serve reports
+//!   nonzero warm starts and scale-ups, and the cold-start rate falls
+//!   from the first third of admitted jobs to the last third.
+
+use marvel::coordinator::ClusterSpec;
+use marvel::faas::AutoscaleConfig;
+use marvel::mapreduce::{
+    output_key, ArrivalConfig, ArrivalModel, Cluster, OpenLoopServer,
+    ServerResult, StoreKind, SystemConfig, TenantClass,
+};
+use marvel::net::NodeId;
+use marvel::runtime::RtEngine;
+use marvel::sim::SimNs;
+use marvel::util::bytes::MIB;
+use marvel::workloads::WordCount;
+
+const INPUT: u64 = MIB;
+const NODES: usize = 4;
+const SLOTS: usize = 8;
+
+fn base_cfg(workers: usize) -> SystemConfig {
+    let mut c = SystemConfig::marvel_igfs();
+    c.map_workers = workers;
+    c.reduce_workers = workers;
+    c.arrivals = ArrivalConfig {
+        model: ArrivalModel::Poisson { rate: 1.0 },
+        seed: 42,
+        horizon: SimNs::from_secs_f64(60.0),
+        max_jobs: 10,
+        classes: vec![
+            TenantClass::new("an", 3, 3),
+            TenantClass::new("batch", 1, 1),
+        ],
+        max_inflight: 2,
+        queue_cap: 2,
+        est_service: SimNs::from_secs_f64(2.0),
+    };
+    c
+}
+
+fn run_serve(cfg: &SystemConfig) -> (ServerResult, Cluster) {
+    let mut cluster = ClusterSpec {
+        nodes: NODES,
+        slots_per_node: SLOTS,
+        ..Default::default()
+    }
+    .deploy(cfg);
+    cluster.stores.hdfs.block_size = 256 * 1024; // 4 splits from 1 MiB
+    let mut rt = RtEngine::load(None).unwrap();
+    let wc = WordCount::new(800, 1.07, &rt);
+    let res = OpenLoopServer::new(&wc, cfg.clone(), INPUT)
+        .serve(&mut cluster, &mut rt);
+    (res, cluster)
+}
+
+/// Every reducer's output bytes for `job`, through the configured
+/// output store.
+fn collect_outputs(
+    cluster: &mut Cluster,
+    cfg: &SystemConfig,
+    job: &str,
+    n_reduces: usize,
+) -> Vec<Option<Vec<u8>>> {
+    (0..n_reduces)
+        .map(|j| {
+            let key = output_key(job, j);
+            let p = match cfg.output_store {
+                StoreKind::Igfs => cluster
+                    .stores
+                    .igfs
+                    .get(&cluster.topo, NodeId(0), &key, 0)
+                    .map(|(p, _)| p),
+                StoreKind::Hdfs => cluster
+                    .stores
+                    .hdfs
+                    .read(&cluster.topo, NodeId(0), &key, 0)
+                    .ok()
+                    .map(|(p, _, _, _)| p),
+                StoreKind::S3 => cluster.stores.s3.get(&key),
+            };
+            p.map(|p| p.gather().expect("real output"))
+        })
+        .collect()
+}
+
+#[test]
+fn same_seeds_same_admissions_and_bytes_at_any_worker_count() {
+    let mut logs = Vec::new();
+    let mut outputs = Vec::new();
+    for workers in [1usize, 4, 8] {
+        let cfg = base_cfg(workers);
+        let (res, mut cluster) = run_serve(&cfg);
+        assert!(res.ok(), "workers={workers}: {:?}", res.failed);
+        let ol = res.open_loop.as_ref().expect("open-loop report");
+        assert!(ol.offered > 0);
+        assert_eq!(ol.offered, ol.admitted + ol.rejected);
+        assert_eq!(res.jobs.len(), ol.admitted as usize);
+        assert!(res.jobs.iter().all(|j| j.ok()), "workers={workers}");
+        logs.push(ol.decisions.clone());
+        let outs: Vec<(String, Vec<Option<Vec<u8>>>)> = res
+            .jobs
+            .iter()
+            .map(|run| {
+                let jr = &run.stages[0];
+                let o = collect_outputs(
+                    &mut cluster,
+                    &cfg,
+                    &jr.job,
+                    jr.reduce.tasks,
+                );
+                (jr.job.clone(), o)
+            })
+            .collect();
+        assert!(outs.iter().any(|(_, o)| {
+            o.iter().any(|b| b.as_ref().is_some_and(|b| !b.is_empty()))
+        }));
+        outputs.push(outs);
+    }
+    // Half 1 of the contract: identical admission logs.
+    assert_eq!(logs[0], logs[1], "admission log moved at workers=4");
+    assert_eq!(logs[0], logs[2], "admission log moved at workers=8");
+    // Half 2: byte-identical per-tenant outputs, job for job.
+    assert_eq!(outputs[0], outputs[1], "bytes moved at workers=4");
+    assert_eq!(outputs[0], outputs[2], "bytes moved at workers=8");
+}
+
+#[test]
+fn saturating_burst_engages_rejections_without_deadlock() {
+    let mut cfg = base_cfg(2);
+    // 12 simultaneous arrivals against 2 virtual servers + 2 queue
+    // slots: exactly 4 admit, 8 bounce, in arrival order.
+    cfg.arrivals.model = ArrivalModel::Trace(vec![5; 12]);
+    cfg.arrivals.max_jobs = 12;
+    let (res, _) = run_serve(&cfg);
+    assert!(res.ok(), "{:?}", res.failed);
+    let ol = res.open_loop.as_ref().expect("open-loop report");
+    assert_eq!(ol.offered, 12);
+    assert_eq!(ol.admitted, 4);
+    assert_eq!(ol.rejected, 8);
+    assert_eq!(
+        ol.decisions.iter().filter(|d| d.admitted).count(),
+        4,
+        "decision log disagrees with the tally"
+    );
+    // The admitted backlog drained at max_inflight concurrency through
+    // the weighted fair queue — no deadlock, every job finished.
+    assert_eq!(res.jobs.len(), 4);
+    assert!(res.jobs.iter().all(|j| j.ok()));
+    // Queueing is visible: someone waited for a job token.
+    assert!(ol.queue_wait_ms.p99 > 0.0, "a 12-burst must queue");
+    // Rejected arrivals left no residue: per-class tallies reconcile.
+    let (off, adm, rej) = ol.classes.iter().fold((0, 0, 0), |acc, c| {
+        (acc.0 + c.offered, acc.1 + c.admitted, acc.2 + c.rejected)
+    });
+    assert_eq!((off, adm, rej), (12, 4, 8));
+}
+
+#[test]
+fn autoscaling_warms_the_pool_as_arrivals_ramp() {
+    let mut cfg = base_cfg(2);
+    // Every container starts cold unless the autoscaler prewarms it.
+    cfg.prewarm = false;
+    // A steady 2 jobs/s trace, all admitted (generous budget).
+    cfg.arrivals.model =
+        ArrivalModel::Trace((0..18u64).map(|i| i * 500).collect());
+    cfg.arrivals.max_jobs = 18;
+    cfg.arrivals.max_inflight = 6;
+    cfg.arrivals.queue_cap = 18;
+    cfg.autoscale = AutoscaleConfig {
+        enabled: true,
+        warm_per_rate: 8.0,
+        up_threshold: 1.1,
+        down_threshold: 0.5,
+        min_warm: 0,
+        max_warm: 64,
+        window: SimNs::from_secs_f64(30.0),
+    };
+    let (res, _) = run_serve(&cfg);
+    assert!(res.ok(), "{:?}", res.failed);
+    let ol = res.open_loop.as_ref().expect("open-loop report");
+    assert_eq!(ol.rejected, 0, "budget was sized to admit everything");
+    assert!(ol.scale_ups > 0, "a ramping rate must scale the pool up");
+    assert!(ol.warm_starts > 0, "prewarmed containers must get hits");
+    // Cold-start *rate* falls as the warm pool catches up: compare the
+    // first third of admitted jobs against the last third.
+    let cold_rate = |runs: &[marvel::mapreduce::JobRun]| {
+        let (c, w) = runs.iter().flat_map(|r| &r.stages).fold(
+            (0u64, 0u64),
+            |(c, w), jr| (c + jr.cold_starts, w + jr.warm_starts),
+        );
+        c as f64 / (c + w).max(1) as f64
+    };
+    let n = res.jobs.len();
+    assert!(n >= 9, "expected the full trace admitted, got {n}");
+    let first = cold_rate(&res.jobs[..n / 3]);
+    let last = cold_rate(&res.jobs[n - n / 3..]);
+    assert!(
+        last < first,
+        "cold-start rate must fall: first {first:.2}, last {last:.2}"
+    );
+}
