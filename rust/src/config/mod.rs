@@ -17,7 +17,9 @@
 //! See `ARCHITECTURE.md` for what each knob configures.
 
 use crate::coordinator::ClusterSpec;
-use crate::mapreduce::{ArrivalModel, SystemConfig, TenantClass};
+use crate::mapreduce::{
+    ArrivalModel, PlacementStrategy, SystemConfig, TenantClass,
+};
 use crate::net::DeviceRole;
 use crate::sim::SimNs;
 use crate::util::bytes::GIB;
@@ -321,6 +323,23 @@ impl ExperimentConfig {
                 v.as_f64().unwrap_or(30.0).max(0.001),
             );
         }
+        // [placement] — pluggable task-placement strategy. `seed` only
+        // matters to `random`; an explicit strategy here overrides the
+        // preset's default (and any MARVEL_PLACEMENT env value, which
+        // `from_env` applied at preset construction).
+        let pseed = doc.i64_or("placement", "seed", 1).max(0) as u64;
+        if let Some(v) = doc.get("placement", "strategy") {
+            let name = v.as_str().unwrap_or_default();
+            system.placement = PlacementStrategy::parse(name, pseed)
+                .map_err(|e| format!("[placement] strategy: {e}"))?;
+        } else if doc.get("placement", "seed").is_some() {
+            // Seed-only section: re-seed an env-selected random strategy.
+            if let PlacementStrategy::Random { seed } =
+                &mut system.placement
+            {
+                *seed = pseed;
+            }
+        }
         let tenants =
             parse_tenant_spec(doc.str_or("server", "tenants", ""))?;
         let corun_workloads: Vec<String> = doc
@@ -426,6 +445,46 @@ workloads = "wordcount, grep"
         let empty = ExperimentConfig::parse("").unwrap();
         assert!(empty.tenants.is_empty());
         assert!(empty.corun_workloads.is_empty());
+    }
+
+    #[test]
+    fn placement_section_parses() {
+        let cfg = ExperimentConfig::parse(
+            r#"
+[placement]
+strategy = "cache-affinity"
+"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.system.placement,
+            PlacementStrategy::CacheAffinity
+        );
+        let cfg = ExperimentConfig::parse(
+            r#"
+[placement]
+strategy = "random"
+seed = 99
+"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.system.placement,
+            PlacementStrategy::Random { seed: 99 }
+        );
+        assert!(ExperimentConfig::parse(
+            "[placement]\nstrategy = \"nearest\"\n"
+        )
+        .is_err());
+        // No section: the preset default survives (guard the env knob
+        // so a sweep harness exporting MARVEL_PLACEMENT can't flake us).
+        if std::env::var("MARVEL_PLACEMENT").is_err() {
+            let cfg = ExperimentConfig::parse("").unwrap();
+            assert_eq!(
+                cfg.system.placement,
+                PlacementStrategy::FairOrder
+            );
+        }
     }
 
     #[test]

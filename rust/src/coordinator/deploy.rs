@@ -85,7 +85,7 @@ impl ClusterSpec {
             self.containers.clone(),
         );
         let lambda = Lambda::new(&mut engine, self.lambda.clone());
-        let rm = ResourceManager::new(
+        let mut rm = ResourceManager::new(
             (0..self.nodes)
                 .map(|i| NodeCapacity {
                     node: crate::net::NodeId(i),
@@ -94,6 +94,11 @@ impl ClusterSpec {
                 })
                 .collect(),
         );
+        // Pluggable placement: the strategy steers only which node each
+        // container lands on; StragglerAware additionally sees the same
+        // speed table the topology was built from.
+        rm.scheduler.placement = cfg.placement;
+        rm.scheduler.node_speeds = cfg.stragglers.speeds(self.nodes);
         Cluster { engine, topo, stores, controller, lambda, rm, tenant: 0 }
     }
 }
@@ -148,6 +153,30 @@ mod tests {
         let c = ClusterSpec::with_nodes(2)
             .deploy(&SystemConfig::marvel_igfs());
         assert!(c.engine.flows.capacity_windows().is_empty());
+    }
+
+    #[test]
+    fn placement_strategy_reaches_the_scheduler() {
+        use crate::net::StragglerProfile;
+        use crate::yarn::PlacementStrategy;
+        let mut cfg = SystemConfig::marvel_igfs();
+        cfg.placement = PlacementStrategy::CacheAffinity;
+        cfg.stragglers = StragglerProfile { seed: 5, prob: 1.0, slowdown: 4.0 };
+        let c = ClusterSpec::with_nodes(3).deploy(&cfg);
+        assert_eq!(c.rm.scheduler.placement, PlacementStrategy::CacheAffinity);
+        assert_eq!(c.rm.scheduler.node_speeds, vec![0.25; 3]);
+        // Default config: FairOrder, uniform speeds — legacy placement.
+        // (Guard the env knob: the CI determinism matrix sweeps
+        // MARVEL_PLACEMENT across the whole suite.)
+        let c = ClusterSpec::with_nodes(3)
+            .deploy(&SystemConfig::marvel_igfs());
+        if std::env::var("MARVEL_PLACEMENT").is_err() {
+            assert_eq!(
+                c.rm.scheduler.placement,
+                PlacementStrategy::FairOrder
+            );
+        }
+        assert_eq!(c.rm.scheduler.node_speeds, vec![1.0; 3]);
     }
 
     #[test]

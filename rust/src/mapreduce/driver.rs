@@ -38,7 +38,7 @@ use crate::net::{NodeId, Topology, MAX_FLOW_RETRIES};
 use crate::runtime::{RtEngine, RtStats};
 use crate::sim::{BarrierId, Engine, PoolId, ProcId, SimNs, Stage};
 use crate::storage::Payload;
-use crate::yarn::{ContainerRequest, ResourceManager};
+use crate::yarn::{Allocation, ContainerRequest, ResourceManager};
 
 use super::shuffle::{interm_key, output_key, KeyHome, Stores};
 use super::types::{
@@ -240,6 +240,59 @@ fn plan_handoff(
         });
     }
     (total, plans)
+}
+
+/// Count allocations that landed on a node named in their request's
+/// locality hints — HDFS replica holders or IGFS handoff-key owners.
+/// Any `LocalityLevel` counts: a strict strategy's queued-on-holder
+/// placement still routes the task's reads to local bytes.
+fn count_affinity_hits(
+    reqs: &[ContainerRequest],
+    allocs: &[Allocation],
+) -> u64 {
+    allocs
+        .iter()
+        .filter(|a| reqs[a.request_idx].locality.contains(&a.node))
+        .count() as u64
+}
+
+/// CacheAffinity reducer hints: the nodes holding partition `j`'s
+/// intermediate keys, heaviest byte share first (node-id tie-break).
+/// Resolved through the stat-free `Stores::locate` chain, so computing
+/// hints disturbs no cache statistics — and only the scheduler reads
+/// them, so hints can move a reducer's node but never its bytes.
+fn reduce_affinity_hints(
+    stores: &mut Stores,
+    job: &str,
+    n_maps: usize,
+    j: usize,
+) -> Vec<NodeId> {
+    let mut by_node: Vec<(NodeId, u64)> = Vec::new();
+    for i in 0..n_maps {
+        let key = interm_key(job, i, j);
+        let holder = match stores.locate(&key) {
+            Some((len, KeyHome::Igfs)) => {
+                Some((stores.igfs.owner(&key), len))
+            }
+            Some((len, KeyHome::Hdfs)) => stores
+                .hdfs
+                .block_locations(&key)
+                .first()
+                .and_then(|(_, nodes)| nodes.first().copied())
+                .map(|n| (n, len)),
+            _ => None, // S3 (no node) or an empty mapper output
+        };
+        if let Some((n, len)) = holder {
+            // A mapper that emitted nothing for this partition wrote no
+            // key; len.max(1) keeps zero-length-but-present keys votable.
+            match by_node.iter_mut().find(|(m, _)| *m == n) {
+                Some((_, b)) => *b += len.max(1),
+                None => by_node.push((n, len.max(1))),
+            }
+        }
+    }
+    by_node.sort_by(|a, b| b.1.cmp(&a.1).then(a.0 .0.cmp(&b.0 .0)));
+    by_node.into_iter().map(|(n, _)| n).collect()
 }
 
 /// Which tier served a handoff split.
@@ -854,6 +907,7 @@ pub struct PlannedStage {
     checkpoints: u64,
     checkpoint_overhead: SimNs,
     spec_backups: u64,
+    affinity_hits: u64,
 }
 
 impl PlannedStage {
@@ -948,6 +1002,7 @@ pub fn finalize_stage(
         // not task attempts — reported separately from task_attempts.
         flow_timeouts: cluster.engine.timeouts_with_prefix(&prefix) as u64,
         degraded_reads: p.igfs.degraded_reads,
+        affinity_hits: p.affinity_hits,
     })
 }
 
@@ -1059,6 +1114,7 @@ pub fn plan_stage(
         0
     };
     let map_allocs = cluster.rm.allocate_for(qid, &map_reqs);
+    let mut affinity_hits = count_affinity_hits(&map_reqs, &map_allocs);
     if cfg.prewarm && cfg.platform == Platform::OpenWhisk {
         cluster.controller.prewarm(HADOOP_RUNTIME, 64);
     }
@@ -1386,14 +1442,24 @@ pub fn plan_stage(
     // zero-copy views. A miss (Ok(None)) is a mapper that emitted
     // nothing; a store error is data loss and fails the job instead of
     // silently reducing over a hole.
+    // Reducer placement: legacy strategies request with no hints (the
+    // scheduler's spill order is then bit-for-bit the pre-placement
+    // code); CacheAffinity hints each reducer at the nodes holding its
+    // partition's intermediate bytes, so the shuffle gather below reads
+    // DRAM/PMEM-local instead of crossing the LAN.
     let reduce_reqs: Vec<ContainerRequest> = (0..n_reduces)
-        .map(|_| ContainerRequest {
+        .map(|j| ContainerRequest {
             vcores: 1,
             memory_mb: 2048,
-            locality: vec![],
+            locality: if cfg.placement.wants_reduce_affinity() {
+                reduce_affinity_hints(&mut cluster.stores, &job, n_maps, j)
+            } else {
+                vec![]
+            },
         })
         .collect();
     let reduce_allocs = cluster.rm.allocate_for(qid, &reduce_reqs);
+    affinity_hits += count_affinity_hits(&reduce_reqs, &reduce_allocs);
     let mut reduce_in_bytes = 0u64;
     let mut plans: Vec<ReducePlan> = Vec::with_capacity(n_reduces);
     let mut inputs_per_part: Vec<Vec<Payload>> =
@@ -1644,6 +1710,7 @@ pub fn plan_stage(
         checkpoints: tally.checkpoints,
         checkpoint_overhead: tally.overhead,
         spec_backups,
+        affinity_hits,
     })
 }
 

@@ -32,3 +32,6 @@ pub use types::{
     SpeculationConfig, StoreKind, SystemConfig,
 };
 pub use workload::{task_rng, MapOutput, ReduceOutput, Workload};
+// Placement lives in `yarn::placement`; re-exported here because it is
+// configured through `SystemConfig` like every other job-level knob.
+pub use crate::yarn::PlacementStrategy;

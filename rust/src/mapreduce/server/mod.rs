@@ -156,6 +156,14 @@ pub struct TenantReport {
     pub flow_timeouts: u64,
     /// Reads a lower storage tier served after a cache blackout.
     pub degraded_reads: u64,
+    /// Tasks the placement strategy landed on a node named in their
+    /// locality hints (replica holders / handoff-key owners), summed
+    /// over the tenant's stages.
+    pub affinity_hits: u64,
+    /// Byte-weighted input locality across the tenant's stages: bytes
+    /// read node-locally over all placed input bytes (0.0 when the
+    /// tenant moved no input bytes).
+    pub locality_ratio: f64,
     /// IGFS cache activity attributed to this tenant's planning —
     /// including evictions it inflicted on co-tenants under pressure.
     pub igfs: CacheStats,
@@ -411,8 +419,16 @@ impl<'a> JobServer<'a> {
                     spec_backup_wins: 0,
                     flow_timeouts: 0,
                     degraded_reads: 0,
+                    affinity_hits: 0,
+                    locality_ratio: 0.0,
                     igfs: CacheStats::default(),
                 };
+                // Byte-weighted locality across stages: a stage's ratio
+                // is local/placed input bytes, and placed == the
+                // stage's input bytes, so weighting by input recovers
+                // the tenant-level byte ratio.
+                let mut local_bytes = 0.0f64;
+                let mut placed_bytes = 0.0f64;
                 for run in jobs.iter().filter(|r| &r.tenant == name) {
                     rep.jobs += 1;
                     rep.completion = rep.completion.max(run.completion);
@@ -428,8 +444,15 @@ impl<'a> JobServer<'a> {
                         rep.spec_backup_wins += s.spec_backup_wins;
                         rep.flow_timeouts += s.flow_timeouts;
                         rep.degraded_reads += s.degraded_reads;
+                        rep.affinity_hits += s.affinity_hits;
+                        local_bytes +=
+                            s.locality_ratio * s.input_bytes as f64;
+                        placed_bytes += s.input_bytes as f64;
                         rep.igfs.add(&s.igfs);
                     }
+                }
+                if placed_bytes > 0.0 {
+                    rep.locality_ratio = local_bytes / placed_bytes;
                 }
                 rep
             })

@@ -13,6 +13,7 @@ use crate::igfs::CacheStats;
 use crate::net::{DeviceRole, NetFaultPlan, StragglerProfile};
 use crate::sim::SimNs;
 use crate::util::bytes::{GIB, MIB};
+use crate::yarn::PlacementStrategy;
 
 use super::server::arrivals::ArrivalConfig;
 
@@ -169,6 +170,11 @@ pub struct SystemConfig {
     /// drives against observed arrival rate. Disabled by default (the
     /// static `prewarm` flag keeps its closed-loop meaning).
     pub autoscale: AutoscaleConfig,
+    /// Pluggable task-placement strategy (`yarn::placement`). FairOrder
+    /// by default — the legacy scheduler bit-for-bit. Placement steers
+    /// only *which node* a task lands on; outputs are byte-identical
+    /// under any strategy (pinned by the placement property test).
+    pub placement: PlacementStrategy,
 }
 
 /// Parse one worker-count override value (the pure half of `from_env`,
@@ -233,6 +239,20 @@ impl SystemConfig {
         {
             cfg.arrivals.seed = seed;
         }
+        // Placement sweep axis (CI's determinism matrix): any strategy
+        // is safe to force globally because placement cannot move
+        // output bytes — only virtual time and locality counters.
+        // Unset (or unparseable) leaves the preset's FairOrder default.
+        let pseed = std::env::var("MARVEL_PLACEMENT_SEED")
+            .ok()
+            .and_then(|s| s.trim().parse::<u64>().ok())
+            .unwrap_or(1);
+        if let Some(strategy) = std::env::var("MARVEL_PLACEMENT")
+            .ok()
+            .and_then(|s| PlacementStrategy::parse(&s, pseed).ok())
+        {
+            cfg.placement = strategy;
+        }
         cfg
     }
 
@@ -279,6 +299,7 @@ impl SystemConfig {
             netfaults: NetFaultPlan::disabled(),
             arrivals: ArrivalConfig::default(),
             autoscale: AutoscaleConfig::default(),
+            placement: PlacementStrategy::default(),
         }
         .from_env()
     }
@@ -309,6 +330,7 @@ impl SystemConfig {
             netfaults: NetFaultPlan::disabled(),
             arrivals: ArrivalConfig::default(),
             autoscale: AutoscaleConfig::default(),
+            placement: PlacementStrategy::default(),
         }
         .from_env()
     }
@@ -378,6 +400,7 @@ impl SystemConfig {
             netfaults: NetFaultPlan::disabled(),
             arrivals: ArrivalConfig::default(),
             autoscale: AutoscaleConfig::default(),
+            placement: PlacementStrategy::default(),
         }
         .from_env()
     }
@@ -476,6 +499,13 @@ pub struct JobResult {
     /// Reads the cache tier could not serve (cache-node blackout) and
     /// a lower storage tier (HDFS/S3) served instead of erroring.
     pub degraded_reads: u64,
+    /// Tasks (maps + reduces) the scheduler landed on a node named in
+    /// their locality hints — an HDFS replica holder or an IGFS
+    /// handoff-key owner. Together with `locality_ratio` (byte-
+    /// weighted), this is the placement plane's report card: affinity
+    /// strategies drive it toward the task count, Random reads as the
+    /// luck baseline.
+    pub affinity_hits: u64,
 }
 
 impl JobResult {
@@ -508,6 +538,7 @@ impl JobResult {
             spec_backup_wins: 0,
             flow_timeouts: 0,
             degraded_reads: 0,
+            affinity_hits: 0,
         }
     }
 
@@ -627,6 +658,16 @@ mod tests {
             // by default — closed-loop runs never consult them.
             assert!(!cfg.arrivals.enabled(), "{}", cfg.name);
             assert!(!cfg.autoscale.enabled, "{}", cfg.name);
+            // Placement defaults to the legacy FairOrder path unless
+            // CI's MARVEL_PLACEMENT column (or a config) overrides it.
+            if std::env::var("MARVEL_PLACEMENT").is_err() {
+                assert_eq!(
+                    cfg.placement,
+                    PlacementStrategy::FairOrder,
+                    "{}",
+                    cfg.name
+                );
+            }
         }
         assert!(SpeculationConfig::on().enabled);
         // Explicit field assignment after construction wins over the

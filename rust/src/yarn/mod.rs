@@ -6,10 +6,12 @@
 //! registers one queue per tenant so concurrent jobs share the cluster
 //! by capacity shares. See `ARCHITECTURE.md` (Layer 3).
 
+pub mod placement;
 pub mod scheduler;
 
 use crate::net::NodeId;
 
+pub use placement::PlacementStrategy;
 pub use scheduler::{Allocation, LocalityLevel, Scheduler, TenantQueue};
 
 /// Per-node capacity advertised by a NodeManager.

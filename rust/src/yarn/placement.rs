@@ -1,0 +1,165 @@
+//! Pluggable placement strategies for the YARN scheduler — *which node*
+//! a container lands on, and nothing else. The strategy steers only the
+//! placement plane: flow endpoints, tier pricing, and shuffle byte
+//! accounting all follow the chosen node automatically, and the data
+//! plane never consults it, so job outputs are byte-identical under
+//! **any** strategy at any worker count (pinned by
+//! `prop_placement_never_changes_output_bytes` in `rust/tests/props.rs`).
+//!
+//! Strategy semantics (see `Scheduler::allocate_for` for the code):
+//!
+//! - **FairOrder** — today's behavior, bit-for-bit: honor each request's
+//!   locality hints first, spill anywhere with headroom on a per-wave
+//!   round-robin cursor, queue on the preferred node when full.
+//! - **Random(seed)** — seeded scan start per request, hints ignored for
+//!   ordering. The locality-by-luck baseline the fig12 bench compares
+//!   affinity strategies against.
+//! - **RoundRobin** — rotate a *persistent* cursor across waves (the
+//!   FairOrder cursor resets every wave), hints ignored for ordering.
+//! - **HdfsLocal** — strict data locality: a request with hints (the
+//!   block's replica set from the NameNode) never spills off-node; if no
+//!   replica holder has headroom it queues on the first holder and waits
+//!   for that node's slot pool instead.
+//! - **CacheAffinity** — same strict-affinity placement, plus the driver
+//!   enriches *reducer* requests with the nodes holding their partition's
+//!   intermediate keys (via `Stores::locate`), so stage-k+1 tasks and
+//!   reducers both land where stage k's DRAM/PMEM bytes already sit —
+//!   the paper's PMEM story actually exploited rather than just priced.
+//! - **StragglerAware** — anti-affinity with PR 5's speed profiles:
+//!   prefer a full-speed hint holder, else the fastest node with
+//!   headroom (speed descending, node id ascending).
+use crate::net::NodeId;
+
+/// Which placement strategy `Scheduler::allocate_for` runs. Defaults to
+/// [`PlacementStrategy::FairOrder`] (the legacy behavior) everywhere;
+/// wired to TOML `[placement]`, CLI `--placement`, and env
+/// `MARVEL_PLACEMENT`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PlacementStrategy {
+    #[default]
+    FairOrder,
+    Random { seed: u64 },
+    RoundRobin,
+    HdfsLocal,
+    CacheAffinity,
+    StragglerAware,
+}
+
+impl PlacementStrategy {
+    /// Parse a strategy name (the TOML/CLI/env spelling). `seed` feeds
+    /// `Random` and is ignored by every other strategy.
+    pub fn parse(name: &str, seed: u64) -> Result<PlacementStrategy, String> {
+        match name.trim() {
+            "fair" | "fair-order" => Ok(PlacementStrategy::FairOrder),
+            "random" => Ok(PlacementStrategy::Random { seed }),
+            "round-robin" => Ok(PlacementStrategy::RoundRobin),
+            "hdfs-local" => Ok(PlacementStrategy::HdfsLocal),
+            "cache-affinity" => Ok(PlacementStrategy::CacheAffinity),
+            "straggler-aware" => Ok(PlacementStrategy::StragglerAware),
+            other => Err(format!(
+                "unknown placement strategy {other:?} (expected \
+                 fair|random|round-robin|hdfs-local|cache-affinity|\
+                 straggler-aware)"
+            )),
+        }
+    }
+
+    /// Canonical name (round-trips through [`PlacementStrategy::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementStrategy::FairOrder => "fair",
+            PlacementStrategy::Random { .. } => "random",
+            PlacementStrategy::RoundRobin => "round-robin",
+            PlacementStrategy::HdfsLocal => "hdfs-local",
+            PlacementStrategy::CacheAffinity => "cache-affinity",
+            PlacementStrategy::StragglerAware => "straggler-aware",
+        }
+    }
+
+    /// Strict-affinity strategies queue on a hint holder rather than
+    /// spilling a hinted request off-node.
+    pub fn strict_affinity(&self) -> bool {
+        matches!(
+            self,
+            PlacementStrategy::HdfsLocal | PlacementStrategy::CacheAffinity
+        )
+    }
+
+    /// Whether the driver should compute intermediate-key holder hints
+    /// for reducer requests (only CacheAffinity consults them; every
+    /// other strategy keeps the legacy empty hints bit-for-bit).
+    pub fn wants_reduce_affinity(&self) -> bool {
+        matches!(self, PlacementStrategy::CacheAffinity)
+    }
+}
+
+/// Order `nodes` fastest-first (speed descending, node id ascending as
+/// the deterministic tie-break — the same ordering `plan_backups` uses
+/// to pick backup hosts). `speeds` is indexed by node id; missing
+/// entries read as full speed.
+pub(crate) fn fastest_first(nodes: &[NodeId], speeds: &[f64]) -> Vec<NodeId> {
+    let speed =
+        |n: &NodeId| speeds.get(n.0).copied().unwrap_or(1.0);
+    let mut order = nodes.to_vec();
+    order.sort_by(|a, b| {
+        speed(b).total_cmp(&speed(a)).then(a.0.cmp(&b.0))
+    });
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_every_strategy() {
+        for name in [
+            "fair",
+            "random",
+            "round-robin",
+            "hdfs-local",
+            "cache-affinity",
+            "straggler-aware",
+        ] {
+            let s = PlacementStrategy::parse(name, 7).unwrap();
+            assert_eq!(s.name(), name);
+        }
+        assert_eq!(
+            PlacementStrategy::parse("random", 7).unwrap(),
+            PlacementStrategy::Random { seed: 7 }
+        );
+        assert_eq!(
+            PlacementStrategy::parse(" fair ", 0).unwrap(),
+            PlacementStrategy::FairOrder
+        );
+        assert!(PlacementStrategy::parse("greedy", 0)
+            .unwrap_err()
+            .contains("unknown placement strategy"));
+    }
+
+    #[test]
+    fn default_is_fair_order() {
+        assert_eq!(PlacementStrategy::default(), PlacementStrategy::FairOrder);
+        assert!(!PlacementStrategy::default().strict_affinity());
+        assert!(!PlacementStrategy::default().wants_reduce_affinity());
+    }
+
+    #[test]
+    fn strictness_and_reduce_affinity_classify() {
+        assert!(PlacementStrategy::HdfsLocal.strict_affinity());
+        assert!(PlacementStrategy::CacheAffinity.strict_affinity());
+        assert!(!PlacementStrategy::RoundRobin.strict_affinity());
+        assert!(PlacementStrategy::CacheAffinity.wants_reduce_affinity());
+        assert!(!PlacementStrategy::HdfsLocal.wants_reduce_affinity());
+    }
+
+    #[test]
+    fn fastest_first_orders_by_speed_then_id() {
+        let nodes: Vec<NodeId> = (0..4).map(NodeId).collect();
+        let speeds = vec![0.25, 1.0, 1.0, 0.5];
+        let order = fastest_first(&nodes, &speeds);
+        assert_eq!(order, vec![NodeId(1), NodeId(2), NodeId(3), NodeId(0)]);
+        // No speed table: uniform cluster, id order.
+        assert_eq!(fastest_first(&nodes, &[]), nodes);
+    }
+}

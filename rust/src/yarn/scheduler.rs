@@ -17,7 +17,9 @@
 use std::collections::HashMap;
 
 use crate::net::NodeId;
+use crate::util::rng::Rng;
 
+use super::placement::{fastest_first, PlacementStrategy};
 use super::{ContainerRequest, NodeCapacity};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -74,6 +76,21 @@ pub struct Scheduler {
     /// Weighted fair queues, one per tenant. Index = tenant id; id 0 is
     /// the always-present default queue single-job runs allocate under.
     pub queues: Vec<TenantQueue>,
+    /// Pluggable placement strategy (see `yarn::placement`). FairOrder
+    /// — the default — keeps every legacy placement bit-for-bit.
+    pub placement: PlacementStrategy,
+    /// Node speed factors (index = node id), installed at deploy time
+    /// from the straggler profile. Empty = uniform cluster. Consulted
+    /// only by `PlacementStrategy::StragglerAware`.
+    pub node_speeds: Vec<f64>,
+    /// Persistent cursor for `PlacementStrategy::RoundRobin` — unlike
+    /// FairOrder's per-wave spill cursor, it carries across waves so
+    /// consecutive small waves keep rotating.
+    rr_cursor: usize,
+    /// Allocation-wave counter salting the `Random` strategy's per-wave
+    /// RNG: a pure function of the call sequence, so identical runs
+    /// draw identical placements.
+    wave: u64,
 }
 
 impl Default for Scheduler {
@@ -89,6 +106,10 @@ impl Scheduler {
             off_node: 0,
             queued: 0,
             queues: vec![TenantQueue::new("default", 1)],
+            placement: PlacementStrategy::default(),
+            node_speeds: Vec::new(),
+            rr_cursor: 0,
+            wave: 0,
         }
     }
 
@@ -133,12 +154,19 @@ impl Scheduler {
     }
 
     /// One allocation wave for `tenant`'s queue. Requests are served in
-    /// order; each takes the best available placement. Requests that
-    /// fit nowhere are marked `Queued` and assigned their preferred
-    /// node — execution then waits on that node's slot pool, where the
-    /// engine's weighted fair queues interleave tenants' waves by the
-    /// shares registered here (preemption-free backfill: an idle
-    /// tenant's slots serve whoever is backlogged).
+    /// order; each takes the best available placement under the
+    /// installed [`PlacementStrategy`] (FairOrder — the default — is
+    /// the legacy algorithm bit-for-bit). Requests that fit nowhere are
+    /// marked `Queued` and assigned their preferred node — execution
+    /// then waits on that node's slot pool, where the engine's weighted
+    /// fair queues interleave tenants' waves by the shares registered
+    /// here (preemption-free backfill: an idle tenant's slots serve
+    /// whoever is backlogged).
+    ///
+    /// Determinism: every strategy's choice is a pure function of the
+    /// call sequence (request order, capacities, hints, seeds) — never
+    /// of wall-clock, map iteration order, or data bytes — so placement
+    /// moves only virtual time, and outputs stay byte-identical.
     pub fn allocate_for(
         &mut self,
         tenant: usize,
@@ -151,34 +179,127 @@ impl Scheduler {
             .collect();
         let mut out = Vec::with_capacity(requests.len());
         let node_ids: Vec<NodeId> = nodes.iter().map(|n| n.node).collect();
+        // FairOrder's legacy spill cursor: resets every wave (pinned by
+        // `fair_order_spill_cursor_resets_per_wave`).
         let mut rr = 0usize;
+        self.wave = self.wave.wrapping_add(1);
+        let mut rng = match self.placement {
+            PlacementStrategy::Random { seed } => Some(Rng::new(
+                seed ^ self.wave.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            )),
+            _ => None,
+        };
         for (idx, req) in requests.iter().enumerate() {
             let fits = |f: &(u32, u64)| {
                 f.0 >= req.vcores && f.1 >= req.memory_mb
             };
-            // 1. node-local
+            let hinted = |n: NodeId| req.locality.contains(&n);
             let mut placed = None;
-            for pref in &req.locality {
-                if let Some(f) = free.get_mut(pref) {
-                    if fits(f) {
-                        f.0 -= req.vcores;
-                        f.1 -= req.memory_mb;
-                        placed = Some((*pref, LocalityLevel::NodeLocal));
-                        break;
+            // A closure would borrow `free` twice; a macro keeps the
+            // take-capacity step shared across the strategy arms.
+            macro_rules! take {
+                ($node:expr, $level:expr) => {{
+                    let f = free.get_mut(&$node).unwrap();
+                    f.0 -= req.vcores;
+                    f.1 -= req.memory_mb;
+                    placed = Some(($node, $level));
+                }};
+            }
+            match self.placement {
+                PlacementStrategy::FairOrder
+                | PlacementStrategy::HdfsLocal
+                | PlacementStrategy::CacheAffinity => {
+                    // 1. node-local
+                    for pref in &req.locality {
+                        if free.get(pref).is_some_and(fits) {
+                            take!(*pref, LocalityLevel::NodeLocal);
+                            break;
+                        }
+                    }
+                    // 2. anywhere with headroom (round-robin start for
+                    // balance). Strict-affinity strategies skip the
+                    // spill for hinted requests: they queue on the hint
+                    // holder below and ride its slot pool instead.
+                    let may_spill = !self.placement.strict_affinity()
+                        || req.locality.is_empty();
+                    if placed.is_none() && may_spill {
+                        for k in 0..node_ids.len() {
+                            let cand = node_ids[(rr + k) % node_ids.len()];
+                            if fits(&free[&cand]) {
+                                take!(cand, LocalityLevel::OffNode);
+                                rr = (rr + k + 1) % node_ids.len();
+                                break;
+                            }
+                        }
                     }
                 }
-            }
-            // 2. anywhere with headroom (round-robin start for balance)
-            if placed.is_none() {
-                for k in 0..node_ids.len() {
-                    let cand = node_ids[(rr + k) % node_ids.len()];
-                    let f = free.get_mut(&cand).unwrap();
-                    if fits(f) {
-                        f.0 -= req.vcores;
-                        f.1 -= req.memory_mb;
-                        placed = Some((cand, LocalityLevel::OffNode));
-                        rr = (rr + k + 1) % node_ids.len();
-                        break;
+                PlacementStrategy::Random { .. } => {
+                    // Seeded scan start per request; hints only
+                    // classify, never steer.
+                    let r = rng.as_mut().expect("Random strategy has rng");
+                    let start =
+                        r.below(node_ids.len().max(1) as u64) as usize;
+                    for k in 0..node_ids.len() {
+                        let cand = node_ids[(start + k) % node_ids.len()];
+                        if fits(&free[&cand]) {
+                            let level = if hinted(cand) {
+                                LocalityLevel::NodeLocal
+                            } else {
+                                LocalityLevel::OffNode
+                            };
+                            take!(cand, level);
+                            break;
+                        }
+                    }
+                }
+                PlacementStrategy::RoundRobin => {
+                    // Persistent cursor across waves.
+                    for k in 0..node_ids.len() {
+                        let cand = node_ids
+                            [(self.rr_cursor + k) % node_ids.len()];
+                        if fits(&free[&cand]) {
+                            let level = if hinted(cand) {
+                                LocalityLevel::NodeLocal
+                            } else {
+                                LocalityLevel::OffNode
+                            };
+                            take!(cand, level);
+                            self.rr_cursor = (self.rr_cursor + k + 1)
+                                % node_ids.len();
+                            break;
+                        }
+                    }
+                }
+                PlacementStrategy::StragglerAware => {
+                    // 1. a full-speed hint holder with headroom.
+                    for pref in &req.locality {
+                        let speed = self
+                            .node_speeds
+                            .get(pref.0)
+                            .copied()
+                            .unwrap_or(1.0);
+                        if speed >= 1.0
+                            && free.get(pref).is_some_and(fits)
+                        {
+                            take!(*pref, LocalityLevel::NodeLocal);
+                            break;
+                        }
+                    }
+                    // 2. anti-affinity spill: fastest node first.
+                    if placed.is_none() {
+                        for cand in
+                            fastest_first(&node_ids, &self.node_speeds)
+                        {
+                            if fits(&free[&cand]) {
+                                let level = if hinted(cand) {
+                                    LocalityLevel::NodeLocal
+                                } else {
+                                    LocalityLevel::OffNode
+                                };
+                                take!(cand, level);
+                                break;
+                            }
+                        }
                     }
                 }
             }
@@ -216,7 +337,11 @@ impl Scheduler {
         out
     }
 
-    /// Fraction of non-queued placements that were node-local.
+    /// Fraction of non-queued placements that were node-local. Queued
+    /// requests are deliberately excluded from the denominator: a
+    /// strict-affinity strategy that queues every hinted task on its
+    /// holder would otherwise read as 0% local while achieving perfect
+    /// locality (pinned by `queued_never_inflates_locality_ratio`).
     pub fn locality_ratio(&self) -> f64 {
         let placed = self.node_local + self.off_node;
         if placed == 0 {
@@ -329,5 +454,180 @@ mod tests {
         s.node_local = 3;
         s.off_node = 1;
         assert!((s.locality_ratio() - 0.75).abs() < 1e-9);
+    }
+
+    // ---- test-bug sweep regressions (ISSUE 8 satellite) ----
+
+    #[test]
+    fn queued_never_inflates_locality_ratio() {
+        // Audit finding: Queued allocations are excluded from the
+        // ratio's denominator — a full cluster must not drag the
+        // locality metric toward zero. Pin it.
+        let mut s = Scheduler::new();
+        let ns = nodes(1, 1);
+        let reqs =
+            vec![req(vec![NodeId(0)]), req(vec![NodeId(0)]), req(vec![])];
+        s.allocate(&ns, &reqs);
+        assert_eq!((s.node_local, s.off_node, s.queued), (1, 0, 2));
+        assert!((s.locality_ratio() - 1.0).abs() < 1e-9, "queued inflated");
+        // And an all-queued wave reads 0.0, not NaN.
+        let mut s = Scheduler::new();
+        s.allocate(&nodes(1, 0), &[req(vec![])]);
+        assert_eq!(s.locality_ratio(), 0.0);
+    }
+
+    #[test]
+    fn queued_fallback_rotation_is_deterministic() {
+        // Audit finding: the unhinted Queued fallback rotates by
+        // *request index* (`idx % nodes`), not by any persistent or
+        // randomized cursor — two identical waves must queue on
+        // identical nodes. Pin it.
+        let waves = |s: &mut Scheduler| {
+            let ns = nodes(3, 0); // no headroom anywhere
+            let reqs: Vec<_> = (0..5).map(|_| req(vec![])).collect();
+            s.allocate(&ns, &reqs)
+                .iter()
+                .map(|a| a.node)
+                .collect::<Vec<_>>()
+        };
+        let mut s = Scheduler::new();
+        let first = waves(&mut s);
+        let second = waves(&mut s);
+        assert_eq!(first, second);
+        let expect: Vec<NodeId> =
+            [0, 1, 2, 0, 1].iter().map(|&i| NodeId(i)).collect();
+        assert_eq!(first, expect);
+        // Hinted requests queue on their first hint, every wave.
+        let a = s.allocate(&nodes(1, 0), &[req(vec![NodeId(0)])]);
+        assert_eq!(a[0].node, NodeId(0));
+        assert_eq!(a[0].locality, LocalityLevel::Queued);
+    }
+
+    #[test]
+    fn fair_order_spill_cursor_resets_per_wave() {
+        // The FairOrder spill cursor is per-wave (legacy, bit-for-bit):
+        // two identical unhinted waves start their scan at node 0.
+        let mut s = Scheduler::new();
+        let ns = nodes(3, 4);
+        let a = s.allocate(&ns, &[req(vec![])]);
+        let b = s.allocate(&ns, &[req(vec![])]);
+        assert_eq!(a[0].node, NodeId(0));
+        assert_eq!(b[0].node, NodeId(0), "cursor leaked across waves");
+    }
+
+    // ---- placement strategies ----
+
+    #[test]
+    fn round_robin_cursor_persists_across_waves() {
+        let mut s = Scheduler::new();
+        s.placement = PlacementStrategy::RoundRobin;
+        let ns = nodes(3, 4);
+        let picks: Vec<NodeId> = (0..4)
+            .map(|_| s.allocate(&ns, &[req(vec![])])[0].node)
+            .collect();
+        let expect: Vec<NodeId> =
+            [0, 1, 2, 0].iter().map(|&i| NodeId(i)).collect();
+        assert_eq!(picks, expect);
+    }
+
+    #[test]
+    fn random_is_seed_deterministic_and_seed_sensitive() {
+        let run = |seed| {
+            let mut s = Scheduler::new();
+            s.placement = PlacementStrategy::Random { seed };
+            let ns = nodes(8, 4);
+            let reqs: Vec<_> = (0..16).map(|_| req(vec![])).collect();
+            s.allocate(&ns, &reqs)
+                .iter()
+                .map(|a| a.node)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7), "same seed, same placements");
+        assert_ne!(run(7), run(8), "different seeds should diverge");
+    }
+
+    #[test]
+    fn random_classifies_lucky_hits_as_local() {
+        // Hints never steer Random, but a lucky landing still counts
+        // as node-local so locality_ratio reads as the luck baseline.
+        let mut s = Scheduler::new();
+        s.placement = PlacementStrategy::Random { seed: 3 };
+        let all: Vec<NodeId> = (0..2).map(NodeId).collect();
+        s.allocate(&nodes(2, 4), &[req(all.clone()), req(all)]);
+        assert_eq!(s.node_local, 2, "every node is a hint holder");
+    }
+
+    #[test]
+    fn strict_affinity_queues_instead_of_spilling() {
+        // HdfsLocal/CacheAffinity: a hinted request whose holders are
+        // full queues on the first holder — never spills off-node.
+        for strat in
+            [PlacementStrategy::HdfsLocal, PlacementStrategy::CacheAffinity]
+        {
+            let mut s = Scheduler::new();
+            s.placement = strat;
+            let ns = nodes(3, 1);
+            let reqs = vec![req(vec![NodeId(1)]), req(vec![NodeId(1)])];
+            let allocs = s.allocate(&ns, &reqs);
+            assert_eq!(allocs[0].locality, LocalityLevel::NodeLocal);
+            assert_eq!(allocs[1].locality, LocalityLevel::Queued);
+            assert_eq!(allocs[1].node, NodeId(1), "queued on the holder");
+            assert_eq!(s.off_node, 0, "{}: spilled", strat.name());
+            // Unhinted requests still spill like FairOrder.
+            let a = s.allocate(&ns, &[req(vec![])]);
+            assert_eq!(a[0].locality, LocalityLevel::OffNode);
+        }
+    }
+
+    #[test]
+    fn straggler_aware_avoids_slow_nodes() {
+        let mut s = Scheduler::new();
+        s.placement = PlacementStrategy::StragglerAware;
+        s.node_speeds = vec![0.25, 1.0, 0.5];
+        // Unhinted: fastest node (1) first, then 2, then the straggler.
+        let ns = nodes(3, 1);
+        let allocs =
+            s.allocate(&ns, &[req(vec![]), req(vec![]), req(vec![])]);
+        let picks: Vec<NodeId> = allocs.iter().map(|a| a.node).collect();
+        let expect: Vec<NodeId> =
+            [1, 2, 0].iter().map(|&i| NodeId(i)).collect();
+        assert_eq!(picks, expect);
+        // A hint on a straggler is anti-affined away (off-node, fast)…
+        let a = s.allocate(&ns, &[req(vec![NodeId(0)])]);
+        assert_eq!(a[0].node, NodeId(1));
+        assert_eq!(a[0].locality, LocalityLevel::OffNode);
+        // …but a full-speed hint holder is honored.
+        let a = s.allocate(&ns, &[req(vec![NodeId(1)])]);
+        assert_eq!(a[0].node, NodeId(1));
+        assert_eq!(a[0].locality, LocalityLevel::NodeLocal);
+    }
+
+    #[test]
+    fn strategies_never_overcommit() {
+        for strat in [
+            PlacementStrategy::FairOrder,
+            PlacementStrategy::Random { seed: 11 },
+            PlacementStrategy::RoundRobin,
+            PlacementStrategy::HdfsLocal,
+            PlacementStrategy::CacheAffinity,
+            PlacementStrategy::StragglerAware,
+        ] {
+            let mut s = Scheduler::new();
+            s.placement = strat;
+            s.node_speeds = vec![1.0, 0.5, 1.0];
+            let ns = nodes(3, 2);
+            let reqs: Vec<_> =
+                (0..20).map(|i| req(vec![NodeId(i % 3)])).collect();
+            let allocs = s.allocate(&ns, &reqs);
+            let mut used: HashMap<NodeId, u32> = HashMap::new();
+            for a in &allocs {
+                if a.locality != LocalityLevel::Queued {
+                    *used.entry(a.node).or_default() += 1;
+                }
+            }
+            for (_, u) in used {
+                assert!(u <= 2, "{}: overcommitted {u}", strat.name());
+            }
+        }
     }
 }

@@ -1,0 +1,231 @@
+//! Pluggable-placement acceptance pins: locality- and cache-affinity
+//! scheduling, end to end.
+//!
+//! * `HdfsLocal` lands every map on a node holding its split's live
+//!   replica when replication covers the cluster — byte-weighted
+//!   `locality_ratio == 1.0` — and degrades cleanly (job ok, bytes
+//!   pinned, ratio < 1.0) when a DataNode is killed out from under it.
+//! * `CacheAffinity` routes stage k+1 maps to the IGFS owners of
+//!   stage k's handoff keys (stage-2 `locality_ratio == 1.0`,
+//!   `affinity_hits` covers every hinted map), and under a cache-node
+//!   blackout (PR 6) falls back down the tiers without moving a byte.
+//! * Every strategy reproduces the FairOrder outputs bit-for-bit —
+//!   placement moves tasks between nodes, never bytes.
+
+use marvel::coordinator::ClusterSpec;
+use marvel::mapreduce::{
+    output_key, run_job, stage_named_input, Cluster, JobPipeline,
+    JobResult, PlacementStrategy, StoreKind, SystemConfig,
+};
+use marvel::net::{NetFaultPlan, NodeId};
+use marvel::runtime::RtEngine;
+use marvel::util::bytes::MIB;
+use marvel::workloads::{PageRank, WordCount};
+
+const SEED: u64 = 17;
+const INPUT: u64 = 4 * MIB; // 16 splits at 256 KiB blocks
+const NODES: usize = 4;
+const SLOTS: usize = 8;
+
+fn base_cfg(strategy: PlacementStrategy) -> SystemConfig {
+    let mut c = SystemConfig::marvel_igfs();
+    c.placement = strategy;
+    c
+}
+
+fn deploy(cfg: &SystemConfig) -> Cluster {
+    let mut cluster = ClusterSpec {
+        nodes: NODES,
+        slots_per_node: SLOTS,
+        ..Default::default()
+    }
+    .deploy(cfg);
+    cluster.stores.hdfs.block_size = 256 * 1024;
+    cluster
+}
+
+/// Reducer outputs through the handoff chain: IGFS tiers, then HDFS.
+fn outputs(
+    cluster: &mut Cluster,
+    job: &str,
+    n: usize,
+) -> Vec<Option<Vec<u8>>> {
+    (0..n)
+        .map(|j| {
+            let key = output_key(job, j);
+            if let Some((p, _)) =
+                cluster.stores.igfs.get(&cluster.topo, NodeId(0), &key, 0)
+            {
+                return p.gather();
+            }
+            cluster
+                .stores
+                .hdfs
+                .read(&cluster.topo, NodeId(0), &key, 0)
+                .ok()
+                .and_then(|(p, _, _, _)| p.gather())
+        })
+        .collect()
+}
+
+/// One wordcount run under `cfg`; returns the result and output bytes.
+fn run_wc(cfg: &SystemConfig) -> (JobResult, Vec<Option<Vec<u8>>>) {
+    let mut cluster = deploy(cfg);
+    let mut rt = RtEngine::load(None).unwrap();
+    let wc = WordCount::new(2000, 1.07, &rt);
+    let input =
+        stage_named_input(&mut cluster, cfg, &wc, INPUT, SEED, "pl/in")
+            .unwrap();
+    let r = run_job(&mut cluster, cfg, &wc, &input, &mut rt, SEED);
+    assert!(r.ok(), "job failed: {:?}", r.failed);
+    let outs = outputs(&mut cluster, &r.job, r.reduce.tasks);
+    (r, outs)
+}
+
+#[test]
+fn hdfs_local_hits_full_locality_and_every_strategy_pins_bytes() {
+    let (r0, o0) = run_wc(&base_cfg(PlacementStrategy::FairOrder));
+    assert!(o0.iter().any(|o| o.as_ref().is_some_and(|b| !b.is_empty())));
+
+    // Every replica is somewhere, and HdfsLocal refuses to run a map
+    // off its split's replica set: all input bytes read node-local.
+    let (rl, ol) = run_wc(&base_cfg(PlacementStrategy::HdfsLocal));
+    assert_eq!(ol, o0, "HdfsLocal moved bytes");
+    assert_eq!(
+        rl.locality_ratio, 1.0,
+        "replicas cover all splits => every map reads local, got {}",
+        rl.locality_ratio
+    );
+    assert_eq!(
+        rl.affinity_hits,
+        rl.map.tasks as u64,
+        "every map is hinted with its replica set and must land on it"
+    );
+
+    // The full strategy sweep: outputs are placement-invariant.
+    for s in [
+        PlacementStrategy::Random { seed: 7 },
+        PlacementStrategy::RoundRobin,
+        PlacementStrategy::CacheAffinity,
+        PlacementStrategy::StragglerAware,
+    ] {
+        let (r, o) = run_wc(&base_cfg(s));
+        assert_eq!(o, o0, "{} moved bytes", s.name());
+        assert_eq!(r.output_bytes, r0.output_bytes, "{}", s.name());
+        assert_eq!(
+            r.intermediate_bytes, r0.intermediate_bytes,
+            "{}",
+            s.name()
+        );
+    }
+}
+
+#[test]
+fn hdfs_local_degrades_cleanly_when_a_datanode_fails() {
+    let (_, o0) = run_wc(&base_cfg(PlacementStrategy::FairOrder));
+
+    // Two replicas per block, then kill DataNode 1 at plan time:
+    // blocks whose primary lived there still place on the hint (the
+    // compute node is alive — only its DataNode is gone), so their
+    // reads fall back to the surviving replica remotely.
+    let mut cfg = base_cfg(PlacementStrategy::HdfsLocal);
+    cfg.replication = 2;
+    cfg.failures.lose_datanodes = vec![1];
+    let (r, o) = run_wc(&cfg);
+    assert_eq!(o, o0, "a dead DataNode must never move bytes");
+    assert!(
+        r.locality_ratio < 1.0,
+        "reads over the dead replica must go remote, got ratio {}",
+        r.locality_ratio
+    );
+    assert!(
+        r.locality_ratio > 0.0,
+        "surviving primaries still serve their maps locally"
+    );
+
+    // Same failure without the strategy: bytes still pinned.
+    let mut fair = base_cfg(PlacementStrategy::FairOrder);
+    fair.replication = 2;
+    fair.failures.lose_datanodes = vec![1];
+    let (_, of) = run_wc(&fair);
+    assert_eq!(of, o0);
+}
+
+/// Two-stage pipeline (wordcount seeding PageRank) with the handoff
+/// riding the IGFS DRAM/PMEM tiers; returns the per-stage results and
+/// the final outputs.
+fn run_pipe(
+    cfg: &SystemConfig,
+) -> (Vec<JobResult>, Vec<Option<Vec<u8>>>) {
+    let mut stage_cfg = cfg.clone();
+    stage_cfg.output_store = StoreKind::Igfs;
+    let mut cluster = deploy(cfg);
+    let mut rt = RtEngine::load(None).unwrap();
+    let wc = WordCount::new(2000, 1.07, &rt);
+    let pr = PageRank::new();
+    let input = stage_named_input(
+        &mut cluster, cfg, &wc, INPUT, SEED, "pipe/in",
+    )
+    .unwrap();
+    let pipe = JobPipeline::new("pipe")
+        .stage(&wc, stage_cfg.clone())
+        .stage(&pr, stage_cfg.clone());
+    let res = pipe.run(&mut cluster, &mut rt, SEED, &input);
+    assert!(res.ok(), "pipeline failed: {:?}", res.failed);
+    let last = res.stages.last().unwrap();
+    let outs = outputs(&mut cluster, &last.job, last.reduce.tasks);
+    (res.stages, outs)
+}
+
+#[test]
+fn cache_affinity_routes_stage2_maps_to_handoff_owners() {
+    let (fair, o0) = run_pipe(&base_cfg(PlacementStrategy::FairOrder));
+    let (aff, oa) = run_pipe(&base_cfg(PlacementStrategy::CacheAffinity));
+    assert_eq!(oa, o0, "CacheAffinity moved bytes");
+
+    // Stage 2's splits are stage 1's IGFS-resident outputs; affinity
+    // placement lands every hinted map on its key's owner, so every
+    // handoff byte is read from local DRAM/PMEM.
+    let s2 = &aff[1];
+    assert_eq!(
+        s2.locality_ratio, 1.0,
+        "stage-2 maps must read their handoff keys on the owner, got {}",
+        s2.locality_ratio
+    );
+    assert!(
+        s2.affinity_hits >= s2.map.tasks as u64,
+        "all {} hinted stage-2 maps must hit their owner (got {} hits)",
+        s2.map.tasks,
+        s2.affinity_hits
+    );
+    // The routing is real: affinity placement never hits fewer hinted
+    // nodes than fair-share order does on the same stage.
+    assert!(
+        s2.affinity_hits >= fair[1].affinity_hits,
+        "{} < {}",
+        s2.affinity_hits,
+        fair[1].affinity_hits
+    );
+}
+
+#[test]
+fn cache_affinity_falls_back_off_node_under_cache_blackout() {
+    let (_, o0) = run_pipe(&base_cfg(PlacementStrategy::CacheAffinity));
+
+    // Black out cache node 1 (PR 6): its DRAM/PMEM handoff copies are
+    // lost between phases and gathers degrade down the tiers to the
+    // HDFS write-through copies. Placement hints may still point at
+    // the dead owner — the read path, not the scheduler, degrades.
+    let mut cfg = base_cfg(PlacementStrategy::CacheAffinity);
+    cfg.netfaults = NetFaultPlan {
+        degraded_tiers: true,
+        lose_cachenodes: vec![1],
+        ..NetFaultPlan::disabled()
+    };
+    let (stages, o) = run_pipe(&cfg);
+    assert_eq!(o, o0, "a cache blackout must never move bytes");
+    assert!(
+        stages.iter().any(|s| s.degraded_reads > 0),
+        "node 1 owned handoff keys; some reads must degrade"
+    );
+}

@@ -444,6 +444,160 @@ fn prop_degraded_mode_never_changes_output_bytes() {
 }
 
 #[test]
+fn prop_placement_never_changes_output_bytes() {
+    // Random placement strategy × straggler × netfault × failure seeds
+    // × workers ∈ {1,4,8}, in one generator: placement only moves
+    // tasks between nodes — flow endpoints, tier hits, and locality
+    // counters follow, but output bytes never move. Pins the ISSUE's
+    // hard determinism contract: byte-identical under ANY strategy at
+    // any worker count, composing with every armed fault plane.
+    use marvel::coordinator::ClusterSpec;
+    use marvel::mapreduce::{
+        output_key, run_job, stage_named_input, Cluster, JobServer,
+        PlacementStrategy, SystemConfig,
+    };
+    use marvel::net::{NetFaultPlan, StragglerProfile};
+    use marvel::runtime::RtEngine;
+    use marvel::workloads::WordCount;
+
+    fn deploy(cfg: &SystemConfig) -> Cluster {
+        let mut cluster = ClusterSpec {
+            nodes: 4,
+            slots_per_node: 8,
+            ..Default::default()
+        }
+        .deploy(cfg);
+        cluster.stores.hdfs.block_size = 256 * 1024;
+        cluster
+    }
+
+    fn outputs(
+        cluster: &mut Cluster,
+        job: &str,
+        n: usize,
+    ) -> Vec<Option<Vec<u8>>> {
+        (0..n)
+            .map(|j| {
+                cluster
+                    .stores
+                    .igfs
+                    .get(&cluster.topo, NodeId(0), &output_key(job, j), 0)
+                    .and_then(|(p, _)| p.gather())
+            })
+            .collect()
+    }
+
+    check("placement-bytes", 5, |g| {
+        let pseed = g.rng.next_u64();
+        let sseed = g.rng.next_u64();
+        let nseed = g.rng.next_u64();
+        let dseed = g.rng.next_u64();
+        let workers = *g.pick(&[1usize, 4, 8]);
+        let strategy = *g.pick(&[
+            PlacementStrategy::FairOrder,
+            PlacementStrategy::Random { seed: pseed },
+            PlacementStrategy::RoundRobin,
+            PlacementStrategy::HdfsLocal,
+            PlacementStrategy::CacheAffinity,
+            PlacementStrategy::StragglerAware,
+        ]);
+        let input = 4 * 1024 * 1024u64; // 16 splits at 256 KiB blocks
+        let mut rt = RtEngine::load(None)?;
+        let wc = WordCount::new(1500, 1.07, &rt);
+
+        let arm = |s: PlacementStrategy, faults: bool, w: usize| {
+            let mut c = SystemConfig::marvel_igfs();
+            c.placement = s;
+            c.map_workers = w;
+            c.reduce_workers = w;
+            if faults {
+                c.stragglers = StragglerProfile {
+                    seed: sseed,
+                    prob: 0.5,
+                    slowdown: 4.0,
+                };
+                c.speculation.enabled = true;
+                c.netfaults = NetFaultPlan {
+                    seed: nseed,
+                    prob: 0.5,
+                    slowdown: 8.0,
+                    flow_timeout: SimNs::from_millis(250),
+                    degraded_tiers: true,
+                    lose_cachenodes: vec![],
+                };
+                c.failures.crash_prob = 0.4;
+                c.failures.max_failures_per_task = 2;
+                c.failures.seed = sseed ^ 0xACE5;
+                c.recovery.max_attempts = 3;
+                c.recovery.interval_bytes = 64 * 1024;
+            }
+            c
+        };
+
+        let solo = |cfg: &SystemConfig, rt: &mut RtEngine| {
+            let mut cluster = deploy(cfg);
+            let input_path = stage_named_input(
+                &mut cluster, cfg, &wc, input, dseed, "pl/in",
+            )?;
+            let r = run_job(&mut cluster, cfg, &wc, &input_path, rt, dseed);
+            if let Some(e) = &r.failed {
+                return Err(format!("job failed: {e}"));
+            }
+            Ok((outputs(&mut cluster, &r.job, r.reduce.tasks), r))
+        };
+
+        // FairOrder, single worker, no faults: the golden bytes.
+        let (o0, r0) =
+            solo(&arm(PlacementStrategy::FairOrder, false, 1), &mut rt)?;
+        // Random strategy at a random worker count with stragglers,
+        // netfaults, speculation, AND crash recovery all armed.
+        let (os, rs) = solo(&arm(strategy, true, workers), &mut rt)?;
+        prop_assert!(
+            os == o0,
+            "{} changed bytes (pseed={pseed:#x} sseed={sseed:#x} \
+             nseed={nseed:#x} workers={workers})",
+            strategy.name()
+        );
+        prop_assert!(rs.output_bytes == r0.output_bytes);
+        prop_assert!(rs.intermediate_bytes == r0.intermediate_bytes);
+        prop_assert!(
+            rs.locality_ratio >= 0.0 && rs.locality_ratio <= 1.0,
+            "locality_ratio out of range: {}",
+            rs.locality_ratio
+        );
+
+        // Co-run leg: two tenants under the drawn strategy still each
+        // reproduce the solo golden bytes through the shared scheduler.
+        let base = arm(strategy, true, workers);
+        let mut cluster = deploy(&base);
+        let in_a = stage_named_input(
+            &mut cluster, &base, &wc, input, dseed, "a/in",
+        )?;
+        let in_b = stage_named_input(
+            &mut cluster, &base, &wc, input, dseed, "b/in",
+        )?;
+        let res = JobServer::new()
+            .tenant("a", 3)
+            .tenant("b", 1)
+            .job("a", &wc, base.clone(), &in_a, dseed)
+            .job("b", &wc, base.clone(), &in_b, dseed)
+            .run(&mut cluster, &mut rt);
+        prop_assert!(res.ok(), "co-run failed: {:?}", res.failed);
+        for run in &res.jobs {
+            let jr = run.final_stage().ok_or("no stage")?;
+            let outs = outputs(&mut cluster, &jr.job, jr.reduce.tasks);
+            prop_assert!(
+                outs == o0,
+                "tenant {} diverged under {} (pseed={pseed:#x})",
+                run.tenant,
+                strategy.name()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_shuffle_conservation_real_jobs() {
     // Σ map outputs == Σ reduce inputs for real runs with random
     // sizes/vocab — the shuffle loses and invents nothing.
