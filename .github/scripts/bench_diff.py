@@ -10,10 +10,23 @@ import sys
 
 THRESHOLD = 0.15  # 15% regression tolerance — bench runners are noisy
 
-# Metrics where bigger is better ("*_per_s", "*_speedup"); everything
-# else (latencies, "*_ns") is smaller-is-better.
+# Metrics where bigger is better ("*_per_s", "*_speedup") — the
+# events/sec engine lane and the data-plane rates; everything else
+# (latencies, "*_ns") is smaller-is-better.
 def bigger_is_better(name: str) -> bool:
     return name.endswith("_per_s") or name.endswith("_speedup")
+
+
+# Run-shape descriptors (task counts, worker counts) recorded for
+# context: diffed for visibility but never flagged as regressions.
+def is_config(name: str) -> bool:
+    return name.endswith("_tasks") or name.endswith("_workers")
+
+
+def direction(name: str) -> str:
+    if is_config(name):
+        return "·"
+    return "↑" if bigger_is_better(name) else "↓"
 
 
 def main() -> int:
@@ -24,18 +37,21 @@ def main() -> int:
         cur = json.load(f)
 
     regressed = []
-    print(f"{'metric':<40} {'baseline':>14} {'current':>14} {'delta':>9}")
+    print(f"{'metric':<40} {'dir':>3} {'baseline':>14} {'current':>14}"
+          f" {'delta':>9}")
     for name, b in sorted(base.get("metrics", {}).items()):
         c = cur.get("metrics", {}).get(name)
         if c is None or not b:
             continue
         delta = (c - b) / abs(b)
         mark = ""
-        bad = -delta if bigger_is_better(name) else delta
-        if bad > THRESHOLD:
-            mark = "  << REGRESSED"
-            regressed.append(name)
-        print(f"{name:<40} {b:>14.2f} {c:>14.2f} {delta:>8.1%}{mark}")
+        if not is_config(name):
+            bad = -delta if bigger_is_better(name) else delta
+            if bad > THRESHOLD:
+                mark = "  << REGRESSED"
+                regressed.append(name)
+        print(f"{name:<40} {direction(name):>3} {b:>14.2f} {c:>14.2f}"
+              f" {delta:>8.1%}{mark}")
 
     print()
     print(f"{'bench (mean ns)':<55} {'baseline':>12} {'current':>12}")

@@ -1,0 +1,212 @@
+//! DES engine throughput (§Perf, engine-side lane): events/second on a
+//! synthetic multi-tenant job — a million tasks by default — with
+//! everything the serving stack throws at the hot path at once: slot
+//! pools under weighted-fair contention, two-hop flows over a shared
+//! fabric, per-wave barriers, and speculative Cancel races. A second
+//! lane replays a scaled-down copy of the same job through the retained
+//! naive reference core (binary-heap timers + full flow re-rates) to
+//! report the wheel/arena speedup, and a third stresses incremental
+//! flow re-rating with staggered churn on a hub link.
+//!
+//! Emits `BENCH_engine_throughput.json` (read by PERF.md's trajectory;
+//! `engine_events_per_s` and `*_speedup` are higher-is-better in
+//! bench_diff). `MARVEL_ENGINE_TASKS` overrides the task count.
+
+use std::path::Path;
+
+use marvel::sim::{Engine, SimNs, Stage};
+use marvel::util::bench::{write_report, Bench, BenchResult};
+use marvel::util::rng::Rng;
+
+const NODES: usize = 32;
+const SLOTS_PER_NODE: usize = 8;
+const TENANTS: u32 = 4;
+const WAVE: usize = 4096;
+const SPEC_EVERY: usize = 64;
+
+/// Build the synthetic job and return `(engine, ops_built)`. `ops_built`
+/// counts compiled stage ops — the event-throughput denominator (a few
+/// speculation losers skip their tails; the undercount is < 2%).
+fn build_job(n_tasks: usize, reference_core: bool) -> (Engine, u64) {
+    let mut e = Engine::new();
+    if reference_core {
+        e.use_reference_core();
+    }
+    for c in 0..TENANTS {
+        e.set_class_weight(c, (c + 1) as u64);
+    }
+    let nics: Vec<_> = (0..NODES)
+        .map(|i| e.add_resource(&format!("nic{i}"), 1e9))
+        .collect();
+    let pools: Vec<_> =
+        (0..NODES).map(|_| e.add_pool(SLOTS_PER_NODE)).collect();
+    let n_waves = (n_tasks + WAVE - 1) / WAVE;
+    let bars: Vec<_> = (0..n_waves)
+        .map(|w| {
+            let in_wave = WAVE.min(n_tasks - w * WAVE);
+            e.add_barrier(in_wave)
+        })
+        .collect();
+    let mut rng = Rng::new(0xE49E);
+    let mut ops = 0u64;
+    for i in 0..n_tasks {
+        let wave = i / WAVE;
+        let class = (i as u32) % TENANTS;
+        let src = rng.below(NODES as u64) as usize;
+        let dst = (src + 1 + rng.below((NODES - 1) as u64) as usize) % NODES;
+        let mut stages = Vec::with_capacity(7);
+        if wave > 0 {
+            stages.push(Stage::Await(bars[wave - 1]));
+        }
+        stages.push(Stage::Acquire(pools[src]));
+        stages.push(Stage::Delay(SimNs::from_micros(rng.range(50, 5000))));
+        stages.push(Stage::Flow {
+            bytes: 1e4 + rng.below(1_000_000) as f64,
+            path: vec![nics[src], nics[dst]],
+            tag: class,
+            // A generous deadline on some flows keeps the deadline
+            // scan hot without ever firing it.
+            timeout: if i % 97 == 0 {
+                Some(SimNs::from_secs_f64(3600.0))
+            } else {
+                None
+            },
+        });
+        stages.push(Stage::Release(pools[src]));
+        if i % SPEC_EVERY == 0 {
+            // Speculative race: the original's tail is appended after
+            // the backup exists (the non-contiguous arena path), each
+            // racer cancels the other, the winner arrives.
+            ops += stages.len() as u64;
+            let orig =
+                e.spawn_as(&format!("t{i:07}"), class, stages.clone());
+            let mut bak = stages;
+            // The backup skips the flow: a short straggler-dodge copy.
+            bak.truncate(if wave > 0 { 2 } else { 1 });
+            bak.push(Stage::Delay(SimNs::from_micros(rng.range(10, 500))));
+            bak.push(Stage::Release(pools[src]));
+            bak.push(Stage::Cancel(orig));
+            bak.push(Stage::Arrive(bars[wave]));
+            ops += bak.len() as u64;
+            let bak_id = e.spawn_as(&format!("t{i:07}/bak"), class, bak);
+            e.append_stages(
+                orig,
+                vec![Stage::Cancel(bak_id), Stage::Arrive(bars[wave])],
+            );
+            ops += 2;
+        } else {
+            stages.push(Stage::Arrive(bars[wave]));
+            ops += stages.len() as u64;
+            e.spawn_as(&format!("t{i:07}"), class, stages);
+        }
+    }
+    (e, ops)
+}
+
+fn main() {
+    let n_tasks: usize = std::env::var("MARVEL_ENGINE_TASKS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000_000);
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut metrics: Vec<(&str, f64)> = Vec::new();
+
+    // -- lane 1: the full job on the production core (timing wheel +
+    // arenas + incremental re-rate).
+    let bench = Bench::new(1, 3);
+    let (_, ops) = build_job(1, false); // warm nothing; just shape check
+    assert!(ops > 0);
+    let mut ends = Vec::new();
+    let label = format!("engine: {n_tasks} tasks, flows+barriers+spec");
+    let mut total_ops = 0u64;
+    let r_big = bench.run(&label, || {
+        let (mut e, ops) = build_job(n_tasks, false);
+        total_ops = ops;
+        let end = e.run().unwrap();
+        ends.push(end);
+        end
+    });
+    assert!(
+        ends.windows(2).all(|w| w[0] == w[1]),
+        "engine end time must be identical across runs"
+    );
+    println!("{}", r_big.summary());
+    let ev_s = r_big.throughput(total_ops as f64);
+    println!(
+        "  {total_ops} events/iter → {:.2} M events/s (virtual end {})",
+        ev_s / 1e6,
+        ends[0],
+    );
+    results.push(r_big);
+    metrics.push(("engine_events_per_s", ev_s));
+    metrics.push(("engine_tasks", n_tasks as f64));
+
+    // -- lane 2: wheel/arena core vs the retained naive reference core
+    // on a scaled-down copy (the reference heap is the old hot path).
+    // Also a differential smoke check: both cores must agree on the
+    // virtual end time exactly.
+    let n_ref = (n_tasks / 10).clamp(1, 100_000);
+    let bench_ref = Bench::new(1, 3);
+    let r_wheel = bench_ref.run(&format!("wheel core: {n_ref} tasks"), || {
+        let (mut e, _) = build_job(n_ref, false);
+        e.run().unwrap()
+    });
+    let r_refc =
+        bench_ref.run(&format!("reference core: {n_ref} tasks"), || {
+            let (mut e, _) = build_job(n_ref, true);
+            e.run().unwrap()
+        });
+    let (mut ew, _) = build_job(n_ref, false);
+    let (mut er, _) = build_job(n_ref, true);
+    assert_eq!(
+        ew.run().unwrap(),
+        er.run().unwrap(),
+        "wheel and reference cores diverged"
+    );
+    println!("{}", r_wheel.summary());
+    println!("{}", r_refc.summary());
+    let speedup = r_refc.mean_ns / r_wheel.mean_ns.max(1.0);
+    println!("  wheel vs reference: {speedup:.2}× (identical end times ✓)");
+    results.push(r_wheel);
+    results.push(r_refc);
+    metrics.push(("wheel_vs_reference_speedup", speedup));
+
+    // -- lane 3: flow-plane churn — staggered starts/completions on
+    // two-hop paths through one hub link, so every event re-rates a
+    // live component while most of the fabric stays untouched.
+    let bench_churn = Bench::new(1, 5);
+    let n_flows = 2048u64;
+    let r_churn = bench_churn.run("flow churn: 2048 staggered 2-hop", || {
+        let mut e = Engine::new();
+        let hub = e.add_resource("hub", 1e10);
+        let spokes: Vec<_> = (0..NODES)
+            .map(|i| e.add_resource(&format!("s{i}"), 1e9))
+            .collect();
+        for i in 0..n_flows {
+            let s = spokes[(i as usize) % NODES];
+            e.spawn(&format!("f{i:04}"), vec![
+                Stage::Delay(SimNs::from_micros(i * 37)),
+                Stage::Flow {
+                    bytes: 1e6,
+                    path: vec![s, hub],
+                    tag: 0,
+                    timeout: None,
+                },
+            ]);
+        }
+        e.run().unwrap()
+    });
+    println!("{}", r_churn.summary());
+    let churn_s = r_churn.throughput(n_flows as f64);
+    println!("  {:.1}k flow completions/s", churn_s / 1e3);
+    results.push(r_churn);
+    metrics.push(("flow_churn_per_s", churn_s));
+
+    let refs: Vec<&BenchResult> = results.iter().collect();
+    let out = Path::new("BENCH_engine_throughput.json");
+    match write_report(out, &refs, &metrics) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+    println!("engine_throughput done");
+}

@@ -27,15 +27,12 @@
 //! finisher wins, the loser is cancelled and its container returns
 //! warm. See `ARCHITECTURE.md` (Stragglers & speculation).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
-
 use crate::coordinator::recovery::{self, TaskRecovery};
 use crate::faas::{ActionSpec, Controller, Lambda, HADOOP_RUNTIME};
 use crate::igfs::{CacheStats, Tier};
 use crate::metrics::{tags, IoSummary};
 use crate::net::{NodeId, Topology, MAX_FLOW_RETRIES};
-use crate::runtime::{RtEngine, RtStats};
+use crate::runtime::RtEngine;
 use crate::sim::{BarrierId, Engine, PoolId, ProcId, SimNs, Stage};
 use crate::storage::Payload;
 use crate::yarn::{Allocation, ContainerRequest, ResourceManager};
@@ -718,13 +715,14 @@ fn effective_workers(requested: usize, n_items: usize) -> usize {
 }
 
 /// Run `f(i, rt)` for every `i in 0..n`, fanning out across `workers`
-/// host threads.
+/// host threads (via `util::pool::run_indexed`).
 ///
 /// DESIGN — determinism contract: output is byte-identical to the
 /// serial path at ANY worker count because (a) each item's work is
 /// derived independently (no shared mutable state between items), (b)
-/// each worker owns a private `RtEngine` oracle instance (same manifest
-/// constants; combine counts are integer-valued f32s, so oracle and
+/// each worker owns a private `RtEngine` oracle instance aliasing the
+/// job engine's frozen `Arc<Manifest>` (same constants, zero re-derive
+/// per spawn; combine counts are integer-valued f32s, so oracle and
 /// PJRT agree bitwise), and (c) results land in a per-item slot and are
 /// consumed in item order — scheduling order affects nothing but
 /// wall-clock. Only the data plane parallelizes; the DES time plane
@@ -736,37 +734,20 @@ where
     F: Fn(usize, &mut RtEngine) -> T + Sync,
 {
     if workers <= 1 || n <= 1 {
+        // Serial path runs on the job engine itself (PJRT when built).
         return (0..n).map(|i| f(i, rt)).collect();
     }
-    let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<T>>> =
-        (0..n).map(|_| Mutex::new(None)).collect();
-    let stats = Mutex::new(RtStats::default());
-    let manifest = rt.manifest.clone();
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| {
-                let mut wrt = RtEngine::oracle_from(manifest.clone());
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let out = f(i, &mut wrt);
-                    *slots[i].lock().unwrap() = Some(out);
-                }
-                let mut st = stats.lock().unwrap();
-                st.batches += wrt.stats.batches;
-                st.pjrt_ns += wrt.stats.pjrt_ns;
-                st.oracle_ns += wrt.stats.oracle_ns;
-            });
-        }
-    });
-    rt.absorb_stats(&stats.into_inner().unwrap());
-    slots
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("pool worker died"))
-        .collect()
+    let manifest = rt.manifest.clone(); // Arc bump, not a deep copy
+    let (out, worker_rts) = crate::util::pool::run_indexed(
+        workers,
+        n,
+        || RtEngine::oracle_shared(manifest.clone()),
+        f,
+    );
+    for wrt in &worker_rts {
+        rt.absorb_stats(&wrt.stats);
+    }
+    out
 }
 
 /// Run `map_split` over every fetched split across `workers` host

@@ -208,17 +208,21 @@ impl<'a> OpenLoopServer<'a> {
         let mut planned: Vec<PlannedArrival> =
             Vec::with_capacity(admitted_idx.len());
         let mut stage_ns = 0u32;
+        // Trailing-window cursor: arrivals are time-ordered and
+        // admissions are visited in arrival order, so the left edge of
+        // the autoscale window only ever moves right — one pass over
+        // the schedule instead of a rescan per admission.
+        let mut win_lo = 0usize;
         for &i in &admitted_idx {
             let a = &schedule[i];
             // Elastic warm pool: observed offered rate over the
             // trailing window (pure function of the schedule).
-            let in_window = schedule[..=i]
-                .iter()
-                .rev()
-                .take_while(|b| {
-                    b.at + self.cfg.autoscale.window >= a.at
-                })
-                .count();
+            while win_lo < i
+                && schedule[win_lo].at + self.cfg.autoscale.window < a.at
+            {
+                win_lo += 1;
+            }
+            let in_window = i - win_lo + 1;
             cluster.controller.autoscale(
                 HADOOP_RUNTIME,
                 in_window as f64 / window_s,

@@ -10,6 +10,7 @@
 
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::manifest::Manifest;
@@ -44,8 +45,13 @@ pub struct BatchScratch {
 }
 
 /// The runtime engine. One compiled executable per artifact.
+///
+/// The manifest is frozen behind an `Arc`: a job-level engine and every
+/// per-worker oracle spawned off it ([`RtEngine::oracle_shared`]) read
+/// the same interned constants instead of re-deriving a deep copy per
+/// worker per stage.
 pub struct RtEngine {
-    pub manifest: Manifest,
+    pub manifest: Arc<Manifest>,
     client: Option<xla::PjRtClient>,
     execs: HashMap<String, Exec>,
     pub stats: RtStats,
@@ -85,7 +91,7 @@ impl RtEngine {
             None
         };
         Ok(RtEngine {
-            manifest,
+            manifest: Arc::new(manifest),
             client,
             execs,
             stats: RtStats::default(),
@@ -93,12 +99,21 @@ impl RtEngine {
         })
     }
 
-    /// A fresh oracle-mode engine sharing `manifest`'s constants — the
-    /// per-worker compute instance of the parallel map data plane
-    /// (see DESIGN note in `mapreduce::driver`). Oracle and PJRT
-    /// produce identical integer-valued counts, so outputs stay
-    /// bit-identical to the serial path.
+    /// A fresh oracle-mode engine taking ownership of `manifest` —
+    /// kept for callers that build a manifest from scratch. Fan-out
+    /// paths should prefer [`RtEngine::oracle_shared`].
     pub fn oracle_from(manifest: Manifest) -> RtEngine {
+        RtEngine::oracle_shared(Arc::new(manifest))
+    }
+
+    /// A fresh oracle-mode engine sharing an already-interned manifest
+    /// — the per-worker compute instance of the parallel map/reduce
+    /// data planes (see DESIGN note in `mapreduce::driver`): `pool_run`
+    /// hands every worker the same frozen `Arc` instead of deep-copying
+    /// the artifact table per spawn. Oracle and PJRT produce identical
+    /// integer-valued counts, so outputs stay bit-identical to the
+    /// serial path.
+    pub fn oracle_shared(manifest: Arc<Manifest>) -> RtEngine {
         RtEngine {
             manifest,
             client: None,
@@ -364,6 +379,19 @@ mod tests {
         let (sums, cnts) = rt.agg_batch(&ids, &vals, &mask).unwrap();
         assert_eq!(sums.iter().sum::<f32>(), 2.0 * n as f32);
         assert_eq!(cnts.iter().sum::<f32>(), n as f32);
+    }
+
+    #[test]
+    fn oracle_shared_interns_the_manifest() {
+        // Worker oracles must alias the job engine's manifest, not
+        // deep-copy it: one frozen constant table per job.
+        let rt = RtEngine::load(None).unwrap();
+        let w1 = RtEngine::oracle_shared(rt.manifest.clone());
+        let w2 = RtEngine::oracle_shared(rt.manifest.clone());
+        assert!(Arc::ptr_eq(&rt.manifest, &w1.manifest));
+        assert!(Arc::ptr_eq(&w1.manifest, &w2.manifest));
+        assert_eq!(w1.batch_size(), rt.batch_size());
+        assert!(!w1.is_pjrt());
     }
 
     // PJRT-vs-oracle equivalence lives in rust/tests/pjrt_runtime.rs

@@ -44,6 +44,15 @@ impl SimNs {
         SimNs(self.0.saturating_sub(rhs.0))
     }
 
+    /// Clamping addition — the engine uses this wherever a duration
+    /// from outside (a flow deadline, a timer at `now + d`) could push
+    /// the axis past `u64::MAX` ns (~584 years of virtual time): the
+    /// sum pins to the end of the axis instead of wrapping back to 0,
+    /// which would fire the event in the past.
+    pub fn saturating_add(self, rhs: SimNs) -> SimNs {
+        SimNs(self.0.saturating_add(rhs.0))
+    }
+
     /// Stretch a duration by `1/speed` — the straggler node-speed
     /// scaling. The single definition shared by the engine's per-proc
     /// Delay stretching and the driver's overhead tallies, so reported
@@ -115,6 +124,41 @@ mod tests {
         let mut t = SimNs(1);
         t += SimNs(2);
         assert_eq!(t, SimNs(3));
+    }
+
+    #[test]
+    fn saturating_add_pins_to_the_end_of_the_axis() {
+        assert_eq!(SimNs(5).saturating_add(SimNs(7)), SimNs(12));
+        assert_eq!(
+            SimNs(u64::MAX - 1).saturating_add(SimNs(100)),
+            SimNs(u64::MAX),
+            "overflow clamps instead of wrapping into the past"
+        );
+        assert_eq!(
+            SimNs(u64::MAX).saturating_add(SimNs::ZERO),
+            SimNs(u64::MAX)
+        );
+    }
+
+    #[test]
+    fn float_conversions_saturate_at_the_axis_end() {
+        // Rust float→int `as` casts saturate, so absurd second counts
+        // (including infinity from a divide-by-tiny) pin to u64::MAX
+        // rather than producing small wrapped values.
+        assert_eq!(SimNs::from_secs_f64(f64::MAX), SimNs(u64::MAX));
+        assert_eq!(SimNs::from_secs_f64(f64::INFINITY), SimNs(u64::MAX));
+        assert_eq!(SimNs::from_secs_f64_ceil(f64::MAX), SimNs(u64::MAX));
+    }
+
+    #[test]
+    fn div_speed_overflow_edge_cases_stay_monotone() {
+        // A near-max duration stretched by a tiny speed saturates.
+        let huge = SimNs(u64::MAX / 2);
+        assert_eq!(huge.div_speed(1e-12), SimNs(u64::MAX));
+        // And a huge duration at exactly 1.0 stays bit-identical
+        // (identity path, no float round-trip).
+        assert_eq!(SimNs(u64::MAX).div_speed(1.0), SimNs(u64::MAX));
+        assert_eq!(SimNs(u64::MAX - 3).div_speed(1.0), SimNs(u64::MAX - 3));
     }
 
     #[test]

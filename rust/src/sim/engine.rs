@@ -7,6 +7,18 @@
 //! authors' physical testbed as the time axis (`ARCHITECTURE.md`,
 //! Layer 0 and the Two-plane execution model).
 //!
+//! **Hot-path layout** (ARCHITECTURE.md, Engine internals): timers live
+//! in a hierarchical timing wheel (`sim::wheel`) with the exact
+//! `(time, seq)` FIFO pop order of the old binary heap; stage programs
+//! are compiled once into a shared per-engine op arena (`Vec<Op>`
+//! slices — no per-proc `VecDeque<Stage>` clones, flow paths interned
+//! in the flow sim's path arena); proc labels are interned into one
+//! string arena with a lazily-merged sorted index so the
+//! `*_with_prefix` queries binary-search instead of scanning every
+//! proc and log line per finalized job. [`Engine::use_reference_core`]
+//! swaps the naive heap + full-re-rate cores back in for differential
+//! testing.
+//!
 //! Multi-tenancy: every proc carries a *class* (0 = unscoped; the
 //! `mapreduce::JobServer` assigns one class per tenant). Slot pools
 //! grant contended slots in weighted-fair order across classes
@@ -15,13 +27,14 @@
 //! interleave deterministically in proportion to their shares while an
 //! idle tenant's capacity backfills the busy ones.
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{HashMap, VecDeque};
+use std::sync::Mutex;
 
 use crate::util::fairq::FairQueue;
 
 use super::clock::SimNs;
-use super::flow::{FlowId, FlowSim, ResourceId};
+use super::flow::{FlowId, FlowSim, PathId, ResourceId};
+use super::wheel::TimerQueue;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 /// Index of a proc (simulated task) in the engine.
@@ -82,6 +95,29 @@ pub enum Stage {
     Cancel(ProcId),
 }
 
+/// A [`Stage`] compiled into the engine's shared op arena: `Copy`,
+/// message strings and flow paths replaced by arena ids. Spawning
+/// compiles a program once; procs execute `ops[prog.0..prog.1]` via a
+/// program counter instead of popping an owned stage deque.
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    Acquire(PoolId),
+    Release(PoolId),
+    Delay(SimNs),
+    Flow {
+        bytes: f64,
+        path: PathId,
+        tag: u32,
+        timeout: Option<SimNs>,
+    },
+    Arrive(BarrierId),
+    Await(BarrierId),
+    /// Index into the engine's message arena.
+    Crash(u32),
+    Fail(u32),
+    Cancel(ProcId),
+}
+
 #[derive(Clone, Debug, PartialEq)]
 /// Lifecycle state of a proc.
 pub enum ProcState {
@@ -117,11 +153,19 @@ impl FlowRetry {
 
 #[derive(Debug)]
 struct Proc {
-    stages: VecDeque<Stage>,
+    /// Ops injected at run time ahead of the compiled program — a
+    /// blocked `Acquire` re-queuing itself, a flow-retry replay
+    /// sequence. Almost always empty.
+    prelude: VecDeque<Op>,
+    /// Compiled program: `ops[prog.0..prog.1]` in the engine arena.
+    prog: (u32, u32),
+    /// Program counter within `prog`.
+    pc: u32,
     state: ProcState,
     started: SimNs,
     finished: SimNs,
-    label: String,
+    /// `(offset, len)` span into the engine's label arena.
+    label: (u32, u32),
     /// Fair-queueing class (tenant); 0 for unscoped procs.
     class: u32,
     /// Node speed factor (1.0 = healthy): every fixed-latency stage
@@ -136,6 +180,11 @@ struct Proc {
     held: Vec<PoolId>,
     /// Flow-deadline retry policy; None fails the proc on first timeout.
     retry: Option<FlowRetry>,
+    /// Per-proc tallies mirrored off `crash_log`/`timeout_log`, so the
+    /// prefix censuses sum counters over an index range instead of
+    /// re-scanning every log line.
+    crashes: u32,
+    timeouts: u32,
 }
 
 struct Pool {
@@ -170,15 +219,40 @@ pub struct CrashEvent {
     pub what: String,
 }
 
+/// Lazily maintained sorted view of the label arena: proc indices
+/// ordered by label bytes (ties by spawn order). Rebuilt by merging
+/// the newly spawned suffix, so a finalize after `k` fresh spawns
+/// costs `O(k log k + n)`, and each prefix query is a binary search.
+#[derive(Default)]
+struct LabelIndex {
+    /// `procs.len()` the index was built at (labels are append-only).
+    version: usize,
+    order: Vec<u32>,
+}
+
 /// The discrete-event engine: procs, pools, barriers, flows, timers.
 pub struct Engine {
     pub flows: FlowSim,
     procs: Vec<Proc>,
+    /// Shared compiled-stage arena — every spawned program is a slice.
+    ops: Vec<Op>,
+    /// Crash/Fail message arena (referenced by `Op::Crash`/`Op::Fail`).
+    msgs: Vec<String>,
+    /// Non-contiguous program segments appended after later spawns
+    /// (speculation race tails) — consulted when `pc` hits `prog.1`.
+    extra_segs: HashMap<usize, VecDeque<(u32, u32)>>,
+    /// Label arena: every proc label is a span into this one string.
+    label_data: String,
+    /// Sorted label view for the `*_with_prefix` queries. Interior
+    /// mutability (rebuild under `&self`) without giving up `Sync`.
+    label_index: Mutex<LabelIndex>,
     pools: Vec<Pool>,
     barriers: Vec<Barrier>,
     ready: VecDeque<ProcId>,
-    timers: BinaryHeap<Reverse<(SimNs, u64, ProcId)>>,
+    timers: TimerQueue<ProcId>,
     timer_seq: u64,
+    /// Scratch for draining due timers (reused across steps).
+    due: Vec<(SimNs, u64, ProcId)>,
     /// Active transfers: flow, owning proc, start instant, deadline.
     flow_owner: Vec<(FlowId, ProcId, SimNs, Option<SimNs>)>,
     now: SimNs,
@@ -203,11 +277,17 @@ impl Engine {
         Engine {
             flows: FlowSim::new(),
             procs: Vec::new(),
+            ops: Vec::new(),
+            msgs: Vec::new(),
+            extra_segs: HashMap::new(),
+            label_data: String::new(),
+            label_index: Mutex::new(LabelIndex::default()),
             pools: Vec::new(),
             barriers: Vec::new(),
             ready: VecDeque::new(),
-            timers: BinaryHeap::new(),
+            timers: TimerQueue::wheel(),
             timer_seq: 0,
+            due: Vec::new(),
             flow_owner: Vec::new(),
             now: SimNs::ZERO,
             flow_log: Vec::new(),
@@ -215,6 +295,17 @@ impl Engine {
             timeout_log: Vec::new(),
             class_weights: HashMap::new(),
         }
+    }
+
+    /// Swap in the naive reference cores — binary-heap timers and
+    /// full-recompute flow re-rating — retained for differential
+    /// testing (`rust/tests/engine_equiv.rs` replays randomized
+    /// programs through both and pins identical timestamps). Call
+    /// before spawning or running; queued wheel timers do not migrate.
+    pub fn use_reference_core(&mut self) {
+        debug_assert!(self.timers.len() == 0, "switch cores before running");
+        self.timers = TimerQueue::reference();
+        self.flows.set_full_rerate(true);
     }
 
     /// Arm a flow-deadline retry policy on `id`: up to `max` replays
@@ -268,6 +359,38 @@ impl Engine {
         BarrierId(self.barriers.len() - 1)
     }
 
+    /// Compile a stage program into the shared op arena, returning its
+    /// `[start, end)` span. Messages and flow paths are interned.
+    fn compile(&mut self, stages: Vec<Stage>) -> (u32, u32) {
+        let start = self.ops.len() as u32;
+        for s in stages {
+            let op = match s {
+                Stage::Acquire(p) => Op::Acquire(p),
+                Stage::Release(p) => Op::Release(p),
+                Stage::Delay(d) => Op::Delay(d),
+                Stage::Flow { bytes, path, tag, timeout } => Op::Flow {
+                    bytes,
+                    path: self.flows.intern_path(&path),
+                    tag,
+                    timeout,
+                },
+                Stage::Arrive(b) => Op::Arrive(b),
+                Stage::Await(b) => Op::Await(b),
+                Stage::Crash(m) => {
+                    self.msgs.push(m);
+                    Op::Crash(self.msgs.len() as u32 - 1)
+                }
+                Stage::Fail(m) => {
+                    self.msgs.push(m);
+                    Op::Fail(self.msgs.len() as u32 - 1)
+                }
+                Stage::Cancel(t) => Op::Cancel(t),
+            };
+            self.ops.push(op);
+        }
+        (start, self.ops.len() as u32)
+    }
+
     pub fn spawn(&mut self, label: &str, stages: Vec<Stage>) -> ProcId {
         self.spawn_as(label, 0, stages)
     }
@@ -297,18 +420,25 @@ impl Engine {
         stages: Vec<Stage>,
     ) -> ProcId {
         let speed = if speed.is_finite() && speed > 0.0 { speed } else { 1.0 };
+        let prog = self.compile(stages);
+        let at = self.label_data.len() as u32;
+        self.label_data.push_str(label);
         let id = ProcId(self.procs.len());
         self.procs.push(Proc {
-            stages: stages.into(),
+            prelude: VecDeque::new(),
+            prog,
+            pc: prog.0,
             state: ProcState::Ready,
             started: self.now,
             finished: SimNs::ZERO,
-            label: label.to_string(),
+            label: (at, label.len() as u32),
             class,
             speed,
             grant: None,
             held: Vec::new(),
             retry: None,
+            crashes: 0,
+            timeouts: 0,
         });
         self.ready.push_back(id);
         id
@@ -317,9 +447,20 @@ impl Engine {
     /// Append stages to an already-spawned proc. Plan-time composition
     /// only: the driver closes a speculative race by appending the
     /// original's `Cancel`-the-backup tail once the backup's [`ProcId`]
-    /// exists.
+    /// exists. When the proc's program still ends the arena (nothing
+    /// spawned in between) the span simply extends; otherwise the new
+    /// segment chains behind it.
     pub fn append_stages(&mut self, id: ProcId, extra: Vec<Stage>) {
-        self.procs[id.0].stages.extend(extra);
+        let seg = self.compile(extra);
+        if seg.0 == seg.1 {
+            return;
+        }
+        let p = &mut self.procs[id.0];
+        if p.prog.1 == seg.0 && !self.extra_segs.contains_key(&id.0) {
+            p.prog.1 = seg.1;
+        } else {
+            self.extra_segs.entry(id.0).or_default().push_back(seg);
+        }
     }
 
     pub fn state(&self, id: ProcId) -> &ProcState {
@@ -335,7 +476,8 @@ impl Engine {
     }
 
     pub fn label(&self, id: ProcId) -> &str {
-        &self.procs[id.0].label
+        let (at, len) = self.procs[id.0].label;
+        &self.label_data[at as usize..(at + len) as usize]
     }
 
     pub fn barrier_opened_at(&self, id: BarrierId) -> Option<SimNs> {
@@ -356,15 +498,69 @@ impl Engine {
         p.capacity.saturating_sub(p.in_use)
     }
 
-    /// First failure message among procs whose label starts with
-    /// `prefix` — job-scoped failure probe that avoids collecting and
-    /// cloning every failure on every finalized job of a co-run.
-    pub fn failure_with_prefix(&self, prefix: &str) -> Option<&str> {
-        self.procs.iter().find_map(|p| match &p.state {
-            ProcState::Failed(m) if p.label.starts_with(prefix) => {
-                Some(m.as_str())
+    /// Run `f` over the label-sorted proc indices whose label starts
+    /// with `prefix`, refreshing the index first if procs were spawned
+    /// since the last query. The closure returns owned data so no
+    /// borrow escapes the index lock.
+    fn with_label_range<R>(
+        &self,
+        prefix: &str,
+        f: impl FnOnce(&Engine, &[u32]) -> R,
+    ) -> R {
+        let mut idx = self.label_index.lock().unwrap();
+        if idx.version != self.procs.len() {
+            let by_label = |&i: &u32| self.label(ProcId(i as usize));
+            let mut fresh: Vec<u32> =
+                (idx.version as u32..self.procs.len() as u32).collect();
+            fresh.sort_unstable_by(|a, b| {
+                by_label(a).cmp(by_label(b)).then(a.cmp(b))
+            });
+            let old = std::mem::take(&mut idx.order);
+            let mut merged = Vec::with_capacity(old.len() + fresh.len());
+            let (mut i, mut j) = (0, 0);
+            while i < old.len() && j < fresh.len() {
+                let a = old[i];
+                let b = fresh[j];
+                if (by_label(&a), a) <= (by_label(&b), b) {
+                    merged.push(a);
+                    i += 1;
+                } else {
+                    merged.push(b);
+                    j += 1;
+                }
             }
-            _ => None,
+            merged.extend_from_slice(&old[i..]);
+            merged.extend_from_slice(&fresh[j..]);
+            idx.order = merged;
+            idx.version = self.procs.len();
+        }
+        let lo = idx
+            .order
+            .partition_point(|&i| self.label(ProcId(i as usize)) < prefix);
+        let hi = lo
+            + idx.order[lo..].partition_point(|&i| {
+                self.label(ProcId(i as usize)).starts_with(prefix)
+            });
+        f(self, &idx.order[lo..hi])
+    }
+
+    /// First failure message among procs whose label starts with
+    /// `prefix` — job-scoped failure probe. "First" is spawn order,
+    /// the same proc the old full scan would have found, so job error
+    /// messages are byte-stable across the index refactor.
+    pub fn failure_with_prefix(&self, prefix: &str) -> Option<&str> {
+        let first: Option<u32> = self.with_label_range(prefix, |e, range| {
+            range
+                .iter()
+                .copied()
+                .filter(|&i| {
+                    matches!(e.procs[i as usize].state, ProcState::Failed(_))
+                })
+                .min()
+        });
+        first.map(|i| match &self.procs[i as usize].state {
+            ProcState::Failed(m) => m.as_str(),
+            _ => unreachable!("filtered to failed procs"),
         })
     }
 
@@ -372,45 +568,87 @@ impl Engine {
     /// the job-scoped companion of [`Engine::failure_with_prefix`] for
     /// non-fatal [`Stage::Crash`] events.
     pub fn crashes_with_prefix(&self, prefix: &str) -> usize {
-        self.crash_log
-            .iter()
-            .filter(|c| c.proc_label.starts_with(prefix))
-            .count()
+        self.with_label_range(prefix, |e, range| {
+            range
+                .iter()
+                .map(|&i| e.procs[i as usize].crashes as usize)
+                .sum()
+        })
     }
 
     /// Flow-deadline expiries among procs whose label starts with
     /// `prefix` — the per-job census of transfers reaped by a timeout
     /// (each retried or, with the budget spent, failed).
     pub fn timeouts_with_prefix(&self, prefix: &str) -> usize {
-        self.timeout_log
-            .iter()
-            .filter(|c| c.proc_label.starts_with(prefix))
-            .count()
+        self.with_label_range(prefix, |e, range| {
+            range
+                .iter()
+                .map(|&i| e.procs[i as usize].timeouts as usize)
+                .sum()
+        })
     }
 
-    /// Ids of procs that ended in `Failed`.
-    pub fn failures(&self) -> Vec<(ProcId, String)> {
+    /// Ids of procs that ended in `Failed`, with messages borrowed
+    /// from the procs (no per-call clones).
+    pub fn failures(&self) -> Vec<(ProcId, &str)> {
         self.procs
             .iter()
             .enumerate()
             .filter_map(|(i, p)| match &p.state {
-                ProcState::Failed(m) => Some((ProcId(i), m.clone())),
+                ProcState::Failed(m) => Some((ProcId(i), m.as_str())),
                 _ => None,
             })
             .collect()
     }
 
     /// Labels of procs reaped by [`Stage::Cancel`] whose label starts
-    /// with `prefix` — the per-job speculation-loser census.
+    /// with `prefix` — the per-job speculation-loser census, in spawn
+    /// order.
     pub fn cancelled_with_prefix(&self, prefix: &str) -> Vec<&str> {
-        self.procs
-            .iter()
-            .filter(|p| {
-                p.state == ProcState::Cancelled
-                    && p.label.starts_with(prefix)
-            })
-            .map(|p| p.label.as_str())
+        let mut hits: Vec<u32> = self.with_label_range(prefix, |e, range| {
+            range
+                .iter()
+                .copied()
+                .filter(|&i| e.procs[i as usize].state == ProcState::Cancelled)
+                .collect()
+        });
+        hits.sort_unstable();
+        hits.into_iter()
+            .map(|i| self.label(ProcId(i as usize)))
             .collect()
+    }
+
+    /// Next op for `id`: injected prelude first, then the compiled
+    /// program, then any chained extra segments.
+    fn next_op(&mut self, id: ProcId) -> Option<Op> {
+        if let Some(op) = self.procs[id.0].prelude.pop_front() {
+            return Some(op);
+        }
+        loop {
+            let p = &mut self.procs[id.0];
+            if p.pc < p.prog.1 {
+                let op = self.ops[p.pc as usize];
+                p.pc += 1;
+                return Some(op);
+            }
+            let Some(q) = self.extra_segs.get_mut(&id.0) else {
+                return None;
+            };
+            match q.pop_front() {
+                Some(seg) => {
+                    if q.is_empty() {
+                        self.extra_segs.remove(&id.0);
+                    }
+                    let p = &mut self.procs[id.0];
+                    p.prog = seg;
+                    p.pc = seg.0;
+                }
+                None => {
+                    self.extra_segs.remove(&id.0);
+                    return None;
+                }
+            }
+        }
     }
 
     fn wake(&mut self, id: ProcId) {
@@ -468,32 +706,35 @@ impl Engine {
         ) {
             return;
         }
-        self.procs[id.0].stages.clear();
-        self.procs[id.0].state = ProcState::Cancelled;
-        self.procs[id.0].finished = self.now;
-        let held = std::mem::take(&mut self.procs[id.0].held);
-        let grant = self.procs[id.0].grant.take();
-        for p in held {
-            self.do_release(p);
+        let p = &mut self.procs[id.0];
+        p.prelude.clear();
+        p.pc = p.prog.1;
+        p.state = ProcState::Cancelled;
+        p.finished = self.now;
+        let held = std::mem::take(&mut p.held);
+        let grant = p.grant.take();
+        self.extra_segs.remove(&id.0);
+        for pool in held {
+            self.do_release(pool);
         }
-        if let Some(p) = grant {
-            self.do_release(p);
+        if let Some(pool) = grant {
+            self.do_release(pool);
         }
     }
 
     /// Execute stages of `id` until it blocks or finishes.
     fn step(&mut self, id: ProcId) {
         loop {
-            let stage = match self.procs[id.0].stages.pop_front() {
-                Some(s) => s,
+            let op = match self.next_op(id) {
+                Some(op) => op,
                 None => {
                     self.procs[id.0].state = ProcState::Finished;
                     self.procs[id.0].finished = self.now;
                     return;
                 }
             };
-            match stage {
-                Stage::Acquire(p) => {
+            match op {
+                Op::Acquire(p) => {
                     if self.procs[id.0].grant == Some(p) {
                         // A releaser handed this proc its slot directly
                         // (already counted in `in_use`).
@@ -518,21 +759,21 @@ impl Engine {
                             // Re-queue the acquire: consumed on wake via
                             // the grant handshake above.
                             self.procs[id.0]
-                                .stages
-                                .push_front(Stage::Acquire(p));
+                                .prelude
+                                .push_front(Op::Acquire(p));
                             self.procs[id.0].state = ProcState::Blocked;
                             return;
                         }
                     }
                 }
-                Stage::Release(p) => {
+                Op::Release(p) => {
                     let held = &mut self.procs[id.0].held;
                     if let Some(pos) = held.iter().rposition(|x| *x == p) {
                         held.swap_remove(pos);
                     }
                     self.do_release(p);
                 }
-                Stage::Delay(d) => {
+                Op::Delay(d) => {
                     // Straggler scaling: a 0.25-speed node takes 4× as
                     // long for every fixed-latency stage it executes.
                     // Flows are not scaled here — the topology already
@@ -540,21 +781,21 @@ impl Engine {
                     let d = d.div_speed(self.procs[id.0].speed);
                     self.timer_seq += 1;
                     self.timers
-                        .push(Reverse((self.now + d, self.timer_seq, id)));
+                        .push(self.now.saturating_add(d), self.timer_seq, id);
                     self.procs[id.0].state = ProcState::Blocked;
                     return;
                 }
-                Stage::Flow { bytes, path, tag, timeout } => {
-                    let fid = self.flows.start(bytes, path, tag);
+                Op::Flow { bytes, path, tag, timeout } => {
+                    let fid = self.flows.start_interned(bytes, path, tag);
                     // A fresh deadline per attempt; retries re-arm it.
-                    let deadline =
-                        timeout.filter(|t| *t > SimNs::ZERO)
-                            .map(|t| self.now + t);
+                    let deadline = timeout
+                        .filter(|t| *t > SimNs::ZERO)
+                        .map(|t| self.now.saturating_add(t));
                     self.flow_owner.push((fid, id, self.now, deadline));
                     self.procs[id.0].state = ProcState::Blocked;
                     return;
                 }
-                Stage::Arrive(b) => {
+                Op::Arrive(b) => {
                     let bar = &mut self.barriers[b.0];
                     bar.arrived += 1;
                     if bar.arrived >= bar.target && bar.opened_at.is_none() {
@@ -565,7 +806,7 @@ impl Engine {
                         }
                     }
                 }
-                Stage::Await(b) => {
+                Op::Await(b) => {
                     let bar = &mut self.barriers[b.0];
                     if bar.opened_at.is_none() {
                         bar.waiters.push(id);
@@ -573,19 +814,22 @@ impl Engine {
                         return;
                     }
                 }
-                Stage::Crash(what) => {
+                Op::Crash(m) => {
+                    let proc_label = self.label(id).to_string();
                     self.crash_log.push(CrashEvent {
                         at: self.now,
-                        proc_label: self.procs[id.0].label.clone(),
-                        what,
+                        proc_label,
+                        what: self.msgs[m as usize].clone(),
                     });
+                    self.procs[id.0].crashes += 1;
                 }
-                Stage::Fail(msg) => {
-                    self.procs[id.0].state = ProcState::Failed(msg);
+                Op::Fail(m) => {
+                    self.procs[id.0].state =
+                        ProcState::Failed(self.msgs[m as usize].clone());
                     self.procs[id.0].finished = self.now;
                     return;
                 }
-                Stage::Cancel(target) => {
+                Op::Cancel(target) => {
                     self.cancel(target);
                     if self.procs[id.0].state == ProcState::Cancelled {
                         // Degenerate self-cancel: nothing further runs.
@@ -614,7 +858,7 @@ impl Engine {
 
             // Next event: earliest of timer pop, flow completion (or
             // capacity-window edge), and flow deadline.
-            let t_timer = self.timers.peek().map(|Reverse((t, _, _))| *t);
+            let t_timer = self.timers.next_due();
             // Ceil to whole ns: guarantees the step is non-zero so a
             // sub-ns residue cannot spin the loop (flows overshoot by at
             // most one ns of progress, which `advance` treats as done).
@@ -637,8 +881,9 @@ impl Engine {
                     let stuck: Vec<&str> = self
                         .procs
                         .iter()
-                        .filter(|p| p.state == ProcState::Blocked)
-                        .map(|p| p.label.as_str())
+                        .enumerate()
+                        .filter(|(_, p)| p.state == ProcState::Blocked)
+                        .map(|(i, _)| self.label(ProcId(i)))
                         .collect();
                     return Err(format!(
                         "deadlock at {} — blocked procs: {stuck:?}",
@@ -668,14 +913,14 @@ impl Engine {
                 });
                 self.wake(owner);
             }
-            // Fire due timers.
-            while let Some(Reverse((t, _, id))) = self.timers.peek().copied() {
-                if t > self.now {
-                    break;
-                }
-                self.timers.pop();
+            // Fire due timers in (time, seq) order.
+            let mut due = std::mem::take(&mut self.due);
+            self.timers.pop_due(self.now, &mut due);
+            for &(_, _, id) in &due {
                 self.wake(id);
             }
+            due.clear();
+            self.due = due;
             self.expire_flow_deadlines();
         }
     }
@@ -701,7 +946,7 @@ impl Engine {
                 .position(|(f, _, _, _)| *f == fid)
                 .expect("expired flow without owner");
             self.flow_owner.swap_remove(pos);
-            let spec = self.flows.spec_of(fid);
+            let spec = self.flows.spec_ids(fid);
             self.flows.remove(fid);
             if self.procs[owner.0].state != ProcState::Blocked {
                 // Cancelled mid-flight: the reap already freed the
@@ -709,11 +954,13 @@ impl Engine {
                 continue;
             }
             let stalled = self.now.saturating_sub(started);
+            let proc_label = self.label(owner).to_string();
             self.timeout_log.push(CrashEvent {
                 at: self.now,
-                proc_label: self.procs[owner.0].label.clone(),
+                proc_label,
                 what: format!("flow stalled {stalled}, deadline hit"),
             });
+            self.procs[owner.0].timeouts += 1;
             let budget = self.procs[owner.0].retry.clone();
             match (budget, spec) {
                 (Some(r), Some((bytes, path, tag))) if r.used < r.max => {
@@ -727,8 +974,8 @@ impl Engine {
                     // through the weighted-fair queue.
                     let timeout = deadline.saturating_sub(started);
                     let slot = self.procs[owner.0].held.last().copied();
-                    let stages = &mut self.procs[owner.0].stages;
-                    stages.push_front(Stage::Flow {
+                    let prelude = &mut self.procs[owner.0].prelude;
+                    prelude.push_front(Op::Flow {
                         bytes,
                         path,
                         tag,
@@ -736,11 +983,11 @@ impl Engine {
                     });
                     match slot {
                         Some(p) => {
-                            stages.push_front(Stage::Acquire(p));
-                            stages.push_front(Stage::Delay(backoff));
-                            stages.push_front(Stage::Release(p));
+                            prelude.push_front(Op::Acquire(p));
+                            prelude.push_front(Op::Delay(backoff));
+                            prelude.push_front(Op::Release(p));
                         }
-                        None => stages.push_front(Stage::Delay(backoff)),
+                        None => prelude.push_front(Op::Delay(backoff)),
                     }
                     self.wake(owner);
                 }
@@ -878,6 +1125,7 @@ mod tests {
         assert!(matches!(e.state(f), ProcState::Failed(m) if m == "quota"));
         assert_eq!(*e.state(g), ProcState::Finished);
         assert_eq!(e.failures().len(), 1);
+        assert_eq!(e.failures()[0], (f, "quota"));
     }
 
     #[test]
@@ -1185,6 +1433,29 @@ mod tests {
     }
 
     #[test]
+    fn backoff_saturates_instead_of_overflowing() {
+        // A pathological base near u64::MAX must clamp, not wrap: the
+        // shift is capped at 20 doublings and the multiply saturates,
+        // so the result is always `cap`-bounded and finite.
+        let r = FlowRetry {
+            base: SimNs(u64::MAX / 2),
+            cap: SimNs(u64::MAX),
+            max: 64,
+            used: 0,
+        };
+        assert_eq!(r.backoff(1), SimNs(u64::MAX / 2));
+        assert_eq!(r.backoff(2), SimNs(u64::MAX), "saturated, not wrapped");
+        assert_eq!(r.backoff(u32::MAX), SimNs(u64::MAX), "shift capped");
+        let capped = FlowRetry {
+            base: SimNs(u64::MAX / 2),
+            cap: SimNs::from_secs_f64(30.0),
+            max: 64,
+            used: 0,
+        };
+        assert_eq!(capped.backoff(40), SimNs::from_secs_f64(30.0));
+    }
+
+    #[test]
     fn timed_out_flow_returns_capacity_to_survivors() {
         // Two flows share a link; one has a deadline it cannot make
         // (no retry policy). After it is reaped the survivor must run
@@ -1229,5 +1500,48 @@ mod tests {
             e.run().unwrap()
         };
         assert_eq!(build(), build());
+    }
+
+    #[test]
+    fn prefix_queries_match_full_scans() {
+        // The sorted label index must agree with what a naive scan
+        // over every proc/log line reports, including the spawn-order
+        // rule for failure_with_prefix and interleaved job prefixes.
+        let mut e = Engine::new();
+        for job in ["jobB", "jobA"] {
+            for i in 0..3 {
+                let stages = if i == 1 {
+                    vec![
+                        Stage::Crash(format!("{job} attempt died")),
+                        Stage::Fail(format!("{job}/m{i} gave up")),
+                    ]
+                } else {
+                    vec![Stage::Delay(SimNs::from_micros(i as u64 + 1))]
+                };
+                e.spawn(&format!("{job}/m{i}"), stages);
+            }
+        }
+        e.run().unwrap();
+        assert_eq!(
+            e.failure_with_prefix("jobA/"),
+            Some("jobA/m1 gave up"),
+            "first failed proc in spawn order within the prefix"
+        );
+        assert_eq!(e.failure_with_prefix("jobB/"), Some("jobB/m1 gave up"));
+        assert_eq!(e.failure_with_prefix("jobC/"), None);
+        assert_eq!(e.crashes_with_prefix("jobA/"), 1);
+        assert_eq!(e.crashes_with_prefix("job"), 2);
+        assert_eq!(e.crashes_with_prefix(""), 2, "empty prefix = all");
+        assert_eq!(e.timeouts_with_prefix("job"), 0);
+        // Spawning after a query refreshes the index via suffix merge.
+        let late = e.spawn("jobA/late", vec![Stage::Fail("late fail".into())]);
+        e.run().unwrap();
+        assert!(matches!(e.state(late), ProcState::Failed(_)));
+        assert_eq!(e.failure_with_prefix("jobA/l"), Some("late fail"));
+        assert_eq!(
+            e.failure_with_prefix("jobA/"),
+            Some("jobA/m1 gave up"),
+            "earlier spawn still wins the prefix"
+        );
     }
 }

@@ -9,6 +9,22 @@
 //! through it, remove its capacity, repeat. This is the classic fluid
 //! model used by flow-level datacenter simulators.
 //!
+//! **Incremental re-rating.** Progressive filling is defined and
+//! executed *per connected component* of the flow↔resource bipartite
+//! graph: a change (flow added/removed/completed, window edge crossed)
+//! marks its path resources dirty, and the next recompute refills only
+//! the components reachable from dirty resources. Components that
+//! share no resource cannot influence each other's shares, so an
+//! untouched component's rates are bit-for-bit what a full refill
+//! would produce — the invariant the differential suite
+//! (`rust/tests/engine_equiv.rs`) pins. [`FlowSim::set_full_rerate`]
+//! retains the naive mark-everything-dirty behavior as the reference
+//! core for that suite.
+//!
+//! Paths are interned into a shared arena ([`PathId`]): the engine's
+//! compiled stage programs and flow-retry re-issues reference a span,
+//! not a cloned `Vec<ResourceId>` per transfer.
+//!
 //! Degraded-mode I/O: a resource's capacity can vary over virtual time
 //! through [`CapacityWindow`]s — a fault window `[t0, t1)` scales the
 //! nominal capacity by a factor (0 = full blackout). Shared flows
@@ -16,8 +32,10 @@
 //! [`FlowSim::time_to_next_completion`] never lets the engine step
 //! across an edge, and [`FlowSim::remove`] lets the engine reap a
 //! timed-out flow so a blackout victim does not leak link capacity.
+//! Window edges are kept pre-sorted by time with monotone cursors, so
+//! per-advance edge checks no longer scan every scheduled window.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 /// Index of a bandwidth resource (link/channel) in the flow sim.
@@ -26,6 +44,10 @@ pub struct ResourceId(pub usize);
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 /// Index of an active flow.
 pub struct FlowId(pub u64);
+
+/// Index of an interned resource path in the flow sim's path arena.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct PathId(pub(crate) u32);
 
 #[derive(Clone, Debug)]
 /// One capacity-limited bandwidth resource.
@@ -37,7 +59,7 @@ pub struct Resource {
 #[derive(Clone, Debug)]
 struct Flow {
     remaining: f64,
-    path: Vec<ResourceId>,
+    path: PathId,
     rate: f64,
     tag: u32,
     total: f64,
@@ -71,12 +93,41 @@ pub struct FlowSim {
     resources: Vec<Resource>,
     flows: HashMap<FlowId, Flow>,
     next_id: u64,
-    dirty: bool,
+    /// Active flows through each resource (one entry per path
+    /// occurrence) — the adjacency the component walk follows.
+    res_flows: Vec<Vec<FlowId>>,
+    /// Resources whose component must re-rate at the next recompute.
+    dirty_res: Vec<usize>,
+    dirty_mark: Vec<bool>,
+    /// Reference mode: treat every change as dirtying all resources
+    /// (the pre-overhaul behavior, kept for differential testing).
+    full_rerate: bool,
     /// Scheduled capacity faults, consulted at the current clock.
     windows: Vec<CapacityWindow>,
+    /// Per-resource `(t0, t1, factor)` views of `windows`, in insertion
+    /// order so overlapping-window MIN-folding is order-stable.
+    res_windows: Vec<Vec<(f64, f64, f64)>>,
+    /// Every window edge `(time, resource)`, sorted by time.
+    edges: Vec<(f64, usize)>,
+    /// Monotone cursor: edges before it are `<= now + 1e-9` (behind the
+    /// clock for `time_to_next_edge` purposes).
+    edge_next: usize,
+    /// Monotone cursor: edges before it are `<= now - 0.5e-9` (already
+    /// crossed as far as `advance`'s re-rate marking is concerned).
+    edge_cross: usize,
     /// Virtual seconds elapsed, advanced in lockstep with the engine
     /// via [`FlowSim::advance`] — what decides which windows are open.
     now: f64,
+    // Path arena: spans into `path_data`, deduped via `path_lookup`.
+    path_data: Vec<ResourceId>,
+    path_spans: Vec<(u32, u32)>,
+    path_lookup: HashMap<Vec<ResourceId>, u32>,
+    // Recompute scratch (reused across calls; contents transient).
+    visit_res: Vec<u32>,
+    visit_stamp: u32,
+    seen_flows: HashSet<FlowId>,
+    residual: Vec<f64>,
+    counts: Vec<usize>,
 }
 
 const EPS: f64 = 1e-6;
@@ -89,6 +140,12 @@ impl FlowSim {
     pub fn add_resource(&mut self, name: &str, capacity: f64) -> ResourceId {
         assert!(capacity > 0.0, "resource {name} needs capacity > 0");
         self.resources.push(Resource { name: name.to_string(), capacity });
+        self.res_flows.push(Vec::new());
+        self.res_windows.push(Vec::new());
+        self.dirty_mark.push(false);
+        self.visit_res.push(0);
+        self.residual.push(0.0);
+        self.counts.push(0);
         ResourceId(self.resources.len() - 1)
     }
 
@@ -98,6 +155,21 @@ impl FlowSim {
 
     pub fn active_flows(&self) -> usize {
         self.flows.len()
+    }
+
+    /// Differential-testing hook: when enabled, every recompute refills
+    /// every component (the naive pre-overhaul behavior). Rates must be
+    /// bit-identical either way — `rust/tests/engine_equiv.rs` replays
+    /// whole runs against an engine with this reference core.
+    pub fn set_full_rerate(&mut self, on: bool) {
+        self.full_rerate = on;
+    }
+
+    fn mark_dirty(&mut self, r: usize) {
+        if !self.dirty_mark[r] {
+            self.dirty_mark[r] = true;
+            self.dirty_res.push(r);
+        }
     }
 
     /// Schedule a capacity fault window. Windows may be added at any
@@ -116,7 +188,16 @@ impl FlowSim {
             "fault factor {factor} outside [0, 1]"
         );
         self.windows.push(CapacityWindow { resource, t0, t1, factor });
-        self.dirty = true;
+        self.res_windows[resource.0].push((t0, t1, factor));
+        for e in [t0, t1] {
+            let pos = self.edges.partition_point(|&(t, _)| t < e);
+            self.edges.insert(pos, (e, resource.0));
+            // A mid-run insertion may land behind a cursor; pull the
+            // cursor back and let the lazy skip re-derive it.
+            self.edge_next = self.edge_next.min(pos);
+            self.edge_cross = self.edge_cross.min(pos);
+        }
+        self.mark_dirty(resource.0);
     }
 
     /// Scheduled fault windows (inspection/reporting hook).
@@ -131,12 +212,9 @@ impl FlowSim {
     /// each edge despite f64 accumulation.
     fn effective_capacity(&self, i: usize) -> f64 {
         let mut factor = 1.0f64;
-        for w in &self.windows {
-            if w.resource.0 == i
-                && self.now >= w.t0 - 0.5e-9
-                && self.now < w.t1 - 0.5e-9
-            {
-                factor = factor.min(w.factor);
+        for &(t0, t1, f) in &self.res_windows[i] {
+            if self.now >= t0 - 0.5e-9 && self.now < t1 - 0.5e-9 {
+                factor = factor.min(f);
             }
         }
         self.resources[i].capacity * factor
@@ -144,85 +222,205 @@ impl FlowSim {
 
     /// Seconds until the next window edge strictly ahead of the clock,
     /// if any. The engine must re-rate there: a flow's constant-rate
-    /// extrapolation is only valid between edges.
-    fn time_to_next_edge(&self) -> Option<f64> {
-        let mut t = f64::INFINITY;
-        for w in &self.windows {
-            for e in [w.t0, w.t1] {
-                let dt = e - self.now;
-                if dt > 1e-9 {
-                    t = t.min(dt);
-                }
-            }
+    /// extrapolation is only valid between edges. The sorted edge array
+    /// plus the monotone `edge_next` cursor make this O(1) amortized
+    /// instead of a scan over every scheduled window.
+    fn time_to_next_edge(&mut self) -> Option<f64> {
+        while self.edge_next < self.edges.len()
+            && self.edges[self.edge_next].0 - self.now <= 1e-9
+        {
+            self.edge_next += 1;
         }
-        t.is_finite().then_some(t)
+        (self.edge_next < self.edges.len())
+            .then(|| self.edges[self.edge_next].0 - self.now)
     }
 
     /// Reap an active flow (deadline enforcement): its claim on every
     /// path resource is released and survivors re-rate at the next
     /// event. Returns false if the flow already completed.
     pub fn remove(&mut self, id: FlowId) -> bool {
-        let removed = self.flows.remove(&id).is_some();
-        if removed {
-            self.dirty = true;
+        match self.flows.remove(&id) {
+            Some(f) => {
+                self.unlink(id, f.path);
+                true
+            }
+            None => false,
         }
-        removed
+    }
+
+    /// Drop one adjacency entry per path occurrence and mark the path's
+    /// resources for re-rating.
+    fn unlink(&mut self, id: FlowId, path: PathId) {
+        let (start, len) = self.path_spans[path.0 as usize];
+        for k in start..start + len {
+            let r = self.path_data[k as usize].0;
+            let fs = &mut self.res_flows[r];
+            let pos = fs.iter().position(|&f| f == id).expect("adjacency out of sync");
+            fs.swap_remove(pos);
+            if !self.dirty_mark[r] {
+                self.dirty_mark[r] = true;
+                self.dirty_res.push(r);
+            }
+        }
     }
 
     /// Total bytes, path, and tag of an active flow — what a retry
     /// must re-issue after reaping it. None once completed/removed.
     pub fn spec_of(&self, id: FlowId) -> Option<(f64, Vec<ResourceId>, u32)> {
-        self.flows
-            .get(&id)
-            .map(|f| (f.total, f.path.clone(), f.tag))
+        self.flows.get(&id).map(|f| {
+            let (start, len) = self.path_spans[f.path.0 as usize];
+            let path = self.path_data[start as usize..(start + len) as usize].to_vec();
+            (f.total, path, f.tag)
+        })
+    }
+
+    /// Arena-backed variant of [`FlowSim::spec_of`] — the engine's
+    /// flow-retry path re-issues from the interned span, no clone.
+    pub(crate) fn spec_ids(&self, id: FlowId) -> Option<(f64, PathId, u32)> {
+        self.flows.get(&id).map(|f| (f.total, f.path, f.tag))
+    }
+
+    /// Intern a resource path, deduping identical sequences. The
+    /// engine's stage compiler calls this once per distinct path; every
+    /// transfer over the same route shares one span.
+    pub(crate) fn intern_path(&mut self, path: &[ResourceId]) -> PathId {
+        assert!(!path.is_empty(), "flow needs a non-empty path");
+        for r in path {
+            assert!(r.0 < self.resources.len(), "unknown resource {r:?}");
+        }
+        if let Some(&id) = self.path_lookup.get(path) {
+            return PathId(id);
+        }
+        let start = self.path_data.len() as u32;
+        self.path_data.extend_from_slice(path);
+        self.path_spans.push((start, path.len() as u32));
+        let id = (self.path_spans.len() - 1) as u32;
+        self.path_lookup.insert(path.to_vec(), id);
+        PathId(id)
     }
 
     /// Start a flow of `bytes` through `path`. Zero-byte flows are legal
     /// and complete at the next event boundary.
     pub fn start(&mut self, bytes: f64, path: Vec<ResourceId>, tag: u32) -> FlowId {
-        assert!(!path.is_empty(), "flow needs a non-empty path");
-        for r in &path {
-            assert!(r.0 < self.resources.len(), "unknown resource {r:?}");
-        }
+        let pid = self.intern_path(&path);
+        self.start_interned(bytes, pid, tag)
+    }
+
+    /// Start a flow over an already-interned path.
+    pub(crate) fn start_interned(&mut self, bytes: f64, path: PathId, tag: u32) -> FlowId {
         let id = FlowId(self.next_id);
         self.next_id += 1;
         self.flows.insert(
             id,
             Flow { remaining: bytes.max(0.0), path, rate: 0.0, tag, total: bytes.max(0.0) },
         );
-        self.dirty = true;
+        let (start, len) = self.path_spans[path.0 as usize];
+        for k in start..start + len {
+            let r = self.path_data[k as usize].0;
+            self.res_flows[r].push(id);
+            if !self.dirty_mark[r] {
+                self.dirty_mark[r] = true;
+                self.dirty_res.push(r);
+            }
+        }
         id
     }
 
-    /// Recompute max–min fair rates (progressive filling).
+    /// Recompute max–min fair rates over every component touched by a
+    /// dirty resource (all components in reference mode).
     fn recompute(&mut self) {
-        if !self.dirty {
+        if self.dirty_res.is_empty() {
             return;
         }
-        self.dirty = false;
-        let mut residual: Vec<f64> = (0..self.resources.len())
-            .map(|i| self.effective_capacity(i))
-            .collect();
-        let mut unfrozen: Vec<FlowId> = self.flows.keys().copied().collect();
+        if self.full_rerate {
+            for r in 0..self.resources.len() {
+                if !self.dirty_mark[r] {
+                    self.dirty_mark[r] = true;
+                    self.dirty_res.push(r);
+                }
+            }
+        }
+        let mut seeds = std::mem::take(&mut self.dirty_res);
+        seeds.sort_unstable(); // component visit order is id-ordered
+        for &r in &seeds {
+            self.dirty_mark[r] = false;
+        }
+        self.visit_stamp += 1;
+        let stamp = self.visit_stamp;
+        self.seen_flows.clear();
+        let mut stack: Vec<usize> = Vec::new();
+        let mut comp_res: Vec<usize> = Vec::new();
+        let mut comp_flows: Vec<FlowId> = Vec::new();
+        for &seed in &seeds {
+            if self.visit_res[seed] == stamp {
+                continue;
+            }
+            self.visit_res[seed] = stamp;
+            stack.push(seed);
+            comp_res.clear();
+            comp_flows.clear();
+            while let Some(r) = stack.pop() {
+                comp_res.push(r);
+                for i in 0..self.res_flows[r].len() {
+                    let fid = self.res_flows[r][i];
+                    if !self.seen_flows.insert(fid) {
+                        continue;
+                    }
+                    comp_flows.push(fid);
+                    let (start, len) = self.path_spans[self.flows[&fid].path.0 as usize];
+                    for k in start..start + len {
+                        let r2 = self.path_data[k as usize].0;
+                        if self.visit_res[r2] != stamp {
+                            self.visit_res[r2] = stamp;
+                            stack.push(r2);
+                        }
+                    }
+                }
+            }
+            if !comp_flows.is_empty() {
+                comp_res.sort_unstable();
+                let unfrozen = std::mem::take(&mut comp_flows);
+                comp_flows = self.fill_component(&comp_res, unfrozen);
+                comp_flows.clear();
+            }
+        }
+        self.dirty_res = seeds;
+        self.dirty_res.clear();
+    }
+
+    /// Progressive filling restricted to one connected component. The
+    /// arithmetic (share = residual/count, path-order subtraction,
+    /// first-index EPS bottleneck tie-break) is exactly the classic
+    /// global fill's — a component's shares never depend on any other
+    /// component, so the restriction is value-preserving. Returns the
+    /// (emptied) work vec so the caller can reuse its allocation.
+    fn fill_component(&mut self, comp_res: &[usize], mut unfrozen: Vec<FlowId>) -> Vec<FlowId> {
         unfrozen.sort_unstable(); // determinism
-        for f in self.flows.values_mut() {
-            f.rate = 0.0;
+        for id in &unfrozen {
+            self.flows.get_mut(id).unwrap().rate = 0.0;
+        }
+        for &i in comp_res {
+            self.residual[i] = self.effective_capacity(i);
         }
         while !unfrozen.is_empty() {
             // Count unfrozen flows per resource.
-            let mut counts = vec![0usize; self.resources.len()];
+            for &i in comp_res {
+                self.counts[i] = 0;
+            }
             for id in &unfrozen {
-                for r in &self.flows[id].path {
-                    counts[r.0] += 1;
+                let (start, len) = self.path_spans[self.flows[id].path.0 as usize];
+                for k in start..start + len {
+                    self.counts[self.path_data[k as usize].0] += 1;
                 }
             }
             // Bottleneck = resource minimizing residual / count.
             let mut best: Option<(f64, usize)> = None;
-            for (i, &c) in counts.iter().enumerate() {
+            for &i in comp_res {
+                let c = self.counts[i];
                 if c == 0 {
                     continue;
                 }
-                let share = residual[i] / c as f64;
+                let share = self.residual[i] / c as f64;
                 if best.map_or(true, |(s, _)| share < s - EPS) {
                     best = Some((share, i));
                 }
@@ -231,20 +429,24 @@ impl FlowSim {
             // Freeze every unfrozen flow through the bottleneck at `share`.
             let mut still = Vec::with_capacity(unfrozen.len());
             for id in unfrozen {
-                let through = self.flows[&id].path.contains(&ResourceId(bottleneck));
+                let (start, len) = self.path_spans[self.flows[&id].path.0 as usize];
+                let through = self.path_data[start as usize..(start + len) as usize]
+                    .iter()
+                    .any(|r| r.0 == bottleneck);
                 if through {
-                    let f = self.flows.get_mut(&id).unwrap();
-                    f.rate = share;
-                    for r in f.path.clone() {
-                        residual[r.0] = (residual[r.0] - share).max(0.0);
+                    self.flows.get_mut(&id).unwrap().rate = share;
+                    for k in start..start + len {
+                        let r = self.path_data[k as usize].0;
+                        self.residual[r] = (self.residual[r] - share).max(0.0);
                     }
                 } else {
                     still.push(id);
                 }
             }
-            residual[bottleneck] = 0.0;
+            self.residual[bottleneck] = 0.0;
             unfrozen = still;
         }
+        unfrozen
     }
 
     /// Seconds until the next flow event: a completion at current
@@ -285,14 +487,18 @@ impl FlowSim {
         let was = self.now;
         self.now += dt;
         // Rates derive from the clock: crossing (or landing on) any
-        // window edge invalidates them for the next interval.
-        if self
-            .windows
-            .iter()
-            .any(|w| [w.t0, w.t1].iter().any(|e| *e > was - 0.5e-9
-                && *e <= self.now + 0.5e-9))
+        // window edge invalidates them for the next interval. Only the
+        // crossed edges' resources (their components) re-rate.
+        while self.edge_cross < self.edges.len()
+            && self.edges[self.edge_cross].0 <= was - 0.5e-9
         {
-            self.dirty = true;
+            self.edge_cross += 1;
+        }
+        let mut k = self.edge_cross;
+        while k < self.edges.len() && self.edges[k].0 <= self.now + 0.5e-9 {
+            let r = self.edges[k].1;
+            self.mark_dirty(r);
+            k += 1;
         }
         let mut done = Vec::new();
         for (id, f) in self.flows.iter_mut() {
@@ -305,10 +511,9 @@ impl FlowSim {
         }
         done.sort_by_key(|r| r.id); // determinism
         for r in &done {
-            self.flows.remove(&r.id);
-        }
-        if !done.is_empty() {
-            self.dirty = true;
+            if let Some(f) = self.flows.remove(&r.id) {
+                self.unlink(r.id, f.path);
+            }
         }
         done
     }
@@ -476,5 +681,108 @@ mod tests {
         assert!(s.spec_of(a).is_none());
         assert!((s.rate_of(b).unwrap() - 100.0).abs() < 1e-9);
         assert_eq!(s.active_flows(), 1);
+    }
+
+    #[test]
+    fn window_added_mid_run_lands_behind_the_edge_cursors() {
+        // Regression for the sorted-edge cursor: a window scheduled
+        // *after* the clock has advanced past where its edges sort must
+        // still open/close correctly (netfault plans add windows during
+        // setup, but the API allows mid-run insertion too).
+        let mut s = FlowSim::new();
+        let r = s.add_resource("link", 100.0);
+        s.add_capacity_window(r, 1.0, 2.0, 0.5);
+        let f = s.start(10_000.0, vec![r], 0);
+        let t = s.time_to_next_completion().unwrap();
+        assert!((t - 1.0).abs() < 1e-9, "edge at 1s, got {t}");
+        assert!(s.advance(t).is_empty());
+        assert!((s.rate_of(f).unwrap() - 50.0).abs() < 1e-9, "slowdown open");
+        let t = s.time_to_next_completion().unwrap();
+        assert!((t - 1.0).abs() < 1e-9, "edge at 2s, got {t}");
+        assert!(s.advance(t).is_empty());
+        assert!((s.rate_of(f).unwrap() - 100.0).abs() < 1e-9, "back to full");
+        // Both cursors have now walked past the 1s and 2s edges. Insert
+        // a window whose t0 sorts *before* them: the cursors must be
+        // pulled back so the still-open blackout and its closing edge
+        // are seen.
+        s.add_capacity_window(r, 0.5, 3.0, 0.0);
+        assert_eq!(s.rate_of(f).unwrap(), 0.0, "blackout covers now=2s");
+        let t = s.time_to_next_completion().unwrap();
+        assert!((t - 1.0).abs() < 1e-9, "blackout closes at 3s, got {t}");
+        assert!(s.advance(t).is_empty());
+        assert!((s.rate_of(f).unwrap() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn incremental_rerate_matches_full_recompute() {
+        // Differential property: randomized starts/removes/advances on
+        // disjoint-and-overlapping paths produce bit-identical rates
+        // and event times under incremental component re-rating vs the
+        // mark-everything reference.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xF10E5);
+        for case in 0..60 {
+            let mut inc = FlowSim::new();
+            let mut full = FlowSim::new();
+            full.set_full_rerate(true);
+            let nres = rng.range(1, 6) as usize;
+            let caps = [100.0, 250.0, 40.0, 1000.0, 12.5];
+            let mut res = Vec::new();
+            for i in 0..nres {
+                let c = caps[i % caps.len()];
+                res.push(inc.add_resource(&format!("r{i}"), c));
+                full.add_resource(&format!("r{i}"), c);
+            }
+            if rng.chance(0.5) {
+                let r = res[rng.below(nres as u64) as usize];
+                let t0 = rng.below(5) as f64;
+                let (t1, fac) = (t0 + 1.0 + rng.below(4) as f64, 0.25);
+                inc.add_capacity_window(r, t0, t1, fac);
+                full.add_capacity_window(r, t0, t1, fac);
+            }
+            let mut live: Vec<FlowId> = Vec::new();
+            for _ in 0..40 {
+                match rng.below(3) {
+                    0 => {
+                        let plen = 1 + rng.below(2.min(nres as u64)) as usize;
+                        let mut path = Vec::new();
+                        for _ in 0..plen {
+                            path.push(res[rng.below(nres as u64) as usize]);
+                        }
+                        let bytes = 10.0 * (1 + rng.below(100)) as f64;
+                        let a = inc.start(bytes, path.clone(), 0);
+                        let b = full.start(bytes, path, 0);
+                        assert_eq!(a, b, "id streams must match");
+                        live.push(a);
+                    }
+                    1 if !live.is_empty() => {
+                        let id = live.swap_remove(rng.below(live.len() as u64) as usize);
+                        assert_eq!(inc.remove(id), full.remove(id));
+                    }
+                    _ => {
+                        let ta = inc.time_to_next_completion();
+                        let tb = full.time_to_next_completion();
+                        assert_eq!(
+                            ta.map(f64::to_bits),
+                            tb.map(f64::to_bits),
+                            "case {case}: next-event time diverged"
+                        );
+                        if let Some(dt) = ta {
+                            let da: Vec<_> =
+                                inc.advance(dt).iter().map(|r| r.id).collect();
+                            let db: Vec<_> =
+                                full.advance(dt).iter().map(|r| r.id).collect();
+                            assert_eq!(da, db, "case {case}: completions diverged");
+                            live.retain(|id| !da.contains(id));
+                        }
+                    }
+                }
+                for &id in &live {
+                    let ra = inc.rate_of(id).map(f64::to_bits);
+                    let rb = full.rate_of(id).map(f64::to_bits);
+                    assert_eq!(ra, rb, "case {case}: rate of {id:?} diverged");
+                }
+            }
+        }
     }
 }

@@ -4,6 +4,7 @@
 pub mod clock;
 pub mod engine;
 pub mod flow;
+pub(crate) mod wheel;
 
 pub use clock::SimNs;
 pub use engine::{

@@ -1,0 +1,424 @@
+//! Hierarchical timing wheel — the engine's event core.
+//!
+//! Replaces the old `BinaryHeap<Reverse<(SimNs, u64, ProcId)>>` timer
+//! queue with an 8-level × 64-slot calendar keyed on absolute virtual
+//! nanoseconds. Level 0 slots are 2^10 ns (≈1 µs) wide; each level up
+//! widens slots by 64×, so the wheel covers 2^58 ns (≈9 virtual years)
+//! before spilling into a small unordered overflow list. Every level
+//! keeps a one-bit-per-slot occupancy word so `next_due` and `pop_due`
+//! never walk empty slots.
+//!
+//! Semantics are *exactly* the heap's: timers pop in `(time, seq)`
+//! order, where `seq` is the engine's monotone push counter — the FIFO
+//! tiebreak the determinism contract leans on. `pop_due` drains every
+//! slot whose span has been reached, emits the entries that are due,
+//! lazily cascades the rest down to finer levels (each entry moves at
+//! most `LEVELS` times over its lifetime), and sorts the due batch by
+//! `(time, seq)` before handing it back.
+//!
+//! Two invariants make the bitmap scans sound:
+//!
+//! * **No wrap aliasing.** An entry is placed at the smallest level
+//!   whose *remaining* span from the current floor covers it with one
+//!   slot to spare (`delta ≤ span − slot_width`). A level therefore
+//!   never holds two entries one full rotation apart, so "first
+//!   occupied slot in rotation order from the floor" is the level
+//!   minimum.
+//! * **Monotone floor.** `pop_due(now)` advances the floor to `now`;
+//!   pushes in the past are rejected (debug) / clamped (release), same
+//!   as the engine's old `debug_assert` on timer ordering.
+//!
+//! [`TimerQueue`] wraps the wheel together with the retained naive
+//! binary-heap reference core. `Engine::use_reference_core()` swaps the
+//! reference in; the differential suite (`rust/tests/engine_equiv.rs`)
+//! replays randomized programs through both and asserts identical
+//! timestamps.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::clock::SimNs;
+
+/// log2 of the level-0 slot width: 2^10 ns ≈ 1 µs.
+const G_SHIFT: u32 = 10;
+/// log2 of the slots-per-level fan-out (64 slots ↔ one u64 bitmap).
+const SLOT_BITS: u32 = 6;
+const SLOTS: usize = 1 << SLOT_BITS;
+const LEVELS: usize = 8;
+
+#[inline]
+fn level_shift(level: usize) -> u32 {
+    G_SHIFT + SLOT_BITS * level as u32
+}
+
+/// Slot width at `level`, in nanoseconds.
+#[inline]
+fn slot_width(level: usize) -> u64 {
+    1u64 << level_shift(level)
+}
+
+/// Total span covered by `level` (64 slots), in nanoseconds.
+#[inline]
+fn level_span(level: usize) -> u64 {
+    SLOTS as u64 << level_shift(level)
+}
+
+type Entry<T> = (u64, u64, T);
+
+/// Hierarchical timing wheel over `(time, seq, payload)` entries.
+#[derive(Debug)]
+pub(crate) struct TimerWheel<T: Copy> {
+    /// `LEVELS × SLOTS` buckets, row-major by level.
+    slots: Vec<Vec<Entry<T>>>,
+    /// One occupancy bit per slot, per level.
+    occupied: [u64; LEVELS],
+    /// Entries beyond the top level's span from `floor` (≈9 years out).
+    overflow: Vec<Entry<T>>,
+    /// Monotone pop watermark: no pending entry is earlier than this.
+    floor: u64,
+    len: usize,
+    /// Cached earliest pending time; invalidated when entries pop.
+    min_cache: Option<u64>,
+}
+
+impl<T: Copy> TimerWheel<T> {
+    pub(crate) fn new() -> Self {
+        TimerWheel {
+            slots: (0..LEVELS * SLOTS).map(|_| Vec::new()).collect(),
+            occupied: [0; LEVELS],
+            overflow: Vec::new(),
+            floor: 0,
+            len: 0,
+            min_cache: Some(u64::MAX),
+        }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.len
+    }
+
+    pub(crate) fn push(&mut self, t: SimNs, seq: u64, payload: T) {
+        let t = t.as_nanos();
+        debug_assert!(t >= self.floor, "timer scheduled in the past");
+        let t = t.max(self.floor);
+        self.min_cache = match self.min_cache {
+            Some(m) => Some(m.min(t)),
+            None => None,
+        };
+        self.len += 1;
+        let floor = self.floor;
+        self.place(t, seq, payload, floor);
+    }
+
+    /// Bucket an entry relative to `floor` (the current watermark for
+    /// fresh pushes, `now` for lazy cascades during a pop).
+    fn place(&mut self, t: u64, seq: u64, payload: T, floor: u64) {
+        let delta = t - floor;
+        for level in 0..LEVELS {
+            // One slot of slack below the full span keeps a level from
+            // ever wrapping onto the floor's own slot (no aliasing).
+            if delta <= level_span(level) - slot_width(level) {
+                let slot = ((t >> level_shift(level)) & (SLOTS as u64 - 1)) as usize;
+                self.slots[level * SLOTS + slot].push((t, seq, payload));
+                self.occupied[level] |= 1u64 << slot;
+                return;
+            }
+        }
+        self.overflow.push((t, seq, payload));
+    }
+
+    /// Earliest pending `(time)` across all levels and the overflow.
+    pub(crate) fn next_due(&mut self) -> Option<SimNs> {
+        if self.len == 0 {
+            return None;
+        }
+        let min = match self.min_cache {
+            Some(m) => m,
+            None => {
+                let m = self.scan_min();
+                self.min_cache = Some(m);
+                m
+            }
+        };
+        Some(SimNs(min))
+    }
+
+    fn scan_min(&self) -> u64 {
+        let mut best = u64::MAX;
+        for level in 0..LEVELS {
+            let occ = self.occupied[level];
+            if occ == 0 {
+                continue;
+            }
+            let shift = level_shift(level);
+            let fs = ((self.floor >> shift) & (SLOTS as u64 - 1)) as u32;
+            // First occupied slot in rotation order from the floor's
+            // slot holds this level's minimum (no-aliasing invariant).
+            let dist = occ.rotate_right(fs).trailing_zeros();
+            let slot = ((fs + dist) & (SLOTS as u32 - 1)) as usize;
+            for &(t, _, _) in &self.slots[level * SLOTS + slot] {
+                best = best.min(t);
+            }
+        }
+        for &(t, _, _) in &self.overflow {
+            best = best.min(t);
+        }
+        best
+    }
+
+    /// Pop every entry with `time <= now` into `out`, sorted by
+    /// `(time, seq)`, advancing the floor to `now`. Entries sharing a
+    /// reached slot but not yet due cascade down to finer levels.
+    pub(crate) fn pop_due(&mut self, now: SimNs, out: &mut Vec<(SimNs, u64, T)>) {
+        let now = now.as_nanos();
+        let base = out.len();
+        if self.len > 0 && self.min_cache.map_or(true, |m| m <= now) {
+            for level in 0..LEVELS {
+                let shift = level_shift(level);
+                let width = slot_width(level);
+                let fs = (self.floor >> shift) & (SLOTS as u64 - 1);
+                let aligned = self.floor & !(width - 1);
+                // Snapshot: lazily cascaded entries re-inserted below
+                // must not be re-drained within this same pop.
+                let mut occ = self.occupied[level];
+                while occ != 0 {
+                    let slot = occ.trailing_zeros() as u64;
+                    occ &= occ - 1;
+                    let dist = (slot + SLOTS as u64 - fs) & (SLOTS as u64 - 1);
+                    if aligned + dist * width > now {
+                        continue;
+                    }
+                    let drained =
+                        std::mem::take(&mut self.slots[level * SLOTS + slot as usize]);
+                    self.occupied[level] &= !(1u64 << slot);
+                    for (t, seq, payload) in drained {
+                        if t <= now {
+                            self.len -= 1;
+                            out.push((SimNs(t), seq, payload));
+                        } else {
+                            self.place(t, seq, payload, now);
+                        }
+                    }
+                }
+            }
+            if !self.overflow.is_empty() {
+                let mut i = 0;
+                while i < self.overflow.len() {
+                    let (t, seq, payload) = self.overflow[i];
+                    if t <= now {
+                        self.overflow.swap_remove(i);
+                        self.len -= 1;
+                        out.push((SimNs(t), seq, payload));
+                    } else if t - now <= level_span(LEVELS - 1) - slot_width(LEVELS - 1) {
+                        // Came within wheel coverage: migrate down.
+                        self.overflow.swap_remove(i);
+                        self.place(t, seq, payload, now);
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+        }
+        if now > self.floor {
+            self.floor = now;
+        }
+        if out.len() > base {
+            self.min_cache = None;
+            out[base..].sort_unstable_by_key(|&(t, seq, _)| (t, seq));
+        }
+    }
+}
+
+/// The engine's timer queue: the timing wheel by default, or the naive
+/// binary-heap core retained as the differential-testing reference
+/// (`Engine::use_reference_core`). Both pop in `(time, seq)` order.
+#[derive(Debug)]
+pub(crate) enum TimerQueue<T: Copy + Ord> {
+    Wheel(TimerWheel<T>),
+    Reference(BinaryHeap<Reverse<(u64, u64, T)>>),
+}
+
+impl<T: Copy + Ord> TimerQueue<T> {
+    pub(crate) fn wheel() -> Self {
+        TimerQueue::Wheel(TimerWheel::new())
+    }
+
+    pub(crate) fn reference() -> Self {
+        TimerQueue::Reference(BinaryHeap::new())
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        match self {
+            TimerQueue::Wheel(w) => w.len(),
+            TimerQueue::Reference(h) => h.len(),
+        }
+    }
+
+    pub(crate) fn push(&mut self, t: SimNs, seq: u64, payload: T) {
+        match self {
+            TimerQueue::Wheel(w) => w.push(t, seq, payload),
+            TimerQueue::Reference(h) => h.push(Reverse((t.as_nanos(), seq, payload))),
+        }
+    }
+
+    pub(crate) fn next_due(&mut self) -> Option<SimNs> {
+        match self {
+            TimerQueue::Wheel(w) => w.next_due(),
+            TimerQueue::Reference(h) => h.peek().map(|Reverse((t, _, _))| SimNs(*t)),
+        }
+    }
+
+    /// Append all entries due at or before `now` to `out` in
+    /// `(time, seq)` order.
+    pub(crate) fn pop_due(&mut self, now: SimNs, out: &mut Vec<(SimNs, u64, T)>) {
+        match self {
+            TimerQueue::Wheel(w) => w.pop_due(now, out),
+            TimerQueue::Reference(h) => {
+                while let Some(Reverse((t, _, _))) = h.peek() {
+                    if *t > now.as_nanos() {
+                        break;
+                    }
+                    let Reverse((t, seq, payload)) = h.pop().unwrap();
+                    out.push((SimNs(t), seq, payload));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn drain_all(w: &mut TimerWheel<u32>) -> Vec<(u64, u64, u32)> {
+        let mut out = Vec::new();
+        while let Some(t) = w.next_due() {
+            let mut batch = Vec::new();
+            w.pop_due(t, &mut batch);
+            assert!(!batch.is_empty(), "next_due pointed at an empty instant");
+            out.extend(batch.into_iter().map(|(t, s, p)| (t.as_nanos(), s, p)));
+        }
+        out
+    }
+
+    #[test]
+    fn pops_in_time_then_seq_order() {
+        let mut w = TimerWheel::new();
+        w.push(SimNs(500), 2, 0u32);
+        w.push(SimNs(100), 1, 1);
+        w.push(SimNs(500), 0, 2);
+        w.push(SimNs(100), 3, 3);
+        let got = drain_all(&mut w);
+        assert_eq!(
+            got,
+            vec![(100, 1, 1), (100, 3, 3), (500, 0, 2), (500, 2, 0)]
+        );
+    }
+
+    #[test]
+    fn agrees_with_reference_on_random_schedules() {
+        let mut rng = Rng::new(0x77ee11);
+        for case in 0..200 {
+            let mut wheel = TimerWheel::new();
+            let mut reference: BinaryHeap<Reverse<(u64, u64, u32)>> = BinaryHeap::new();
+            let mut now = 0u64;
+            let mut seq = 0u64;
+            // Mixed horizons: sub-slot, cross-slot, cross-level, and the
+            // occasional far-future entry that lands in the overflow.
+            for _ in 0..rng.range(1, 80) {
+                let horizon = match rng.below(10) {
+                    0..=4 => rng.below(2_000),                // within level 0
+                    5..=6 => rng.below(1 << 20),              // level 1-2
+                    7..=8 => rng.below(10_000_000_000),       // seconds
+                    _ => 1 << 62,                             // overflow
+                };
+                let t = now + horizon;
+                wheel.push(SimNs(t), seq, case as u32);
+                reference.push(Reverse((t, seq, case as u32)));
+                seq += 1;
+                // Sometimes advance time partway and pop both sides.
+                if rng.below(3) == 0 {
+                    now += rng.below(5_000_000);
+                    let mut got = Vec::new();
+                    wheel.pop_due(SimNs(now), &mut got);
+                    let mut want = Vec::new();
+                    while let Some(Reverse((t, _, _))) = reference.peek() {
+                        if *t > now {
+                            break;
+                        }
+                        let Reverse(e) = reference.pop().unwrap();
+                        want.push(e);
+                    }
+                    let got: Vec<_> =
+                        got.into_iter().map(|(t, s, p)| (t.as_nanos(), s, p)).collect();
+                    assert_eq!(got, want, "case {case} diverged at now={now}");
+                }
+            }
+            // Drain the rest at the horizon end.
+            let mut got = Vec::new();
+            wheel.pop_due(SimNs(u64::MAX), &mut got);
+            let mut want = Vec::new();
+            while let Some(Reverse(e)) = reference.pop() {
+                want.push(e);
+            }
+            let got: Vec<_> =
+                got.into_iter().map(|(t, s, p)| (t.as_nanos(), s, p)).collect();
+            assert_eq!(got, want, "case {case} final drain diverged");
+            assert_eq!(wheel.len(), 0);
+        }
+    }
+
+    #[test]
+    fn next_due_tracks_minimum_across_cascades() {
+        let mut w = TimerWheel::new();
+        // A coarse-level entry plus a fine one far apart.
+        w.push(SimNs(3_000_000_000), 0, 1u32); // 3s — high level
+        w.push(SimNs(2_500), 1, 2); // 2.5µs — level 0/1
+        assert_eq!(w.next_due(), Some(SimNs(2_500)));
+        let mut out = Vec::new();
+        w.pop_due(SimNs(2_500), &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(w.next_due(), Some(SimNs(3_000_000_000)));
+        // Advancing partway cascades the 3s entry without losing it.
+        out.clear();
+        w.pop_due(SimNs(2_999_999_000), &mut out);
+        assert!(out.is_empty());
+        assert_eq!(w.next_due(), Some(SimNs(3_000_000_000)));
+        out.clear();
+        w.pop_due(SimNs(3_000_000_000), &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(w.len(), 0);
+    }
+
+    #[test]
+    fn overflow_entries_survive_and_pop() {
+        let mut w = TimerWheel::new();
+        let far = 1u64 << 62; // beyond the 2^58 ns wheel coverage
+        w.push(SimNs(far), 0, 7u32);
+        w.push(SimNs(1_000), 1, 8);
+        assert_eq!(w.next_due(), Some(SimNs(1_000)));
+        let mut out = Vec::new();
+        w.pop_due(SimNs(1_000), &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(w.next_due(), Some(SimNs(far)));
+        // Popping at the far horizon yields the overflow entry.
+        out.clear();
+        w.pop_due(SimNs(far), &mut out);
+        assert_eq!(out, vec![(SimNs(far), 0, 7)]);
+        assert_eq!(w.len(), 0);
+    }
+
+    #[test]
+    fn dense_equal_timestamps_keep_fifo_seq_order() {
+        let mut w = TimerWheel::new();
+        for seq in 0..1_000u64 {
+            w.push(SimNs(42_000), seq, (seq % 7) as u32);
+        }
+        let got = drain_all(&mut w);
+        for (i, &(t, seq, _)) in got.iter().enumerate() {
+            assert_eq!(t, 42_000);
+            assert_eq!(seq, i as u64);
+        }
+    }
+}

@@ -88,6 +88,59 @@ impl ThreadPool {
     }
 }
 
+/// Fan `f(i, state)` over `0..n` across `workers` *scoped* threads with
+/// a self-claiming atomic index — the generic engine under the driver's
+/// `pool_run`. Each worker owns a private state built by `init` (an
+/// `RtEngine` oracle in the data plane); results land in per-item slots
+/// and are returned in item order, with every worker's final state
+/// alongside (stat absorption). Determinism: which worker claims which
+/// item affects nothing but wall-clock, because items never share
+/// mutable state and output order is by item, not by completion.
+pub fn run_indexed<T, S, I, F>(
+    workers: usize,
+    n: usize,
+    init: I,
+    f: F,
+) -> (Vec<T>, Vec<S>)
+where
+    T: Send,
+    S: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(usize, &mut S) -> T + Sync,
+{
+    let workers = workers.clamp(1, n.max(1));
+    if workers <= 1 {
+        let mut state = init();
+        let out = (0..n).map(|i| f(i, &mut state)).collect();
+        return (out, vec![state]);
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    let states = Mutex::new(Vec::with_capacity(workers));
+    thread::scope(|sc| {
+        for _ in 0..workers {
+            sc.spawn(|| {
+                let mut state = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let out = f(i, &mut state);
+                    *slots[i].lock().unwrap() = Some(out);
+                }
+                states.lock().unwrap().push(state);
+            });
+        }
+    });
+    let out = slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("pool worker died"))
+        .collect();
+    (out, states.into_inner().unwrap())
+}
+
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         drop(self.tx.take());
@@ -128,5 +181,37 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.execute(|| {});
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn run_indexed_preserves_item_order() {
+        let (out, states) =
+            run_indexed(4, 100, || 0usize, |i, s: &mut usize| {
+                *s += 1;
+                i * 2
+            });
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+        assert_eq!(states.len(), 4);
+        assert_eq!(states.iter().sum::<usize>(), 100, "every item ran once");
+    }
+
+    #[test]
+    fn run_indexed_serial_path_uses_one_state() {
+        let (out, states) =
+            run_indexed(1, 5, Vec::new, |i, s: &mut Vec<usize>| {
+                s.push(i);
+                i
+            });
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+        assert_eq!(states, vec![vec![0, 1, 2, 3, 4]], "in-order, one worker");
+    }
+
+    #[test]
+    fn run_indexed_clamps_workers_to_items() {
+        // More workers than items must not spawn idle-state havoc:
+        // worker count clamps to n.
+        let (out, states) = run_indexed(8, 2, || (), |i, _| i);
+        assert_eq!(out, vec![0, 1]);
+        assert_eq!(states.len(), 2);
     }
 }

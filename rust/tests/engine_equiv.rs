@@ -1,0 +1,463 @@
+//! Differential determinism suite for the DES engine cores (ISSUE 9).
+//!
+//! The production hot path (hierarchical timing wheel + incremental
+//! per-component flow re-rates) must be *observationally identical* to
+//! the retained naive reference core (binary-heap timers + full
+//! progressive-filling recomputes), which preserves the pre-overhaul
+//! semantics. Randomized stage programs — delays × flows × barriers ×
+//! cancels × classes × retries × capacity windows, seeds via
+//! `util::prop` — are replayed through both cores and every observable
+//! is compared: the `run()` result (including deadlock messages),
+//! per-proc states and timestamps, flow/crash/timeout logs, barrier
+//! opening times, and the label-prefix census queries.
+//!
+//! Resource capacities and window factors are dyadic on purpose: the
+//! max–min fair-share arithmetic is then exact in f64, so rate
+//! comparisons use `to_bits`-grade equality (via Debug formatting of
+//! the exact timestamps), not tolerances.
+
+use marvel::prop_assert;
+use marvel::sim::{Engine, ProcId, SimNs, Stage};
+use marvel::util::prop::{check, Gen};
+
+/// Abstract stage: indices instead of engine ids, so the same program
+/// can be compiled into two engines.
+#[derive(Clone)]
+enum Abs {
+    Delay(u64),
+    Acquire(usize),
+    Release(usize),
+    Flow { bytes: f64, path: Vec<usize>, tag: u32, timeout_ms: Option<u64> },
+    Arrive(usize),
+    Await(usize),
+    Crash(String),
+    Fail(String),
+    Cancel(usize),
+}
+
+struct ProcSpec {
+    label: String,
+    class: u32,
+    speed: f64,
+    /// `(base_ms, cap_ms, max)` flow-retry policy, when armed.
+    retry: Option<(u64, u64, u32)>,
+    stages: Vec<Abs>,
+}
+
+struct Spec {
+    pools: Vec<usize>,
+    resources: Vec<f64>,
+    windows: Vec<(usize, f64, f64, f64)>,
+    barrier_targets: Vec<usize>,
+    class_weights: Vec<(u32, u64)>,
+    procs: Vec<ProcSpec>,
+    /// `(proc, stages)` applied via `append_stages` after every spawn —
+    /// the non-contiguous op-arena path the speculation race uses.
+    appends: Vec<(usize, Vec<Abs>)>,
+}
+
+/// A 1–2 hop flow over distinct resources; dyadic byte counts keep the
+/// fair-share arithmetic exact.
+fn gen_flow(g: &mut Gen, n_res: usize) -> Abs {
+    let first = g.rng.below(n_res as u64) as usize;
+    let mut path = vec![first];
+    if n_res > 1 && g.rng.chance(0.5) {
+        let second = (first + 1 + g.rng.below((n_res - 1) as u64) as usize) % n_res;
+        path.push(second);
+    }
+    Abs::Flow {
+        bytes: [1000.0, 4000.0, 16000.0, 64000.0][g.rng.below(4) as usize]
+            * (1 + g.rng.below(4)) as f64,
+        path,
+        tag: g.rng.below(8) as u32,
+        timeout_ms: if g.rng.chance(0.3) { Some(50 + g.rng.below(500)) } else { None },
+    }
+}
+
+fn gen_stage(
+    g: &mut Gen,
+    held: &mut Vec<usize>,
+    n_pools: usize,
+    n_res: usize,
+    n_bars: usize,
+    n_procs: usize,
+    arrivals: &mut [usize],
+    label: &str,
+) -> Abs {
+    // Delay values repeat a small menu so equal-timestamp ties (the
+    // FIFO seq tiebreak) occur constantly.
+    const DELAYS: [u64; 6] = [0, 100_000, 100_000, 1_000_000, 2_500_000, 40_000_000];
+    match g.rng.below(100) {
+        0..=29 => Abs::Delay(
+            *g.pick(&DELAYS) + if g.rng.chance(0.3) { g.rng.below(5_000_000) } else { 0 },
+        ),
+        30..=44 => {
+            let p = g.rng.below(n_pools as u64) as usize;
+            held.push(p);
+            Abs::Acquire(p)
+        }
+        45..=54 => match held.pop() {
+            Some(p) => Abs::Release(p),
+            None => gen_flow(g, n_res),
+        },
+        55..=74 => gen_flow(g, n_res),
+        75..=84 => {
+            let b = g.rng.below(n_bars as u64) as usize;
+            arrivals[b] += 1;
+            Abs::Arrive(b)
+        }
+        85..=89 => Abs::Await(g.rng.below(n_bars as u64) as usize),
+        90..=94 => Abs::Crash(format!("{label} attempt died")),
+        95..=96 => Abs::Fail(format!("{label} gave up")),
+        _ => Abs::Cancel(g.rng.below(n_procs as u64) as usize),
+    }
+}
+
+fn gen_spec(g: &mut Gen) -> Spec {
+    let n_pools = 1 + g.usize_up_to(3);
+    let pools: Vec<usize> =
+        (0..n_pools).map(|_| 1 + g.rng.below(4) as usize).collect();
+    let n_res = 1 + g.usize_up_to(3);
+    let resources: Vec<f64> = (0..n_res)
+        .map(|_| [40.0, 100.0, 250.0, 1000.0][g.rng.below(4) as usize])
+        .collect();
+    let windows = (0..g.usize_up_to(2))
+        .map(|_| {
+            (
+                g.rng.below(n_res as u64) as usize,
+                g.rng.below(4) as f64 * 0.5,
+                2.0 + g.rng.below(4) as f64 * 0.5,
+                [0.0, 0.5][g.rng.below(2) as usize],
+            )
+        })
+        .collect();
+    let n_bars = 1 + g.usize_up_to(2);
+    let mut arrivals = vec![0usize; n_bars];
+    let class_weights: Vec<(u32, u64)> =
+        (0..3).map(|c| (c, 1 + g.rng.below(4))).collect();
+    let n_procs = 2 + g.usize_up_to(30);
+    let mut procs = Vec::with_capacity(n_procs);
+    for j in 0..n_procs {
+        let label = format!("g{}/p{:03}", j % 3, j);
+        let class = g.rng.below(3) as u32;
+        let speed = *g.pick(&[1.0, 1.0, 1.0, 0.5, 0.25, 2.0]);
+        let retry = if g.rng.chance(0.3) {
+            Some((
+                10 + g.rng.below(90),
+                200 + g.rng.below(800),
+                1 + g.rng.below(3) as u32,
+            ))
+        } else {
+            None
+        };
+        let n_stages = 1 + g.usize_up_to(7);
+        let mut held = Vec::new();
+        let stages = (0..n_stages)
+            .map(|_| {
+                gen_stage(
+                    g, &mut held, n_pools, n_res, n_bars, n_procs,
+                    &mut arrivals, &label,
+                )
+            })
+            .collect();
+        procs.push(ProcSpec { label, class, speed, retry, stages });
+    }
+    // A few post-spawn appends: a Cancel race tail plus an Arrive,
+    // exercising the non-contiguous program-segment path.
+    let appends = (0..g.usize_up_to(3))
+        .map(|_| {
+            let target = g.rng.below(n_procs as u64) as usize;
+            let victim = g.rng.below(n_procs as u64) as usize;
+            let b = g.rng.below(n_bars as u64) as usize;
+            arrivals[b] += 1;
+            (target, vec![Abs::Cancel(victim), Abs::Arrive(b)])
+        })
+        .collect();
+    // Targets mostly open; occasionally one arrival short, so the
+    // deadlock path (and its error message) is differential too.
+    let barrier_targets = arrivals
+        .iter()
+        .map(|&a| a + if g.rng.chance(0.12) { 1 } else { 0 })
+        .collect();
+    Spec {
+        pools,
+        resources,
+        windows,
+        barrier_targets,
+        class_weights,
+        procs,
+        appends,
+    }
+}
+
+fn lower(stages: &[Abs], pools: &[marvel::sim::PoolId],
+         res: &[marvel::sim::ResourceId],
+         bars: &[marvel::sim::BarrierId]) -> Vec<Stage> {
+    stages
+        .iter()
+        .map(|s| match s {
+            Abs::Delay(ns) => Stage::Delay(SimNs::from_nanos(*ns)),
+            Abs::Acquire(p) => Stage::Acquire(pools[*p]),
+            Abs::Release(p) => Stage::Release(pools[*p]),
+            Abs::Flow { bytes, path, tag, timeout_ms } => Stage::Flow {
+                bytes: *bytes,
+                path: path.iter().map(|r| res[*r]).collect(),
+                tag: *tag,
+                timeout: timeout_ms.map(SimNs::from_millis),
+            },
+            Abs::Arrive(b) => Stage::Arrive(bars[*b]),
+            Abs::Await(b) => Stage::Await(bars[*b]),
+            Abs::Crash(m) => Stage::Crash(m.clone()),
+            Abs::Fail(m) => Stage::Fail(m.clone()),
+            Abs::Cancel(t) => Stage::Cancel(ProcId(*t)),
+        })
+        .collect()
+}
+
+fn build(spec: &Spec, reference: bool) -> Engine {
+    let mut e = Engine::new();
+    if reference {
+        e.use_reference_core();
+    }
+    for &(c, w) in &spec.class_weights {
+        e.set_class_weight(c, w);
+    }
+    let pools: Vec<_> =
+        spec.pools.iter().map(|&c| e.add_pool(c)).collect();
+    let res: Vec<_> = spec
+        .resources
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| e.add_resource(&format!("r{i}"), c))
+        .collect();
+    for &(r, t0, t1, f) in &spec.windows {
+        e.flows.add_capacity_window(res[r], t0, t1, f);
+    }
+    let bars: Vec<_> = spec
+        .barrier_targets
+        .iter()
+        .map(|&t| e.add_barrier(t))
+        .collect();
+    let mut ids = Vec::with_capacity(spec.procs.len());
+    for p in &spec.procs {
+        let id = e.spawn_scaled(
+            &p.label,
+            p.class,
+            p.speed,
+            lower(&p.stages, &pools, &res, &bars),
+        );
+        if let Some((base_ms, cap_ms, max)) = p.retry {
+            e.set_flow_retry(
+                id,
+                SimNs::from_millis(base_ms),
+                SimNs::from_millis(cap_ms),
+                max,
+            );
+        }
+        ids.push(id);
+    }
+    for (target, stages) in &spec.appends {
+        e.append_stages(ids[*target], lower(stages, &pools, &res, &bars));
+    }
+    e
+}
+
+/// Every observable of a finished engine, formatted for exact
+/// comparison (f64s via to_bits, timestamps via raw nanos).
+fn fingerprint(e: &Engine, spec: &Spec, r: &Result<SimNs, String>) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    writeln!(s, "result: {r:?}").unwrap();
+    for j in 0..spec.procs.len() {
+        let id = ProcId(j);
+        writeln!(
+            s,
+            "proc {j} {:?} started={} finished={}",
+            e.state(id),
+            e.started_at(id).as_nanos(),
+            e.finished_at(id).as_nanos(),
+        )
+        .unwrap();
+    }
+    for f in &e.flow_log {
+        writeln!(
+            s,
+            "flow tag={} bytes={:x} [{}, {}]",
+            f.tag,
+            f.bytes.to_bits(),
+            f.start.as_nanos(),
+            f.end.as_nanos(),
+        )
+        .unwrap();
+    }
+    for c in &e.crash_log {
+        writeln!(s, "crash @{} {} {}", c.at.as_nanos(), c.proc_label, c.what)
+            .unwrap();
+    }
+    for t in &e.timeout_log {
+        writeln!(s, "tmo @{} {} {}", t.at.as_nanos(), t.proc_label, t.what)
+            .unwrap();
+    }
+    for b in 0..spec.barrier_targets.len() {
+        writeln!(
+            s,
+            "bar {b} {:?}",
+            e.barrier_opened_at(marvel::sim::BarrierId(b))
+                .map(|t| t.as_nanos()),
+        )
+        .unwrap();
+    }
+    for prefix in ["", "g0/", "g1/", "g2/"] {
+        writeln!(
+            s,
+            "census {prefix:?}: fail={:?} crashes={} tmo={} cancelled={:?} \
+             failures={:?}",
+            e.failure_with_prefix(prefix),
+            e.crashes_with_prefix(prefix),
+            e.timeouts_with_prefix(prefix),
+            e.cancelled_with_prefix(prefix),
+            e.failures(),
+        )
+        .unwrap();
+    }
+    s
+}
+
+#[test]
+fn randomized_programs_are_identical_on_both_cores() {
+    check("engine-equiv", 60, |g| {
+        let spec = gen_spec(g);
+        let mut fast = build(&spec, false);
+        let mut reference = build(&spec, true);
+        let rf = fast.run();
+        let rr = reference.run();
+        let a = fingerprint(&fast, &spec, &rf);
+        let b = fingerprint(&reference, &spec, &rr);
+        prop_assert!(
+            a == b,
+            "cores diverged:\n--- wheel+incremental ---\n{a}\n\
+             --- reference ---\n{b}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn dense_equal_timestamp_storm_keeps_fifo_order() {
+    // 1500 procs wake at the same virtual instant, then serialize
+    // through one slot: the (time, seq) FIFO tiebreak fully determines
+    // the grant order, so per-proc finish times must match the
+    // reference heap exactly.
+    let build = |reference: bool| {
+        let mut e = Engine::new();
+        if reference {
+            e.use_reference_core();
+        }
+        let pool = e.add_pool(1);
+        for i in 0..1500u32 {
+            e.spawn(&format!("s{i:04}"), vec![
+                Stage::Delay(SimNs::from_millis(10)),
+                Stage::Acquire(pool),
+                Stage::Delay(SimNs::from_micros(3)),
+                Stage::Release(pool),
+            ]);
+        }
+        let end = e.run().unwrap();
+        let finishes: Vec<u64> =
+            (0..1500).map(|i| e.finished_at(ProcId(i)).as_nanos()).collect();
+        (end, finishes)
+    };
+    let (end_w, fin_w) = build(false);
+    let (end_r, fin_r) = build(true);
+    assert_eq!(end_w, end_r);
+    assert_eq!(fin_w, fin_r, "storm grant order diverged");
+    // FIFO: finish times strictly increase with spawn order.
+    assert!(fin_w.windows(2).all(|w| w[0] < w[1]));
+}
+
+#[test]
+fn long_horizon_delays_cascade_identically() {
+    // Delays spanning ten orders of magnitude — nanoseconds to a day —
+    // land across every wheel level plus the overflow list; cascades
+    // on pop must preserve exact order vs the reference heap.
+    let horizons: [u64; 8] = [
+        1,
+        1_000,
+        1_000_000,
+        1_000_000_000,
+        60_000_000_000,
+        3_600_000_000_000,
+        86_400_000_000_000,
+        2 << 59,
+    ];
+    let build = |reference: bool| {
+        let mut e = Engine::new();
+        if reference {
+            e.use_reference_core();
+        }
+        let bar = e.add_barrier(horizons.len() * 4);
+        for (i, &h) in horizons.iter().enumerate() {
+            for k in 0..4u64 {
+                e.spawn(&format!("h{i}k{k}"), vec![
+                    Stage::Delay(SimNs::from_nanos(h + k * 17)),
+                    Stage::Arrive(bar),
+                ]);
+            }
+        }
+        e.spawn("sink", vec![Stage::Await(bar)]);
+        let end = e.run().unwrap();
+        let fins: Vec<u64> = (0..horizons.len() * 4)
+            .map(|i| e.finished_at(ProcId(i)).as_nanos())
+            .collect();
+        (end, fins)
+    };
+    assert_eq!(build(false), build(true));
+}
+
+#[test]
+fn flow_retry_blackout_paths_match() {
+    // The degraded-mode composite: blackout window + flow deadlines +
+    // capped backoff retries + a slot handed back through the fair
+    // queue. Exact timeline equality across cores.
+    let build = |reference: bool| {
+        let mut e = Engine::new();
+        if reference {
+            e.use_reference_core();
+        }
+        let link = e.add_resource("l", 100.0);
+        e.flows.add_capacity_window(link, 0.0, 3.0, 0.0);
+        let pool = e.add_pool(1);
+        for i in 0..4u32 {
+            // 25–100 bytes at 100 B/s: ≤ 1 s at full rate, so the
+            // 1.5 s deadline only ever fires inside the blackout and
+            // the retry budget (6) is never exhausted.
+            let p = e.spawn(&format!("t{i}"), vec![
+                Stage::Acquire(pool),
+                Stage::Flow {
+                    bytes: 25.0 + 25.0 * i as f64,
+                    path: vec![link],
+                    tag: i,
+                    timeout: Some(SimNs::from_millis(1500)),
+                },
+                Stage::Release(pool),
+            ]);
+            e.set_flow_retry(
+                p,
+                SimNs::from_millis(500),
+                SimNs::from_secs_f64(8.0),
+                6,
+            );
+        }
+        let end = e.run().unwrap();
+        let log: Vec<(u32, u64, u64)> = e
+            .flow_log
+            .iter()
+            .map(|f| (f.tag, f.start.as_nanos(), f.end.as_nanos()))
+            .collect();
+        (end, e.timeout_log.len(), log)
+    };
+    let a = build(false);
+    let b = build(true);
+    assert_eq!(a, b, "retry-through-blackout timeline diverged");
+    assert!(a.1 > 0, "the scenario must actually exercise timeouts");
+}

@@ -598,6 +598,129 @@ fn prop_placement_never_changes_output_bytes() {
 }
 
 #[test]
+fn prop_engine_core_worker_sweep_byte_identical() {
+    // The DES-core overhaul's end-to-end contract (ISSUE 9): fig7-
+    // shaped (two-tenant co-run through the shared JobServer) and
+    // fig9-shaped (stragglers + speculative backups armed) jobs stay
+    // byte-identical at EVERY worker count in {1, 4, 8} — the sweep is
+    // exhaustive per case, not a random draw, because the wheel/arena/
+    // incremental-re-rate hot path and the `oracle_shared` worker
+    // engines must agree with the single-threaded golden bytes at each
+    // pool width, under randomized straggler/data seeds.
+    use marvel::coordinator::ClusterSpec;
+    use marvel::mapreduce::{
+        output_key, run_job, stage_named_input, Cluster, JobServer,
+        SystemConfig,
+    };
+    use marvel::net::StragglerProfile;
+    use marvel::runtime::RtEngine;
+    use marvel::workloads::WordCount;
+
+    fn deploy(cfg: &SystemConfig) -> Cluster {
+        let mut cluster = ClusterSpec {
+            nodes: 4,
+            slots_per_node: 8,
+            ..Default::default()
+        }
+        .deploy(cfg);
+        cluster.stores.hdfs.block_size = 256 * 1024;
+        cluster
+    }
+
+    fn outputs(
+        cluster: &mut Cluster,
+        job: &str,
+        n: usize,
+    ) -> Vec<Option<Vec<u8>>> {
+        (0..n)
+            .map(|j| {
+                cluster
+                    .stores
+                    .igfs
+                    .get(&cluster.topo, NodeId(0), &output_key(job, j), 0)
+                    .and_then(|(p, _)| p.gather())
+            })
+            .collect()
+    }
+
+    check("engine-core-worker-sweep", 3, |g| {
+        let sseed = g.rng.next_u64();
+        let dseed = g.rng.next_u64();
+        let input = 4 * 1024 * 1024u64; // 16 splits at 256 KiB blocks
+        let mut rt = RtEngine::load(None)?;
+        let wc = WordCount::new(1200, 1.07, &rt);
+
+        // fig9 shape: straggler nodes + speculation racing backups.
+        let arm = |w: usize| {
+            let mut c = SystemConfig::marvel_igfs();
+            c.map_workers = w;
+            c.reduce_workers = w;
+            c.stragglers = StragglerProfile {
+                seed: sseed,
+                prob: 0.5,
+                slowdown: 4.0,
+            };
+            c.speculation.enabled = true;
+            c
+        };
+
+        let solo = |cfg: &SystemConfig, rt: &mut RtEngine| {
+            let mut cluster = deploy(cfg);
+            let input_path = stage_named_input(
+                &mut cluster, cfg, &wc, input, dseed, "ws/in",
+            )?;
+            let r = run_job(&mut cluster, cfg, &wc, &input_path, rt, dseed);
+            if let Some(e) = &r.failed {
+                return Err(format!("job failed: {e}"));
+            }
+            Ok((outputs(&mut cluster, &r.job, r.reduce.tasks), r))
+        };
+
+        // Golden: one worker. Then the exhaustive sweep.
+        let (o1, r1) = solo(&arm(1), &mut rt)?;
+        for w in [1usize, 4, 8] {
+            let (ow, rw) = solo(&arm(w), &mut rt)?;
+            prop_assert!(
+                ow == o1,
+                "{w} workers changed bytes (sseed={sseed:#x} \
+                 dseed={dseed:#x})"
+            );
+            prop_assert!(rw.output_bytes == r1.output_bytes);
+            prop_assert!(rw.job_time == r1.job_time,
+                         "virtual time moved with worker count");
+
+            // fig7 shape at the same width: weighted two-tenant co-run
+            // through the shared scheduler reproduces the solo bytes.
+            let base = arm(w);
+            let mut cluster = deploy(&base);
+            let in_a = stage_named_input(
+                &mut cluster, &base, &wc, input, dseed, "a/in",
+            )?;
+            let in_b = stage_named_input(
+                &mut cluster, &base, &wc, input, dseed, "b/in",
+            )?;
+            let res = JobServer::new()
+                .tenant("a", 3)
+                .tenant("b", 1)
+                .job("a", &wc, base.clone(), &in_a, dseed)
+                .job("b", &wc, base.clone(), &in_b, dseed)
+                .run(&mut cluster, &mut rt);
+            prop_assert!(res.ok(), "co-run failed: {:?}", res.failed);
+            for run in &res.jobs {
+                let jr = run.final_stage().ok_or("no stage")?;
+                let outs = outputs(&mut cluster, &jr.job, jr.reduce.tasks);
+                prop_assert!(
+                    outs == o1,
+                    "tenant {} diverged at {w} workers (sseed={sseed:#x})",
+                    run.tenant
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_shuffle_conservation_real_jobs() {
     // Σ map outputs == Σ reduce inputs for real runs with random
     // sizes/vocab — the shuffle loses and invents nothing.
