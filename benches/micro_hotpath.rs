@@ -10,7 +10,8 @@
 use std::path::Path;
 
 use marvel::mapreduce::{
-    map_splits_parallel, reduce_partitions_parallel, SystemConfig, Workload,
+    interm_key, interm_key_into, map_splits_parallel, PartitionPlan,
+    reduce_partitions_parallel, SystemConfig, Workload,
 };
 use marvel::runtime::{default_artifacts_dir, RtEngine};
 use marvel::sim::{Engine, SimNs, Stage};
@@ -71,9 +72,10 @@ fn main() {
     // -- full map_split through the runtime (the real map hot path)
     let wc = WordCount::new(10_000, 1.07, &pjrt);
     let cfg = SystemConfig::marvel_igfs();
+    let plan = PartitionPlan::hash(32);
     let payload = Payload::real(text.clone());
     let r_m = bench.run("map_split 8 MB (kernel combine)", || {
-        wc.map_split(&payload, 32, &cfg, &mut pjrt, &mut Rng::new(3))
+        wc.map_split(&payload, &plan, &cfg, &mut pjrt, &mut Rng::new(3))
     });
     println!("{}", r_m.summary());
     let ms_mb_s = r_m.throughput(8_000_000.0) / 1e6;
@@ -96,11 +98,11 @@ fn main() {
         .collect();
     let plane_bytes = (n_splits as u64 * split_bytes) as f64;
     let r_s1 = bench.run("map plane 16×2 MB, 1 worker", || {
-        map_splits_parallel(&wc, &splits, 32, &cfg, &mut oracle, 7, 1)
+        map_splits_parallel(&wc, &splits, &plan, &cfg, &mut oracle, 7, 1)
     });
     let label = format!("map plane 16×2 MB, {n_workers} workers");
     let r_sn = bench.run(&label, || {
-        map_splits_parallel(&wc, &splits, 32, &cfg, &mut oracle, 7,
+        map_splits_parallel(&wc, &splits, &plan, &cfg, &mut oracle, 7,
                             n_workers)
     });
     println!("{}", r_s1.summary());
@@ -117,8 +119,9 @@ fn main() {
     metrics.push(("map_plane_speedup", speedup));
     metrics.push(("map_plane_workers", n_workers as f64));
     // Determinism: parallel output byte-identical to serial.
-    let a = map_splits_parallel(&wc, &splits, 32, &cfg, &mut oracle, 7, 1);
-    let b = map_splits_parallel(&wc, &splits, 32, &cfg, &mut oracle, 7,
+    let a = map_splits_parallel(&wc, &splits, &plan, &cfg, &mut oracle, 7,
+                                1);
+    let b = map_splits_parallel(&wc, &splits, &plan, &cfg, &mut oracle, 7,
                                 n_workers);
     assert_eq!(a.len(), b.len());
     for (x, y) in a.iter().zip(&b) {
@@ -180,6 +183,39 @@ fn main() {
     }
     println!("  determinism: parallel reduce output == serial output ✓");
 
+    // -- shuffle key formatting: fresh String per key (the pre-PR-10
+    // driver loop) vs one reused buffer (`interm_key_into`). The driver
+    // formats n_splits × n_reduces of these per stage.
+    let r_kf = bench.run("interm_key ×32k, fresh alloc", || {
+        let mut n = 0usize;
+        for i in 0..1024usize {
+            for j in 0..32usize {
+                n += interm_key("bench/job", i, j).len();
+            }
+        }
+        n
+    });
+    let r_kr = bench.run("interm_key ×32k, reused buffer", || {
+        let mut buf = String::new();
+        let mut n = 0usize;
+        for i in 0..1024usize {
+            for j in 0..32usize {
+                interm_key_into(&mut buf, "bench/job", i, j);
+                n += buf.len();
+            }
+        }
+        n
+    });
+    println!("{}", r_kf.summary());
+    println!("{}", r_kr.summary());
+    println!(
+        "  key format: fresh {} → reused {} per 32k keys",
+        fmt_ns(r_kf.mean_ns),
+        fmt_ns(r_kr.mean_ns)
+    );
+    metrics.push(("key_format_fresh_ns", r_kf.mean_ns));
+    metrics.push(("key_format_reuse_ns", r_kr.mean_ns));
+
     // -- zero-copy payload plumbing: slice+concat as pure view ops
     // (pre-refactor this memcpy'd ~64 MB per iteration).
     let big = Payload::real(vec![7u8; 64 << 20]);
@@ -227,8 +263,8 @@ fn main() {
     });
     println!("{}", r_f.summary());
 
-    results.extend([r_p, r_o, r_t, r_m, r_s1, r_sn, r_r1, r_rn, r_v, r_e,
-                    r_f]);
+    results.extend([r_p, r_o, r_t, r_m, r_s1, r_sn, r_r1, r_rn, r_kf,
+                    r_kr, r_v, r_e, r_f]);
     let refs: Vec<&BenchResult> = results.iter().collect();
     let out = Path::new("BENCH_micro_hotpath.json");
     match write_report(out, &refs, &metrics) {

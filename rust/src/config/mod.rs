@@ -18,7 +18,7 @@
 
 use crate::coordinator::ClusterSpec;
 use crate::mapreduce::{
-    ArrivalModel, PlacementStrategy, SystemConfig, TenantClass,
+    ArrivalModel, Partitioner, PlacementStrategy, SystemConfig, TenantClass,
 };
 use crate::net::DeviceRole;
 use crate::sim::SimNs;
@@ -340,6 +340,26 @@ impl ExperimentConfig {
                 *seed = pseed;
             }
         }
+        // [partition] — key→partition routing policy. An explicit
+        // strategy here overrides the preset's default (and any
+        // MARVEL_PARTITIONER env value, which `from_env` applied at
+        // preset construction); `hot_threshold` / `split_ways` refine
+        // an explicit or env-selected skew-aware partitioner.
+        if let Some(v) = doc.get("partition", "strategy") {
+            let name = v.as_str().unwrap_or_default();
+            system.partition = Partitioner::parse(name)
+                .map_err(|e| format!("[partition] strategy: {e}"))?;
+        }
+        if let Partitioner::SkewAware { hot_threshold, split_ways } =
+            &mut system.partition
+        {
+            *hot_threshold = doc
+                .f64_or("partition", "hot_threshold", *hot_threshold)
+                .max(0.0);
+            if let Some(v) = doc.get("partition", "split_ways") {
+                *split_ways = v.as_i64().unwrap_or(0).max(2) as usize;
+            }
+        }
         let tenants =
             parse_tenant_spec(doc.str_or("server", "tenants", ""))?;
         let corun_workloads: Vec<String> = doc
@@ -484,6 +504,52 @@ seed = 99
                 cfg.system.placement,
                 PlacementStrategy::FairOrder
             );
+        }
+    }
+
+    #[test]
+    fn partition_section_parses() {
+        let cfg = ExperimentConfig::parse(
+            r#"
+[partition]
+strategy = "skew-aware"
+hot_threshold = 1.25
+split_ways = 3
+"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.system.partition,
+            Partitioner::SkewAware { hot_threshold: 1.25, split_ways: 3 }
+        );
+        // Defaults fill in when the knobs are omitted.
+        let cfg = ExperimentConfig::parse(
+            "[partition]\nstrategy = \"skew-aware\"\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.system.partition,
+            Partitioner::SkewAware {
+                hot_threshold: Partitioner::DEFAULT_HOT_THRESHOLD,
+                split_ways: Partitioner::DEFAULT_SPLIT_WAYS,
+            }
+        );
+        let cfg = ExperimentConfig::parse(
+            "[partition]\nstrategy = \"range\"\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.system.partition,
+            Partitioner::Range { bounds: vec![] }
+        );
+        assert!(ExperimentConfig::parse(
+            "[partition]\nstrategy = \"modulo\"\n"
+        )
+        .is_err());
+        // No section: legacy hash unless CI's env column overrides.
+        if std::env::var("MARVEL_PARTITIONER").is_err() {
+            let cfg = ExperimentConfig::parse("").unwrap();
+            assert_eq!(cfg.system.partition, Partitioner::Hash);
         }
     }
 

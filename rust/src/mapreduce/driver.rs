@@ -37,7 +37,8 @@ use crate::sim::{BarrierId, Engine, PoolId, ProcId, SimNs, Stage};
 use crate::storage::Payload;
 use crate::yarn::{Allocation, ContainerRequest, ResourceManager};
 
-use super::shuffle::{interm_key, output_key, KeyHome, Stores};
+use super::partition::PartitionPlan;
+use super::shuffle::{interm_key_into, output_key_into, KeyHome, Stores};
 use super::types::{
     HandoffStats, JobResult, PhaseStats, Platform, SpeculationConfig,
     StoreKind, SystemConfig,
@@ -265,8 +266,9 @@ fn reduce_affinity_hints(
     j: usize,
 ) -> Vec<NodeId> {
     let mut by_node: Vec<(NodeId, u64)> = Vec::new();
+    let mut key = String::new();
     for i in 0..n_maps {
-        let key = interm_key(job, i, j);
+        interm_key_into(&mut key, job, i, j);
         let holder = match stores.locate(&key) {
             Some((len, KeyHome::Igfs)) => {
                 Some((stores.igfs.owner(&key), len))
@@ -751,13 +753,14 @@ where
 }
 
 /// Run `map_split` over every fetched split across `workers` host
-/// threads. Per-split RNG streams derive from the *workload name*
+/// threads, routing emissions through one shared [`PartitionPlan`].
+/// Per-split RNG streams derive from the *workload name*
 /// (`task_rng(seed, wl.name(), i)`), so the split schedule cannot
 /// influence data — see the `pool_run` determinism contract.
 pub fn map_splits_parallel(
     wl: &dyn Workload,
     datas: &[Payload],
-    n_reduces: usize,
+    plan: &PartitionPlan,
     cfg: &SystemConfig,
     rt: &mut RtEngine,
     seed: u64,
@@ -766,7 +769,7 @@ pub fn map_splits_parallel(
     let job = wl.name();
     pool_run(rt, workers, datas.len(), |i, wrt| {
         let mut rng = task_rng(seed, job, i as u64);
-        wl.map_split(&datas[i], n_reduces, cfg, wrt, &mut rng)
+        wl.map_split(&datas[i], plan, cfg, wrt, &mut rng)
     })
 }
 
@@ -889,6 +892,8 @@ pub struct PlannedStage {
     checkpoint_overhead: SimNs,
     spec_backups: u64,
     affinity_hits: u64,
+    partition_skew: f64,
+    hot_keys_split: u64,
 }
 
 impl PlannedStage {
@@ -984,6 +989,8 @@ pub fn finalize_stage(
         flow_timeouts: cluster.engine.timeouts_with_prefix(&prefix) as u64,
         degraded_reads: p.igfs.degraded_reads,
         affinity_hits: p.affinity_hits,
+        partition_skew: p.partition_skew,
+        hot_keys_split: p.hot_keys_split,
     })
 }
 
@@ -1070,6 +1077,14 @@ pub fn plan_stage(
     let n_splits = splits.len();
     let (n_maps, n_reduces) =
         cluster.rm.size_job(n_splits, rt.manifest.parts);
+
+    // Partition plan: key→partition routing for the whole stage,
+    // decided before any data moves. Hot-key detection reads the
+    // workload's analytic profile (stat-free, deterministic per seed);
+    // `Partitioner::Hash` plans reproduce the legacy `key % parts`
+    // routing bit-for-bit.
+    let plan =
+        PartitionPlan::build(&cfg.partition, wl, input_bytes, n_reduces, seed);
 
     // Lambda admission: the Corral baseline dies past the transfer
     // quota (paper §4.2.1 observation 1).
@@ -1191,7 +1206,7 @@ pub fn plan_stage(
     // -- data plane: map + combine (the hot path), parallel
     let workers = effective_workers(cfg.map_workers, splits.len());
     let map_outs =
-        map_splits_parallel(wl, &datas, n_reduces, cfg, rt, seed, workers);
+        map_splits_parallel(wl, &datas, &plan, cfg, rt, seed, workers);
     drop(datas); // split views released before the shuffle writes
 
     // -- time plane, split order. With a failure plan armed, a task's
@@ -1222,6 +1237,8 @@ pub fn plan_stage(
     let (map_backups, map_launch) =
         plan_backups(&cluster.topo, &cfg.speculation, &map_nodes, &map_ests);
     let mut spec_backups = 0u64;
+    let mut keybuf = String::new();
+    cluster.stores.begin_partition_tally(n_reduces);
     for ((i, mo), in_stages) in
         map_outs.into_iter().enumerate().zip(in_stages_per_split)
     {
@@ -1291,13 +1308,14 @@ pub fn plan_stage(
                     continue;
                 }
                 intermediate_bytes += part.len();
-                let key = interm_key(&job, i, j);
+                cluster.stores.tally_partition(j, part.len());
+                interm_key_into(&mut keybuf, &job, i, j);
                 let st = cluster.stores.write_intermediate(
                     &mut cluster.engine,
                     &cluster.topo,
                     cfg.intermediate_store,
                     node,
-                    &key,
+                    &keybuf,
                     part,
                 )?;
                 out_st.extend(st);
@@ -1398,6 +1416,14 @@ pub fn plan_stage(
         return Err(msg);
     }
 
+    // Shuffle-balance census: p99/median of the per-partition
+    // intermediate byte tallies the map writes just produced — the
+    // number fig13 plots and `SkewAware` exists to pull toward 1.
+    let partition_skew = crate::util::stats::skew_coefficient(
+        cluster.stores.partition_tallies(),
+    );
+    let hot_keys_split = plan.hot_keys_split() as u64;
+
     // Cache-node blackout (inert by default): between the phases —
     // after every intermediate landed, before any reducer gathers —
     // the named nodes lose both cache tiers and leave the partition
@@ -1458,13 +1484,13 @@ pub fn plan_stage(
         let mut in_stages = Vec::new();
         let mut inputs = Vec::new();
         for i in 0..n_maps {
-            let key = interm_key(&job, i, j);
+            interm_key_into(&mut keybuf, &job, i, j);
             match cluster.stores.read_intermediate(
                 &mut cluster.engine,
                 &cluster.topo,
                 cfg.intermediate_store,
                 node,
-                &key,
+                &keybuf,
             )? {
                 Some((d, st)) => {
                     reduce_in_bytes += d.len();
@@ -1509,24 +1535,24 @@ pub fn plan_stage(
     let (red_backups, red_launch) =
         plan_backups(&cluster.topo, &cfg.speculation, &red_nodes, &red_ests);
     let mut output_bytes = 0u64;
-    for (j, (plan, ro)) in
+    for (j, (rplan, ro)) in
         plans.into_iter().zip(reduce_outs).enumerate()
     {
         let in_bytes: u64 =
             inputs_per_part[j].iter().map(|p| p.len()).sum();
         let partial = ro.output.len().to_le_bytes();
         let replay: Vec<Stage> = if red_backups[j].is_some() {
-            plan.in_stages.clone()
+            rplan.in_stages.clone()
         } else {
             Vec::new()
         };
         let mut stages = vec![Stage::Await(maps_done)];
-        let (slot, ok) = match plan.invoked {
+        let (slot, ok) = match rplan.invoked {
             Some((slot, startup)) => {
                 tally.task_attempts += 1;
                 stages.push(Stage::Acquire(slot));
                 stages.push(Stage::Delay(startup));
-                stages.extend(plan.in_stages);
+                stages.extend(rplan.in_stages);
                 stages.push(Stage::Delay(SimNs::from_secs_f64(
                     in_bytes as f64 / wl.reduce_rate(),
                 )));
@@ -1547,8 +1573,8 @@ pub fn plan_stage(
                     cluster,
                     cfg,
                     &reduce_spec,
-                    plan.node,
-                    &plan.in_stages,
+                    rplan.node,
+                    &rplan.in_stages,
                     in_bytes,
                     wl.reduce_rate(),
                     &tr,
@@ -1562,12 +1588,13 @@ pub fn plan_stage(
         if ok {
             if !ro.output.is_empty() {
                 output_bytes += ro.output.len();
+                output_key_into(&mut keybuf, &job, j);
                 let st = cluster.stores.write_output(
                     &mut cluster.engine,
                     &cluster.topo,
                     cfg.output_store,
-                    plan.node,
-                    &output_key(&job, j),
+                    rplan.node,
+                    &keybuf,
                     ro.output,
                 )?;
                 out_st.extend(st);
@@ -1592,7 +1619,7 @@ pub fn plan_stage(
         if faulty {
             arm_flow_timeouts(&mut stages, cfg.netfaults.flow_timeout);
         }
-        let speed = cluster.topo.speed_of(plan.node);
+        let speed = cluster.topo.speed_of(rplan.node);
         let orig = cluster.engine.spawn_scaled(
             &format!("{job}/red{j}"),
             class,
@@ -1609,7 +1636,7 @@ pub fn plan_stage(
         }
         if ok {
             if cfg.platform == Platform::OpenWhisk {
-                cluster.controller.complete(&reduce_spec, plan.node);
+                cluster.controller.complete(&reduce_spec, rplan.node);
             } else {
                 cluster.lambda.finish();
             }
@@ -1692,6 +1719,8 @@ pub fn plan_stage(
         checkpoint_overhead: tally.overhead,
         spec_backups,
         affinity_hits,
+        partition_skew,
+        hot_keys_split,
     })
 }
 
@@ -1700,7 +1729,8 @@ mod tests {
     // Exercised end-to-end via coordinator tests + rust/tests/.
     #[test]
     fn interm_key_stable() {
-        assert_eq!(super::interm_key("j", 2, 3), "j/shuffle/m00002/p003");
+        let k = crate::mapreduce::shuffle::interm_key("j", 2, 3);
+        assert_eq!(k, "j/shuffle/m00002/p003");
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! and "Open-loop serving & autoscaling") for the execution model.
 
 pub mod driver;
+pub mod partition;
 pub mod pipeline;
 pub mod server;
 pub mod shuffle;
@@ -20,13 +21,19 @@ pub use driver::{
     reduce_partitions_parallel, run_job, run_stage, stage_input,
     stage_named_input, Cluster, PlannedStage, StageInput,
 };
+pub use partition::{
+    record_salt, HotKey, PartitionPlan, Partitioner, SplitMode,
+};
 pub use pipeline::{JobPipeline, PipelineResult, PipelineStage};
 pub use server::{
     AdmissionDecision, Arrival, ArrivalConfig, ArrivalModel, ChainStage,
     ClassReport, JobRun, JobServer, OpenLoopReport, OpenLoopServer,
     ServerResult, Submission, TenantClass, TenantReport,
 };
-pub use shuffle::{interm_key, output_key, KeyHome, Stores};
+pub use shuffle::{
+    interm_key, interm_key_into, output_key, output_key_into, KeyHome,
+    Stores,
+};
 pub use types::{
     CombinerMode, HandoffStats, JobResult, PhaseStats, Platform, SerFormat,
     SpeculationConfig, StoreKind, SystemConfig,

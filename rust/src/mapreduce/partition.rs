@@ -1,0 +1,459 @@
+//! Partition plan layer: pluggable key→partition routing.
+//!
+//! Historically the key→reducer mapping was a `hash(key) % n_reduces`
+//! smeared across every workload's `map_split`. This module lifts it
+//! into a first-class [`PartitionPlan`] the driver builds once per
+//! stage and hands down to the data plane:
+//!
+//! | partitioner  | routing                                          |
+//! |--------------|--------------------------------------------------|
+//! | `Hash`       | `key % parts` — the legacy mapping bit-for-bit   |
+//! | `Range`      | binary search over ascending cut points (derived |
+//! |              | uniformly from `Workload::key_domain` when none  |
+//! |              | are given; an unknown domain degrades to hash)   |
+//! | `SkewAware`  | hash base routing + hot keys split across        |
+//! |              | `split_ways` consecutive reducers                |
+//!
+//! Hot keys are detected *at plan time* from the workload's analytic
+//! [`Workload::key_profile`] — a deterministic, materialization-free
+//! key-weight distribution (e.g. the Zipf pmf a table generator
+//! samples from), so real and synthetic modes route identically and
+//! the plan never needs a statistics pass over map outputs.
+//!
+//! Determinism contract: within one partitioner choice, job outputs
+//! are byte-identical at any worker count, placement, and fault plan
+//! (the plan is a pure function of `(partitioner, workload, parts)`).
+//! Across partitioners the *canonical* output — the multiset of
+//! records over all partitions — is identical; routing moves records
+//! between partitions, never invents or drops them. `SkewAware` on a
+//! workload whose [`SplitMode`] is `None` detects and reports hot
+//! keys but does not move them, so it is bit-for-bit `Hash` — which
+//! is what makes CI's global `MARVEL_PARTITIONER=skew-aware` sweep
+//! safe for every legacy workload.
+
+use super::workload::Workload;
+
+/// Can a workload's records for one key be safely spread across
+/// several reducers by a skew-aware plan?
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SplitMode {
+    /// No: the reduce function needs every record of a key in one
+    /// partition (the default). `SkewAware` then only *reports* hot
+    /// keys and routes exactly like `Hash`.
+    None,
+    /// Yes, and the split outputs are independent rows needing no
+    /// re-unification (e.g. a repartition join: the build side is
+    /// replicated to every way, probe rows join wherever they land).
+    Independent,
+    /// Yes, but the split partitions hold *partial* aggregates that a
+    /// final merge stage (the workload's [`Workload::unifier`]) must
+    /// re-unify — `JobPipeline` appends that stage automatically.
+    Mergeable,
+}
+
+/// The configured partitioning strategy (`[partition]` in TOML,
+/// `--partitioner` on the CLI, `MARVEL_PARTITIONER` in CI).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Partitioner {
+    /// Legacy `key % parts`, bit-for-bit.
+    Hash,
+    /// Ascending cut points; partition `j` holds keys in
+    /// `[bounds[j-1], bounds[j])`. Empty bounds derive uniformly from
+    /// the workload's `key_domain()` (domain 0 = unknown → hash).
+    Range { bounds: Vec<u64> },
+    /// Hash base routing, with keys whose profile weight exceeds
+    /// `hot_threshold × (total / parts)` split across `split_ways`
+    /// consecutive reducers (on workloads that allow it).
+    SkewAware { hot_threshold: f64, split_ways: usize },
+}
+
+impl Default for Partitioner {
+    fn default() -> Self {
+        Partitioner::Hash
+    }
+}
+
+impl Partitioner {
+    /// Default hot-key threshold: a key is hot when its profile weight
+    /// exceeds this multiple of the mean per-partition weight.
+    pub const DEFAULT_HOT_THRESHOLD: f64 = 2.0;
+    /// Default number of reducers a hot key is split across.
+    pub const DEFAULT_SPLIT_WAYS: usize = 4;
+
+    /// Parse a strategy name (the CLI/TOML/env surface).
+    pub fn parse(s: &str) -> Result<Partitioner, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "hash" => Ok(Partitioner::Hash),
+            "range" => Ok(Partitioner::Range { bounds: Vec::new() }),
+            "skew-aware" | "skewaware" | "skew" => {
+                Ok(Partitioner::SkewAware {
+                    hot_threshold: Self::DEFAULT_HOT_THRESHOLD,
+                    split_ways: Self::DEFAULT_SPLIT_WAYS,
+                })
+            }
+            other => Err(format!(
+                "unknown partitioner '{other}' \
+                 (expected hash | range | skew-aware)"
+            )),
+        }
+    }
+
+    /// Canonical strategy name (round-trips through [`parse`]).
+    ///
+    /// [`parse`]: Partitioner::parse
+    pub fn name(&self) -> &'static str {
+        match self {
+            Partitioner::Hash => "hash",
+            Partitioner::Range { .. } => "range",
+            Partitioner::SkewAware { .. } => "skew-aware",
+        }
+    }
+}
+
+/// One plan-time-detected hot key and how many ways it is spread.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HotKey {
+    pub key: u64,
+    pub ways: u32,
+}
+
+/// Base routing of the plan (before hot-key spreading).
+#[derive(Clone, Debug, PartialEq)]
+enum PlanKind {
+    Hash,
+    Range { bounds: Vec<u64> },
+}
+
+/// A stage's frozen key→partition mapping, built by the driver after
+/// reducer sizing and handed to every `map_split` call. Pure data — a
+/// deterministic function of `(partitioner, workload, parts)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartitionPlan {
+    parts: usize,
+    kind: PlanKind,
+    /// Plan-time hot keys, sorted by key for binary search. Empty
+    /// unless the partitioner is `SkewAware` and the profile flagged
+    /// keys past the threshold.
+    hot: Vec<HotKey>,
+    /// Whether hot keys are actually spread (the workload's
+    /// `SplitMode` allows it and `parts > 1`). When false the plan
+    /// routes bit-for-bit like its base kind and only *reports* hot.
+    split: bool,
+}
+
+impl PartitionPlan {
+    /// The legacy plan: `key % parts`, no hot keys. What every test
+    /// helper wants when partitioning is not the thing under test.
+    pub fn hash(parts: usize) -> PartitionPlan {
+        PartitionPlan {
+            parts: parts.max(1),
+            kind: PlanKind::Hash,
+            hot: Vec::new(),
+            split: false,
+        }
+    }
+
+    /// Build the plan for a stage: profile + domain + split mode come
+    /// from the workload, `parts` from reducer sizing. The workload's
+    /// profile is analytic and scale-free, so the same plan can be
+    /// rebuilt anywhere (e.g. by a synthetic reduce path) from
+    /// `(cfg.partition, workload, parts)` alone.
+    pub fn build(
+        partitioner: &Partitioner,
+        wl: &dyn Workload,
+        input_bytes: u64,
+        parts: usize,
+        seed: u64,
+    ) -> PartitionPlan {
+        Self::from_profile(
+            partitioner,
+            &wl.key_profile(input_bytes, seed),
+            wl.key_domain(),
+            wl.split_mode(),
+            parts,
+        )
+    }
+
+    /// The pure core of [`build`](PartitionPlan::build), unit-testable
+    /// without a workload.
+    pub fn from_profile(
+        partitioner: &Partitioner,
+        profile: &[(u64, u64)],
+        key_domain: u64,
+        split_mode: SplitMode,
+        parts: usize,
+    ) -> PartitionPlan {
+        let parts = parts.max(1);
+        match partitioner {
+            Partitioner::Hash => PartitionPlan::hash(parts),
+            Partitioner::Range { bounds } => {
+                let bounds = if !bounds.is_empty() {
+                    let mut b = bounds.clone();
+                    b.sort_unstable();
+                    b.truncate(parts.saturating_sub(1));
+                    b
+                } else if key_domain as u128 >= parts as u128 {
+                    // Uniform cut points over the declared key domain.
+                    let width = key_domain / parts as u64;
+                    (1..parts).map(|i| i as u64 * width).collect()
+                } else {
+                    // Unknown (or degenerate) domain: degrade to hash
+                    // routing rather than piling every key on p0.
+                    return PartitionPlan::hash(parts);
+                };
+                PartitionPlan {
+                    parts,
+                    kind: PlanKind::Range { bounds },
+                    hot: Vec::new(),
+                    split: false,
+                }
+            }
+            Partitioner::SkewAware { hot_threshold, split_ways } => {
+                let total: u128 =
+                    profile.iter().map(|(_, w)| *w as u128).sum();
+                let ways = (*split_ways).clamp(2, parts) as u32;
+                let mut hot: Vec<HotKey> = Vec::new();
+                if total > 0 && parts > 1 {
+                    let mean = total as f64 / parts as f64;
+                    let cut = hot_threshold.max(0.0) * mean;
+                    for &(key, w) in profile {
+                        if w as f64 > cut {
+                            hot.push(HotKey { key, ways });
+                        }
+                    }
+                    hot.sort_unstable_by_key(|h| h.key);
+                }
+                PartitionPlan {
+                    parts,
+                    kind: PlanKind::Hash,
+                    split: split_mode != SplitMode::None
+                        && parts > 1
+                        && !hot.is_empty(),
+                    hot,
+                }
+            }
+        }
+    }
+
+    /// Reducer count this plan routes into.
+    pub fn parts(&self) -> usize {
+        self.parts
+    }
+
+    /// Base route for `key` — ignores hot-key spreading. `Hash` plans
+    /// reproduce the legacy `key % parts` bit-for-bit.
+    pub fn route(&self, key: u64) -> usize {
+        match &self.kind {
+            PlanKind::Hash => (key % self.parts as u64) as usize,
+            PlanKind::Range { bounds } => {
+                bounds.partition_point(|b| *b <= key).min(self.parts - 1)
+            }
+        }
+    }
+
+    /// Route with hot-key spreading: a split hot key lands on one of
+    /// its `ways` consecutive partitions, chosen by `salt`. Callers
+    /// must derive `salt` from record *content* (or a per-task RNG) so
+    /// routing is independent of split boundaries and worker counts.
+    /// Non-hot keys (and non-splitting plans) route like [`route`].
+    ///
+    /// [`route`]: PartitionPlan::route
+    pub fn route_salted(&self, key: u64, salt: u64) -> usize {
+        let w = self.ways(key);
+        if w <= 1 {
+            return self.route(key);
+        }
+        (self.route(key) + (salt % w as u64) as usize) % self.parts
+    }
+
+    /// How many partitions `key` is spread across (1 unless the plan
+    /// splits and the key is hot).
+    pub fn ways(&self, key: u64) -> usize {
+        if !self.split {
+            return 1;
+        }
+        match self.hot.binary_search_by_key(&key, |h| h.key) {
+            Ok(i) => self.hot[i].ways as usize,
+            Err(_) => 1,
+        }
+    }
+
+    /// The `i`-th partition of `key`'s spread (`i < ways(key)`). A
+    /// build side replicating a hot key emits one copy per way.
+    pub fn route_way(&self, key: u64, i: usize) -> usize {
+        (self.route(key) + i) % self.parts
+    }
+
+    /// Hot keys the plan actually spreads (reported as
+    /// `JobResult::hot_keys_split`). Zero when the workload cannot
+    /// split or the partitioner is not skew-aware.
+    pub fn hot_keys_split(&self) -> u64 {
+        if self.split {
+            self.hot.len() as u64
+        } else {
+            0
+        }
+    }
+
+    /// Hot keys detected at plan time, split or not.
+    pub fn hot_keys_detected(&self) -> u64 {
+        self.hot.len() as u64
+    }
+}
+
+/// Content-derived routing salt for hot-key spreading: FNV-1a over the
+/// record bytes, so a record routes identically wherever (and by
+/// whichever worker) it is mapped.
+pub fn record_salt(record: &[u8]) -> u64 {
+    crate::util::hash::fnv1a64(record)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips() {
+        for name in ["hash", "range", "skew-aware"] {
+            let p = Partitioner::parse(name).unwrap();
+            assert_eq!(p.name(), name);
+        }
+        assert_eq!(
+            Partitioner::parse("SKEW").unwrap().name(),
+            "skew-aware"
+        );
+        assert!(Partitioner::parse("modulo").is_err());
+        assert_eq!(Partitioner::default(), Partitioner::Hash);
+    }
+
+    #[test]
+    fn hash_plan_is_legacy_modulo() {
+        let plan = PartitionPlan::hash(7);
+        for key in 0..200u64 {
+            assert_eq!(plan.route(key), (key % 7) as usize);
+            assert_eq!(plan.route_salted(key, 0xDEAD), plan.route(key));
+            assert_eq!(plan.ways(key), 1);
+        }
+        assert_eq!(plan.hot_keys_split(), 0);
+        // parts 0 clamps to 1 instead of dividing by zero.
+        assert_eq!(PartitionPlan::hash(0).parts(), 1);
+    }
+
+    #[test]
+    fn range_routes_by_cut_points() {
+        let p = Partitioner::Range { bounds: vec![10, 20] };
+        let plan = PartitionPlan::from_profile(
+            &p, &[], 0, SplitMode::None, 3,
+        );
+        assert_eq!(plan.route(0), 0);
+        assert_eq!(plan.route(9), 0);
+        assert_eq!(plan.route(10), 1);
+        assert_eq!(plan.route(19), 1);
+        assert_eq!(plan.route(20), 2);
+        assert_eq!(plan.route(u64::MAX), 2);
+    }
+
+    #[test]
+    fn range_derives_uniform_bounds_from_domain() {
+        let p = Partitioner::Range { bounds: vec![] };
+        let plan = PartitionPlan::from_profile(
+            &p, &[], 100, SplitMode::None, 4,
+        );
+        assert_eq!(plan.route(0), 0);
+        assert_eq!(plan.route(24), 0);
+        assert_eq!(plan.route(25), 1);
+        assert_eq!(plan.route(99), 3);
+        // Every partition is reachable.
+        let mut seen = vec![false; 4];
+        for k in 0..100 {
+            seen[plan.route(k)] = true;
+        }
+        assert!(seen.iter().all(|s| *s));
+    }
+
+    #[test]
+    fn range_with_unknown_domain_degrades_to_hash() {
+        let p = Partitioner::Range { bounds: vec![] };
+        let plan = PartitionPlan::from_profile(
+            &p, &[], 0, SplitMode::None, 5,
+        );
+        for key in 0..100u64 {
+            assert_eq!(plan.route(key), (key % 5) as usize);
+        }
+    }
+
+    #[test]
+    fn skew_detects_and_spreads_hot_keys() {
+        let p = Partitioner::SkewAware { hot_threshold: 2.0, split_ways: 3 };
+        // total 100 over 4 parts → mean 25, cut 50: only key 0 is hot.
+        let profile = [(0u64, 80u64), (1, 10), (2, 5), (3, 5)];
+        let plan = PartitionPlan::from_profile(
+            &p, &profile, 0, SplitMode::Independent, 4,
+        );
+        assert_eq!(plan.hot_keys_split(), 1);
+        assert_eq!(plan.hot_keys_detected(), 1);
+        assert_eq!(plan.ways(0), 3);
+        assert_eq!(plan.ways(1), 1);
+        // The spread stays inside the 3 consecutive ways off route(0).
+        let base = plan.route(0);
+        for salt in 0..64u64 {
+            let j = plan.route_salted(0, salt);
+            let off = (j + 4 - base) % 4;
+            assert!(off < 3, "salt {salt} landed {off} ways out");
+        }
+        // All 3 ways are actually used.
+        let used: std::collections::HashSet<usize> =
+            (0..64).map(|s| plan.route_salted(0, s)).collect();
+        assert_eq!(used.len(), 3);
+        // route_way enumerates exactly the spread.
+        for i in 0..3 {
+            assert_eq!(plan.route_way(0, i), (base + i) % 4);
+        }
+        // Cold keys still route like hash.
+        assert_eq!(plan.route_salted(3, 99), plan.route(3));
+    }
+
+    #[test]
+    fn skew_on_unsplittable_workload_is_hash_bit_for_bit() {
+        let p = Partitioner::SkewAware { hot_threshold: 2.0, split_ways: 4 };
+        let profile = [(0u64, 90u64), (1, 10)];
+        let plan = PartitionPlan::from_profile(
+            &p, &profile, 0, SplitMode::None, 4,
+        );
+        let hash = PartitionPlan::hash(4);
+        for key in 0..64u64 {
+            for salt in 0..8u64 {
+                assert_eq!(
+                    plan.route_salted(key, salt),
+                    hash.route_salted(key, salt)
+                );
+            }
+            assert_eq!(plan.ways(key), 1);
+        }
+        // Detected but not split: the report still sees the hot key.
+        assert_eq!(plan.hot_keys_detected(), 1);
+        assert_eq!(plan.hot_keys_split(), 0);
+    }
+
+    #[test]
+    fn skew_edge_cases_are_inert() {
+        let p = Partitioner::SkewAware { hot_threshold: 2.0, split_ways: 4 };
+        // Empty profile, single partition, uniform profile: no hot.
+        for (profile, parts) in [
+            (vec![], 8usize),
+            (vec![(0u64, 100u64)], 1),
+            (vec![(0, 25), (1, 25), (2, 25), (3, 25)], 4),
+        ] {
+            let plan = PartitionPlan::from_profile(
+                &p, &profile, 0, SplitMode::Independent, parts,
+            );
+            assert_eq!(plan.hot_keys_split(), 0, "{profile:?}");
+        }
+    }
+
+    #[test]
+    fn record_salt_is_content_deterministic() {
+        assert_eq!(record_salt(b"row-a"), record_salt(b"row-a"));
+        assert_ne!(record_salt(b"row-a"), record_salt(b"row-b"));
+    }
+}

@@ -23,6 +23,7 @@ use crate::sim::SimNs;
 
 use super::driver::{run_stage, Cluster, StageInput};
 use super::shuffle::output_key;
+use super::partition::Partitioner;
 use super::types::{HandoffStats, JobResult, SystemConfig};
 use super::workload::Workload;
 
@@ -50,6 +51,11 @@ pub struct PipelineResult {
     /// Per-stage reports, in stage order (checkpoint-skipped stages
     /// appear as empty reports carrying only `output_bytes`).
     pub stages: Vec<JobResult>,
+    /// Per-stage merge reports: `Some` when a skew-split stage needed
+    /// its unifier run as an appended merge stage (restored merge
+    /// stages appear as empty reports carrying only `output_bytes`),
+    /// `None` for the common unsplit case.
+    pub merges: Vec<Option<JobResult>>,
     /// Whether each stage was restored from its checkpoint.
     pub restored: Vec<bool>,
     /// Stage-handoff tier resolution, summed over executed stages.
@@ -73,26 +79,57 @@ impl PipelineResult {
     pub fn final_stage(&self) -> Option<&JobResult> {
         self.stages.last()
     }
+
+    /// The report whose outputs a consumer of the pipeline would read:
+    /// the last stage's merge when one ran, the stage itself otherwise.
+    pub fn final_output(&self) -> Option<&JobResult> {
+        match self.merges.last() {
+            Some(Some(m)) => Some(m),
+            _ => self.stages.last(),
+        }
+    }
 }
 
-const CP_MAGIC: &[u8; 4] = b"MPL1";
+const CP_MAGIC: &[u8; 4] = b"MPL2";
 
-/// Checkpoint payload: magic, reducer count, total output bytes.
-fn encode_checkpoint(n_reduces: usize, output_bytes: u64) -> Vec<u8> {
-    let mut v = Vec::with_capacity(16);
+/// Checkpoint payload v2: magic, reducer count, total output bytes,
+/// merge flag + the merge stage's reducer count and output bytes (all
+/// zero when the stage's partition plan split nothing). v1 ("MPL1")
+/// checkpoints fail the magic check and simply re-execute — the
+/// determinism contract makes the rewrite byte-identical.
+fn encode_checkpoint(
+    n_reduces: usize,
+    output_bytes: u64,
+    merge: Option<(usize, u64)>,
+) -> Vec<u8> {
+    let mut v = Vec::with_capacity(29);
     v.extend_from_slice(CP_MAGIC);
     v.extend_from_slice(&(n_reduces as u32).to_le_bytes());
     v.extend_from_slice(&output_bytes.to_le_bytes());
+    v.push(merge.is_some() as u8);
+    let (mn, mb) = merge.unwrap_or((0, 0));
+    v.extend_from_slice(&(mn as u32).to_le_bytes());
+    v.extend_from_slice(&mb.to_le_bytes());
     v
 }
 
-fn decode_checkpoint(partial: &[u8]) -> Option<(usize, u64)> {
-    if partial.len() != 16 || &partial[..4] != CP_MAGIC {
+type Checkpoint = (usize, u64, Option<(usize, u64)>);
+
+fn decode_checkpoint(partial: &[u8]) -> Option<Checkpoint> {
+    if partial.len() != 29 || &partial[..4] != CP_MAGIC {
         return None;
     }
     let n = u32::from_le_bytes(partial[4..8].try_into().unwrap()) as usize;
     let bytes = u64::from_le_bytes(partial[8..16].try_into().unwrap());
-    Some((n, bytes))
+    let merge = match partial[16] {
+        0 => None,
+        _ => Some((
+            u32::from_le_bytes(partial[17..21].try_into().unwrap())
+                as usize,
+            u64::from_le_bytes(partial[21..29].try_into().unwrap()),
+        )),
+    };
+    Some((n, bytes, merge))
 }
 
 impl<'a> JobPipeline<'a> {
@@ -148,6 +185,7 @@ impl<'a> JobPipeline<'a> {
         let cp0 = cluster.stores.igfs.state.checkpoints;
         let rs0 = cluster.stores.igfs.state.restores;
         let mut stages_out = Vec::new();
+        let mut merges: Vec<Option<JobResult>> = Vec::new();
         let mut restored = Vec::new();
         let mut handoff = HandoffStats::default();
         let mut prev: Option<(String, usize)> = None;
@@ -157,22 +195,37 @@ impl<'a> JobPipeline<'a> {
             let job = self.stage_job(k);
             // Resume: a decodable checkpoint whose outputs are still
             // fully resolvable lets the whole stage be skipped.
+            let mjob = format!("{job}/m");
             let cp = cluster
                 .stores
                 .igfs
                 .state
                 .peek(&self.name, k as u32)
                 .and_then(|ts| decode_checkpoint(&ts.partial));
-            if let Some((nr, out_bytes)) = cp {
+            if let Some((nr, out_bytes, merge)) = cp {
+                // Downstream consumers read the *final* outputs — the
+                // merge stage's when one ran — so those are what must
+                // still resolve for the checkpoint to be trusted.
+                let (fjob, fnr, fbytes) = match merge {
+                    Some((mn, mb)) => (mjob.clone(), mn, mb),
+                    None => (job.clone(), nr, out_bytes),
+                };
                 let avail =
-                    Self::available_output_bytes(cluster, &job, nr);
-                if avail == out_bytes {
+                    Self::available_output_bytes(cluster, &fjob, fnr);
+                if avail == fbytes {
                     cluster.stores.igfs.state.restore(&self.name, k as u32);
                     let mut jr = JobResult::empty(&job, &st.cfg.name);
                     jr.output_bytes = out_bytes;
+                    jr.reduce.tasks = nr;
                     stages_out.push(jr);
+                    merges.push(merge.map(|(mn, mb)| {
+                        let mut m = JobResult::empty(&mjob, &st.cfg.name);
+                        m.output_bytes = mb;
+                        m.reduce.tasks = mn;
+                        m
+                    }));
                     restored.push(true);
-                    prev = Some((job, nr));
+                    prev = Some((fjob, fnr));
                     continue;
                 }
             }
@@ -192,8 +245,46 @@ impl<'a> JobPipeline<'a> {
             {
                 Ok(jr) => {
                     handoff.add(&jr.handoff);
-                    // Record completion; any prior (now-invalid)
-                    // checkpoint is superseded by a higher attempt.
+                    // Skew-split stages owe a merge: the plan spread
+                    // hot keys across reducers, so a key's partial
+                    // aggregates sit on several of them — the
+                    // workload's unifier re-unifies in one extra
+                    // hash-partitioned stage over this stage's
+                    // outputs. Unsplit runs skip this entirely.
+                    let merge = match (jr.hot_keys_split, st.wl.unifier()) {
+                        (n, Some(uw)) if n > 0 => {
+                            let mut mcfg = st.cfg.clone();
+                            mcfg.partition = Partitioner::Hash;
+                            let m_in = StageInput::Handoff {
+                                keys: (0..jr.reduce.tasks)
+                                    .map(|j| output_key(&job, j))
+                                    .collect(),
+                            };
+                            match run_stage(cluster, &mcfg, uw, &mjob,
+                                            m_in, rt, seed)
+                            {
+                                Ok(mr) => {
+                                    handoff.add(&mr.handoff);
+                                    Some(mr)
+                                }
+                                Err(e) => {
+                                    failed = Some(format!(
+                                        "stage {k} merge ({}): {e}",
+                                        uw.name()
+                                    ));
+                                    stages_out.push(jr);
+                                    merges.push(None);
+                                    restored.push(false);
+                                    break;
+                                }
+                            }
+                        }
+                        _ => None,
+                    };
+                    // Record completion (covering the merge, which
+                    // must re-run with the stage if either is lost);
+                    // any prior (now-invalid) checkpoint is superseded
+                    // by a higher attempt.
                     let att = cluster
                         .stores
                         .igfs
@@ -201,20 +292,32 @@ impl<'a> JobPipeline<'a> {
                         .peek(&self.name, k as u32)
                         .map(|p| p.attempt + 1)
                         .unwrap_or(self.attempt);
+                    let m_info = merge
+                        .as_ref()
+                        .map(|m| (m.reduce.tasks, m.output_bytes));
                     if let Err(e) = cluster.stores.igfs.state.checkpoint(
                         &self.name,
                         k as u32,
                         att,
                         jr.output_bytes,
-                        encode_checkpoint(jr.reduce.tasks, jr.output_bytes),
+                        encode_checkpoint(
+                            jr.reduce.tasks,
+                            jr.output_bytes,
+                            m_info,
+                        ),
                     ) {
                         failed = Some(format!("stage {k} checkpoint: {e}"));
                         stages_out.push(jr);
+                        merges.push(merge);
                         restored.push(false);
                         break;
                     }
-                    prev = Some((job, jr.reduce.tasks));
+                    prev = Some(match &merge {
+                        Some(m) => (mjob.clone(), m.reduce.tasks),
+                        None => (job.clone(), jr.reduce.tasks),
+                    });
                     stages_out.push(jr);
+                    merges.push(merge);
                     restored.push(false);
                 }
                 Err(e) => {
@@ -228,6 +331,7 @@ impl<'a> JobPipeline<'a> {
         PipelineResult {
             name: self.name.clone(),
             stages: stages_out,
+            merges,
             restored,
             handoff,
             igfs: now.delta_since(&igfs0),
@@ -245,12 +349,21 @@ mod tests {
 
     #[test]
     fn checkpoint_roundtrip() {
-        let enc = encode_checkpoint(32, 123_456);
-        assert_eq!(decode_checkpoint(&enc), Some((32, 123_456)));
+        let enc = encode_checkpoint(32, 123_456, None);
+        assert_eq!(decode_checkpoint(&enc), Some((32, 123_456, None)));
         assert_eq!(decode_checkpoint(&enc[..8]), None);
         let mut bad = enc.clone();
         bad[0] = b'X';
         assert_eq!(decode_checkpoint(&bad), None);
+        // Merged form carries the appended stage's shape too.
+        let m = encode_checkpoint(8, 999, Some((4, 777)));
+        assert_eq!(m.len(), enc.len(), "fixed 29-byte frame");
+        assert_eq!(decode_checkpoint(&m), Some((8, 999, Some((4, 777)))));
+        // A v1 (16-byte "MPL1") frame fails cleanly → stage re-runs.
+        let mut v1 = b"MPL1".to_vec();
+        v1.extend_from_slice(&32u32.to_le_bytes());
+        v1.extend_from_slice(&123u64.to_le_bytes());
+        assert_eq!(decode_checkpoint(&v1), None);
     }
 
     #[test]

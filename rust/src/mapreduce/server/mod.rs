@@ -164,6 +164,12 @@ pub struct TenantReport {
     /// read node-locally over all placed input bytes (0.0 when the
     /// tenant moved no input bytes).
     pub locality_ratio: f64,
+    /// Worst shuffle imbalance among the tenant's stages (max of the
+    /// per-stage p99/median partition-bytes coefficients; 1.0 = even).
+    pub partition_skew: f64,
+    /// Hot keys partition plans split across reducers, summed over the
+    /// tenant's stages.
+    pub hot_keys_split: u64,
     /// IGFS cache activity attributed to this tenant's planning —
     /// including evictions it inflicted on co-tenants under pressure.
     pub igfs: CacheStats,
@@ -421,6 +427,8 @@ impl<'a> JobServer<'a> {
                     degraded_reads: 0,
                     affinity_hits: 0,
                     locality_ratio: 0.0,
+                    partition_skew: 1.0,
+                    hot_keys_split: 0,
                     igfs: CacheStats::default(),
                 };
                 // Byte-weighted locality across stages: a stage's ratio
@@ -445,6 +453,9 @@ impl<'a> JobServer<'a> {
                         rep.flow_timeouts += s.flow_timeouts;
                         rep.degraded_reads += s.degraded_reads;
                         rep.affinity_hits += s.affinity_hits;
+                        rep.partition_skew =
+                            rep.partition_skew.max(s.partition_skew);
+                        rep.hot_keys_split += s.hot_keys_split;
                         local_bytes +=
                             s.locality_ratio * s.input_bytes as f64;
                         placed_bytes += s.input_bytes as f64;

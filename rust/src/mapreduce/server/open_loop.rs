@@ -469,6 +469,10 @@ fn tenant_report(
         spec_backup_wins: jr.spec_backup_wins,
         flow_timeouts: jr.flow_timeouts,
         degraded_reads: jr.degraded_reads,
+        affinity_hits: jr.affinity_hits,
+        locality_ratio: jr.locality_ratio,
+        partition_skew: jr.partition_skew,
+        hot_keys_split: jr.hot_keys_split,
         igfs,
     }
 }

@@ -55,16 +55,42 @@ pub struct Stores {
     /// views) — the recompute source of last resort when *every*
     /// storage tier lost a sole-copy key.
     scratch: HashMap<String, Payload>,
+    /// Per-partition shuffle-byte tallies for the stage currently
+    /// being planned (reset by [`Stores::begin_partition_tally`]).
+    /// The driver folds every intermediate write into this histogram
+    /// and summarizes it as `JobResult::partition_skew`.
+    partition_tally: Vec<u64>,
 }
 
 /// Key for one mapper's output for one partition.
 pub fn interm_key(job: &str, map: usize, part: usize) -> String {
-    format!("{job}/shuffle/m{map:05}/p{part:03}")
+    let mut s = String::new();
+    interm_key_into(&mut s, job, map, part);
+    s
+}
+
+/// Format [`interm_key`] into a caller-owned buffer (cleared first).
+/// The driver's shuffle loops run `n_maps × n_reduces` key formats per
+/// stage; reusing one buffer keeps that hot path allocation-free
+/// (regression lane: `key_format_reuse_ns` in the micro_hotpath bench).
+pub fn interm_key_into(buf: &mut String, job: &str, map: usize, part: usize) {
+    use std::fmt::Write as _;
+    buf.clear();
+    let _ = write!(buf, "{job}/shuffle/m{map:05}/p{part:03}");
 }
 
 /// Key for one reducer's final output.
 pub fn output_key(job: &str, part: usize) -> String {
-    format!("{job}/out/p{part:03}")
+    let mut s = String::new();
+    output_key_into(&mut s, job, part);
+    s
+}
+
+/// Format [`output_key`] into a caller-owned buffer (cleared first).
+pub fn output_key_into(buf: &mut String, job: &str, part: usize) {
+    use std::fmt::Write as _;
+    buf.clear();
+    let _ = write!(buf, "{job}/out/p{part:03}");
 }
 
 /// Which store a key resolved in, probing the stage-handoff chain in
@@ -87,7 +113,29 @@ impl Stores {
             write_through: false,
             interm_len: HashMap::new(),
             scratch: HashMap::new(),
+            partition_tally: Vec::new(),
         }
+    }
+
+    /// Reset the per-partition byte tallies for a stage with `parts`
+    /// reduce partitions. Tallies are a pure planning statistic: they
+    /// touch no store state and disturb no cache statistics.
+    pub fn begin_partition_tally(&mut self, parts: usize) {
+        self.partition_tally.clear();
+        self.partition_tally.resize(parts, 0);
+    }
+
+    /// Fold one intermediate write of `len` bytes into partition `j`'s
+    /// tally (out-of-range partitions are ignored defensively).
+    pub fn tally_partition(&mut self, j: usize, len: u64) {
+        if let Some(t) = self.partition_tally.get_mut(j) {
+            *t += len;
+        }
+    }
+
+    /// The per-partition shuffle-byte histogram of the current stage.
+    pub fn partition_tallies(&self) -> &[u64] {
+        &self.partition_tally
     }
 
     /// Probe the handoff resolution chain (IGFS tiers → HDFS → S3) for
@@ -599,5 +647,32 @@ mod tests {
         let b = interm_key("j", 2, 1);
         assert_ne!(a, b);
         assert_ne!(output_key("j", 0), output_key("j", 1));
+    }
+
+    #[test]
+    fn key_into_matches_alloc_form_and_reuses_buffer() {
+        let mut buf = String::with_capacity(64);
+        for (map, part) in [(0usize, 0usize), (2, 3), (99999, 999)] {
+            interm_key_into(&mut buf, "j", map, part);
+            assert_eq!(buf, interm_key("j", map, part));
+        }
+        // The buffer is cleared per call, never appended to.
+        output_key_into(&mut buf, "job", 7);
+        assert_eq!(buf, output_key("job", 7));
+        assert_eq!(buf, "job/out/p007");
+    }
+
+    #[test]
+    fn partition_tallies_accumulate_and_reset() {
+        let (_e, _t, mut s) = setup();
+        assert!(s.partition_tallies().is_empty());
+        s.begin_partition_tally(3);
+        s.tally_partition(0, 10);
+        s.tally_partition(2, 5);
+        s.tally_partition(2, 5);
+        s.tally_partition(99, 1_000_000); // out of range: ignored
+        assert_eq!(s.partition_tallies(), &[10, 0, 10]);
+        s.begin_partition_tally(2);
+        assert_eq!(s.partition_tallies(), &[0, 0]);
     }
 }

@@ -15,6 +15,7 @@ use crate::sim::SimNs;
 use crate::util::bytes::{GIB, MIB};
 use crate::yarn::PlacementStrategy;
 
+use super::partition::Partitioner;
 use super::server::arrivals::ArrivalConfig;
 
 /// Speculative-execution policy (Hadoop-style backup attempts): when a
@@ -175,6 +176,13 @@ pub struct SystemConfig {
     /// only *which node* a task lands on; outputs are byte-identical
     /// under any strategy (pinned by the placement property test).
     pub placement: PlacementStrategy,
+    /// Key→partition routing policy (`mapreduce::partition`). `Hash`
+    /// by default — the legacy `key % parts` modulo bit-for-bit.
+    /// Partitioners steer only *which reducer* a key's bytes land on;
+    /// job outputs stay canonically identical under any of them
+    /// (pinned by the partitioner property test), and per-partition
+    /// bytes are pinned within a fixed partitioner.
+    pub partition: Partitioner,
 }
 
 /// Parse one worker-count override value (the pure half of `from_env`,
@@ -253,6 +261,17 @@ impl SystemConfig {
         {
             cfg.placement = strategy;
         }
+        // Partitioner sweep axis, same rationale: any partitioner is
+        // safe to force globally because routing moves bytes only
+        // *between reducers* — canonical job outputs cannot change
+        // (and `SkewAware` is hash-identical on workloads that declare
+        // no splittable profile, i.e. the whole legacy suite).
+        if let Some(p) = std::env::var("MARVEL_PARTITIONER")
+            .ok()
+            .and_then(|s| Partitioner::parse(&s).ok())
+        {
+            cfg.partition = p;
+        }
         cfg
     }
 
@@ -300,6 +319,7 @@ impl SystemConfig {
             arrivals: ArrivalConfig::default(),
             autoscale: AutoscaleConfig::default(),
             placement: PlacementStrategy::default(),
+            partition: Partitioner::Hash,
         }
         .from_env()
     }
@@ -331,6 +351,7 @@ impl SystemConfig {
             arrivals: ArrivalConfig::default(),
             autoscale: AutoscaleConfig::default(),
             placement: PlacementStrategy::default(),
+            partition: Partitioner::Hash,
         }
         .from_env()
     }
@@ -401,6 +422,7 @@ impl SystemConfig {
             arrivals: ArrivalConfig::default(),
             autoscale: AutoscaleConfig::default(),
             placement: PlacementStrategy::default(),
+            partition: Partitioner::Hash,
         }
         .from_env()
     }
@@ -506,6 +528,16 @@ pub struct JobResult {
     /// strategies drive it toward the task count, Random reads as the
     /// luck baseline.
     pub affinity_hits: u64,
+    /// Shuffle balance: p99/median of per-partition intermediate bytes
+    /// (`util::stats::skew_coefficient`). 1.0 = perfectly even (also
+    /// the degenerate no-shuffle report); `SkewAware` plans exist to
+    /// pull this toward 1 on skewed workloads.
+    pub partition_skew: f64,
+    /// Hot keys the stage's partition plan spread across reducers
+    /// (0 under `Hash`/`Range`, or when nothing crossed the skew
+    /// threshold). Nonzero on a `Mergeable` workload is what makes a
+    /// pipeline append the merge stage.
+    pub hot_keys_split: u64,
 }
 
 impl JobResult {
@@ -539,6 +571,8 @@ impl JobResult {
             flow_timeouts: 0,
             degraded_reads: 0,
             affinity_hits: 0,
+            partition_skew: 1.0,
+            hot_keys_split: 0,
         }
     }
 
@@ -667,6 +701,11 @@ mod tests {
                     "{}",
                     cfg.name
                 );
+            }
+            // Same for partitioning: legacy hash modulo unless CI's
+            // MARVEL_PARTITIONER column (or a config) overrides it.
+            if std::env::var("MARVEL_PARTITIONER").is_err() {
+                assert_eq!(cfg.partition, Partitioner::Hash, "{}", cfg.name);
             }
         }
         assert!(SpeculationConfig::on().enabled);

@@ -9,6 +9,7 @@ use crate::runtime::RtEngine;
 use crate::storage::Payload;
 use crate::util::rng::Rng;
 
+use super::partition::{PartitionPlan, SplitMode};
 use super::types::SystemConfig;
 
 /// Output of one map task.
@@ -45,11 +46,14 @@ pub trait Workload: Sync {
     fn generate_input(&self, bytes: u64, materialize: bool, rng: &mut Rng)
         -> Payload;
 
-    /// Map one split into per-partition intermediate payloads.
+    /// Map one split into per-partition intermediate payloads,
+    /// routing every emitted key through `plan` (`plan.parts()` is the
+    /// reducer count; a [`PartitionPlan::hash`] plan reproduces the
+    /// historical `key % parts` bit-for-bit).
     fn map_split(
         &self,
         split: &Payload,
-        parts: usize,
+        plan: &PartitionPlan,
         cfg: &SystemConfig,
         rt: &mut RtEngine,
         rng: &mut Rng,
@@ -72,6 +76,36 @@ pub trait Workload: Sync {
 
     /// Modeled reduce compute throughput (bytes of intermediate/s).
     fn reduce_rate(&self) -> f64;
+
+    /// Analytic key-weight distribution `(key, weight)` the planner
+    /// feeds skew detection: deterministic, scale-free (only relative
+    /// weights matter), and independent of materialization mode — e.g.
+    /// the Zipf pmf a table generator samples fact keys from. The
+    /// default (empty) means "no profile": skew-aware planning finds
+    /// nothing hot and routes exactly like hash.
+    fn key_profile(&self, _input_bytes: u64, _seed: u64) -> Vec<(u64, u64)> {
+        Vec::new()
+    }
+
+    /// Size of the routed key space, for range planning (`0` =
+    /// unknown/unbounded, which degrades `Range` to hash routing).
+    fn key_domain(&self) -> u64 {
+        0
+    }
+
+    /// Whether a skew-aware plan may spread one key's records across
+    /// several reducers. Defaults to [`SplitMode::None`]: safe for any
+    /// workload whose reduce needs all records of a key together.
+    fn split_mode(&self) -> SplitMode {
+        SplitMode::None
+    }
+
+    /// The merge workload that re-unifies partial aggregates after a
+    /// [`SplitMode::Mergeable`] stage split hot keys. `JobPipeline`
+    /// appends it as an extra stage when `hot_keys_split > 0`.
+    fn unifier(&self) -> Option<&dyn Workload> {
+        None
+    }
 }
 
 /// Deterministic per-task RNG derivation.

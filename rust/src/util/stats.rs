@@ -129,6 +129,54 @@ pub struct PercentileSummary {
     pub p999: f64,
 }
 
+/// Skew coefficient of a partition-bytes histogram: p99 / median
+/// (nearest-rank), the number `JobResult::partition_skew` reports.
+///
+/// Edge semantics: an empty histogram, a single partition, and an
+/// all-equal spread are all "no skew" — 1.0 — except the degenerate
+/// all-zero histogram (median 0), which also reports 1.0 rather than
+/// a division blow-up. A perfectly balanced shuffle therefore reads
+/// exactly 1.0 and a viral-key shuffle reads ≫ 1.
+pub fn skew_coefficient(partition_bytes: &[u64]) -> f64 {
+    if partition_bytes.len() <= 1 {
+        return 1.0;
+    }
+    let mut p = Percentiles::new();
+    for &b in partition_bytes {
+        p.push(b as f64);
+    }
+    let med = p.p50();
+    if med <= 0.0 {
+        return 1.0;
+    }
+    p.p99() / med
+}
+
+/// Gini coefficient of a partition-bytes histogram in [0, 1):
+/// 0 = perfectly balanced, →1 = one partition carries everything.
+/// Empty, single-partition, and all-zero histograms report 0.0.
+pub fn gini(partition_bytes: &[u64]) -> f64 {
+    let n = partition_bytes.len();
+    if n <= 1 {
+        return 0.0;
+    }
+    let total: u128 = partition_bytes.iter().map(|&b| b as u128).sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let mut xs: Vec<u64> = partition_bytes.to_vec();
+    xs.sort_unstable();
+    // G = (2 Σ_i i·x_i) / (n Σ x) − (n + 1) / n, with i 1-based over
+    // the ascending sort.
+    let weighted: u128 = xs
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| (i as u128 + 1) * x as u128)
+        .sum();
+    (2.0 * weighted as f64) / (n as f64 * total as f64)
+        - (n as f64 + 1.0) / n as f64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -206,6 +254,44 @@ mod tests {
         }
         assert_eq!(p.p999(), 999.0);
         assert_eq!(p.quantile(1.0), 1000.0);
+    }
+
+    #[test]
+    fn skew_coefficient_edge_cases() {
+        // Empty, single-partition, all-equal, and all-zero histograms
+        // all read "no skew".
+        assert_eq!(skew_coefficient(&[]), 1.0);
+        assert_eq!(skew_coefficient(&[123]), 1.0);
+        assert_eq!(skew_coefficient(&[7, 7, 7, 7]), 1.0);
+        assert_eq!(skew_coefficient(&[0, 0, 0]), 1.0);
+    }
+
+    #[test]
+    fn skew_coefficient_flags_viral_key() {
+        // 31 balanced partitions and one 100× whale: p99 picks the
+        // whale (rank 32 of 32), median stays in the mass.
+        let mut h = vec![10u64; 31];
+        h.push(1000);
+        let s = skew_coefficient(&h);
+        assert!((s - 100.0).abs() < 1e-9, "got {s}");
+        // Mild imbalance stays near 1.
+        let mild = skew_coefficient(&[9, 10, 10, 11]);
+        assert!(mild >= 1.0 && mild < 1.3, "got {mild}");
+    }
+
+    #[test]
+    fn gini_bounds_and_edges() {
+        assert_eq!(gini(&[]), 0.0);
+        assert_eq!(gini(&[42]), 0.0);
+        assert_eq!(gini(&[0, 0, 0, 0]), 0.0);
+        assert!(gini(&[5, 5, 5, 5]).abs() < 1e-12);
+        // One partition carries everything: G = (n−1)/n.
+        let g = gini(&[0, 0, 0, 100]);
+        assert!((g - 0.75).abs() < 1e-9, "got {g}");
+        // Order-invariant.
+        assert!((gini(&[1, 2, 3, 4]) - gini(&[4, 2, 1, 3])).abs() < 1e-12);
+        // Known closed form for 1..=4: G = 0.25.
+        assert!((gini(&[1, 2, 3, 4]) - 0.25).abs() < 1e-9);
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //! histogram fused in one PJRT execution).
 
 use crate::mapreduce::{
-    CombinerMode, MapOutput, ReduceOutput, SystemConfig, Workload,
+    CombinerMode, MapOutput, PartitionPlan, ReduceOutput, SystemConfig,
+    Workload,
 };
 use crate::runtime::{oracle, CombineScheme, RtEngine};
 use crate::storage::Payload;
@@ -139,21 +140,26 @@ impl Workload for Grep {
     fn map_split(
         &self,
         split: &Payload,
-        parts: usize,
+        plan: &PartitionPlan,
         cfg: &SystemConfig,
         rt: &mut RtEngine,
         _rng: &mut Rng,
     ) -> MapOutput {
+        let parts = plan.parts();
         match split.contiguous() {
             Some(text) => match cfg.combiner {
                 CombinerMode::Kernel => {
                     let (counts, _, tokens) = self.combine_text(&text, rt);
                     let b = self.scheme.buckets;
-                    // Scheme partitions fold onto reducers via p % parts.
+                    // Scheme partitions fold onto reducers through the
+                    // plan's route (hash plan = legacy `p % parts`),
+                    // ascending p either way.
                     let partitions = (0..parts)
                         .map(|j| {
                             let mut out = Vec::new();
-                            for p in (j..self.scheme.parts).step_by(parts) {
+                            for p in (0..self.scheme.parts)
+                                .filter(|p| plan.route(*p as u64) == j)
+                            {
                                 for (bucket, c) in counts[p * b..(p + 1) * b]
                                     .iter()
                                     .enumerate()
@@ -189,7 +195,7 @@ impl Workload for Grep {
                             continue;
                         }
                         let h = crate::util::hash::token_hash(w);
-                        let j = self.scheme.part(h) % parts;
+                        let j = plan.route(self.scheme.part(h) as u64);
                         let buf = &mut parts_bytes[j];
                         buf.extend_from_slice(&(w.len() as u16).to_le_bytes());
                         buf.extend_from_slice(w);
@@ -208,10 +214,11 @@ impl Workload for Grep {
                 let tokens = self.corpus.expected_tokens(split.len());
                 match cfg.combiner {
                     CombinerMode::Kernel => {
-                        let occ = crate::workloads::wordcount::fold_parts(
-                            &self.matching_occupied_per_part,
-                            parts,
-                        );
+                        let occ =
+                            crate::workloads::wordcount::fold_parts_plan(
+                                &self.matching_occupied_per_part,
+                                plan,
+                            );
                         MapOutput {
                             partitions: (0..parts)
                                 .map(|j| Payload::synthetic(occ[j] * 8))
@@ -238,9 +245,10 @@ impl Workload for Grep {
                                 total_mass += m;
                             }
                         }
-                        let mass = crate::workloads::wordcount::fold_parts(
-                            &mass, parts,
-                        );
+                        let mass =
+                            crate::workloads::wordcount::fold_parts_plan(
+                                &mass, plan,
+                            );
                         let partitions = (0..parts)
                             .map(|j| {
                                 Payload::synthetic(
@@ -286,19 +294,27 @@ impl Workload for Grep {
                 }
             }
         } else {
-            let records = crate::workloads::wordcount::fold_parts(
-                &self.matching_per_part, parts,
+            // Rebuild the (scale-free) plan the map side routed with so
+            // the synthetic fold lands on the same reducers.
+            let plan = PartitionPlan::build(&cfg.partition, self, 0, parts, 0);
+            let records = crate::workloads::wordcount::fold_parts_plan(
+                &self.matching_per_part, &plan,
             )[part];
             let bytes = match cfg.combiner {
                 CombinerMode::Kernel => {
-                    crate::workloads::wordcount::fold_parts(
-                        &self.matching_occupied_per_part, parts,
+                    crate::workloads::wordcount::fold_parts_plan(
+                        &self.matching_occupied_per_part, &plan,
                     )[part] * 12
                 }
                 CombinerMode::None => records * 14,
             };
             ReduceOutput { output: Payload::synthetic(bytes), records }
         }
+    }
+
+    /// Keys routed to reducers are scheme-partition indices.
+    fn key_domain(&self) -> u64 {
+        self.scheme.parts as u64
     }
 
     fn map_rate(&self) -> f64 {
@@ -355,8 +371,8 @@ mod tests {
         let mut rng = Rng::new(7);
         let text = g.corpus.generate(100_000, &mut rng);
         let cfg = SystemConfig::corral_lambda();
-        let mo = g.map_split(&Payload::real(text), 32, &cfg, &mut rt,
-                             &mut rng);
+        let mo = g.map_split(&Payload::real(text), &PartitionPlan::hash(32),
+                             &cfg, &mut rt, &mut rng);
         // Grep intermediate must be far smaller than wordcount's
         // all-tokens intermediate.
         assert!(mo.total_bytes() < 100_000 * 3,
@@ -369,11 +385,12 @@ mod tests {
         let mut rng = Rng::new(11);
         let cfg = SystemConfig::marvel_igfs();
         let bytes = 400_000u64;
+        let plan = PartitionPlan::hash(32);
         let real = g.map_split(
             &Payload::real(g.corpus.generate(bytes, &mut rng)),
-            32, &cfg, &mut rt, &mut rng,
+            &plan, &cfg, &mut rt, &mut rng,
         );
-        let synth = g.map_split(&Payload::synthetic(bytes), 32, &cfg,
+        let synth = g.map_split(&Payload::synthetic(bytes), &plan, &cfg,
                                 &mut rt, &mut rng);
         let (r, s) = (real.total_bytes() as f64, synth.total_bytes() as f64);
         // Kernel aggregates: synthetic assumes full matching-vocab

@@ -8,12 +8,14 @@ pub mod corpus;
 pub mod grep;
 pub mod pagerank;
 pub mod queries;
+pub mod tables;
 pub mod wordcount;
 
 pub use corpus::Corpus;
 pub use grep::Grep;
 pub use pagerank::PageRank;
 pub use queries::{AggregationQuery, JoinQuery, ScanQuery};
+pub use tables::{GroupBy, RepartitionJoin, StarSchema};
 pub use wordcount::WordCount;
 
 use std::borrow::Cow;

@@ -19,7 +19,9 @@
 
 use std::collections::BTreeMap;
 
-use crate::mapreduce::{MapOutput, ReduceOutput, SystemConfig, Workload};
+use crate::mapreduce::{
+    MapOutput, PartitionPlan, ReduceOutput, SystemConfig, Workload,
+};
 use crate::runtime::RtEngine;
 use crate::storage::Payload;
 use crate::util::hash::mix64;
@@ -56,9 +58,11 @@ impl PageRank {
         (h % NODE_SPACE) as u32
     }
 
-    /// Reducer partition owning `node`'s contributions.
-    fn partition(node: u32, parts: usize) -> usize {
-        (mix64(node as u64) % parts as u64) as usize
+    /// Reducer partition owning `node`'s contributions (the routed key
+    /// is `mix64(node)`; a hash plan reproduces the historical
+    /// `mix64(node) % parts`).
+    fn partition(node: u32, plan: &PartitionPlan) -> usize {
+        plan.route(mix64(node as u64))
     }
 
     fn push_row(buf: &mut Vec<u8>, node: u32, val: u64) {
@@ -94,11 +98,12 @@ impl Workload for PageRank {
     fn map_split(
         &self,
         split: &Payload,
-        parts: usize,
+        plan: &PartitionPlan,
         _cfg: &SystemConfig,
         _rt: &mut RtEngine,
         _rng: &mut Rng,
     ) -> MapOutput {
+        let parts = plan.parts();
         match split.contiguous() {
             Some(rows) => {
                 let rows: &[u8] = &rows;
@@ -121,14 +126,14 @@ impl Workload for PageRank {
                         ((rank as u128 * 85 / 100) as u64) / deg;
                     let kept = rank - contrib * deg;
                     if kept > 0 {
-                        let j = Self::partition(node, parts);
+                        let j = Self::partition(node, plan);
                         Self::push_row(&mut parts_bytes[j], node, kept);
                         records += 1;
                     }
                     if contrib > 0 {
                         for i in 0..deg {
                             let nb = Self::neighbor(node, i);
-                            let j = Self::partition(nb, parts);
+                            let j = Self::partition(nb, plan);
                             Self::push_row(&mut parts_bytes[j], nb, contrib);
                             records += 1;
                         }
@@ -264,7 +269,7 @@ mod tests {
         let pr = PageRank::new();
         let (input, mass) = seed_rows(500);
         let cfg = SystemConfig::marvel_igfs();
-        let mo = pr.map_split(&input, 8, &cfg, &mut rt,
+        let mo = pr.map_split(&input, &PartitionPlan::hash(8), &cfg, &mut rt,
                               &mut Rng::new(1));
         let out_mass: u64 = mo
             .partitions
@@ -284,7 +289,8 @@ mod tests {
         let (input, mass) = seed_rows(300);
         let cfg = SystemConfig::marvel_igfs();
         let parts = 4;
-        let mo = pr.map_split(&input, parts, &cfg, &mut rt,
+        let plan = PartitionPlan::hash(parts);
+        let mo = pr.map_split(&input, &plan, &cfg, &mut rt,
                               &mut Rng::new(2));
         let mut round1 = Vec::new();
         for j in 0..parts {
@@ -302,7 +308,7 @@ mod tests {
             .sum();
         assert_eq!(r1_mass, mass);
         let next = Payload::concat(&round1);
-        let mo2 = pr.map_split(&next, parts, &cfg, &mut rt,
+        let mo2 = pr.map_split(&next, &plan, &cfg, &mut rt,
                                &mut Rng::new(3));
         let m2: u64 = mo2
             .partitions
@@ -329,9 +335,10 @@ mod tests {
         let mut rt = RtEngine::load(None).unwrap();
         let pr = PageRank::new();
         let cfg = SystemConfig::marvel_igfs();
-        let a = pr.map_split(&Payload::synthetic(120_000), 8, &cfg,
+        let plan = PartitionPlan::hash(8);
+        let a = pr.map_split(&Payload::synthetic(120_000), &plan, &cfg,
                              &mut rt, &mut Rng::new(1));
-        let b = pr.map_split(&Payload::synthetic(120_000), 8, &cfg,
+        let b = pr.map_split(&Payload::synthetic(120_000), &plan, &cfg,
                              &mut rt, &mut Rng::new(2));
         assert_eq!(a.total_bytes(), b.total_bytes());
         assert_eq!(a.records, b.records);

@@ -6,7 +6,8 @@
 //! agrees across modes.
 
 use crate::mapreduce::{
-    CombinerMode, MapOutput, ReduceOutput, SystemConfig, Workload,
+    CombinerMode, MapOutput, PartitionPlan, ReduceOutput, SystemConfig,
+    Workload,
 };
 use crate::runtime::RtEngine;
 use crate::storage::Payload;
@@ -101,11 +102,12 @@ impl Workload for ScanQuery {
     fn map_split(
         &self,
         split: &Payload,
-        parts: usize,
+        plan: &PartitionPlan,
         cfg: &SystemConfig,
         _rt: &mut RtEngine,
         _rng: &mut Rng,
     ) -> MapOutput {
+        let parts = plan.parts();
         let ov = cfg.ser.record_overhead();
         match split.contiguous() {
             Some(text) => {
@@ -115,7 +117,7 @@ impl Workload for ScanQuery {
                 for (id, _cat, val) in parse_rows(&text) {
                     records += 1;
                     if val < thr {
-                        let j = (id % parts as u64) as usize;
+                        let j = plan.route(id);
                         let rec = format!("{id:08},{val:06},padddddddddd"); // 27 B
                         let buf = &mut parts_bytes[j];
                         buf.extend_from_slice(rec.as_bytes());
@@ -254,20 +256,22 @@ impl Workload for AggregationQuery {
     fn map_split(
         &self,
         split: &Payload,
-        parts: usize,
+        plan: &PartitionPlan,
         cfg: &SystemConfig,
         rt: &mut RtEngine,
         _rng: &mut Rng,
     ) -> MapOutput {
+        let parts = plan.parts();
         let ov = cfg.ser.record_overhead();
         match (split.contiguous(), cfg.combiner) {
             (Some(text), CombinerMode::Kernel) => {
                 let (sums, cnts, rows) = self.combine_rows(&text, rt);
-                // Partition segments round-robin; 12 B per live segment.
+                // Partition segments through the plan (hash = the
+                // legacy round-robin); 12 B per live segment.
                 let mut parts_bytes: Vec<Vec<u8>> = vec![Vec::new(); parts];
                 for (seg, (s, c)) in sums.iter().zip(&cnts).enumerate() {
                     if *c > 0.0 {
-                        let j = seg % parts;
+                        let j = plan.route(seg as u64);
                         parts_bytes[j]
                             .extend_from_slice(&(seg as u32).to_le_bytes());
                         parts_bytes[j].extend_from_slice(&s.to_le_bytes());
@@ -287,7 +291,7 @@ impl Workload for AggregationQuery {
                 let mut rows = 0u64;
                 for (id, cat, val) in parse_rows(&text) {
                     rows += 1;
-                    let j = (cat as usize) % parts;
+                    let j = plan.route(cat as u64);
                     let rec = format!("{cat:04},{val:06},{id:08},pad456789"); // 30 B
                     parts_bytes[j].extend_from_slice(rec.as_bytes());
                     parts_bytes[j]
@@ -401,13 +405,14 @@ impl Workload for JoinQuery {
     fn map_split(
         &self,
         split: &Payload,
-        parts: usize,
+        plan: &PartitionPlan,
         cfg: &SystemConfig,
         _rt: &mut RtEngine,
         _rng: &mut Rng,
     ) -> MapOutput {
         // Joins shuffle *entire* tagged rows regardless of combiner —
         // the paper's Table 1 shows the 4× blow-up (12.5 → 49.6 GB).
+        let parts = plan.parts();
         let ov = cfg.ser.record_overhead();
         match split.contiguous() {
             Some(text) => {
@@ -415,7 +420,7 @@ impl Workload for JoinQuery {
                 let mut rows = 0u64;
                 for (id, cat, val) in parse_rows(&text) {
                     rows += 1;
-                    let j = (cat as usize) % parts;
+                    let j = plan.route(cat as u64);
                     // Tagged + re-keyed row, shipped for BOTH sides of
                     // the self-join (R side and S side).
                     for side in 0..2u8 {
@@ -503,8 +508,8 @@ mod tests {
         let q = ScanQuery::new();
         let text = gen_rows(100_000, q.categories, &mut rng);
         let cfg = SystemConfig::corral_lambda();
-        let mo = q.map_split(&Payload::real(text), 8, &cfg, &mut rt,
-                             &mut rng);
+        let mo = q.map_split(&Payload::real(text), &PartitionPlan::hash(8),
+                             &cfg, &mut rt, &mut rng);
         // Intermediate ≈ selectivity × rows × record bytes.
         let rows = mo.records as f64;
         let expect = rows * 0.9 * (27.0 + 31.0);
@@ -543,9 +548,10 @@ mod tests {
         let mut rng = Rng::new(4);
         let q = AggregationQuery::new(&rt);
         let text = gen_rows(100_000, q.categories, &mut rng);
-        let k = q.map_split(&Payload::real(text.clone()), 8,
+        let plan = PartitionPlan::hash(8);
+        let k = q.map_split(&Payload::real(text.clone()), &plan,
                             &SystemConfig::marvel_igfs(), &mut rt, &mut rng);
-        let raw = q.map_split(&Payload::real(text), 8,
+        let raw = q.map_split(&Payload::real(text), &plan,
                               &SystemConfig::corral_lambda(), &mut rt,
                               &mut rng);
         // Raw > input (Table 1 shape); kernel ≤ S × 12 B.
@@ -560,8 +566,8 @@ mod tests {
         let q = JoinQuery::new();
         let text = gen_rows(100_000, q.categories, &mut rng);
         let cfg = SystemConfig::corral_lambda();
-        let mo = q.map_split(&Payload::real(text), 8, &cfg, &mut rt,
-                             &mut rng);
+        let mo = q.map_split(&Payload::real(text), &PartitionPlan::hash(8),
+                             &cfg, &mut rt, &mut rng);
         let factor = mo.total_bytes() as f64 / 100_000.0;
         // Table 1: join intermediate ≈ 4× input.
         assert!(factor > 2.0 && factor < 6.0, "join factor {factor}");
@@ -577,9 +583,10 @@ mod tests {
             let mut rng = Rng::new(6);
             let real_in = wl.generate_input(bytes, true, &mut rng);
             let mut rng2 = Rng::new(6);
-            let real =
-                wl.map_split(&real_in, 8, &cfg, &mut rt, &mut rng2.fork(0));
-            let synth = wl.map_split(&Payload::synthetic(bytes), 8, &cfg,
+            let plan = PartitionPlan::hash(8);
+            let real = wl.map_split(&real_in, &plan, &cfg, &mut rt,
+                                    &mut rng2.fork(0));
+            let synth = wl.map_split(&Payload::synthetic(bytes), &plan, &cfg,
                                      &mut rt, &mut rng2);
             let (r, s) =
                 (real.total_bytes() as f64, synth.total_bytes() as f64);

@@ -1,0 +1,869 @@
+//! Star-schema tables with Zipfian key skew, and the analytical
+//! workloads over them: a repartition join (fact ⋈ dimension) and a
+//! two-phase group-by — the join-order-benchmark-shaped suite the
+//! ROADMAP's "multi-stage joins with skew" item calls for.
+//!
+//! The input is one byte-reproducible table stream: fixed 36-byte rows,
+//! every `interleave`-th row a dimension row (`D,key,attr,pad`), the
+//! rest fact rows (`F,key,val,pad`) whose keys are Zipf-sampled — a
+//! handful of viral keys carry most of the traffic. Dimension
+//! attributes are a pure function of the key, so replicated or
+//! duplicated dimension rows are harmless, and the dim stream cycles
+//! the key space so every split sees the full dimension table shape.
+//!
+//! Skew handling: both workloads declare an analytic
+//! [`Workload::key_profile`] (the Zipf pmf) so a `SkewAware` plan
+//! detects hot keys before any data moves. The join splits hot fact
+//! keys across reducers and replicates the matching dim rows to every
+//! way ([`SplitMode::Independent`] — joined rows need no merge); the
+//! group-by ships one partial row per input row, spreads hot keys, and
+//! hands a [`Workload::unifier`] (the merge form of itself) to
+//! `JobPipeline`, which appends the re-unifying stage
+//! ([`SplitMode::Mergeable`]).
+
+use std::collections::BTreeMap;
+
+use crate::mapreduce::{
+    record_salt, MapOutput, PartitionPlan, ReduceOutput, SplitMode,
+    SystemConfig, Workload,
+};
+use crate::runtime::RtEngine;
+use crate::storage::Payload;
+use crate::util::rng::{Rng, Zipf};
+
+/// Fixed generated table-row length: `T,kkkkkkkk,vvvvvv,` + 17 pad +
+/// `\n` (tag 1, key 8, val 6, commas 3, pad 17, newline 1).
+pub const TABLE_ROW: u64 = 36;
+/// Joined-row length: `kkkkkkkk,vvvvvv,aaaaaa\n`.
+pub const JOINED_ROW: u64 = 23;
+/// Partial/group row length: `kkkkkkkk,ssssssssssss,ccccccc\n`.
+pub const GROUP_ROW: u64 = 30;
+/// Fact values are drawn below this (5 digits in a 6-wide field).
+pub const FACT_VAL_MAX: u64 = 100_000;
+
+/// Shape of the synthetic star schema: how many distinct join keys the
+/// dimension table has, how skewed the fact side's key draw is, and
+/// how often a dimension row is interleaved into the stream.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StarSchema {
+    /// Distinct join keys (dimension-table cardinality).
+    pub dim_keys: u64,
+    /// Zipf exponent of the fact-side key draw; `0.0` = uniform.
+    pub zipf_s: f64,
+    /// Every `interleave`-th row is a dimension row (position-based,
+    /// so split accounting is independent of split boundaries).
+    pub interleave: u64,
+}
+
+impl StarSchema {
+    pub fn new(dim_keys: u64, zipf_s: f64) -> StarSchema {
+        StarSchema { dim_keys: dim_keys.max(1), zipf_s, interleave: 8 }
+    }
+
+    /// Dimension attribute of `key` — a pure function, so duplicate or
+    /// replicated dim rows always agree.
+    pub fn attr_of(key: u64) -> u64 {
+        crate::util::hash::fnv1a64(&key.to_le_bytes()) % 1_000_000
+    }
+
+    /// The fact-key sampler; `None` means uniform (`zipf_s == 0`).
+    /// Exponents at the Zipf sampler's s=1 singularity are nudged off
+    /// it rather than rejected.
+    fn sampler(&self) -> Option<Zipf> {
+        if self.zipf_s <= 0.0 {
+            return None;
+        }
+        let s = if (self.zipf_s - 1.0).abs() <= 1e-9 {
+            1.0 + 1e-6
+        } else {
+            self.zipf_s
+        };
+        Some(Zipf::new(self.dim_keys, s))
+    }
+
+    fn draw_fact_key(&self, z: &Option<Zipf>, rng: &mut Rng) -> u64 {
+        match z {
+            Some(z) => z.sample(rng),
+            None => rng.below(self.dim_keys),
+        }
+    }
+
+    /// Analytic fact-key pmf (the sampler's model): `p[k] ∝ 1/(k+1)^s`,
+    /// uniform at `s == 0`. This is what the skew planner sees.
+    pub fn key_probs(&self) -> Vec<f64> {
+        let n = self.dim_keys as usize;
+        if self.zipf_s <= 0.0 {
+            return vec![1.0 / n as f64; n];
+        }
+        let mut p: Vec<f64> = (0..n)
+            .map(|k| 1.0 / ((k + 1) as f64).powf(self.zipf_s))
+            .collect();
+        let h: f64 = p.iter().sum();
+        for x in &mut p {
+            *x /= h;
+        }
+        p
+    }
+
+    /// Scale the pmf to integer profile weights for the planner.
+    fn profile(&self) -> Vec<(u64, u64)> {
+        self.key_probs()
+            .iter()
+            .enumerate()
+            .map(|(k, p)| (k as u64, (p * 1e12).round() as u64))
+            .collect()
+    }
+
+    /// Generate exactly `bytes` of interleaved table rows (tail padded
+    /// with spaces past the last whole row, like `queries::gen_rows`).
+    pub fn gen_table(&self, bytes: u64, rng: &mut Rng) -> Vec<u8> {
+        let z = self.sampler();
+        let mut out = Vec::with_capacity(bytes as usize + 64);
+        let mut r = 0u64;
+        while (out.len() as u64) < bytes {
+            if r % self.interleave == 0 {
+                let key = (r / self.interleave) % self.dim_keys;
+                let attr = Self::attr_of(key);
+                push_table_row(&mut out, b'D', key, attr);
+            } else {
+                let key = self.draw_fact_key(&z, rng);
+                let val = rng.below(FACT_VAL_MAX);
+                push_table_row(&mut out, b'F', key, val);
+            }
+            r += 1;
+        }
+        out.truncate(bytes as usize);
+        if let Some(p) = out.iter().rposition(|b| *b == b'\n') {
+            out.truncate(p + 1);
+            let missing = bytes as usize - out.len();
+            out.extend(std::iter::repeat(b' ').take(missing));
+        }
+        out
+    }
+
+    /// Expected (dim, fact) row counts in `rows` interleaved rows.
+    fn dim_fact_rows(&self, rows: u64) -> (u64, u64) {
+        let dim = rows.div_ceil(self.interleave);
+        (dim, rows - dim)
+    }
+}
+
+impl Default for StarSchema {
+    fn default() -> Self {
+        StarSchema::new(1024, 1.2)
+    }
+}
+
+fn push_table_row(out: &mut Vec<u8>, tag: u8, key: u64, val: u64) {
+    const PAD: &str = "qrstuvwxyzabcdefg"; // 17 bytes
+    out.push(tag);
+    out.extend_from_slice(
+        format!(",{key:08},{val:06},{PAD}\n").as_bytes(),
+    );
+}
+
+/// Parse one 35-byte table line (sans newline): `(tag, key, val)`.
+fn parse_table_line(line: &[u8]) -> Option<(u8, u64, u64)> {
+    if line.len() != TABLE_ROW as usize - 1 {
+        return None;
+    }
+    let tag = line[0];
+    if tag != b'F' && tag != b'D' {
+        return None;
+    }
+    let key = parse_u64(&line[2..10])?;
+    let val = parse_u64(&line[11..17])?;
+    Some((tag, key, val))
+}
+
+fn parse_u64(digits: &[u8]) -> Option<u64> {
+    std::str::from_utf8(digits).ok()?.parse().ok()
+}
+
+fn push_joined_row(out: &mut Vec<u8>, key: u64, val: u64, attr: u64) {
+    out.extend_from_slice(
+        format!("{key:08},{val:06},{attr:06}\n").as_bytes(),
+    );
+}
+
+fn group_row_string(key: u64, sum: u64, cnt: u64) -> String {
+    // Clamp so the fixed widths can never widen (reachable only far
+    // beyond the real-mode materialization cap).
+    let sum = sum.min(999_999_999_999);
+    let cnt = cnt.min(9_999_999);
+    format!("{key:08},{sum:012},{cnt:07}\n")
+}
+
+/// Parse a joined (22-byte) or partial (29-byte) line into
+/// `(key, sum, cnt)`; other line lengths (padding fragments) skip.
+fn parse_group_line(line: &[u8]) -> Option<(u64, u64, u64)> {
+    match line.len() {
+        l if l == JOINED_ROW as usize - 1 => {
+            let key = parse_u64(&line[0..8])?;
+            let val = parse_u64(&line[9..15])?;
+            Some((key, val, 1))
+        }
+        l if l == GROUP_ROW as usize - 1 => {
+            let key = parse_u64(&line[0..8])?;
+            let sum = parse_u64(&line[9..21])?;
+            let cnt = parse_u64(&line[22..29])?;
+            Some((key, sum, cnt))
+        }
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Repartition join: facts route (salted when hot), dims replicate.
+// ---------------------------------------------------------------------
+
+/// Fact ⋈ dimension repartition join over a [`StarSchema`] stream.
+/// Output: sorted joined rows `key,val,attr`. Hot fact keys may be
+/// split across reducers ([`SplitMode::Independent`]): each split way
+/// receives a full replica of the hot key's dimension row, so every
+/// fact joins wherever it lands and no merge stage is needed.
+pub struct RepartitionJoin {
+    pub schema: StarSchema,
+}
+
+impl RepartitionJoin {
+    pub fn new(schema: StarSchema) -> RepartitionJoin {
+        RepartitionJoin { schema }
+    }
+
+    /// Fraction of fact/dim row mass this plan routes into `part`
+    /// (per-byte shares; shared by the synthetic map and reduce).
+    fn part_shares(&self, plan: &PartitionPlan, part: usize) -> (f64, f64) {
+        let probs = self.schema.key_probs();
+        let dim_p = 1.0 / self.schema.dim_keys as f64;
+        let (mut fact, mut dim) = (0.0, 0.0);
+        for (k, pk) in probs.iter().enumerate() {
+            let key = k as u64;
+            let w = plan.ways(key);
+            for i in 0..w {
+                if plan.route_way(key, i) == part {
+                    // A hot fact key spreads 1/w of its mass per way;
+                    // its dim row replicates whole to every way.
+                    fact += pk / w as f64;
+                    dim += dim_p;
+                }
+            }
+        }
+        (fact, dim)
+    }
+}
+
+impl Workload for RepartitionJoin {
+    fn name(&self) -> &str {
+        "repartition_join"
+    }
+
+    fn generate_input(&self, bytes: u64, materialize: bool, rng: &mut Rng)
+        -> Payload
+    {
+        if materialize {
+            Payload::real(self.schema.gen_table(bytes, rng))
+        } else {
+            Payload::synthetic(bytes)
+        }
+    }
+
+    fn map_split(
+        &self,
+        split: &Payload,
+        plan: &PartitionPlan,
+        _cfg: &SystemConfig,
+        _rt: &mut RtEngine,
+        _rng: &mut Rng,
+    ) -> MapOutput {
+        let parts = plan.parts();
+        match split.contiguous() {
+            Some(text) => {
+                let mut parts_bytes: Vec<Vec<u8>> = vec![Vec::new(); parts];
+                let mut records = 0u64;
+                for line in text.split(|b| *b == b'\n') {
+                    let Some((tag, key, val)) = parse_table_line(line)
+                    else {
+                        continue;
+                    };
+                    records += 1;
+                    if tag == b'F' {
+                        // Content-salted: the same fact row routes to
+                        // the same way regardless of split boundaries,
+                        // worker count, or replay after a fault.
+                        let j = plan.route_salted(key, record_salt(line));
+                        parts_bytes[j].extend_from_slice(line);
+                        parts_bytes[j].push(b'\n');
+                    } else {
+                        // Dim rows replicate to every way of their key.
+                        for i in 0..plan.ways(key) {
+                            let j = plan.route_way(key, i);
+                            parts_bytes[j].extend_from_slice(line);
+                            parts_bytes[j].push(b'\n');
+                        }
+                    }
+                }
+                MapOutput {
+                    partitions: parts_bytes
+                        .into_iter()
+                        .map(Payload::real)
+                        .collect(),
+                    records,
+                }
+            }
+            None => {
+                let rows = split.len() / TABLE_ROW;
+                let (dim_rows, fact_rows) = self.schema.dim_fact_rows(rows);
+                let partitions = (0..parts)
+                    .map(|j| {
+                        let (fs, ds) = self.part_shares(plan, j);
+                        let b = (fact_rows as f64 * fs
+                            + dim_rows as f64 * ds)
+                            * TABLE_ROW as f64;
+                        Payload::synthetic(b.round() as u64)
+                    })
+                    .collect();
+                MapOutput { partitions, records: rows }
+            }
+        }
+    }
+
+    fn reduce_partition(
+        &self,
+        part: usize,
+        parts: usize,
+        inputs: &[Payload],
+        cfg: &SystemConfig,
+        _rt: &mut RtEngine,
+    ) -> ReduceOutput {
+        if inputs.iter().all(|p| p.is_real()) {
+            // Hash join: dim build side (deduped — attrs are a pure
+            // function of the key), fact probe side, sorted output.
+            let mut dims = BTreeMap::<u64, u64>::new();
+            let mut facts: Vec<(u64, u64)> = Vec::new();
+            for p in inputs {
+                let Some(text) = p.gather() else { continue };
+                for line in text.split(|b| *b == b'\n') {
+                    let Some((tag, key, val)) = parse_table_line(line)
+                    else {
+                        continue;
+                    };
+                    if tag == b'D' {
+                        dims.insert(key, val);
+                    } else {
+                        facts.push((key, val));
+                    }
+                }
+            }
+            facts.sort_unstable();
+            let mut out = Vec::with_capacity(
+                facts.len() * JOINED_ROW as usize,
+            );
+            let mut records = 0u64;
+            for (key, val) in facts {
+                if let Some(attr) = dims.get(&key) {
+                    push_joined_row(&mut out, key, val, *attr);
+                    records += 1;
+                }
+            }
+            ReduceOutput { output: Payload::real(out), records }
+        } else {
+            // Synthetic: rebuild the (scale-free) plan from config and
+            // invert the per-partition byte shares to joined rows.
+            let plan =
+                PartitionPlan::build(&cfg.partition, self, 0, parts, 0);
+            let (fs, ds) = self.part_shares(&plan, part);
+            let in_rows: f64 = inputs
+                .iter()
+                .map(|p| (p.len() / TABLE_ROW) as f64)
+                .sum();
+            // in_rows = F·fs + D·ds with F = (interleave−1)·D.
+            let il = self.schema.interleave as f64;
+            let denom = (il - 1.0) * fs + ds;
+            let joined = if denom > 0.0 {
+                in_rows / denom * (il - 1.0) * fs
+            } else {
+                0.0
+            };
+            ReduceOutput {
+                output: Payload::synthetic(
+                    (joined * JOINED_ROW as f64).round() as u64,
+                ),
+                records: joined.round() as u64,
+            }
+        }
+    }
+
+    fn map_rate(&self) -> f64 {
+        40e6
+    }
+    fn reduce_rate(&self) -> f64 {
+        60e6
+    }
+
+    fn key_profile(&self, _input_bytes: u64, _seed: u64) -> Vec<(u64, u64)> {
+        self.schema.profile()
+    }
+    fn key_domain(&self) -> u64 {
+        self.schema.dim_keys
+    }
+    fn split_mode(&self) -> SplitMode {
+        SplitMode::Independent
+    }
+}
+
+// ---------------------------------------------------------------------
+// Group-by: two-phase SUM/COUNT per key with a merge unifier.
+// ---------------------------------------------------------------------
+
+/// `SELECT key, SUM(val), COUNT(*) GROUP BY key` over joined rows.
+/// The map phase ships one 30-byte partial row per input row (salted
+/// routing spreads hot keys); reducers merge into one row per key. A
+/// skew-split run leaves a hot key's partials on several reducers —
+/// the [`Workload::unifier`] (the merge form of this same workload)
+/// re-unifies them in the pipeline-appended merge stage.
+pub struct GroupBy {
+    pub schema: StarSchema,
+    /// Merge form: consumes partial rows, never splits again.
+    merge_form: bool,
+    unify: Option<Box<GroupBy>>,
+}
+
+impl GroupBy {
+    pub fn new(schema: StarSchema) -> GroupBy {
+        GroupBy {
+            schema,
+            merge_form: false,
+            unify: Some(Box::new(GroupBy {
+                schema,
+                merge_form: true,
+                unify: None,
+            })),
+        }
+    }
+
+    /// Expected input row length for synthetic accounting.
+    fn in_row(&self) -> u64 {
+        if self.merge_form {
+            GROUP_ROW
+        } else {
+            JOINED_ROW
+        }
+    }
+}
+
+impl Workload for GroupBy {
+    fn name(&self) -> &str {
+        if self.merge_form {
+            "group_by_merge"
+        } else {
+            "group_by"
+        }
+    }
+
+    /// Standalone seeding: joined rows with Zipf keys (the same stream
+    /// a `RepartitionJoin` stage would hand off).
+    fn generate_input(&self, bytes: u64, materialize: bool, rng: &mut Rng)
+        -> Payload
+    {
+        if !materialize {
+            return Payload::synthetic(bytes);
+        }
+        let z = self.schema.sampler();
+        let mut out = Vec::with_capacity(bytes as usize + 32);
+        while (out.len() as u64) < bytes {
+            let key = self.schema.draw_fact_key(&z, rng);
+            let val = rng.below(FACT_VAL_MAX);
+            push_joined_row(&mut out, key, val, StarSchema::attr_of(key));
+        }
+        out.truncate(bytes as usize);
+        if let Some(p) = out.iter().rposition(|b| *b == b'\n') {
+            out.truncate(p + 1);
+            let missing = bytes as usize - out.len();
+            out.extend(std::iter::repeat(b' ').take(missing));
+        }
+        Payload::real(out)
+    }
+
+    fn map_split(
+        &self,
+        split: &Payload,
+        plan: &PartitionPlan,
+        _cfg: &SystemConfig,
+        _rt: &mut RtEngine,
+        _rng: &mut Rng,
+    ) -> MapOutput {
+        let parts = plan.parts();
+        match split.contiguous() {
+            Some(text) => {
+                let mut parts_bytes: Vec<Vec<u8>> = vec![Vec::new(); parts];
+                let mut records = 0u64;
+                for line in text.split(|b| *b == b'\n') {
+                    let Some((key, sum, cnt)) = parse_group_line(line)
+                    else {
+                        continue;
+                    };
+                    records += 1;
+                    let row = group_row_string(key, sum, cnt);
+                    let j =
+                        plan.route_salted(key, record_salt(row.as_bytes()));
+                    parts_bytes[j].extend_from_slice(row.as_bytes());
+                }
+                MapOutput {
+                    partitions: parts_bytes
+                        .into_iter()
+                        .map(Payload::real)
+                        .collect(),
+                    records,
+                }
+            }
+            None => {
+                let rows = split.len() / self.in_row();
+                let probs = if self.merge_form {
+                    // Post-combine partials are ≈ uniform per key.
+                    vec![
+                        1.0 / self.schema.dim_keys as f64;
+                        self.schema.dim_keys as usize
+                    ]
+                } else {
+                    self.schema.key_probs()
+                };
+                let mut acc = vec![0f64; parts];
+                for (k, pk) in probs.iter().enumerate() {
+                    let key = k as u64;
+                    let w = plan.ways(key);
+                    for i in 0..w {
+                        acc[plan.route_way(key, i)] += rows as f64 * pk
+                            * GROUP_ROW as f64
+                            / w as f64;
+                    }
+                }
+                MapOutput {
+                    partitions: acc
+                        .into_iter()
+                        .map(|b| Payload::synthetic(b.round() as u64))
+                        .collect(),
+                    records: rows,
+                }
+            }
+        }
+    }
+
+    fn reduce_partition(
+        &self,
+        part: usize,
+        parts: usize,
+        inputs: &[Payload],
+        cfg: &SystemConfig,
+        _rt: &mut RtEngine,
+    ) -> ReduceOutput {
+        if inputs.iter().all(|p| p.is_real()) {
+            let mut merged = BTreeMap::<u64, (u64, u64)>::new();
+            for p in inputs {
+                let Some(text) = p.gather() else { continue };
+                for line in text.split(|b| *b == b'\n') {
+                    let Some((key, sum, cnt)) = parse_group_line(line)
+                    else {
+                        continue;
+                    };
+                    let e = merged.entry(key).or_insert((0, 0));
+                    e.0 += sum;
+                    e.1 += cnt;
+                }
+            }
+            let mut out =
+                Vec::with_capacity(merged.len() * GROUP_ROW as usize);
+            for (key, (sum, cnt)) in &merged {
+                out.extend_from_slice(
+                    group_row_string(*key, *sum, *cnt).as_bytes(),
+                );
+            }
+            let records = merged.len() as u64;
+            ReduceOutput { output: Payload::real(out), records }
+        } else {
+            // Synthetic: one merged row per key whose spread covers
+            // this partition, capped by the rows that arrived.
+            let plan =
+                PartitionPlan::build(&cfg.partition, self, 0, parts, 0);
+            let mut keys = 0u64;
+            for k in 0..self.schema.dim_keys {
+                let w = plan.ways(k);
+                if (0..w).any(|i| plan.route_way(k, i) == part) {
+                    keys += 1;
+                }
+            }
+            let in_rows: u64 =
+                inputs.iter().map(|p| p.len() / GROUP_ROW).sum();
+            let keys = keys.min(in_rows);
+            ReduceOutput {
+                output: Payload::synthetic(keys * GROUP_ROW),
+                records: keys,
+            }
+        }
+    }
+
+    fn map_rate(&self) -> f64 {
+        60e6
+    }
+    fn reduce_rate(&self) -> f64 {
+        120e6
+    }
+
+    fn key_profile(&self, _input_bytes: u64, _seed: u64) -> Vec<(u64, u64)> {
+        if self.merge_form {
+            // Merge input is ≈ one row per (key, way): nothing hot.
+            Vec::new()
+        } else {
+            self.schema.profile()
+        }
+    }
+    fn key_domain(&self) -> u64 {
+        self.schema.dim_keys
+    }
+    fn split_mode(&self) -> SplitMode {
+        if self.merge_form {
+            SplitMode::None
+        } else {
+            SplitMode::Mergeable
+        }
+    }
+    fn unifier(&self) -> Option<&dyn Workload> {
+        self.unify.as_deref().map(|u| u as &dyn Workload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::Partitioner;
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::marvel_igfs()
+    }
+
+    fn sorted_rows(payloads: &[Payload], row: usize) -> Vec<Vec<u8>> {
+        let mut rows: Vec<Vec<u8>> = payloads
+            .iter()
+            .flat_map(|p| {
+                let b = p.gather().unwrap_or_default();
+                b.chunks_exact(row)
+                    .map(|c| c.to_vec())
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        rows.sort_unstable();
+        rows
+    }
+
+    /// Run map over `splits` then reduce each partition; returns the
+    /// per-partition reduce outputs.
+    fn run(
+        wl: &dyn Workload,
+        splits: &[Payload],
+        plan: &PartitionPlan,
+        rt: &mut RtEngine,
+    ) -> Vec<Payload> {
+        let parts = plan.parts();
+        let mos: Vec<MapOutput> = splits
+            .iter()
+            .map(|s| {
+                wl.map_split(s, plan, &cfg(), rt, &mut Rng::new(9))
+            })
+            .collect();
+        (0..parts)
+            .map(|j| {
+                let ins: Vec<Payload> = mos
+                    .iter()
+                    .map(|m| m.partitions[j].clone())
+                    .collect();
+                wl.reduce_partition(j, parts, &ins, &cfg(), rt).output
+            })
+            .collect()
+    }
+
+    #[test]
+    fn table_generates_exact_bytes_and_parses() {
+        let schema = StarSchema::new(64, 1.2);
+        let mut rng = Rng::new(1);
+        let t = schema.gen_table(10 * TABLE_ROW + 7, &mut rng);
+        assert_eq!(t.len() as u64, 10 * TABLE_ROW + 7);
+        let mut dims = 0;
+        let mut facts = 0;
+        for line in t.split(|b| *b == b'\n') {
+            if let Some((tag, key, val)) = parse_table_line(line) {
+                assert!(key < 64);
+                if tag == b'D' {
+                    assert_eq!(val, StarSchema::attr_of(key));
+                    dims += 1;
+                } else {
+                    assert!(val < FACT_VAL_MAX);
+                    facts += 1;
+                }
+            }
+        }
+        assert!(dims >= 1 && facts >= 7, "dims {dims} facts {facts}");
+        // Byte-reproducible per seed.
+        assert_eq!(t, schema.gen_table(10 * TABLE_ROW + 7, &mut Rng::new(1)));
+    }
+
+    #[test]
+    fn zipf_profile_flags_hot_keys_at_plan_time() {
+        let join = RepartitionJoin::new(StarSchema::new(1024, 1.5));
+        let p = Partitioner::SkewAware { hot_threshold: 1.2, split_ways: 4 };
+        let plan = PartitionPlan::build(&p, &join, 0, 8, 0);
+        assert!(plan.hot_keys_split() >= 1, "s=1.5 must flag hot keys");
+        assert!(plan.ways(0) > 1, "rank-0 key is the hottest");
+        // Uniform (s=0) profile: nothing hot, plan is pure hash.
+        let uni = RepartitionJoin::new(StarSchema::new(1024, 0.0));
+        let plan0 = PartitionPlan::build(&p, &uni, 0, 8, 0);
+        assert_eq!(plan0.hot_keys_split(), 0);
+    }
+
+    #[test]
+    fn join_canonical_output_identical_hash_vs_skew() {
+        let mut rt = RtEngine::load(None).unwrap();
+        let schema = StarSchema::new(128, 1.4);
+        let join = RepartitionJoin::new(schema);
+        let mut rng = Rng::new(5);
+        let table = schema.gen_table(80 * TABLE_ROW, &mut rng);
+        // Two splits with a deliberately row-unaligned boundary.
+        let cut = 37 * TABLE_ROW as usize + 11;
+        let splits = vec![
+            Payload::real(table[..cut].to_vec()),
+            Payload::real(table[cut..].to_vec()),
+        ];
+        let hash = PartitionPlan::hash(4);
+        let skew = PartitionPlan::build(
+            &Partitioner::SkewAware { hot_threshold: 1.2, split_ways: 3 },
+            &join, 0, 4, 0,
+        );
+        assert!(skew.hot_keys_split() >= 1);
+        let out_h = run(&join, &splits, &hash, &mut rt);
+        let out_s = run(&join, &splits, &skew, &mut rt);
+        // Canonical (sorted multiset) equality across partitioners.
+        assert_eq!(
+            sorted_rows(&out_h, JOINED_ROW as usize),
+            sorted_rows(&out_s, JOINED_ROW as usize),
+        );
+        // Dropping a whole row at a split boundary would lose a fact.
+        assert!(!sorted_rows(&out_h, JOINED_ROW as usize).is_empty());
+    }
+
+    #[test]
+    fn join_split_boundaries_do_not_change_routing() {
+        // The same table cut at different offsets must produce the
+        // same per-partition byte totals under a skew plan (content
+        // salting): pin partition-level identity, not just canonical.
+        let mut rt = RtEngine::load(None).unwrap();
+        let schema = StarSchema::new(128, 1.4);
+        let join = RepartitionJoin::new(schema);
+        let table = schema.gen_table(60 * TABLE_ROW, &mut Rng::new(7));
+        let skew = PartitionPlan::build(
+            &Partitioner::SkewAware { hot_threshold: 1.2, split_ways: 3 },
+            &join, 0, 4, 0,
+        );
+        let whole = vec![Payload::real(table.clone())];
+        let cut = 20 * TABLE_ROW as usize;
+        let split = vec![
+            Payload::real(table[..cut].to_vec()),
+            Payload::real(table[cut..].to_vec()),
+        ];
+        let tally = |splits: &[Payload]| -> Vec<u64> {
+            let mut t = vec![0u64; 4];
+            for s in splits {
+                let mo = join.map_split(s, &skew, &cfg(), &mut rt,
+                                        &mut Rng::new(9));
+                for (j, p) in mo.partitions.iter().enumerate() {
+                    t[j] += p.len();
+                }
+            }
+            t
+        };
+        assert_eq!(tally(&whole), tally(&split));
+    }
+
+    #[test]
+    fn group_by_merge_reunifies_split_keys() {
+        let mut rt = RtEngine::load(None).unwrap();
+        let schema = StarSchema::new(64, 1.5);
+        let gb = GroupBy::new(schema);
+        let mut rng = Rng::new(11);
+        let input = gb.generate_input(100 * JOINED_ROW, true, &mut rng);
+        let cut = 50 * JOINED_ROW as usize;
+        let text = input.gather().unwrap();
+        let splits = vec![
+            Payload::real(text[..cut].to_vec()),
+            Payload::real(text[cut..].to_vec()),
+        ];
+        // Golden: hash, no splitting.
+        let hash = PartitionPlan::hash(4);
+        let golden = sorted_rows(
+            &run(&gb, &splits, &hash, &mut rt),
+            GROUP_ROW as usize,
+        );
+        // Skew: hot keys split; reduce outputs hold PARTIAL rows for
+        // them, then the unifier's map+reduce (hash plan, as the
+        // pipeline's merge stage runs it) re-unifies.
+        let skew = PartitionPlan::build(
+            &Partitioner::SkewAware { hot_threshold: 1.2, split_ways: 3 },
+            &gb, 0, 4, 0,
+        );
+        assert!(skew.hot_keys_split() >= 1);
+        let partials = run(&gb, &splits, &skew, &mut rt);
+        let merge = gb.unifier().expect("group_by has a unifier");
+        assert_eq!(merge.name(), "group_by_merge");
+        assert!(merge.unifier().is_none(), "merge must not chain");
+        let merged = sorted_rows(
+            &run(merge, &partials, &hash, &mut rt),
+            GROUP_ROW as usize,
+        );
+        assert_eq!(merged, golden);
+        // And the skewed pre-merge output is NOT yet unified (the hot
+        // key appears on more than one reducer).
+        let pre = sorted_rows(&partials, GROUP_ROW as usize);
+        assert!(pre.len() > golden.len(), "hot key must be split");
+    }
+
+    #[test]
+    fn synthetic_accounting_is_deterministic_and_mass_preserving() {
+        let mut rt = RtEngine::load(None).unwrap();
+        let schema = StarSchema::new(256, 1.3);
+        let join = RepartitionJoin::new(schema);
+        let plan = PartitionPlan::build(
+            &Partitioner::SkewAware { hot_threshold: 1.2, split_ways: 4 },
+            &join, 0, 8, 0,
+        );
+        let a = join.map_split(&Payload::synthetic(1 << 20), &plan, &cfg(),
+                               &mut rt, &mut Rng::new(1));
+        let b = join.map_split(&Payload::synthetic(1 << 20), &plan, &cfg(),
+                               &mut rt, &mut Rng::new(2));
+        assert_eq!(a.total_bytes(), b.total_bytes());
+        // Total synthetic intermediate ≥ input (dim replication) and
+        // within 2× (replication is bounded by split_ways on dims).
+        let total = a.total_bytes() as f64;
+        assert!(total >= 0.95 * (1 << 20) as f64, "lost mass: {total}");
+        assert!(total <= 2.0 * (1 << 20) as f64, "over-replicated");
+        let ro = join.reduce_partition(0, 8, &a.partitions, &cfg(), &mut rt);
+        assert!(!ro.output.is_real());
+        assert!(ro.output.len() > 0);
+    }
+
+    #[test]
+    fn real_vs_synthetic_map_consistency() {
+        let mut rt = RtEngine::load(None).unwrap();
+        let schema = StarSchema::new(128, 1.2);
+        let join = RepartitionJoin::new(schema);
+        let plan = PartitionPlan::hash(8);
+        let bytes = 200_000u64;
+        let real_in = join.generate_input(bytes, true, &mut Rng::new(3));
+        let real = join.map_split(&real_in, &plan, &cfg(), &mut rt,
+                                  &mut Rng::new(4));
+        let synth = join.map_split(&Payload::synthetic(bytes), &plan,
+                                   &cfg(), &mut rt, &mut Rng::new(4));
+        let (r, s) = (real.total_bytes() as f64, synth.total_bytes() as f64);
+        assert!((r - s).abs() / r < 0.15, "real {r} synth {s}");
+        let rel = (real.records as f64 - synth.records as f64).abs()
+            / real.records as f64;
+        assert!(rel < 0.05, "records diverge {rel}");
+    }
+}

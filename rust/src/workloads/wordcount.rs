@@ -6,7 +6,8 @@
 //! ≈ 5× input with JSON framing — Table 1's expansion).
 
 use crate::mapreduce::{
-    CombinerMode, MapOutput, ReduceOutput, SystemConfig, Workload,
+    CombinerMode, MapOutput, PartitionPlan, ReduceOutput, SystemConfig,
+    Workload,
 };
 use crate::runtime::{CombineScheme, RtEngine};
 use crate::storage::Payload;
@@ -69,18 +70,26 @@ impl WordCount {
 
     /// Serialize reducer partition `part`'s slice of the combined
     /// counts as (flat cell: u32, count: u32) records. Scheme
-    /// partitions fold onto reducer partitions via `p % parts`, exactly
-    /// like the raw path's `part(h) % parts`.
-    fn ser_aggregates(&self, counts: &[f32], part: usize, parts: usize)
-        -> Vec<u8>
-    {
+    /// partitions fold onto reducer partitions through the plan's
+    /// route (a hash plan reproduces the historical `p % parts`,
+    /// exactly like the raw path's `part(h) % parts`), in ascending
+    /// scheme-partition order either way.
+    fn ser_aggregates(
+        &self,
+        counts: &[f32],
+        part: usize,
+        plan: &PartitionPlan,
+    ) -> Vec<u8> {
         let b = self.scheme.buckets;
         // Upper bound: every bucket of every folded scheme partition
         // occupied — sized once, no growth reallocs on the hot path.
-        let stride_parts =
-            (self.scheme.parts.saturating_sub(part) + parts - 1) / parts;
-        let mut out = Vec::with_capacity(stride_parts * b * 8);
-        for p in (part..self.scheme.parts).step_by(parts) {
+        let folded = (0..self.scheme.parts)
+            .filter(|p| plan.route(*p as u64) == part)
+            .count();
+        let mut out = Vec::with_capacity(folded * b * 8);
+        for p in (0..self.scheme.parts)
+            .filter(|p| plan.route(*p as u64) == part)
+        {
             for (bucket, c) in counts[p * b..(p + 1) * b].iter().enumerate() {
                 if *c > 0.0 {
                     let flat = (p * b + bucket) as u32;
@@ -98,15 +107,26 @@ impl WordCount {
 }
 
 /// Fold per-scheme-partition values onto `parts` reducer partitions
-/// (index p contributes to p % parts) — the single folding rule every
-/// real and synthetic path must share.
+/// (index p contributes to p % parts) — the legacy hash folding rule,
+/// equal to [`fold_parts_plan`] with a hash plan.
 pub fn fold_parts<T: Copy + std::ops::AddAssign + Default>(
     vals: &[T],
     parts: usize,
 ) -> Vec<T> {
-    let mut out = vec![T::default(); parts];
+    fold_parts_plan(vals, &PartitionPlan::hash(parts))
+}
+
+/// Fold per-scheme-partition values onto reducer partitions through a
+/// partition plan (index p contributes to `plan.route(p)`) — the
+/// single folding rule every real and synthetic path must share, so
+/// both modes stay byte-consistent under *any* partitioner.
+pub fn fold_parts_plan<T: Copy + std::ops::AddAssign + Default>(
+    vals: &[T],
+    plan: &PartitionPlan,
+) -> Vec<T> {
+    let mut out = vec![T::default(); plan.parts()];
     for (p, v) in vals.iter().enumerate() {
-        out[p % parts] += *v;
+        out[plan.route(p as u64)] += *v;
     }
     out
 }
@@ -129,11 +149,12 @@ impl Workload for WordCount {
     fn map_split(
         &self,
         split: &Payload,
-        parts: usize,
+        plan: &PartitionPlan,
         cfg: &SystemConfig,
         rt: &mut RtEngine,
         _rng: &mut Rng,
     ) -> MapOutput {
+        let parts = plan.parts();
         assert!(parts <= self.scheme.parts);
         match split.contiguous() {
             Some(text) => {
@@ -148,7 +169,7 @@ impl Workload for WordCount {
                         let partitions = (0..parts)
                             .map(|j| {
                                 Payload::real(
-                                    self.ser_aggregates(&counts, j, parts),
+                                    self.ser_aggregates(&counts, j, plan),
                                 )
                             })
                             .collect();
@@ -168,7 +189,7 @@ impl Workload for WordCount {
                             vec![Vec::new(); parts];
                         for w in self.tokenize(text) {
                             let h = crate::util::hash::token_hash(w);
-                            let j = self.scheme.part(h) % parts;
+                            let j = plan.route(self.scheme.part(h) as u64);
                             let buf = &mut parts_bytes[j];
                             buf.extend_from_slice(
                                 &(w.len() as u16).to_le_bytes(),
@@ -191,10 +212,10 @@ impl Workload for WordCount {
                 let tokens = self.corpus.expected_tokens(split.len());
                 match cfg.combiner {
                     CombinerMode::Kernel => {
-                        let occ = fold_parts(
+                        let occ = fold_parts_plan(
                             &self.corpus
                                 .occupied_buckets_per_part(&self.scheme),
-                            parts,
+                            plan,
                         );
                         let partitions = (0..parts)
                             .map(|j| Payload::synthetic(occ[j] * 8))
@@ -203,11 +224,11 @@ impl Workload for WordCount {
                     }
                     CombinerMode::None => {
                         let ov = self.raw_record_overhead(cfg);
-                        let frac = fold_parts(
+                        let frac = fold_parts_plan(
                             &self
                                 .corpus
                                 .partition_record_fractions(&self.scheme, ov),
-                            parts,
+                            plan,
                         );
                         let total = tokens as f64
                             * self.corpus.mean_record_bytes(ov);
@@ -255,27 +276,35 @@ impl Workload for WordCount {
                 }
             }
         } else {
-            // Synthetic: fold scheme partitions onto the reducer count,
-            // mirroring the real paths' `p % parts` rule.
-            let records =
-                fold_parts(&self.corpus.vocab_per_part(&self.scheme), parts)
-                    [part];
+            // Synthetic: fold scheme partitions onto the reducer count
+            // through the same plan the map side routed with (plans are
+            // scale-free, so the rebuild here is exact).
+            let plan = PartitionPlan::build(&cfg.partition, self, 0, parts, 0);
+            let records = fold_parts_plan(
+                &self.corpus.vocab_per_part(&self.scheme),
+                &plan,
+            )[part];
             let bytes = match cfg.combiner {
                 CombinerMode::Kernel => {
-                    fold_parts(
+                    fold_parts_plan(
                         &self.corpus.occupied_buckets_per_part(&self.scheme),
-                        parts,
+                        &plan,
                     )[part] * 12
                 }
                 CombinerMode::None => {
-                    fold_parts(
+                    fold_parts_plan(
                         &self.corpus.output_bytes_per_part(&self.scheme, 8),
-                        parts,
+                        &plan,
                     )[part]
                 }
             };
             ReduceOutput { output: Payload::synthetic(bytes), records }
         }
+    }
+
+    /// Keys routed to reducers are scheme-partition indices.
+    fn key_domain(&self) -> u64 {
+        self.scheme.parts as u64
     }
 
     /// Per-container compute model: the paper's Hadoop-on-OpenWhisk
@@ -313,8 +342,8 @@ mod tests {
         let text = wc.corpus.generate(100_000, &mut rng);
         let tokens = wc.tokenize(&text).count() as u64;
         let cfg = SystemConfig::marvel_igfs();
-        let mo = wc.map_split(&Payload::real(text), 32, &cfg, &mut rt,
-                              &mut rng);
+        let mo = wc.map_split(&Payload::real(text), &PartitionPlan::hash(32), &cfg,
+                              &mut rt, &mut rng);
         assert_eq!(mo.records, tokens);
         // Total counted mass = tokens.
         let total: u64 = mo
@@ -338,9 +367,10 @@ mod tests {
         let (mut rt, wc) = setup();
         let mut rng = Rng::new(5);
         let text = wc.corpus.generate(200_000, &mut rng);
-        let k = wc.map_split(&Payload::real(text.clone()), 32,
+        let plan = PartitionPlan::hash(32);
+        let k = wc.map_split(&Payload::real(text.clone()), &plan,
                              &SystemConfig::marvel_igfs(), &mut rt, &mut rng);
-        let raw = wc.map_split(&Payload::real(text), 32,
+        let raw = wc.map_split(&Payload::real(text), &plan,
                                &SystemConfig::corral_lambda(), &mut rt,
                                &mut rng);
         assert!(k.total_bytes() * 4 < raw.total_bytes(),
@@ -358,8 +388,8 @@ mod tests {
         let cfg = SystemConfig::marvel_igfs();
         let text = wc.corpus.generate(50_000, &mut rng);
         let tokens = wc.tokenize(&text).count() as u64;
-        let mo = wc.map_split(&Payload::real(text), 32, &cfg, &mut rt,
-                              &mut rng);
+        let mo = wc.map_split(&Payload::real(text), &PartitionPlan::hash(32), &cfg,
+                              &mut rt, &mut rng);
         let mut grand = 0u64;
         for (j, p) in mo.partitions.iter().enumerate() {
             let ro = wc.reduce_partition(j, 32, &[p.clone()], &cfg, &mut rt);
@@ -383,9 +413,10 @@ mod tests {
         let cfg = SystemConfig::corral_lambda();
         let bytes = 400_000u64;
         let real_text = wc.corpus.generate(bytes, &mut rng);
-        let real = wc.map_split(&Payload::real(real_text), 32, &cfg,
+        let plan = PartitionPlan::hash(32);
+        let real = wc.map_split(&Payload::real(real_text), &plan, &cfg,
                                 &mut rt, &mut rng);
-        let synth = wc.map_split(&Payload::synthetic(bytes), 32, &cfg,
+        let synth = wc.map_split(&Payload::synthetic(bytes), &plan, &cfg,
                                  &mut rt, &mut rng);
         let (r, s) = (real.total_bytes() as f64, synth.total_bytes() as f64);
         assert!((r - s).abs() / r < 0.05,

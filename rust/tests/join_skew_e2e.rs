@@ -1,0 +1,271 @@
+//! Star-schema join suite, end to end: a repartition join stage chained
+//! into a group-by through the IGFS handoff, under every partitioner.
+//!
+//! Pins ISSUE 10's acceptance contract: `Partitioner::Hash` reproduces
+//! the legacy `key % parts` routing bit-for-bit; `SkewAware` detects
+//! and splits hot Zipf keys at plan time (`hot_keys_split > 0` at
+//! s ≥ 1.2) and the pipeline appends a merge stage that re-unifies the
+//! split partials; canonical outputs are identical across partitioners,
+//! worker counts, and armed fault planes; and the per-stage checkpoint
+//! covers the merge, so a lost merge output forces exactly that stage
+//! (and its merge) to recompute.
+
+use marvel::coordinator::ClusterSpec;
+use marvel::mapreduce::{
+    output_key, stage_input, Cluster, JobPipeline, PartitionPlan,
+    Partitioner, PipelineResult, SystemConfig,
+};
+use marvel::net::{NetFaultPlan, NodeId, StragglerProfile};
+use marvel::runtime::RtEngine;
+use marvel::sim::SimNs;
+use marvel::util::bytes::MIB;
+use marvel::workloads::tables::GROUP_ROW;
+use marvel::workloads::{GroupBy, RepartitionJoin, StarSchema};
+
+const SEED: u64 = 31;
+/// Hot enough that the head keys dominate (fig13's skewed regime).
+const ZIPF_S: f64 = 1.5;
+const DIM_KEYS: u64 = 256;
+
+fn skew() -> Partitioner {
+    Partitioner::SkewAware { hot_threshold: 1.3, split_ways: 4 }
+}
+
+fn schema() -> StarSchema {
+    StarSchema::new(DIM_KEYS, ZIPF_S)
+}
+
+fn base_cfg(p: &Partitioner, workers: usize, faults: bool) -> SystemConfig {
+    let mut c = SystemConfig::marvel_igfs();
+    c.partition = p.clone();
+    c.map_workers = workers;
+    c.reduce_workers = workers;
+    if faults {
+        c.stragglers =
+            StragglerProfile { seed: 7, prob: 0.5, slowdown: 4.0 };
+        c.speculation.enabled = true;
+        c.netfaults = NetFaultPlan {
+            seed: 11,
+            prob: 0.4,
+            slowdown: 8.0,
+            flow_timeout: SimNs::from_millis(250),
+            degraded_tiers: true,
+            lose_cachenodes: vec![],
+        };
+        c.failures.crash_prob = 0.3;
+        c.failures.max_failures_per_task = 2;
+        c.failures.seed = 13;
+        c.recovery.max_attempts = 3;
+        c.recovery.interval_bytes = 64 * 1024;
+    }
+    c
+}
+
+fn deploy(cfg: &SystemConfig) -> Cluster {
+    let mut cluster = ClusterSpec {
+        nodes: 4,
+        slots_per_node: 8,
+        ..Default::default()
+    }
+    .deploy(cfg);
+    cluster.stores.hdfs.block_size = 256 * 1024;
+    cluster
+}
+
+fn fetch_outputs(
+    cluster: &mut Cluster,
+    job: &str,
+    n: usize,
+) -> Vec<Option<Vec<u8>>> {
+    (0..n)
+        .map(|j| {
+            cluster
+                .stores
+                .igfs
+                .get(&cluster.topo, NodeId(0), &output_key(job, j), 0)
+                .and_then(|(p, _)| p.gather())
+        })
+        .collect()
+}
+
+/// Sorted multiset of fixed-width rows: the canonical form that must
+/// agree across partitioners (which only move rows between reducers).
+fn canon(outs: &[Option<Vec<u8>>], row: usize) -> Vec<Vec<u8>> {
+    let mut rows: Vec<Vec<u8>> = outs
+        .iter()
+        .flatten()
+        .flat_map(|b| b.chunks(row))
+        .map(|c| c.to_vec())
+        .collect();
+    rows.sort_unstable();
+    rows
+}
+
+struct Run {
+    res: PipelineResult,
+    finals: Vec<Option<Vec<u8>>>,
+}
+
+/// Deploy a fresh cluster, stage 4 MiB of fact+dimension tables, run
+/// join → group-by (the pipeline appends the merge stage itself when
+/// the plan split hot keys).
+fn run_suite(cfg: &SystemConfig) -> Run {
+    let mut cluster = deploy(cfg);
+    let mut rt = RtEngine::load(None).unwrap();
+    let join = RepartitionJoin::new(schema());
+    let gb = GroupBy::new(schema());
+    let input =
+        stage_input(&mut cluster, cfg, &join, 4 * MIB, SEED).unwrap();
+    let res = JobPipeline::new("starjoin")
+        .stage(&join, cfg.clone())
+        .stage(&gb, cfg.clone())
+        .run(&mut cluster, &mut rt, SEED, &input);
+    assert!(res.ok(), "pipeline failed: {:?}", res.failed);
+    let fin = res.final_output().expect("no final stage");
+    let finals =
+        fetch_outputs(&mut cluster, &fin.job, fin.reduce.tasks.max(1));
+    Run { res, finals }
+}
+
+#[test]
+fn hash_partitioner_is_legacy_modulo_routing() {
+    // The legacy contract, pinned at the plan level: `Hash` routes
+    // every key to `key % parts`, splits nothing, for any plan width.
+    let join = RepartitionJoin::new(schema());
+    for parts in [1usize, 4, 7, 32] {
+        let plan = PartitionPlan::build(
+            &Partitioner::Hash, &join, 0, parts, SEED,
+        );
+        assert_eq!(plan.parts(), parts);
+        assert_eq!(plan.hot_keys_split(), 0);
+        for k in 0..1000u64 {
+            assert_eq!(plan.route(k), (k % parts as u64) as usize);
+            assert_eq!(plan.ways(k), 1);
+        }
+    }
+}
+
+#[test]
+fn skew_aware_splits_hot_keys_and_matches_hash_canonically() {
+    let hash = run_suite(&base_cfg(&Partitioner::Hash, 1, false));
+    // Hash: nothing is ever split, no merge stages appended.
+    assert!(hash.res.merges.iter().all(|m| m.is_none()));
+    for jr in &hash.res.stages {
+        assert_eq!(jr.hot_keys_split, 0, "{}", jr.job);
+        assert!(jr.partition_skew >= 1.0, "{}", jr.job);
+    }
+    // At s = 1.5 the head keys dwarf the mean partition: Hash piles
+    // them onto single reducers and the byte census shows it.
+    assert!(
+        hash.res.stages[0].partition_skew > 1.5,
+        "skewed input must show partition imbalance under hash: {}",
+        hash.res.stages[0].partition_skew
+    );
+
+    let sk = run_suite(&base_cfg(&skew(), 1, false));
+    // Both stages detect and split the hot keys at plan time…
+    assert!(sk.res.stages[0].hot_keys_split > 0, "join split nothing");
+    assert!(sk.res.stages[1].hot_keys_split > 0, "group-by split nothing");
+    // …but only the group-by owes a merge (join splits are independent
+    // rows; group-by partials must be re-unified by its unifier).
+    assert!(sk.res.merges[0].is_none(), "join needs no merge");
+    let merge = sk.res.merges[1].as_ref().expect("group-by merge missing");
+    assert!(merge.output_bytes > 0);
+    assert_eq!(merge.output_bytes % GROUP_ROW, 0);
+    // Pre-merge outputs are strictly larger: split keys left partial
+    // aggregates on several reducers.
+    assert!(
+        sk.res.stages[1].output_bytes > merge.output_bytes,
+        "{} !> {}",
+        sk.res.stages[1].output_bytes,
+        merge.output_bytes
+    );
+
+    // The acceptance pin: canonically identical final rows, identical
+    // total bytes — the partitioner moved rows, never changed them.
+    let row = GROUP_ROW as usize;
+    assert_eq!(canon(&hash.finals, row), canon(&sk.finals, row));
+    assert_eq!(
+        hash.res.stages[1].output_bytes, merge.output_bytes,
+        "merged rows must equal the unsplit group-by's rows"
+    );
+}
+
+#[test]
+fn suite_is_byte_identical_across_workers_and_fault_planes() {
+    // Within the fixed SkewAware partitioner the determinism contract
+    // is exact per-partition byte identity — across worker counts and
+    // with stragglers, netfaults, speculation and crash recovery armed.
+    let golden = run_suite(&base_cfg(&skew(), 1, false));
+    for workers in [4usize, 8] {
+        let r = run_suite(&base_cfg(&skew(), workers, false));
+        assert_eq!(golden.finals, r.finals, "workers={workers}");
+        assert_eq!(
+            golden.res.job_time, r.res.job_time,
+            "virtual time moved with worker count"
+        );
+    }
+    let faulty = run_suite(&base_cfg(&skew(), 4, true));
+    assert_eq!(golden.finals, faulty.finals, "fault plane moved bytes");
+    assert_eq!(
+        golden.res.stages[1].hot_keys_split,
+        faulty.res.stages[1].hot_keys_split,
+        "hot-key census must be a plan-time constant"
+    );
+}
+
+#[test]
+fn checkpoint_covers_merge_and_invalidation_recomputes_stage() {
+    // One cluster, run the suite twice: the second run restores both
+    // stages (merge included) without recomputing; then losing a merge
+    // output invalidates exactly that stage's checkpoint.
+    let cfg = base_cfg(&skew(), 2, false);
+    let mut cluster = deploy(&cfg);
+    let mut rt = RtEngine::load(None).unwrap();
+    let join = RepartitionJoin::new(schema());
+    let gb = GroupBy::new(schema());
+    let input =
+        stage_input(&mut cluster, &cfg, &join, 4 * MIB, SEED).unwrap();
+    let pipe = JobPipeline::new("starjoin-cp")
+        .stage(&join, cfg.clone())
+        .stage(&gb, cfg.clone());
+    let res1 = pipe.run(&mut cluster, &mut rt, SEED, &input);
+    assert!(res1.ok(), "{:?}", res1.failed);
+    let m1 = res1.merges[1].as_ref().expect("no merge ran");
+    let fin1 = res1.final_output().unwrap();
+    let outs1 =
+        fetch_outputs(&mut cluster, &fin1.job, fin1.reduce.tasks.max(1));
+    let (fjob, fn1) = (fin1.job.clone(), fin1.reduce.tasks);
+
+    let res2 = pipe.run(&mut cluster, &mut rt, SEED, &input);
+    assert!(res2.ok(), "{:?}", res2.failed);
+    assert!(res2.restored.iter().all(|x| *x), "{:?}", res2.restored);
+    assert_eq!(res2.checkpoints, 0, "no recompute, no new checkpoints");
+    assert_eq!(res2.job_time.as_nanos(), 0);
+    // The restored merge record carries the checkpointed shape, so the
+    // final outputs stay resolvable through `final_output()`.
+    let m2 = res2.merges[1].as_ref().expect("merge record lost on resume");
+    assert_eq!(m2.output_bytes, m1.output_bytes);
+    assert_eq!(m2.reduce.tasks, m1.reduce.tasks);
+    let fin2 = res2.final_output().unwrap();
+    assert_eq!(fin2.job, fjob);
+    let outs2 = fetch_outputs(&mut cluster, &fjob, fn1.max(1));
+    assert_eq!(outs1, outs2);
+
+    // Lose one committed merge output: the stage-1 checkpoint (which
+    // covers the merge) must fail validation and re-run stage + merge,
+    // while stage 0 stays restored. Deterministic recompute: bytes
+    // unchanged.
+    let victim = (0..fn1.max(1))
+        .map(|j| output_key(&fjob, j))
+        .find(|k| cluster.stores.igfs.len_of(k).is_some())
+        .expect("merge wrote at least one output");
+    assert!(cluster.stores.igfs.remove(&victim));
+    let res3 = pipe.run(&mut cluster, &mut rt, SEED, &input);
+    assert!(res3.ok(), "{:?}", res3.failed);
+    assert_eq!(res3.restored, vec![true, false],
+               "only the stage owning the lost merge recomputes");
+    assert!(res3.merges[1].is_some(), "merge re-ran with its stage");
+    let outs3 = fetch_outputs(&mut cluster, &fjob, fn1.max(1));
+    assert_eq!(outs1, outs3);
+}

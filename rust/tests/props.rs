@@ -742,3 +742,189 @@ fn prop_shuffle_conservation_real_jobs() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_partition_plan_canonical_invariance() {
+    // ISSUE 10's determinism contract in one generator: a random
+    // partitioner (hash / range / skew-aware with random hot-threshold
+    // and split-ways) × random Zipf skew × straggler/netfault/crash
+    // seeds × workers ∈ {1,4,8}, solo and co-run. Two invariants:
+    //   1. Every partitioner reproduces the Hash/1-worker/no-fault
+    //      golden as a canonical row multiset (partitioning moves rows
+    //      between reducers, never changes them).
+    //   2. WITHIN a fixed partitioner, per-partition output bytes are
+    //      pinned bit-for-bit across worker counts and fault planes.
+    use marvel::coordinator::ClusterSpec;
+    use marvel::mapreduce::{
+        output_key, run_job, stage_named_input, Cluster, JobServer,
+        Partitioner, SystemConfig,
+    };
+    use marvel::net::{NetFaultPlan, StragglerProfile};
+    use marvel::runtime::RtEngine;
+    use marvel::workloads::tables::JOINED_ROW;
+    use marvel::workloads::{RepartitionJoin, StarSchema};
+
+    fn deploy(cfg: &SystemConfig) -> Cluster {
+        let mut cluster = ClusterSpec {
+            nodes: 4,
+            slots_per_node: 8,
+            ..Default::default()
+        }
+        .deploy(cfg);
+        cluster.stores.hdfs.block_size = 256 * 1024;
+        cluster
+    }
+
+    fn outputs(
+        cluster: &mut Cluster,
+        job: &str,
+        n: usize,
+    ) -> Vec<Option<Vec<u8>>> {
+        (0..n)
+            .map(|j| {
+                cluster
+                    .stores
+                    .igfs
+                    .get(&cluster.topo, NodeId(0), &output_key(job, j), 0)
+                    .and_then(|(p, _)| p.gather())
+            })
+            .collect()
+    }
+
+    /// Sorted multiset of fixed-width rows — the canonical form that
+    /// must agree across partitioners.
+    fn canon(outs: &[Option<Vec<u8>>]) -> Vec<Vec<u8>> {
+        let mut rows: Vec<Vec<u8>> = outs
+            .iter()
+            .flatten()
+            .flat_map(|b| b.chunks(JOINED_ROW as usize))
+            .map(|c| c.to_vec())
+            .collect();
+        rows.sort_unstable();
+        rows
+    }
+
+    check("partition-plan", 4, |g| {
+        let sseed = g.rng.next_u64();
+        let nseed = g.rng.next_u64();
+        let dseed = g.rng.next_u64();
+        let workers = *g.pick(&[1usize, 4, 8]);
+        let zipf_s = *g.pick(&[0.8f64, 1.2, 1.5]);
+        let dim_keys = (64 + g.usize_up_to(192)) as u64;
+        let hot_threshold = 1.1 + g.rng.f64() * 0.6;
+        let split_ways = *g.pick(&[2usize, 3, 4]);
+        let partitioner = match *g.pick(&[0usize, 1, 2]) {
+            0 => Partitioner::Hash,
+            1 => Partitioner::Range { bounds: Vec::new() },
+            _ => Partitioner::SkewAware { hot_threshold, split_ways },
+        };
+        let input = 2 * 1024 * 1024u64; // 8 splits at 256 KiB blocks
+        let mut rt = RtEngine::load(None)?;
+        let join = RepartitionJoin::new(StarSchema::new(dim_keys, zipf_s));
+
+        let arm = |p: &Partitioner, faults: bool, w: usize| {
+            let mut c = SystemConfig::marvel_igfs();
+            c.partition = p.clone();
+            c.map_workers = w;
+            c.reduce_workers = w;
+            if faults {
+                c.stragglers = StragglerProfile {
+                    seed: sseed,
+                    prob: 0.5,
+                    slowdown: 4.0,
+                };
+                c.speculation.enabled = true;
+                c.netfaults = NetFaultPlan {
+                    seed: nseed,
+                    prob: 0.5,
+                    slowdown: 8.0,
+                    flow_timeout: SimNs::from_millis(250),
+                    degraded_tiers: true,
+                    lose_cachenodes: vec![],
+                };
+                c.failures.crash_prob = 0.4;
+                c.failures.max_failures_per_task = 2;
+                c.failures.seed = sseed ^ 0xACE5;
+                c.recovery.max_attempts = 3;
+                c.recovery.interval_bytes = 64 * 1024;
+            }
+            c
+        };
+
+        let solo = |cfg: &SystemConfig, rt: &mut RtEngine| {
+            let mut cluster = deploy(cfg);
+            let input_path = stage_named_input(
+                &mut cluster, cfg, &join, input, dseed, "pp/in",
+            )?;
+            let r = run_job(&mut cluster, cfg, &join, &input_path, rt, dseed);
+            if let Some(e) = &r.failed {
+                return Err(format!("job failed: {e}"));
+            }
+            Ok((outputs(&mut cluster, &r.job, r.reduce.tasks), r))
+        };
+
+        // Hash, single worker, no faults: the canonical golden.
+        let (o0, r0) =
+            solo(&arm(&Partitioner::Hash, false, 1), &mut rt)?;
+        let c0 = canon(&o0);
+        prop_assert!(!c0.is_empty(), "golden join produced no rows");
+
+        // The drawn partitioner, quiet: canonically identical rows,
+        // identical total bytes — only their placement may move.
+        let (ob, rb) = solo(&arm(&partitioner, false, 1), &mut rt)?;
+        prop_assert!(
+            canon(&ob) == c0,
+            "{} changed the row multiset (s={zipf_s} keys={dim_keys})",
+            partitioner.name()
+        );
+        prop_assert!(rb.output_bytes == r0.output_bytes);
+        prop_assert!(
+            rb.partition_skew >= 1.0 && rb.partition_skew.is_finite(),
+            "partition_skew out of range: {}",
+            rb.partition_skew
+        );
+
+        // Same partitioner with stragglers, netfaults, speculation and
+        // crash recovery armed at a random worker count: per-partition
+        // bytes are pinned bit-for-bit against the quiet run.
+        let (os, rs) = solo(&arm(&partitioner, true, workers), &mut rt)?;
+        prop_assert!(
+            os == ob,
+            "{} moved bytes under faults (sseed={sseed:#x} \
+             nseed={nseed:#x} workers={workers})",
+            partitioner.name()
+        );
+        prop_assert!(rs.output_bytes == rb.output_bytes);
+        prop_assert!(rs.hot_keys_split == rb.hot_keys_split,
+                     "hot-key census moved with the fault plane");
+
+        // Co-run leg: two tenants under the drawn partitioner still
+        // each reproduce the per-partition golden bytes.
+        let base = arm(&partitioner, true, workers);
+        let mut cluster = deploy(&base);
+        let in_a = stage_named_input(
+            &mut cluster, &base, &join, input, dseed, "a/in",
+        )?;
+        let in_b = stage_named_input(
+            &mut cluster, &base, &join, input, dseed, "b/in",
+        )?;
+        let res = JobServer::new()
+            .tenant("a", 3)
+            .tenant("b", 1)
+            .job("a", &join, base.clone(), &in_a, dseed)
+            .job("b", &join, base.clone(), &in_b, dseed)
+            .run(&mut cluster, &mut rt);
+        prop_assert!(res.ok(), "co-run failed: {:?}", res.failed);
+        for run in &res.jobs {
+            let jr = run.final_stage().ok_or("no stage")?;
+            let outs = outputs(&mut cluster, &jr.job, jr.reduce.tasks);
+            prop_assert!(
+                outs == ob,
+                "tenant {} diverged under {} (sseed={sseed:#x})",
+                run.tenant,
+                partitioner.name()
+            );
+        }
+        Ok(())
+    });
+}
